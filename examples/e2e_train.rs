@@ -1,0 +1,92 @@
+//! End-to-end driver (the mandated full-system validation): train the wide
+//! CNN on synthetic-CIFAR with 8 workers for several hundred steps under
+//! Overlap-Local-SGD with momentum, logging the loss curve, the virtual
+//! cluster timeline, and the communication breakdown.
+//!
+//! This exercises every layer at once: Rust coordinator + simnet/clock +
+//! non-blocking collective (L3), the AOT JAX train-step artifact (L2), and
+//! the Pallas matmul / fused-Nesterov / pullback / anchor kernels inside it
+//! (L1). The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train [-- fast]
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use olsgd::config::ExperimentConfig;
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::metrics::{write_json, write_text};
+use olsgd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let fast = std::env::args().any(|a| a == "fast");
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "e2e".into();
+    cfg.model = "cnn_wide".into(); // 33k params, the largest artifact set
+    cfg.workers = 8;
+    cfg.tau = 2;
+    cfg.epochs = if fast { 4.0 } else { 25.0 };
+    cfg.train_n = if fast { 512 } else { 4096 };
+    cfg.test_n = 500;
+    cfg.eval_every = 1.0;
+
+    let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let rt = runtime.load_model(&cfg.model)?;
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+    let steps_per_epoch = cfg.train_n / cfg.workers / rt.train_batch;
+    println!(
+        "e2e: model={} ({} params), m={}, tau={}, {} epochs x {} steps/epoch = {} global steps",
+        cfg.model,
+        rt.n,
+        cfg.workers,
+        cfg.tau,
+        cfg.epochs,
+        steps_per_epoch,
+        (cfg.epochs * steps_per_epoch as f64) as usize
+    );
+
+    let log = run_experiment(&rt, &cfg, &train, &test)?;
+
+    println!("\nloss curve (train / test, per epoch):");
+    println!(
+        "{:>7} {:>8} {:>12} {:>12} {:>9} {:>12}",
+        "epoch", "step", "train_loss", "test_loss", "acc%", "sim_time(s)"
+    );
+    for r in &log.records {
+        println!(
+            "{:>7.1} {:>8} {:>12.4} {:>12.4} {:>9.2} {:>12.1}",
+            r.epoch, r.step, r.train_loss, r.test_loss, 100.0 * r.test_acc, r.sim_time
+        );
+    }
+
+    println!("\ncluster timeline (virtual):");
+    println!("  total            {:>10.1} s", log.total_sim_time);
+    println!("  compute (sum)    {:>10.1} s", log.total_compute_s);
+    println!("  comm blocked     {:>10.1} s", log.total_comm_blocked_s);
+    println!("  straggler idle   {:>10.1} s", log.total_idle_s);
+    println!("  comm/compute     {:>10.2} %", 100.0 * log.comm_ratio());
+    println!("  bytes on wire    {:>10.1} MB", log.bytes_sent as f64 / 1e6);
+
+    let out = Path::new("results/e2e");
+    write_json(out, "e2e_train.json", &log.to_json())?;
+    write_text(out, "e2e_train.csv", &log.to_csv())?;
+    println!("\nwrote results/e2e/e2e_train.{{json,csv}}");
+
+    // Sanity gate so CI catches regressions: the loss must actually fall.
+    let first = log.records.first().map(|r| r.test_loss).unwrap_or(f64::NAN);
+    let last = log.final_loss();
+    anyhow::ensure!(
+        last < first,
+        "e2e training did not reduce test loss ({first:.4} -> {last:.4})"
+    );
+    println!("OK: test loss {first:.4} -> {last:.4}, acc {:.2}%", 100.0 * log.final_acc());
+    Ok(())
+}

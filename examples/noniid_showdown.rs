@@ -1,0 +1,68 @@
+//! Non-IID showdown (the paper's §4 "Non-IID Data Partitions Setting" and
+//! Table 2): every worker's shard is dominated by a single class (64 %,
+//! mirroring the paper's 2000-of-3125 skew). CoCoD-SGD becomes unstable at
+//! large τ while Overlap-Local-SGD's pullback keeps the replicas contracted
+//! around the anchor.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example noniid_showdown
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 8;
+    cfg.epochs = 10.0;
+    cfg.train_n = 2048;
+    cfg.test_n = 500;
+    cfg.noniid = true;
+    cfg.dominant_frac = 0.64; // the paper's 2000/3125
+    cfg.reshuffle = false; // paper: "not shuffled during training"
+
+    let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let rt = runtime.load_model(&cfg.model)?;
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+    println!(
+        "non-IID showdown: each of {} workers sees 64% one class; tau sweep\n",
+        cfg.workers
+    );
+    println!(
+        "{:<12} {:>6} {:>8} {:>12} {:>10}",
+        "algorithm", "tau", "acc%", "test loss", "diverged?"
+    );
+
+    for algo in [Algo::Cocod, Algo::Eamsgd, Algo::OverlapM] {
+        for tau in [2usize, 8] {
+            let mut c = cfg.clone();
+            c.algo = algo;
+            c.tau = tau;
+            let log = run_experiment(&rt, &c, &train, &test)?;
+            let diverged = !log.final_loss().is_finite() || log.final_loss() > 5.0;
+            println!(
+                "{:<12} {:>6} {:>8.2} {:>12.4} {:>10}",
+                algo.name(),
+                tau,
+                100.0 * log.final_acc(),
+                log.final_loss(),
+                if diverged { "DIVERGED" } else { "no" }
+            );
+        }
+    }
+
+    println!(
+        "\nExpected shape (paper Table 2): overlap-m stays stable as tau grows;\n\
+         cocod degrades/diverges first, eamsgd degrades fastest in accuracy."
+    );
+    Ok(())
+}

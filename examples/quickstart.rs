@@ -1,0 +1,60 @@
+//! Quickstart: train the same model with fully-sync SGD, Local SGD, and
+//! Overlap-Local-SGD, and print the paper's headline comparison — same
+//! convergence, a fraction of the communication time.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // Small-but-real workload: 8 workers, synthetic-CIFAR, the scaled CNN.
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 8;
+    cfg.epochs = 8.0;
+    cfg.train_n = 1024;
+    cfg.test_n = 500;
+    cfg.tau = 2;
+
+    let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let rt = runtime.load_model(&cfg.model)?;
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+    println!("Overlap Local-SGD quickstart — m={} workers, tau={}, model={} ({} params)\n",
+             cfg.workers, cfg.tau, cfg.model, rt.n);
+    println!(
+        "{:<12} {:>8} {:>12} {:>14} {:>12}",
+        "algorithm", "acc%", "test loss", "time/epoch(s)", "comm ratio"
+    );
+
+    for algo in [Algo::Sync, Algo::Local, Algo::OverlapM] {
+        let mut c = cfg.clone();
+        c.algo = algo;
+        let log = run_experiment(&rt, &c, &train, &test)?;
+        println!(
+            "{:<12} {:>8.2} {:>12.4} {:>14.2} {:>11.1}%",
+            algo.name(),
+            100.0 * log.final_acc(),
+            log.final_loss(),
+            log.time_per_epoch(c.epochs),
+            100.0 * log.comm_ratio()
+        );
+    }
+
+    println!(
+        "\nExpected shape (paper Fig. 1/4): all three reach similar accuracy; \
+         sync pays ~35% comm overhead, local ~{}x less, overlap ~none.",
+        cfg.tau
+    );
+    Ok(())
+}

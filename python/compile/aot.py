@@ -1,0 +1,116 @@
+"""AOT entrypoint: lower every Layer-2 computation to HLO text + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts written (per model M in --models):
+
+    artifacts/train_step_M.hlo.txt   (flat, mom, x, y, lr, mu, wd) -> (flat', mom', loss)
+    artifacts/grad_step_M.hlo.txt    (flat, x, y)                  -> (loss, grads)
+    artifacts/eval_M.hlo.txt         (flat, x, y)                  -> (sum_loss, correct)
+    artifacts/pullback_M.hlo.txt     (x, z, alpha)                 -> (x',)
+    artifacts/anchor_M.hlo.txt       (z, v, avg, beta)             -> (z', v')
+    artifacts/manifest.json          layouts, shapes, module table
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model(name: str, outdir: str, train_batch: int, eval_batch: int) -> dict:
+    layout, train_step, grad_step, evaluate = M.make_functions(name)
+    n = layout.total
+    h, w, c = M.IMAGE_SHAPE
+
+    vec = _spec(n)
+    scalar = _spec(1)
+    timgs, tlabels = _spec(train_batch, h, w, c), _spec(train_batch, dtype=jnp.int32)
+    eimgs, elabels = _spec(eval_batch, h, w, c), _spec(eval_batch, dtype=jnp.int32)
+
+    modules = {}
+
+    def emit(tag, fn, *args):
+        path = f"{tag}_{name}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        modules[tag] = path
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    emit("train_step", train_step, vec, vec, timgs, tlabels, scalar, scalar, scalar)
+    emit("grad_step", grad_step, vec, timgs, tlabels)
+    emit("eval", evaluate, vec, eimgs, elabels)
+    emit("pullback", lambda x, z, a: (M.pullback(x, z, a),), vec, vec, scalar)
+    emit("anchor", M.anchor_update, vec, vec, vec, scalar)
+    # Standalone fused Nesterov/SGD step — applies an externally averaged
+    # gradient (sync-SGD / PowerSGD paths) through the same Pallas kernel.
+    emit("update", M.sgd_update, vec, vec, vec, scalar, scalar, scalar)
+    # Fused Adam — the paper's §6 extension (Overlap-Local-Adam).
+    emit("adam", M.adam_update, vec, vec, vec, vec, scalar, scalar)
+
+    return {
+        "param_count": n,
+        "tensors": layout.manifest(),
+        "modules": modules,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn,cnn_wide")
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=100)
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {
+        "image_shape": list(M.IMAGE_SHAPE),
+        "num_classes": M.NUM_CLASSES,
+        "train_batch": args.train_batch,
+        "eval_batch": args.eval_batch,
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        print(f"lowering model '{name}' ...")
+        manifest["models"][name] = lower_model(
+            name, args.outdir, args.train_batch, args.eval_batch
+        )
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Layer-1 Pallas kernels: fused single-pass parameter-vector updates.
+
+These are the paper's distinctive update operators, each fused into one pass
+over the flat parameter vector so every parameter is read/written exactly
+once per step (on a real TPU these ops are pure HBM-bandwidth; fusion is the
+whole optimization — see DESIGN.md §Hardware-Adaptation):
+
+* ``nesterov_update``  — the local optimizer step used by every algorithm
+  (mu = 0 degenerates to plain SGD, so one artifact serves both variants):
+
+      g' = g + wd * x
+      v' = mu * v + g'
+      x' = x - lr * (g' + mu * v')        (PyTorch-style Nesterov)
+
+* ``pullback``         — Eq. (4) of the paper:  x' = x - alpha * (x - z)
+
+* ``anchor_update``    — Eqs. (10)-(11):  v' = beta * v + (avg - z)
+                                          z' = z + v'
+
+Scalars (lr, mu, wd, alpha, beta) arrive as f32[1] inputs so a single AOT
+artifact covers every hyper-parameter setting; they are broadcast to each
+grid block via a constant (0,) index map.
+
+Vectors are zero-padded to a block multiple by the wrappers; padding is a
+fixed point of all three updates (0 maps to 0), so slicing back is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elementwise block: 32768 f32 = 128 KiB per operand — a 5-operand kernel
+# uses 640 KiB of VMEM (4 % of a TPU core's 16 MiB), and the large block
+# amortizes per-grid-step overhead (measured 2.1x on the interpret path —
+# EXPERIMENTS.md §Perf iteration 1).
+BLOCK = 32768
+
+
+def _pad1(x: jnp.ndarray, mult: int = BLOCK) -> jnp.ndarray:
+    rem = (-x.shape[0]) % mult
+    return jnp.pad(x, ((0, rem),)) if rem else x
+
+
+def _vec_spec():
+    return pl.BlockSpec((BLOCK,), lambda i: (i,))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+# --------------------------------------------------------------------------
+# Nesterov / SGD fused optimizer step
+# --------------------------------------------------------------------------
+
+
+def _nesterov_kernel(x_ref, v_ref, g_ref, lr_ref, mu_ref, wd_ref, xo_ref, vo_ref):
+    lr, mu, wd = lr_ref[0], mu_ref[0], wd_ref[0]
+    g = g_ref[...] + wd * x_ref[...]
+    v = mu * v_ref[...] + g
+    xo_ref[...] = x_ref[...] - lr * (g + mu * v)
+    vo_ref[...] = v
+
+
+@jax.jit
+def nesterov_update(x, v, g, lr, mu, wd):
+    """Fused Nesterov-momentum step over flat f32 vectors.
+
+    x, v, g: f32[N]; lr, mu, wd: f32[1]. Returns (x', v').
+    """
+    n = x.shape[0]
+    xp, vp, gp = _pad1(x), _pad1(v), _pad1(g)
+    np_ = xp.shape[0]
+    xo, vo = pl.pallas_call(
+        _nesterov_kernel,
+        grid=(np_ // BLOCK,),
+        in_specs=[_vec_spec(), _vec_spec(), _vec_spec(),
+                  _scalar_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=[_vec_spec(), _vec_spec()],
+        out_shape=[jax.ShapeDtypeStruct((np_,), jnp.float32)] * 2,
+        interpret=True,
+    )(xp, vp, gp, lr, mu, wd)
+    return xo[:n], vo[:n]
+
+
+# --------------------------------------------------------------------------
+# Pullback — Eq. (4)
+# --------------------------------------------------------------------------
+
+
+def _pullback_kernel(x_ref, z_ref, a_ref, o_ref):
+    a = a_ref[0]
+    o_ref[...] = x_ref[...] - a * (x_ref[...] - z_ref[...])
+
+
+@jax.jit
+def pullback(x, z, alpha):
+    """Eq. (4): pull the local model toward the anchor. f32[N] -> f32[N]."""
+    n = x.shape[0]
+    xp, zp = _pad1(x), _pad1(z)
+    np_ = xp.shape[0]
+    out = pl.pallas_call(
+        _pullback_kernel,
+        grid=(np_ // BLOCK,),
+        in_specs=[_vec_spec(), _vec_spec(), _scalar_spec()],
+        out_specs=_vec_spec(),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(xp, zp, alpha)
+    return out[:n]
+
+
+# --------------------------------------------------------------------------
+# Fused Adam step — the paper's §6 extension ("the key idea ... can be
+# easily extended to other first-order algorithms, such as Adam").
+# Bias correction uses the step count t (f32[1], 1-based).
+# --------------------------------------------------------------------------
+
+
+def _adam_kernel(x_ref, m_ref, v_ref, g_ref, lr_ref, t_ref,
+                 xo_ref, mo_ref, vo_ref, *, b1, b2, eps, wd):
+    lr, t = lr_ref[0], t_ref[0]
+    g = g_ref[...] + wd * x_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1 ** t)
+    vhat = v / (1.0 - b2 ** t)
+    xo_ref[...] = x_ref[...] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd"))
+def adam_update(x, m, v, g, lr, t, *, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """Fused Adam over flat f32 vectors: returns (x', m', v').
+
+    x, m, v, g: f32[N]; lr, t: f32[1] (t is the 1-based step count for bias
+    correction). Hyper-parameters are static (baked at lowering).
+    """
+    n = x.shape[0]
+    xp, mp, vp, gp = _pad1(x), _pad1(m), _pad1(v), _pad1(g)
+    np_ = xp.shape[0]
+    xo, mo, vo = pl.pallas_call(
+        functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps, wd=wd),
+        grid=(np_ // BLOCK,),
+        in_specs=[_vec_spec(), _vec_spec(), _vec_spec(), _vec_spec(),
+                  _scalar_spec(), _scalar_spec()],
+        out_specs=[_vec_spec(), _vec_spec(), _vec_spec()],
+        out_shape=[jax.ShapeDtypeStruct((np_,), jnp.float32)] * 3,
+        interpret=True,
+    )(xp, mp, vp, gp, lr, t)
+    return xo[:n], mo[:n], vo[:n]
+
+
+# --------------------------------------------------------------------------
+# Anchor momentum update — Eqs. (10)-(11)
+# --------------------------------------------------------------------------
+
+
+def _anchor_kernel(z_ref, v_ref, avg_ref, b_ref, zo_ref, vo_ref):
+    beta = b_ref[0]
+    v = beta * v_ref[...] + (avg_ref[...] - z_ref[...])
+    zo_ref[...] = z_ref[...] + v
+    vo_ref[...] = v
+
+
+@jax.jit
+def anchor_update(z, v, avg, beta):
+    """Eqs. (10)-(11): momentum update of the anchor model.
+
+    z, v, avg: f32[N]; beta: f32[1]. Returns (z', v'). beta = 0 reduces to
+    the vanilla anchor assignment z' = avg (Eq. (5)).
+    """
+    n = z.shape[0]
+    zp, vp, ap = _pad1(z), _pad1(v), _pad1(avg)
+    np_ = zp.shape[0]
+    zo, vo = pl.pallas_call(
+        _anchor_kernel,
+        grid=(np_ // BLOCK,),
+        in_specs=[_vec_spec(), _vec_spec(), _vec_spec(), _scalar_spec()],
+        out_specs=[_vec_spec(), _vec_spec()],
+        out_shape=[jax.ShapeDtypeStruct((np_,), jnp.float32)] * 2,
+        interpret=True,
+    )(zp, vp, ap, beta)
+    return zo[:n], vo[:n]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+pytest asserts ``assert_allclose(kernel(...), ref(...))`` over shape/seed
+sweeps (see python/tests/). These definitions are the ground truth for the
+algebra; the Pallas versions must match them bit-for-bit up to f32
+accumulation-order noise.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_bias(x, w, b, *, fuse_relu: bool = False):
+    out = x @ w + b
+    return jnp.maximum(out, 0.0) if fuse_relu else out
+
+
+def nesterov_update(x, v, g, lr, mu, wd):
+    lr, mu, wd = lr[0], mu[0], wd[0]
+    g = g + wd * x
+    v_new = mu * v + g
+    x_new = x - lr * (g + mu * v_new)
+    return x_new, v_new
+
+
+def pullback(x, z, alpha):
+    return x - alpha[0] * (x - z)
+
+
+def adam_update(x, m, v, g, lr, t, *, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    lr, t = lr[0], t[0]
+    g = g + wd * x
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    mhat = m_new / (1.0 - b1 ** t)
+    vhat = v_new / (1.0 - b2 ** t)
+    x_new = x - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return x_new, m_new, v_new
+
+
+def anchor_update(z, v, avg, beta):
+    v_new = beta[0] * v + (avg - z)
+    return z + v_new, v_new

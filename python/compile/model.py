@@ -1,0 +1,260 @@
+"""Layer-2: JAX models and the exported train/eval computations.
+
+Everything here is build-time Python. ``aot.py`` lowers the jitted functions
+below to HLO text once; the Rust coordinator then executes the artifacts via
+PJRT with **no Python on the request path**.
+
+Parameters travel as ONE flat f32 vector so the Rust side is shape-oblivious
+(flat-vector averaging/pullback is exactly how the paper's algorithms are
+stated). The static layout — (name, shape, offset, init) per tensor — is
+emitted into ``artifacts/manifest.json`` so Rust can (a) initialize params
+with its own PRNG and (b) re-matricize gradients for PowerSGD.
+
+Models
+------
+* ``mlp``      3072 -> 128 -> 64 -> 10 dense net; dense layers run on the
+               Layer-1 Pallas matmul kernel. (~0.40 M params)
+* ``cnn``      CIFAR-style conv net: 3 conv3x3 blocks (8, 16, 32 ch, stride-2
+               downsampling) + GAP + Pallas dense head. (~7 k params) The
+               scaled stand-in for the paper's ResNet-18 — see DESIGN.md §3.
+* ``cnn_wide`` same topology at 16/32/64 channels + 128-wide head for the
+               larger e2e runs. (~38 k params)
+
+Exported computations (per model)
+---------------------------------
+* ``train_step(flat, mom, images, labels, lr, mu, wd)``
+      -> (flat', mom', loss)       fwd+bwd + fused Nesterov (Pallas)
+* ``grad_step(flat, images, labels)``
+      -> (loss, flat_grads)        raw grads for sync-SGD / PowerSGD
+* ``evaluate(flat, images, labels)``
+      -> (sum_loss, num_correct)   test-set metrics (count as f32)
+
+plus the model-independent ``pullback`` and ``anchor_update`` vector ops
+from the Layer-1 kernels.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_update, matmul
+
+IMAGE_SHAPE = (32, 32, 3)
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TensorSpec:
+    """One parameter tensor inside the flat vector."""
+
+    name: str
+    shape: tuple
+    offset: int
+    init: str        # "he_normal" (std = sqrt(2 / fan_in)) | "zeros"
+    fan_in: int
+    compress: bool   # PowerSGD compresses matrices, leaves biases raw
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    def matrix_shape(self) -> tuple:
+        """(rows, cols) view used by PowerSGD matricization."""
+        if len(self.shape) == 1:
+            return (1, self.shape[0])
+        if len(self.shape) == 2:
+            return self.shape
+        # conv kernel (kh, kw, cin, cout) -> (kh*kw*cin, cout)
+        rows = int(math.prod(self.shape[:-1]))
+        return (rows, self.shape[-1])
+
+
+@dataclass
+class ParamLayout:
+    specs: list = field(default_factory=list)
+    total: int = 0
+
+    def add(self, name: str, shape: tuple, init: str, fan_in: int, compress: bool):
+        self.specs.append(
+            TensorSpec(name, tuple(shape), self.total, init, fan_in, compress)
+        )
+        self.total += int(math.prod(shape))
+
+    def unpack(self, flat: jnp.ndarray) -> dict:
+        return {
+            s.name: jax.lax.dynamic_slice(flat, (s.offset,), (s.size,)).reshape(s.shape)
+            for s in self.specs
+        }
+
+    def manifest(self) -> list:
+        out = []
+        for s in self.specs:
+            rows, cols = s.matrix_shape()
+            out.append(
+                {
+                    "name": s.name,
+                    "shape": list(s.shape),
+                    "offset": s.offset,
+                    "size": s.size,
+                    "init": s.init,
+                    "fan_in": s.fan_in,
+                    "std": (math.sqrt(2.0 / s.fan_in) if s.init == "he_normal" else 0.0),
+                    "rows": rows,
+                    "cols": cols,
+                    "compress": s.compress,
+                }
+            )
+        return out
+
+
+# --------------------------------------------------------------------------
+# Model definitions
+# --------------------------------------------------------------------------
+
+
+def _dense(layout: ParamLayout, name: str, din: int, dout: int):
+    layout.add(f"{name}.w", (din, dout), "he_normal", din, True)
+    layout.add(f"{name}.b", (dout,), "zeros", din, False)
+
+
+def _conv(layout: ParamLayout, name: str, cin: int, cout: int, k: int = 3):
+    layout.add(f"{name}.w", (k, k, cin, cout), "he_normal", k * k * cin, True)
+    layout.add(f"{name}.b", (cout,), "zeros", k * k * cin, False)
+
+
+def mlp_layout() -> ParamLayout:
+    lay = ParamLayout()
+    din = int(math.prod(IMAGE_SHAPE))
+    _dense(lay, "fc1", din, 128)
+    _dense(lay, "fc2", 128, 64)
+    _dense(lay, "fc3", 64, NUM_CLASSES)
+    return lay
+
+
+def mlp_forward(params: dict, images: jnp.ndarray) -> jnp.ndarray:
+    x = images.reshape(images.shape[0], -1)
+    x = matmul.matmul_bias(x, params["fc1.w"], params["fc1.b"], fuse_relu=True)
+    x = matmul.matmul_bias(x, params["fc2.w"], params["fc2.b"], fuse_relu=True)
+    return matmul.matmul_bias(x, params["fc3.w"], params["fc3.b"])
+
+
+_CNN_CHANNELS = {"cnn": (8, 16, 32, 32), "cnn_wide": (16, 32, 64, 128)}
+
+
+def cnn_layout(variant: str = "cnn") -> ParamLayout:
+    c1, c2, c3, head = _CNN_CHANNELS[variant]
+    lay = ParamLayout()
+    _conv(lay, "conv1", 3, c1)
+    _conv(lay, "conv2", c1, c2)   # stride 2
+    _conv(lay, "conv3", c2, c3)   # stride 2
+    # flatten 8x8xc3 (spatial information preserved; GAP would discard the
+    # per-location pattern the classes differ by)
+    _dense(lay, "fc1", 8 * 8 * c3, head)
+    _dense(lay, "fc2", head, NUM_CLASSES)
+    return lay
+
+
+def _conv2d(x, w, b, stride: int):
+    """conv3x3 + parameter-free instance norm + ReLU.
+
+    The paper's ResNet-18 relies on BatchNorm for stability at lr 0.1; our
+    scaled CNN uses an affine-free instance normalization (zero mean / unit
+    variance over each sample's spatial extent, per channel) as the
+    batch-size-independent stand-in. No learnable parameters — the flat
+    param vector stays exactly the conv/dense weights the algorithms mix.
+    """
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    mean = jnp.mean(out, axis=(1, 2), keepdims=True)
+    var = jnp.var(out, axis=(1, 2), keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+    return jnp.maximum(out + b, 0.0)
+
+
+def cnn_forward(params: dict, images: jnp.ndarray) -> jnp.ndarray:
+    x = _conv2d(images, params["conv1.w"], params["conv1.b"], 1)   # 32x32
+    x = _conv2d(x, params["conv2.w"], params["conv2.b"], 2)        # 16x16
+    x = _conv2d(x, params["conv3.w"], params["conv3.b"], 2)        # 8x8
+    x = x.reshape(x.shape[0], -1)                                  # flatten
+    x = matmul.matmul_bias(x, params["fc1.w"], params["fc1.b"], fuse_relu=True)
+    return matmul.matmul_bias(x, params["fc2.w"], params["fc2.b"])
+
+
+MODELS = {
+    "mlp": (mlp_layout, mlp_forward),
+    "cnn": (lambda: cnn_layout("cnn"), cnn_forward),
+    "cnn_wide": (lambda: cnn_layout("cnn_wide"), cnn_forward),
+}
+
+
+# --------------------------------------------------------------------------
+# Loss / train / eval computations
+# --------------------------------------------------------------------------
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example softmax cross-entropy, f32[B]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, NUM_CLASSES, dtype=logits.dtype)
+    return -jnp.sum(onehot * logp, axis=-1)
+
+
+def make_functions(model: str):
+    """Build the jittable (train_step, grad_step, evaluate) for ``model``."""
+    layout_fn, forward = MODELS[model]
+    layout = layout_fn()
+
+    def loss_fn(flat, images, labels):
+        logits = forward(layout.unpack(flat), images)
+        return jnp.mean(_xent(logits, labels))
+
+    def grad_step(flat, images, labels):
+        loss, g = jax.value_and_grad(loss_fn)(flat, images, labels)
+        return loss, g
+
+    def train_step(flat, mom, images, labels, lr, mu, wd):
+        loss, g = jax.value_and_grad(loss_fn)(flat, images, labels)
+        new_flat, new_mom = fused_update.nesterov_update(flat, mom, g, lr, mu, wd)
+        return new_flat, new_mom, loss
+
+    def evaluate(flat, images, labels):
+        logits = forward(layout.unpack(flat), images)
+        losses = _xent(logits, labels)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return jnp.sum(losses), correct
+
+    return layout, train_step, grad_step, evaluate
+
+
+# Model-independent vector ops re-exported for aot.py.
+pullback = fused_update.pullback
+anchor_update = fused_update.anchor_update
+
+
+def sgd_update(flat, mom, grad, lr, mu, wd):
+    """Apply one fused Nesterov step with an externally supplied gradient
+    (the sync-SGD / PowerSGD path: gradient was averaged by the coordinator)."""
+    return fused_update.nesterov_update(flat, mom, grad, lr, mu, wd)
+
+
+def adam_update(flat, m1, m2, grad, lr, t):
+    """Fused Adam step (paper §6 extension: Overlap-Local-Adam).
+
+    beta1/beta2/eps are the standard constants, baked at lowering; `t` is
+    the 1-based step count for bias correction.
+    """
+    return fused_update.adam_update(flat, m1, m2, grad, lr, t,
+                                    b1=0.9, b2=0.999, eps=1e-8, wd=0.0)

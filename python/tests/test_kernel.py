@@ -1,0 +1,151 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Fixed-shape checks here; hypothesis shape/seed sweeps in
+``test_kernel_hypothesis.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import fused_update, matmul, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _randn(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# matmul_bias
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 8, 8),          # single block
+        (32, 3072, 128),    # mlp fc1 shape
+        (32, 64, 10),       # ragged N (pad + slice)
+        (100, 32, 10),      # ragged M (eval batch)
+        (1, 7, 3),          # degenerate tiny
+        (256, 256, 256),    # multi-block all dims
+        (129, 130, 131),    # all dims ragged
+    ],
+)
+@pytest.mark.parametrize("fuse_relu", [False, True])
+def test_matmul_bias_matches_ref(m, k, n, fuse_relu):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x, w, b = _randn(k1, m, k), _randn(k2, k, n), _randn(k3, n)
+    got = matmul.matmul_bias(x, w, b, fuse_relu=fuse_relu)
+    want = ref.matmul_bias(x, w, b, fuse_relu=fuse_relu)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_zero_padding_is_exact():
+    # Padding must not leak: compare a ragged case against explicit slicing
+    # of an embedded multiple-of-block computation.
+    k1, k2 = jax.random.split(KEY)
+    x, w = _randn(k1, 17, 23), _randn(k2, 23, 9)
+    b = jnp.zeros(9)
+    got = matmul.matmul_bias(x, w, b)
+    assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# fused elementwise kernels
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 100, 8192, 8193, 50_000])
+def test_nesterov_update_matches_ref(n):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x, v, g = _randn(k1, n), _randn(k2, n), _randn(k3, n)
+    lr, mu, wd = jnp.array([0.1]), jnp.array([0.9]), jnp.array([1e-4])
+    gx, gv = fused_update.nesterov_update(x, v, g, lr, mu, wd)
+    wx, wv = ref.nesterov_update(x, v, g, lr, mu, wd)
+    assert_allclose(np.asarray(gx), np.asarray(wx), rtol=1e-6, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-6, atol=1e-6)
+
+
+def test_nesterov_mu_zero_is_plain_sgd():
+    """mu = 0, wd = 0 must reduce to x - lr * g (the vanilla-variant path)."""
+    k1, k2 = jax.random.split(KEY)
+    x, g = _randn(k1, 1000), _randn(k2, 1000)
+    v = jnp.zeros(1000)
+    lr = jnp.array([0.05])
+    gx, gv = fused_update.nesterov_update(x, v, g, lr, jnp.array([0.0]), jnp.array([0.0]))
+    assert_allclose(np.asarray(gx), np.asarray(x - 0.05 * g), rtol=1e-6, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(g), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 8192, 10_001])
+@pytest.mark.parametrize("alpha", [0.0, 0.5, 0.6, 1.0])
+def test_pullback_matches_ref(n, alpha):
+    k1, k2 = jax.random.split(KEY)
+    x, z = _randn(k1, n), _randn(k2, n)
+    a = jnp.array([alpha])
+    got = fused_update.pullback(x, z, a)
+    assert_allclose(np.asarray(got), np.asarray(ref.pullback(x, z, a)),
+                    rtol=1e-6, atol=1e-6)
+
+
+def test_pullback_endpoints():
+    """alpha=0 is identity; alpha=1 lands exactly on the anchor (Eq. 4)."""
+    k1, k2 = jax.random.split(KEY)
+    x, z = _randn(k1, 512), _randn(k2, 512)
+    assert_allclose(np.asarray(fused_update.pullback(x, z, jnp.array([0.0]))),
+                    np.asarray(x), rtol=0, atol=0)
+    assert_allclose(np.asarray(fused_update.pullback(x, z, jnp.array([1.0]))),
+                    np.asarray(z), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 8192, 12_345])
+@pytest.mark.parametrize("beta", [0.0, 0.7])
+def test_anchor_update_matches_ref(n, beta):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    z, v, avg = _randn(k1, n), _randn(k2, n), _randn(k3, n)
+    b = jnp.array([beta])
+    gz, gv = fused_update.anchor_update(z, v, avg, b)
+    wz, wv = ref.anchor_update(z, v, avg, b)
+    assert_allclose(np.asarray(gz), np.asarray(wz), rtol=1e-6, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-6, atol=1e-6)
+
+
+def test_anchor_beta_zero_is_vanilla_assignment():
+    """beta = 0 reduces Eqs. (10)-(11) to the vanilla anchor z' = avg (Eq. 5)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    z, v, avg = _randn(k1, 777), _randn(k2, 777), _randn(k3, 777)
+    gz, gv = fused_update.anchor_update(z, v, avg, jnp.array([0.0]))
+    assert_allclose(np.asarray(gz), np.asarray(avg), rtol=1e-6, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(avg - z), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 8192, 40_000])
+@pytest.mark.parametrize("t", [1.0, 7.0, 500.0])
+def test_adam_update_matches_ref(n, t):
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    x, m, v, g = _randn(k1, n), _randn(k2, n), jnp.abs(_randn(k3, n)), _randn(k4, n)
+    lr, tt = jnp.array([1e-3]), jnp.array([t])
+    gx, gm, gv = fused_update.adam_update(x, m, v, g, lr, tt, wd=1e-2)
+    wx, wm, wv = ref.adam_update(x, m, v, g, lr, tt, wd=1e-2)
+    assert_allclose(np.asarray(gx), np.asarray(wx), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(gm), np.asarray(wm), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-5, atol=1e-6)
+
+
+def test_adam_first_step_is_signlike():
+    """At t=1 with m=v=0, Adam's update direction is ~sign(g) * lr."""
+    k1, k2 = jax.random.split(KEY)
+    x, g = _randn(k1, 2000), _randn(k2, 2000)
+    zeros = jnp.zeros(2000)
+    gx, _, _ = fused_update.adam_update(x, zeros, zeros, g, jnp.array([1e-3]),
+                                        jnp.array([1.0]))
+    step = np.asarray(x - gx)
+    assert np.all(np.sign(step[np.abs(step) > 1e-6])
+                  == np.sign(np.asarray(g)[np.abs(step) > 1e-6]))
+    assert np.max(np.abs(step)) <= 1e-3 + 1e-6

@@ -1,0 +1,87 @@
+"""Hypothesis sweeps over the Layer-1 kernels' shape/value space.
+
+Each property run re-derives the kernel output against the pure-jnp oracle
+for randomly drawn shapes, seeds, and hyper-parameters — the broad-coverage
+complement to the fixed-shape checks in test_kernel.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import fused_update, matmul, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _randn(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+    fuse_relu=st.booleans(),
+)
+def test_matmul_bias_property(m, k, n, seed, fuse_relu):
+    x = _randn(seed, m, k)
+    w = _randn(seed + 1, k, n)
+    b = _randn(seed + 2, n)
+    got = matmul.matmul_bias(x, w, b, fuse_relu=fuse_relu)
+    want = ref.matmul_bias(x, w, b, fuse_relu=fuse_relu)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 40_000),
+    seed=st.integers(0, 2**31 - 1),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    wd=st.floats(0.0, 1e-2),
+)
+def test_nesterov_property(n, seed, lr, mu, wd):
+    x, v, g = _randn(seed, n), _randn(seed + 1, n), _randn(seed + 2, n)
+    args = (jnp.array([lr], jnp.float32), jnp.array([mu], jnp.float32),
+            jnp.array([wd], jnp.float32))
+    gx, gv = fused_update.nesterov_update(x, v, g, *args)
+    wx, wv = ref.nesterov_update(x, v, g, *args)
+    assert_allclose(np.asarray(gx), np.asarray(wx), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 40_000), seed=st.integers(0, 2**31 - 1),
+       alpha=st.floats(0.0, 1.0))
+def test_pullback_property(n, seed, alpha):
+    x, z = _randn(seed, n), _randn(seed + 1, n)
+    a = jnp.array([alpha], jnp.float32)
+    got = fused_update.pullback(x, z, a)
+    assert_allclose(np.asarray(got), np.asarray(ref.pullback(x, z, a)),
+                    rtol=1e-5, atol=1e-6)
+    # Pullback is a convex combination: result lies between x and z.
+    lo = np.minimum(np.asarray(x), np.asarray(z)) - 1e-6
+    hi = np.maximum(np.asarray(x), np.asarray(z)) + 1e-6
+    gotn = np.asarray(got)
+    assert np.all(gotn >= lo) and np.all(gotn <= hi)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 40_000), seed=st.integers(0, 2**31 - 1),
+       beta=st.floats(0.0, 0.99))
+def test_anchor_property(n, seed, beta):
+    z, v, avg = _randn(seed, n), _randn(seed + 1, n), _randn(seed + 2, n)
+    b = jnp.array([beta], jnp.float32)
+    gz, gv = fused_update.anchor_update(z, v, avg, b)
+    wz, wv = ref.anchor_update(z, v, avg, b)
+    assert_allclose(np.asarray(gz), np.asarray(wz), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-5, atol=1e-6)
+    # Invariant: z' - z == v' exactly (Eq. 11).
+    assert_allclose(np.asarray(gz - z), np.asarray(gv), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,163 @@
+"""Layer-2 correctness: models, layouts, gradients, train/eval semantics."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels import ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _init_flat(layout, key):
+    """He-normal init identical in spirit to the Rust-side initializer."""
+    flat = np.zeros(layout.total, dtype=np.float32)
+    for s in layout.specs:
+        if s.init == "he_normal":
+            key, sub = jax.random.split(key)
+            std = math.sqrt(2.0 / s.fan_in)
+            vals = std * jax.random.normal(sub, (s.size,), dtype=jnp.float32)
+            flat[s.offset : s.offset + s.size] = np.asarray(vals)
+    return jnp.asarray(flat)
+
+
+def _batch(key, b=8):
+    k1, k2 = jax.random.split(key)
+    imgs = jax.random.normal(k1, (b, *M.IMAGE_SHAPE), dtype=jnp.float32)
+    labels = jax.random.randint(k2, (b,), 0, M.NUM_CLASSES)
+    return imgs, labels
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["mlp", "cnn", "cnn_wide"])
+def test_layout_is_contiguous_and_complete(model):
+    layout = M.MODELS[model][0]()
+    off = 0
+    for s in layout.specs:
+        assert s.offset == off, f"{s.name} offset gap"
+        off += s.size
+    assert off == layout.total
+
+
+@pytest.mark.parametrize("model", ["mlp", "cnn", "cnn_wide"])
+def test_unpack_round_trip(model):
+    layout = M.MODELS[model][0]()
+    flat = jnp.arange(layout.total, dtype=jnp.float32)
+    params = layout.unpack(flat)
+    for s in layout.specs:
+        expect = jnp.arange(s.offset, s.offset + s.size, dtype=jnp.float32).reshape(s.shape)
+        assert_allclose(np.asarray(params[s.name]), np.asarray(expect))
+
+
+def test_manifest_matrix_shapes():
+    layout = M.cnn_layout("cnn")
+    entries = {e["name"]: e for e in layout.manifest()}
+    assert entries["conv1.w"]["rows"] == 27 and entries["conv1.w"]["cols"] == 8
+    assert entries["conv1.w"]["compress"]
+    assert entries["conv1.b"]["rows"] == 1 and not entries["conv1.b"]["compress"]
+    assert entries["fc1.w"]["rows"] == 8 * 8 * 32
+
+
+# --------------------------------------------------------------------------
+# Gradients: the Pallas-backed model must differentiate like the jnp oracle
+# --------------------------------------------------------------------------
+
+
+def _ref_forward(model, layout, flat, images):
+    """Forward pass with every Pallas matmul swapped for the jnp oracle."""
+    params = layout.unpack(flat)
+    if model == "mlp":
+        x = images.reshape(images.shape[0], -1)
+        x = ref.matmul_bias(x, params["fc1.w"], params["fc1.b"], fuse_relu=True)
+        x = ref.matmul_bias(x, params["fc2.w"], params["fc2.b"], fuse_relu=True)
+        return ref.matmul_bias(x, params["fc3.w"], params["fc3.b"])
+    x = M._conv2d(images, params["conv1.w"], params["conv1.b"], 1)
+    x = M._conv2d(x, params["conv2.w"], params["conv2.b"], 2)
+    x = M._conv2d(x, params["conv3.w"], params["conv3.b"], 2)
+    x = x.reshape(x.shape[0], -1)
+    x = ref.matmul_bias(x, params["fc1.w"], params["fc1.b"], fuse_relu=True)
+    return ref.matmul_bias(x, params["fc2.w"], params["fc2.b"])
+
+
+@pytest.mark.parametrize("model", ["mlp", "cnn"])
+def test_gradients_match_jnp_oracle(model):
+    layout, _, grad_step, _ = M.make_functions(model)
+    flat = _init_flat(layout, KEY)
+    imgs, labels = _batch(jax.random.PRNGKey(7))
+
+    def ref_loss(f):
+        logits = _ref_forward(model, layout, f, imgs)
+        return jnp.mean(M._xent(logits, labels))
+
+    loss, g = grad_step(flat, imgs, labels)
+    ref_l, ref_g = jax.value_and_grad(ref_loss)(flat)
+    assert_allclose(float(loss), float(ref_l), rtol=1e-4)
+    assert_allclose(np.asarray(g), np.asarray(ref_g), rtol=1e-3, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Training semantics
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["mlp", "cnn"])
+def test_train_step_decreases_loss(model):
+    layout, train_step, _, _ = M.make_functions(model)
+    flat = _init_flat(layout, KEY)
+    mom = jnp.zeros(layout.total)
+    imgs, labels = _batch(jax.random.PRNGKey(3), b=16)
+    lr, mu, wd = jnp.array([0.05]), jnp.array([0.9]), jnp.array([0.0])
+
+    losses = []
+    for _ in range(12):
+        flat, mom, loss = train_step(flat, mom, imgs, labels, lr, mu, wd)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, f"no progress: {losses[:3]} .. {losses[-3:]}"
+
+
+def test_train_step_momentum_buffer_updates():
+    layout, train_step, _, _ = M.make_functions("mlp")
+    flat = _init_flat(layout, KEY)
+    mom = jnp.zeros(layout.total)
+    imgs, labels = _batch(jax.random.PRNGKey(5))
+    _, mom2, _ = train_step(flat, mom, imgs, labels,
+                            jnp.array([0.1]), jnp.array([0.9]), jnp.array([0.0]))
+    assert float(jnp.linalg.norm(mom2)) > 0.0
+
+
+def test_evaluate_counts_match_numpy_argmax():
+    layout, _, _, evaluate = M.make_functions("mlp")
+    flat = _init_flat(layout, KEY)
+    imgs, labels = _batch(jax.random.PRNGKey(11), b=32)
+    sum_loss, correct = evaluate(flat, imgs, labels)
+
+    params = layout.unpack(flat)
+    logits = np.asarray(_ref_forward("mlp", layout, flat, imgs))
+    want = int(np.sum(np.argmax(logits, axis=1) == np.asarray(labels)))
+    assert int(correct) == want
+    assert float(sum_loss) > 0.0
+
+
+def test_grad_step_and_train_step_agree():
+    """train_step == grad_step + fused nesterov, by construction."""
+    layout, train_step, grad_step, _ = M.make_functions("mlp")
+    flat = _init_flat(layout, KEY)
+    mom = jnp.zeros(layout.total)
+    imgs, labels = _batch(jax.random.PRNGKey(13))
+    lr, mu, wd = jnp.array([0.1]), jnp.array([0.9]), jnp.array([1e-4])
+
+    f1, m1, l1 = train_step(flat, mom, imgs, labels, lr, mu, wd)
+    l2, g = grad_step(flat, imgs, labels)
+    f2, m2 = ref.nesterov_update(flat, mom, g, lr, mu, wd)
+    assert_allclose(float(l1), float(l2), rtol=1e-5)
+    assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-4, atol=1e-6)
+    assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-4, atol=1e-6)

@@ -1,0 +1,63 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! * **alpha sweep** — the pullback strength (paper §4: "for tau >= 2,
+//!   alpha = 0.6 consistently yields the best accuracy"; Eq. 19 shows the
+//!   effective lr is (1-alpha)*gamma, so too-large alpha slows progress and
+//!   too-small alpha loses the contraction that stabilizes non-IID runs).
+//! * **beta sweep** — the anchor momentum (paper: 0.7 following SlowMo);
+//!   beta = 0 is the vanilla Eq. (5) anchor.
+//! * **local optimizer** — Nesterov (paper recipe) vs fused Adam (the §6
+//!   extension, Overlap-Local-Adam).
+
+use anyhow::Result;
+use olsgd::bench::experiments::{header, print_row, row, BenchCtx};
+use olsgd::config::Algo;
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("ablations")?;
+    let epochs = ctx.base.epochs;
+    let mut rows = Vec::new();
+
+    header("Ablation A — pullback strength alpha (overlap-m, tau=2)");
+    for alpha in [0.1f32, 0.3, 0.6, 0.9] {
+        let label = format!("alpha_{alpha}");
+        let mut cfg = ctx.base.clone();
+        cfg.algo = Algo::OverlapM;
+        cfg.tau = 2;
+        cfg.alpha = alpha;
+        let log = ctx.run_leg_exact(&label, cfg)?;
+        print_row(&format!("alpha={alpha}"), 2, &log, epochs);
+        rows.push(row(&label, Algo::OverlapM, 2, &log, epochs));
+    }
+
+    header("Ablation B — anchor momentum beta (overlap, tau=2)");
+    for beta in [0.0f32, 0.4, 0.7, 0.9] {
+        let label = format!("beta_{beta}");
+        let mut cfg = ctx.base.clone();
+        cfg.algo = Algo::OverlapM;
+        cfg.tau = 2;
+        cfg.alpha = 0.6;
+        cfg.beta = beta;
+        let log = ctx.run_leg_exact(&label, cfg)?;
+        print_row(&format!("beta={beta}"), 2, &log, epochs);
+        rows.push(row(&label, Algo::OverlapM, 2, &log, epochs));
+    }
+
+    header("Ablation C — local optimizer (paper §6 extension)");
+    for opt in ["nesterov", "adam"] {
+        let label = format!("opt_{opt}");
+        let mut cfg = ctx.base.clone();
+        cfg.algo = Algo::OverlapM;
+        cfg.tau = 2;
+        cfg.alpha = 0.6;
+        cfg.local_opt = opt.into();
+        if opt == "adam" {
+            cfg.base_lr = 0.002; // Adam's lr scale
+        }
+        let log = ctx.run_leg_exact(&label, cfg)?;
+        print_row(opt, 2, &log, epochs);
+        rows.push(row(&label, Algo::OverlapM, 2, &log, epochs));
+    }
+
+    ctx.write_summary("ablations_summary.json", rows)
+}

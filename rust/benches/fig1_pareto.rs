@@ -1,0 +1,49 @@
+//! **E1 — Figure 1**: error-runtime Pareto frontier.
+//!
+//! Final test error vs total (virtual) training time for Local SGD and
+//! Overlap-Local-SGD at tau in {1, 2, 4, 8, 24}, with fully-sync SGD as the
+//! reference point. Paper claim: overlap shifts the whole frontier left
+//! (same error, strictly less time), improving the Pareto efficiency.
+//!
+//! `OLSGD_FULL=1 cargo bench --bench fig1_pareto` for the record run.
+
+use anyhow::Result;
+use olsgd::bench::experiments::{header, print_row, row, BenchCtx};
+use olsgd::config::Algo;
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("fig1_pareto")?;
+    let epochs = ctx.base.epochs;
+    let taus = [1usize, 2, 4, 8, 24];
+
+    header("Fig. 1 — error-runtime trade-off (Pareto frontier)");
+    let mut rows = Vec::new();
+
+    let log = ctx.run_leg("sync", |c| c.algo = Algo::Sync)?;
+    print_row("sync (reference)", 1, &log, epochs);
+    rows.push(row("sync", Algo::Sync, 1, &log, epochs));
+
+    for &tau in &taus {
+        let log = ctx.run_leg(&format!("local_tau{tau}"), |c| {
+            c.algo = Algo::Local;
+            c.tau = tau;
+        })?;
+        print_row("local-sgd", tau, &log, epochs);
+        rows.push(row(&format!("local_tau{tau}"), Algo::Local, tau, &log, epochs));
+    }
+
+    for &tau in &taus {
+        let log = ctx.run_leg(&format!("overlap_tau{tau}"), |c| {
+            c.algo = Algo::OverlapM;
+            c.tau = tau;
+        })?;
+        print_row("overlap-local-sgd", tau, &log, epochs);
+        rows.push(row(&format!("overlap_tau{tau}"), Algo::OverlapM, tau, &log, epochs));
+    }
+
+    println!(
+        "\nshape check: at every tau, overlap's time/epoch must be <= local's,\n\
+         and approach pure-compute time (sync minus its comm overhead)."
+    );
+    ctx.write_summary("fig1_summary.json", rows)
+}

@@ -1,0 +1,39 @@
+//! **E7 — Figure 6 (appendix B)**: loss-versus-iterations of the three
+//! decoupled Local-SGD variants at tau = 2 (Overlap-Local-SGD vs CoCoD-SGD
+//! vs EAMSGD). Paper claim: ours slightly improves on CoCoD and clearly
+//! beats EAMSGD. The per-step loss series for the plot is in each leg's
+//! result JSON (`step_losses`).
+
+use anyhow::Result;
+use olsgd::bench::experiments::{header, print_row, row, BenchCtx};
+use olsgd::config::Algo;
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("fig6_variants")?;
+    let epochs = ctx.base.epochs;
+
+    header("Fig. 6 — Local-SGD variants, loss vs iterations (tau=2)");
+    let mut rows = Vec::new();
+    for (label, algo) in [
+        ("overlap-local-sgd", Algo::OverlapM),
+        ("cocod", Algo::Cocod),
+        ("eamsgd", Algo::Eamsgd),
+    ] {
+        let log = ctx.run_leg(&format!("fig6_{label}"), |c| {
+            c.algo = algo;
+            c.tau = 2;
+        })?;
+        print_row(label, 2, &log, epochs);
+        // println! the last few loss points as the "curve tail"
+        let tail: Vec<String> = log
+            .step_losses
+            .iter()
+            .rev()
+            .take(5)
+            .map(|(k, l)| format!("(k={k}, {l:.3})"))
+            .collect();
+        println!("    loss tail: {}", tail.join(" "));
+        rows.push(row(label, algo, 2, &log, epochs));
+    }
+    ctx.write_summary("fig6_summary.json", rows)
+}

@@ -1,0 +1,97 @@
+//! Component micro-benchmarks — the perf pass's measurement tool
+//! (EXPERIMENTS.md §Perf). Times every hot-path component in isolation:
+//! PJRT artifact executions (L2/L1), flat-vector math, the ring collective,
+//! and a PowerSGD round.
+
+use std::path::Path;
+
+use anyhow::Result;
+use olsgd::bench::{bench, black_box};
+use olsgd::collective::ring_allreduce_mean;
+use olsgd::compress::PowerSgd;
+use olsgd::data::{self, GenConfig, PX};
+use olsgd::model::vecmath;
+use olsgd::runtime::Runtime;
+use olsgd::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let runtime = Runtime::new(Path::new("artifacts"))?;
+    let rt = runtime.load_model("cnn")?;
+    let n = rt.n;
+    let b = rt.train_batch;
+
+    let mut rng = Rng::seed_from(1);
+    let params = olsgd::model::init_params(&rt.manifest, 1);
+    let mom = vec![0.0f32; n];
+    let gen = GenConfig::default();
+    let ds = data::generate(1, 256, "train", &gen);
+    let images = ds.images[..b * PX].to_vec();
+    let labels = ds.labels[..b].to_vec();
+    let eval_images = ds.images[..rt.eval_batch * PX].to_vec();
+    let eval_labels = ds.labels[..rt.eval_batch].to_vec();
+
+    println!("== PJRT artifact executions (model=cnn, {n} params, batch {b}) ==");
+    bench("train_step (fwd+bwd+fused nesterov)", 2, 12, || {
+        rt.train_step(&params, &mom, &images, &labels, 0.1, 0.9, 1e-4).unwrap()
+    });
+    bench("grad_step (fwd+bwd)", 2, 12, || {
+        rt.grad_step(&params, &images, &labels).unwrap()
+    });
+    bench("evaluate (batch 100)", 2, 12, || {
+        rt.evaluate(&params, &eval_images, &eval_labels).unwrap()
+    });
+    let z = params.clone();
+    bench("pullback artifact", 2, 20, || rt.pullback(&params, &z, 0.6).unwrap());
+    let v = vec![0.0f32; n];
+    bench("anchor artifact", 2, 20, || rt.anchor_update(&z, &v, &params, 0.7).unwrap());
+    let g = {
+        let mut g = vec![0.0f32; n];
+        rng.fill_normal(&mut g, 0.01);
+        g
+    };
+    bench("sgd_update artifact", 2, 20, || {
+        rt.sgd_update(&params, &mom, &g, 0.1, 0.9, 1e-4).unwrap()
+    });
+
+    println!("\n== L3 vector math (n = {n} and paper-scale 11.2M) ==");
+    for size in [n, 11_173_962] {
+        let vecs: Vec<Vec<f32>> = (0..8)
+            .map(|i| {
+                let mut v = vec![0.0f32; size];
+                Rng::seed_from(i as u64).fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; size];
+        bench(&format!("mean_into m=8 n={size}"), 2, 10, || {
+            vecmath::mean_into(black_box(&refs), &mut out)
+        });
+        let mut bufs = vecs.clone();
+        bench(&format!("ring_allreduce m=8 n={size}"), 1, 5, || {
+            ring_allreduce_mean(black_box(&mut bufs))
+        });
+        let zz = vecs[0].clone();
+        let mut xx = vecs[1].clone();
+        bench(&format!("pullback_inplace n={size}"), 2, 10, || {
+            vecmath::pullback_inplace(black_box(&mut xx), &zz, 0.6)
+        });
+    }
+
+    println!("\n== PowerSGD round (model=cnn manifest, m=8) ==");
+    for rank in [1usize, 4] {
+        let mut psgd = PowerSgd::new(&rt.manifest, rank, 8, 1);
+        let grads: Vec<Vec<f32>> = (0..8)
+            .map(|i| {
+                let mut v = vec![0.0f32; n];
+                Rng::seed_from(10 + i as u64).fill_normal(&mut v, 0.01);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        bench(&format!("powersgd round rank={rank}"), 2, 10, || {
+            psgd.round(black_box(&refs))
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+//! Shared harness for the paper-reproduction benches (rust/benches/*.rs).
+//!
+//! Every bench binary = a set of experiment *legs* (algorithm + τ + data
+//! setting) over the same runtime/dataset, printed as the paper's
+//! table/figure rows and written to `results/<bench>/`.
+//!
+//! Sizing: the full paper grid at CIFAR scale is hours of CPU; benches
+//! default to a scaled workload that preserves the *shape* of every claim
+//! and finishes in minutes. Environment overrides:
+//!
+//! * `OLSGD_FULL=1`      — paper-scaled sizes (longer; for the record runs)
+//! * `OLSGD_EPOCHS=N`    — explicit epoch override
+//! * `OLSGD_TRAIN_N=N`   — explicit dataset-size override
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{Algo, ExperimentConfig};
+use crate::coordinator::run_experiment;
+use crate::data::{self, Dataset, GenConfig};
+use crate::metrics::{write_json, TrainLog};
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Bench-wide context: compiled model + datasets + output dir.
+pub struct BenchCtx {
+    pub rt: ModelRuntime,
+    _runtime: Runtime,
+    pub base: ExperimentConfig,
+    pub out: PathBuf,
+    train_iid: Dataset,
+    train_cache_seed: u64,
+    pub test: Dataset,
+}
+
+impl BenchCtx {
+    /// Standard bench configuration; `bench_name` names the results dir.
+    pub fn new(bench_name: &str) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let full = std::env::var("OLSGD_FULL").map(|v| v == "1").unwrap_or(false);
+        cfg.workers = 8;
+        cfg.model = "cnn".into();
+        cfg.train_n = if full { 4096 } else { 1024 };
+        cfg.test_n = 500;
+        cfg.epochs = if full { 30.0 } else { 6.0 };
+        cfg.eval_every = cfg.epochs / 6.0;
+        if let Ok(e) = std::env::var("OLSGD_EPOCHS") {
+            cfg.epochs = e.parse().unwrap_or(cfg.epochs);
+            cfg.eval_every = cfg.epochs / 6.0;
+        }
+        if let Ok(n) = std::env::var("OLSGD_TRAIN_N") {
+            cfg.train_n = n.parse().unwrap_or(cfg.train_n);
+        }
+
+        let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+        let rt = runtime.load_model(&cfg.model)?;
+        let gen = GenConfig::default();
+        let train_iid = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+        let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+        let out = PathBuf::from(format!("results/{bench_name}"));
+        Ok(Self {
+            rt,
+            _runtime: runtime,
+            train_cache_seed: cfg.seed,
+            base: cfg,
+            out,
+            train_iid,
+            test,
+        })
+    }
+
+    /// Run one leg. The paper's α-rule (0.5 for τ=1, 0.6 otherwise) is
+    /// applied automatically unless the caller overrode α.
+    pub fn run_leg(&mut self, label: &str, mutate: impl FnOnce(&mut ExperimentConfig)) -> Result<TrainLog> {
+        let mut cfg = self.base.clone();
+        mutate(&mut cfg);
+        // paper's tuned alpha rule
+        cfg.alpha = if cfg.tau <= 1 { 0.5 } else { 0.6 };
+        if cfg.train_n != self.train_iid.n || cfg.seed != self.train_cache_seed {
+            let gen = GenConfig::default();
+            self.train_iid = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+            self.train_cache_seed = cfg.seed;
+        }
+        eprintln!(
+            "[leg] {label}: algo={} tau={} noniid={} epochs={}",
+            cfg.algo.name(),
+            cfg.tau,
+            cfg.noniid,
+            cfg.epochs
+        );
+        let log = run_experiment(&self.rt, &cfg, &self.train_iid, &self.test)?;
+        write_json(&self.out, &format!("{label}.json"), &log.to_json())?;
+        Ok(log)
+    }
+
+    /// Run one leg from a fully specified config (no alpha-rule override) —
+    /// for ablations that sweep the hyper-parameters themselves.
+    pub fn run_leg_exact(&mut self, label: &str, cfg: ExperimentConfig) -> Result<TrainLog> {
+        if cfg.train_n != self.train_iid.n || cfg.seed != self.train_cache_seed {
+            let gen = GenConfig::default();
+            self.train_iid = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+            self.train_cache_seed = cfg.seed;
+        }
+        eprintln!(
+            "[leg] {label}: algo={} tau={} alpha={} beta={} opt={}",
+            cfg.algo.name(),
+            cfg.tau,
+            cfg.alpha,
+            cfg.beta,
+            cfg.local_opt
+        );
+        let log = run_experiment(&self.rt, &cfg, &self.train_iid, &self.test)?;
+        write_json(&self.out, &format!("{label}.json"), &log.to_json())?;
+        Ok(log)
+    }
+
+    /// Write the bench-level summary JSON.
+    pub fn write_summary(&self, name: &str, rows: Vec<Json>) -> Result<()> {
+        write_json(&self.out, name, &arr(rows))?;
+        println!("\nwrote results dir: {}", self.out.display());
+        Ok(())
+    }
+}
+
+/// One row of a paper table/figure, JSON-ready.
+pub fn row(label: &str, algo: Algo, tau: usize, log: &TrainLog, epochs: f64) -> Json {
+    obj(vec![
+        ("label", s(label)),
+        ("algo", s(algo.name())),
+        ("tau", num(tau as f64)),
+        ("final_acc", num(log.final_acc())),
+        ("final_test_loss", num(log.final_loss())),
+        ("time_per_epoch_s", num(log.time_per_epoch(epochs))),
+        ("total_time_s", num(log.total_sim_time)),
+        ("comm_ratio", num(log.comm_ratio())),
+        ("idle_s", num(log.total_idle_s)),
+    ])
+}
+
+/// Print a figure-style series header.
+pub fn header(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+    println!(
+        "{:<22} {:>6} {:>8} {:>11} {:>14} {:>11}",
+        "series", "tau", "acc%", "test_loss", "time/epoch(s)", "comm%"
+    );
+}
+
+/// Print one figure-style series row.
+pub fn print_row(label: &str, tau: usize, log: &TrainLog, epochs: f64) {
+    println!(
+        "{:<22} {:>6} {:>8.2} {:>11.4} {:>14.3} {:>11.1}",
+        label,
+        tau,
+        100.0 * log.final_acc(),
+        log.final_loss(),
+        log.time_per_epoch(epochs),
+        100.0 * log.comm_ratio()
+    );
+}

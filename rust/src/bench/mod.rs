@@ -1,0 +1,105 @@
+//! Criterion-like micro-benchmark harness (criterion is not in the offline
+//! crate mirror). Warmup, timed iterations, mean/std/p50/p99, and a
+//! stable one-line report format the perf pass greps.
+
+pub mod experiments;
+
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Summary};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<40} iters={:<5} mean={:>12} p50={:>12} p99={:>12} std={:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p99_s),
+            fmt_time(self.std_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations, timing each of the latter.
+/// The closure's return value is black-boxed to keep LLVM honest.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut summary = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        summary.add(dt);
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: summary.mean(),
+        std_s: summary.std(),
+        p50_s: percentile(&samples, 50.0),
+        p99_s: percentile(&samples, 99.0),
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-ish", 2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

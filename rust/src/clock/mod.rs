@@ -1,0 +1,210 @@
+//! Virtual-time substrate: per-worker discrete-event clocks.
+//!
+//! Every figure in the paper has a time axis; this module produces it. Each
+//! worker owns a monotonic virtual clock; algorithm drivers advance it with
+//! compute/communication durations and the clock keeps a per-category
+//! breakdown (compute, blocked-on-comm, idle-at-barrier) so the paper's
+//! communication-to-computation ratio (E8) and straggler idle-time (E9)
+//! fall straight out of the accounting.
+//!
+//! Invariants (property-tested):
+//! * per-worker time never decreases;
+//! * total = compute + comm_blocked + idle for every worker;
+//! * after `barrier()` all participating workers share the same time.
+
+/// Time accounting for one worker.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerClock {
+    now: f64,
+    pub compute_s: f64,
+    pub comm_blocked_s: f64,
+    pub idle_s: f64,
+}
+
+/// Clocks for a cluster of m workers.
+#[derive(Clone, Debug)]
+pub struct Clocks {
+    workers: Vec<WorkerClock>,
+}
+
+impl Clocks {
+    pub fn new(m: usize) -> Self {
+        assert!(m > 0);
+        Self { workers: vec![WorkerClock::default(); m] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn now(&self, w: usize) -> f64 {
+        self.workers[w].now
+    }
+
+    /// Latest worker time — the experiment's wall-clock.
+    pub fn max_now(&self) -> f64 {
+        self.workers.iter().map(|w| w.now).fold(0.0, f64::max)
+    }
+
+    pub fn worker(&self, w: usize) -> &WorkerClock {
+        &self.workers[w]
+    }
+
+    /// Advance `w` by a compute interval.
+    pub fn compute(&mut self, w: usize, dt: f64) {
+        assert!(dt >= 0.0, "negative compute dt {dt}");
+        self.workers[w].now += dt;
+        self.workers[w].compute_s += dt;
+    }
+
+    /// Advance `w` by a *blocking* communication interval.
+    pub fn comm_blocked(&mut self, w: usize, dt: f64) {
+        assert!(dt >= 0.0, "negative comm dt {dt}");
+        self.workers[w].now += dt;
+        self.workers[w].comm_blocked_s += dt;
+    }
+
+    /// Block `w` until absolute time `t` (no-op if already past), counted as
+    /// communication wait. Used for "anchor not ready yet" stalls.
+    pub fn wait_comm_until(&mut self, w: usize, t: f64) {
+        let c = &mut self.workers[w];
+        if t > c.now {
+            c.comm_blocked_s += t - c.now;
+            c.now = t;
+        }
+    }
+
+    /// Synchronize all workers to the max time; the gap is idle (waiting for
+    /// stragglers). Returns the barrier time.
+    pub fn barrier(&mut self) -> f64 {
+        let t = self.max_now();
+        for c in self.workers.iter_mut() {
+            if t > c.now {
+                c.idle_s += t - c.now;
+                c.now = t;
+            }
+        }
+        t
+    }
+
+    /// Total blocked-on-communication seconds across workers.
+    pub fn total_comm_blocked(&self) -> f64 {
+        self.workers.iter().map(|w| w.comm_blocked_s).sum()
+    }
+
+    pub fn total_compute(&self) -> f64 {
+        self.workers.iter().map(|w| w.compute_s).sum()
+    }
+
+    pub fn total_idle(&self) -> f64 {
+        self.workers.iter().map(|w| w.idle_s).sum()
+    }
+
+    /// The paper's communication-to-computation ratio over the run so far.
+    pub fn comm_to_compute_ratio(&self) -> f64 {
+        let c = self.total_compute();
+        if c == 0.0 {
+            0.0
+        } else {
+            (self.total_comm_blocked() + self.total_idle()) / c
+        }
+    }
+
+    /// Accounting invariant: now == compute + comm + idle per worker.
+    pub fn check_invariants(&self) {
+        for (i, w) in self.workers.iter().enumerate() {
+            let sum = w.compute_s + w.comm_blocked_s + w.idle_s;
+            assert!(
+                (w.now - sum).abs() <= 1e-9 * (1.0 + w.now.abs()),
+                "worker {i}: now {} != breakdown {}",
+                w.now,
+                sum
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn barrier_charges_idle_to_fast_workers() {
+        let mut c = Clocks::new(3);
+        c.compute(0, 1.0);
+        c.compute(1, 3.0);
+        c.compute(2, 2.0);
+        let t = c.barrier();
+        assert_eq!(t, 3.0);
+        assert_eq!(c.worker(0).idle_s, 2.0);
+        assert_eq!(c.worker(1).idle_s, 0.0);
+        assert_eq!(c.worker(2).idle_s, 1.0);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn wait_comm_until_noop_if_past() {
+        let mut c = Clocks::new(1);
+        c.compute(0, 5.0);
+        c.wait_comm_until(0, 3.0);
+        assert_eq!(c.now(0), 5.0);
+        assert_eq!(c.worker(0).comm_blocked_s, 0.0);
+        c.wait_comm_until(0, 7.5);
+        assert_eq!(c.now(0), 7.5);
+        assert_eq!(c.worker(0).comm_blocked_s, 2.5);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn ratio_definition() {
+        let mut c = Clocks::new(2);
+        c.compute(0, 10.0);
+        c.compute(1, 10.0);
+        c.comm_blocked(0, 2.0);
+        c.comm_blocked(1, 2.0);
+        assert!((c.comm_to_compute_ratio() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_random_interleavings_keep_invariants() {
+        property("clock invariants", 300, |g| {
+            let m = g.usize_in(1, 8);
+            let mut c = Clocks::new(m);
+            let mut last = vec![0.0f64; m];
+            for _ in 0..g.usize_in(0, 60) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let w = g.usize_in(0, m - 1);
+                        c.compute(w, g.f64_in(0.0, 2.0));
+                    }
+                    1 => {
+                        let w = g.usize_in(0, m - 1);
+                        c.comm_blocked(w, g.f64_in(0.0, 1.0));
+                    }
+                    2 => {
+                        let w = g.usize_in(0, m - 1);
+                        let t = g.f64_in(0.0, 10.0);
+                        c.wait_comm_until(w, t);
+                    }
+                    _ => {
+                        c.barrier();
+                        let t = c.max_now();
+                        for w in 0..m {
+                            assert_eq!(c.now(w), t, "barrier must equalize");
+                        }
+                    }
+                }
+                for w in 0..m {
+                    assert!(c.now(w) >= last[w], "clock went backwards");
+                    last[w] = c.now(w);
+                }
+                c.check_invariants();
+            }
+        });
+    }
+}

@@ -1,0 +1,271 @@
+//! Small dense row-major linear algebra for PowerSGD.
+//!
+//! Shapes are tiny (rows/cols ≤ a few thousand, rank ≤ 8); these simple
+//! ikj-ordered loops auto-vectorize and are nowhere near the profile's top
+//! (see EXPERIMENTS.md §Perf).
+
+/// C (m x n) = A (m x k) @ B (k x n), row-major.
+pub fn matmul_nn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C (k x n) = Aᵀ @ B where A is (m x k), B is (m x n), row-major.
+pub fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut c = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = arow[kk];
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// M̂ (rows x cols) = P (rows x r) @ Qᵀ where Q is (cols x r), row-major.
+pub fn matmul_pqt(p: &[f32], rows: usize, r: usize, q: &[f32], cols: usize) -> Vec<f32> {
+    assert_eq!(p.len(), rows * r);
+    assert_eq!(q.len(), cols * r);
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        let prow = &p[i * r..(i + 1) * r];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        for c in 0..cols {
+            let qrow = &q[c * r..(c + 1) * r];
+            let mut acc = 0.0f32;
+            for j in 0..r {
+                acc += prow[j] * qrow[j];
+            }
+            orow[c] = acc;
+        }
+    }
+    out
+}
+
+/// acc (rows x r) += (g + e) @ Q, where g/e are (rows x cols), Q (cols x r).
+/// The fused add avoids materializing M = g + e (PowerSGD hot loop).
+pub fn matmul_fused_add_acc(
+    g: &[f32],
+    e: &[f32],
+    rows: usize,
+    cols: usize,
+    q: &[f32],
+    r: usize,
+    acc: &mut [f32],
+) {
+    assert_eq!(g.len(), rows * cols);
+    assert_eq!(e.len(), rows * cols);
+    assert_eq!(q.len(), cols * r);
+    assert_eq!(acc.len(), rows * r);
+    for i in 0..rows {
+        let grow = &g[i * cols..(i + 1) * cols];
+        let erow = &e[i * cols..(i + 1) * cols];
+        let arow = &mut acc[i * r..(i + 1) * r];
+        for c in 0..cols {
+            let m = grow[c] + erow[c];
+            let qrow = &q[c * r..(c + 1) * r];
+            for j in 0..r {
+                arow[j] += m * qrow[j];
+            }
+        }
+    }
+}
+
+/// acc (cols x r) += (g + e)ᵀ @ P, where g/e are (rows x cols), P (rows x r).
+pub fn matmul_tn_fused_add_acc(
+    g: &[f32],
+    e: &[f32],
+    rows: usize,
+    cols: usize,
+    p: &[f32],
+    r: usize,
+    acc: &mut [f32],
+) {
+    assert_eq!(g.len(), rows * cols);
+    assert_eq!(e.len(), rows * cols);
+    assert_eq!(p.len(), rows * r);
+    assert_eq!(acc.len(), cols * r);
+    for i in 0..rows {
+        let grow = &g[i * cols..(i + 1) * cols];
+        let erow = &e[i * cols..(i + 1) * cols];
+        let prow = &p[i * r..(i + 1) * r];
+        for c in 0..cols {
+            let m = grow[c] + erow[c];
+            let arow = &mut acc[c * r..(c + 1) * r];
+            for j in 0..r {
+                arow[j] += m * prow[j];
+            }
+        }
+    }
+}
+
+/// Modified Gram–Schmidt on the columns of P (rows x r, row-major), with the
+/// reference implementation's epsilon guard against zero columns.
+pub fn orthonormalize_columns(p: &mut [f32], rows: usize, r: usize) {
+    assert_eq!(p.len(), rows * r);
+    const EPS: f32 = 1e-8;
+    for j in 0..r {
+        // Subtract projections onto previous columns.
+        for prev in 0..j {
+            let mut dot = 0.0f32;
+            for i in 0..rows {
+                dot += p[i * r + j] * p[i * r + prev];
+            }
+            for i in 0..rows {
+                p[i * r + j] -= dot * p[i * r + prev];
+            }
+        }
+        let mut norm = 0.0f32;
+        for i in 0..rows {
+            norm += p[i * r + j] * p[i * r + j];
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-6 {
+            // Rank-deficient column: the residual is pure f32 noise.
+            // Normalizing it would amplify noise into a junk direction
+            // (breaking exact low-rank reconstruction), so zero it instead.
+            for i in 0..rows {
+                p[i * r + j] = 0.0;
+            }
+            continue;
+        }
+        let inv = 1.0 / (norm + EPS);
+        for i in 0..rows {
+            p[i * r + j] *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, property};
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn nn_matches_naive() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
+        let c = matmul_nn(&a, 2, 3, &b, 2);
+        assert_close(&c, &[58.0, 64.0, 139.0, 154.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn tn_matches_nn_of_transpose() {
+        property("tn == nn(t)", 50, |g| {
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 12);
+            let n = g.usize_in(1, 8);
+            let a = g.vec_f32(m * k, 2.0);
+            let b = g.vec_f32(m * n, 2.0);
+            // explicit transpose
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..m {
+                for j in 0..k {
+                    at[j * m + i] = a[i * k + j];
+                }
+            }
+            let want = matmul_nn(&at, k, m, &b, n);
+            let got = matmul_tn(&a, m, k, &b, n);
+            assert_close(&got, &want, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn pqt_matches_nn_of_qt() {
+        property("pqt == nn(qt)", 50, |g| {
+            let rows = g.usize_in(1, 10);
+            let r = g.usize_in(1, 4);
+            let cols = g.usize_in(1, 10);
+            let p = g.vec_f32(rows * r, 2.0);
+            let q = g.vec_f32(cols * r, 2.0);
+            let mut qt = vec![0.0f32; r * cols];
+            for c in 0..cols {
+                for j in 0..r {
+                    qt[j * cols + c] = q[c * r + j];
+                }
+            }
+            let want = matmul_nn(&p, rows, r, &qt, cols);
+            let got = matmul_pqt(&p, rows, r, &q, cols);
+            assert_close(&got, &want, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn fused_variants_match_unfused() {
+        property("fused == add then mm", 50, |g| {
+            let rows = g.usize_in(1, 10);
+            let cols = g.usize_in(1, 10);
+            let r = g.usize_in(1, 4);
+            let gv = g.vec_f32(rows * cols, 2.0);
+            let ev = g.vec_f32(rows * cols, 2.0);
+            let q = g.vec_f32(cols * r, 2.0);
+            let p = g.vec_f32(rows * r, 2.0);
+            let m: Vec<f32> = gv.iter().zip(&ev).map(|(&a, &b)| a + b).collect();
+
+            let mut acc1 = vec![0.0f32; rows * r];
+            matmul_fused_add_acc(&gv, &ev, rows, cols, &q, r, &mut acc1);
+            assert_close(&acc1, &matmul_nn(&m, rows, cols, &q, r), 1e-4, 1e-5);
+
+            let mut acc2 = vec![0.0f32; cols * r];
+            matmul_tn_fused_add_acc(&gv, &ev, rows, cols, &p, r, &mut acc2);
+            assert_close(&acc2, &matmul_tn(&m, rows, cols, &p, r), 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormalizes() {
+        let rows = 20;
+        let r = 4;
+        let mut p = randn(rows * r, 3);
+        orthonormalize_columns(&mut p, rows, r);
+        for j1 in 0..r {
+            for j2 in 0..=j1 {
+                let mut dot = 0.0f32;
+                for i in 0..rows {
+                    dot += p[i * r + j1] * p[i * r + j2];
+                }
+                let want = if j1 == j2 { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "P'P[{j1},{j2}] = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_survives_zero_column() {
+        let rows = 5;
+        let r = 2;
+        let mut p = vec![0.0f32; rows * r];
+        for i in 0..rows {
+            p[i * r] = 1.0; // col 0 constant, col 1 zero
+        }
+        orthonormalize_columns(&mut p, rows, r);
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+}

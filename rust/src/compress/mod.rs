@@ -1,0 +1,322 @@
+//! PowerSGD baseline (Vogels et al., NeurIPS 2019 [5]) — the gradient-
+//! compression comparator in Fig. 4/5.
+//!
+//! Rank-r compression with the three ingredients of the reference
+//! implementation:
+//! * **warm start** — Q persists across rounds (single power iteration per
+//!   round converges because gradients change slowly);
+//! * **error feedback** — each worker re-injects last round's compression
+//!   residual before compressing;
+//! * **orthogonalization** — modified Gram–Schmidt on the averaged P.
+//!
+//! Per round and per weight matrix M (rows x cols, from the manifest's
+//! matricization):
+//! ```text
+//!   M_w  <- grad_w + error_w                 (feedback)
+//!   P    <- mean_w(M_w Q);  orthonormalize P  (all-reduce #1: rows*r)
+//!   Q    <- mean_w(M_wᵀ P)                    (all-reduce #2: cols*r)
+//!   M̂    <- P Qᵀ           (shared by all workers)
+//!   error_w <- M_w - M̂
+//! ```
+//! Bias vectors (manifest `compress = false`) are all-reduced raw, exactly
+//! as the reference implementation does.
+//!
+//! Q is identical on every worker (seeded identically, updated only from
+//! all-reduced quantities), so it is stored once. Errors are per-worker.
+
+use crate::runtime::manifest::ModelManifest;
+use crate::util::rng::Rng;
+
+mod linalg;
+
+pub use linalg::{matmul_nn, matmul_pqt, matmul_tn, orthonormalize_columns};
+
+/// Persistent PowerSGD state for one model + worker group.
+pub struct PowerSgd {
+    pub rank: usize,
+    n: usize,
+    workers: usize,
+    /// (offset, rows, cols) of each compressed matrix
+    mats: Vec<(usize, usize, usize)>,
+    /// (offset, len) of each raw (uncompressed) tensor
+    raws: Vec<(usize, usize)>,
+    /// per-matrix Q, cols x r row-major — shared across workers
+    qs: Vec<Vec<f32>>,
+    /// per-worker error-feedback buffer (full flat length)
+    errors: Vec<Vec<f32>>,
+}
+
+/// Result of one compression round.
+pub struct RoundOutput {
+    /// the decompressed averaged gradient (what every worker applies)
+    pub avg_grad: Vec<f32>,
+    /// bytes each worker put on the wire this round
+    pub bytes_per_worker: usize,
+    /// FLOPs spent in encode/decode GEMMs per worker (for the latency model)
+    pub encode_flops: f64,
+}
+
+impl PowerSgd {
+    pub fn new(manifest: &ModelManifest, rank: usize, workers: usize, seed: u64) -> Self {
+        assert!(rank >= 1, "rank must be >= 1");
+        let mut mats = Vec::new();
+        let mut raws = Vec::new();
+        let mut qs = Vec::new();
+        for t in &manifest.tensors {
+            if t.compress && t.rows > 1 {
+                let r = rank.min(t.rows).min(t.cols);
+                let mut q = vec![0.0f32; t.cols * r];
+                // Same seed on every worker -> identical Q, like the paper's
+                // shared PRNG trick.
+                let mut rng = Rng::stream(seed, &format!("powersgd/q/{}", t.name));
+                rng.fill_normal(&mut q, 1.0);
+                mats.push((t.offset, t.rows, t.cols));
+                qs.push(q);
+            } else {
+                raws.push((t.offset, t.size));
+            }
+        }
+        Self {
+            rank,
+            n: manifest.param_count,
+            workers,
+            mats,
+            raws,
+            qs,
+            errors: vec![vec![0.0f32; manifest.param_count]; workers],
+        }
+    }
+
+    /// Effective rank of matrix `i` (capped by its dimensions).
+    fn eff_rank(&self, rows: usize, cols: usize) -> usize {
+        self.rank.min(rows).min(cols)
+    }
+
+    /// Wire bytes per worker per round: compressed P and Q halves + raw
+    /// tensors. (Both all-reduces move rows*r and cols*r floats.)
+    pub fn bytes_per_round(&self) -> usize {
+        let compressed: usize = self
+            .mats
+            .iter()
+            .map(|&(_, rows, cols)| {
+                let r = self.eff_rank(rows, cols);
+                (rows + cols) * r * 4
+            })
+            .sum();
+        let raw: usize = self.raws.iter().map(|&(_, len)| len * 4).sum();
+        compressed + raw
+    }
+
+    /// One compression round over the workers' gradients. `grads[w]` is
+    /// worker w's raw gradient (len = param_count); it is not mutated.
+    pub fn round(&mut self, grads: &[&[f32]]) -> RoundOutput {
+        assert_eq!(grads.len(), self.workers, "worker count changed");
+        for g in grads {
+            assert_eq!(g.len(), self.n, "gradient length mismatch");
+        }
+        let m = self.workers as f32;
+        let mut avg = vec![0.0f32; self.n];
+        let mut flops = 0.0f64;
+
+        // Feedback: M_w = grad_w + error_w (materialized lazily per matrix).
+        for (mi, &(off, rows, cols)) in self.mats.iter().enumerate() {
+            let r = self.eff_rank(rows, cols);
+            let size = rows * cols;
+            let q = &mut self.qs[mi];
+
+            // P = mean_w((g_w + e_w) Q)
+            let mut p = vec![0.0f32; rows * r];
+            for w in 0..self.workers {
+                let gw = &grads[w][off..off + size];
+                let ew = &self.errors[w][off..off + size];
+                // fused (g+e) @ Q accumulation
+                linalg::matmul_fused_add_acc(gw, ew, rows, cols, q, r, &mut p);
+            }
+            for v in p.iter_mut() {
+                *v /= m;
+            }
+            orthonormalize_columns(&mut p, rows, r);
+
+            // Q = mean_w(M_wᵀ P)
+            let mut q_new = vec![0.0f32; cols * r];
+            for w in 0..self.workers {
+                let gw = &grads[w][off..off + size];
+                let ew = &self.errors[w][off..off + size];
+                linalg::matmul_tn_fused_add_acc(gw, ew, rows, cols, &p, r, &mut q_new);
+            }
+            for v in q_new.iter_mut() {
+                *v /= m;
+            }
+
+            // decompress: M̂ = P Qᵀ
+            let approx = matmul_pqt(&p, rows, r, &q_new, cols);
+            avg[off..off + size].copy_from_slice(&approx);
+
+            // error_w = (g_w + e_w) - M̂
+            for w in 0..self.workers {
+                let gw = &grads[w][off..off + size];
+                let e = &mut self.errors[w][off..off + size];
+                for i in 0..size {
+                    e[i] = gw[i] + e[i] - approx[i];
+                }
+            }
+
+            *q = q_new;
+            // GEMM flops per worker: P (2*rows*cols*r), Q (2*rows*cols*r),
+            // decode (2*rows*cols*r).
+            flops += 6.0 * rows as f64 * cols as f64 * r as f64;
+        }
+
+        // Raw tensors: plain mean, no error.
+        for &(off, len) in &self.raws {
+            for i in off..off + len {
+                let mut sum = 0.0f32;
+                for g in grads {
+                    sum += g[i];
+                }
+                avg[i] = sum / m;
+            }
+        }
+
+        RoundOutput { avg_grad: avg, bytes_per_worker: self.bytes_per_round(), encode_flops: flops }
+    }
+
+    /// L2 norm of a worker's error-feedback buffer (diagnostics/tests).
+    pub fn error_norm(&self, worker: usize) -> f64 {
+        crate::model::vecmath::l2_norm(&self.errors[worker])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorManifest;
+    use crate::util::proptest::assert_close;
+
+    fn manifest_one_matrix(rows: usize, cols: usize, bias: usize) -> ModelManifest {
+        let mut tensors = vec![TensorManifest {
+            name: "w".into(),
+            offset: 0,
+            size: rows * cols,
+            shape: vec![rows, cols],
+            init: "he_normal".into(),
+            std: 0.1,
+            rows,
+            cols,
+            compress: true,
+        }];
+        if bias > 0 {
+            tensors.push(TensorManifest {
+                name: "b".into(),
+                offset: rows * cols,
+                size: bias,
+                shape: vec![bias],
+                init: "zeros".into(),
+                std: 0.0,
+                rows: 1,
+                cols: bias,
+                compress: false,
+            });
+        }
+        ModelManifest { param_count: rows * cols + bias, tensors, modules: Default::default() }
+    }
+
+    fn rank1_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let u: Vec<f32> = (0..rows).map(|_| rng.next_normal() as f32).collect();
+        let v: Vec<f32> = (0..cols).map(|_| rng.next_normal() as f32).collect();
+        let mut m = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                m[i * cols + j] = u[i] * v[j];
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn rank1_gradient_reconstructed_exactly() {
+        let mm = manifest_one_matrix(6, 5, 0);
+        let mut ps = PowerSgd::new(&mm, 2, 1, 1);
+        let g = rank1_matrix(6, 5, 3);
+        let out = ps.round(&[&g]);
+        assert_close(&out.avg_grad, &g, 1e-4, 1e-5);
+        assert!(ps.error_norm(0) < 1e-4, "error {}", ps.error_norm(0));
+    }
+
+    #[test]
+    fn biases_pass_through_as_exact_mean() {
+        let mm = manifest_one_matrix(4, 4, 3);
+        let mut ps = PowerSgd::new(&mm, 1, 2, 1);
+        let mut g0 = rank1_matrix(4, 4, 5);
+        let mut g1 = rank1_matrix(4, 4, 6);
+        g0.extend_from_slice(&[1.0, 2.0, 3.0]);
+        g1.extend_from_slice(&[3.0, 2.0, 1.0]);
+        let out = ps.round(&[&g0, &g1]);
+        assert_close(&out.avg_grad[16..], &[2.0, 2.0, 2.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn error_feedback_reinjects_residual() {
+        // With a rank-2 true gradient but rank-1 compression, the sum of the
+        // decompressed outputs over rounds must approach the true repeated
+        // gradient (EF-SGD guarantee), even though each round is lossy.
+        let rows = 8;
+        let cols = 6;
+        let mm = manifest_one_matrix(rows, cols, 0);
+        let mut ps = PowerSgd::new(&mm, 1, 1, 2);
+        // fixed rank-2 gradient
+        let mut g = rank1_matrix(rows, cols, 10);
+        let g2 = rank1_matrix(rows, cols, 11);
+        for i in 0..g.len() {
+            g[i] += 0.5 * g2[i];
+        }
+        let rounds = 60;
+        let mut applied = vec![0.0f32; g.len()];
+        for _ in 0..rounds {
+            let out = ps.round(&[&g]);
+            for i in 0..g.len() {
+                applied[i] += out.avg_grad[i];
+            }
+        }
+        let want: Vec<f32> = g.iter().map(|&x| x * rounds as f32).collect();
+        let err = crate::model::vecmath::max_abs_diff(&applied, &want);
+        let scale = want.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        assert!(err / scale < 0.05, "EF bias too large: {err} / {scale}");
+    }
+
+    #[test]
+    fn bytes_per_round_formula() {
+        let mm = manifest_one_matrix(10, 7, 4);
+        let ps = PowerSgd::new(&mm, 3, 2, 1);
+        // (10 + 7) * 3 floats + 4 raw floats
+        assert_eq!(ps.bytes_per_round(), (17 * 3 + 4) * 4);
+    }
+
+    #[test]
+    fn rank_capped_by_dims() {
+        let mm = manifest_one_matrix(2, 9, 0);
+        let mut ps = PowerSgd::new(&mm, 8, 1, 1);
+        // effective rank = 2; round must still work and bytes reflect cap
+        assert_eq!(ps.bytes_per_round(), (2 + 9) * 2 * 4);
+        let g = rank1_matrix(2, 9, 7);
+        let out = ps.round(&[&g]);
+        assert_close(&out.avg_grad, &g, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn multi_worker_average_is_unbiased_for_low_rank() {
+        // Two workers with rank-1 gradients sharing the same column space:
+        // compression is exact and the output equals the plain mean.
+        let rows = 5;
+        let cols = 4;
+        let mm = manifest_one_matrix(rows, cols, 0);
+        let mut ps = PowerSgd::new(&mm, 2, 2, 1);
+        let base = rank1_matrix(rows, cols, 20);
+        let g0: Vec<f32> = base.iter().map(|&x| 2.0 * x).collect();
+        let g1: Vec<f32> = base.iter().map(|&x| 4.0 * x).collect();
+        let out = ps.round(&[&g0, &g1]);
+        let want: Vec<f32> = base.iter().map(|&x| 3.0 * x).collect();
+        assert_close(&out.avg_grad, &want, 1e-4, 1e-5);
+    }
+}

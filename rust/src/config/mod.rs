@@ -1,0 +1,315 @@
+//! Experiment configuration: typed config struct + TOML-subset parser +
+//! `key=value` override layer (shared by config files and the CLI).
+//!
+//! The TOML subset covers what experiment files need: `[sections]`,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays,
+//! plus `#` comments. Section names become dotted key prefixes, so
+//! `[data]\ntrain_n = 4000` is the override `data.train_n=4000`.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use crate::simnet::{ClusterModel, ComputeModel, NetworkModel, StragglerModel};
+
+/// Which algorithm drives the run (see coordinator/).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Sync,
+    Local,
+    Overlap,
+    OverlapM,
+    Easgd,
+    Eamsgd,
+    Cocod,
+    PowerSgd,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sync" => Algo::Sync,
+            "local" => Algo::Local,
+            "overlap" => Algo::Overlap,
+            "overlap-m" | "overlap_m" | "overlapm" => Algo::OverlapM,
+            "easgd" => Algo::Easgd,
+            "eamsgd" => Algo::Eamsgd,
+            "cocod" => Algo::Cocod,
+            "powersgd" => Algo::PowerSgd,
+            _ => bail!(
+                "unknown algorithm '{s}' (want sync|local|overlap|overlap-m|easgd|eamsgd|cocod|powersgd)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Sync => "sync",
+            Algo::Local => "local",
+            Algo::Overlap => "overlap",
+            Algo::OverlapM => "overlap-m",
+            Algo::Easgd => "easgd",
+            Algo::Eamsgd => "eamsgd",
+            Algo::Cocod => "cocod",
+            Algo::PowerSgd => "powersgd",
+        }
+    }
+
+    pub fn all() -> &'static [Algo] {
+        &[
+            Algo::Sync,
+            Algo::Local,
+            Algo::Overlap,
+            Algo::OverlapM,
+            Algo::Easgd,
+            Algo::Eamsgd,
+            Algo::Cocod,
+            Algo::PowerSgd,
+        ]
+    }
+}
+
+/// Full experiment description. Every field is settable via
+/// `set("dotted.key", "value")` so config files and CLI share one path.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub algo: Algo,
+    pub model: String,
+    pub workers: usize,
+    pub epochs: f64,
+    pub seed: u64,
+    /// evaluate every this many epochs (also the loss-record cadence)
+    pub eval_every: f64,
+
+    // optimizer
+    pub base_lr: f32,
+    pub tau: usize,
+    pub alpha: f32,
+    pub beta: f32,
+    pub mu: f32,
+    pub wd: f32,
+    /// PowerSGD rank
+    pub rank: usize,
+    /// local optimizer: "nesterov" (paper recipe) or "adam" (§6 extension,
+    /// Overlap-Local-Adam — local steps use fused Adam)
+    pub local_opt: String,
+
+    // data
+    pub train_n: usize,
+    pub test_n: usize,
+    pub noniid: bool,
+    pub dominant_frac: f64,
+    pub reshuffle: bool,
+
+    // cluster timing
+    pub net_preset: String,
+    pub straggler: StragglerModel,
+    pub base_step_s: f64,
+    /// None -> paper ResNet-18 message size (44.7 MB); Some(0) -> actual
+    /// model size; Some(b) -> explicit bytes
+    pub message_bytes: Option<usize>,
+
+    pub artifacts_dir: String,
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            algo: Algo::OverlapM,
+            model: "cnn".into(),
+            workers: 8,
+            epochs: 20.0,
+            seed: 1,
+            eval_every: 1.0,
+            // paper recipe is 0.1 on BN-equipped ResNet-18; our scaled CNN
+            // has no normalization layers, so 0.05 is its stable analogue
+            base_lr: 0.05,
+            tau: 2,
+            alpha: 0.6,
+            beta: 0.7,
+            mu: 0.9,
+            wd: 1e-4,
+            rank: 4,
+            local_opt: "nesterov".into(),
+            train_n: 4096,
+            test_n: 1000,
+            noniid: false,
+            dominant_frac: 0.64,
+            reshuffle: true,
+            net_preset: "paper40g".into(),
+            straggler: StragglerModel::None,
+            base_step_s: 0.188,
+            message_bytes: None,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Apply one dotted-key override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim().trim_matches('"');
+        let parse_f64 = || -> Result<f64> {
+            v.parse::<f64>().with_context(|| format!("bad number for {key}: '{v}'"))
+        };
+        let parse_usize = || -> Result<usize> {
+            v.parse::<usize>().with_context(|| format!("bad integer for {key}: '{v}'"))
+        };
+        let parse_bool = || -> Result<bool> {
+            v.parse::<bool>().with_context(|| format!("bad bool for {key}: '{v}'"))
+        };
+        match key {
+            "name" => self.name = v.to_string(),
+            "algo" | "algorithm" => self.algo = Algo::parse(v)?,
+            "model" => self.model = v.to_string(),
+            "workers" | "m" => self.workers = parse_usize()?,
+            "epochs" => self.epochs = parse_f64()?,
+            "seed" => self.seed = v.parse().context("bad seed")?,
+            "eval_every" => self.eval_every = parse_f64()?,
+            "base_lr" | "lr" => self.base_lr = parse_f64()? as f32,
+            "tau" => self.tau = parse_usize()?,
+            "alpha" => self.alpha = parse_f64()? as f32,
+            "beta" => self.beta = parse_f64()? as f32,
+            "mu" | "momentum" => self.mu = parse_f64()? as f32,
+            "wd" | "weight_decay" => self.wd = parse_f64()? as f32,
+            "rank" => self.rank = parse_usize()?,
+            "local_opt" | "optimizer" => {
+                anyhow::ensure!(
+                    v == "nesterov" || v == "adam",
+                    "local_opt must be 'nesterov' or 'adam', got '{v}'"
+                );
+                self.local_opt = v.to_string();
+            }
+            "data.train_n" | "train_n" => self.train_n = parse_usize()?,
+            "data.test_n" | "test_n" => self.test_n = parse_usize()?,
+            "data.noniid" | "noniid" => self.noniid = parse_bool()?,
+            "data.dominant_frac" | "dominant_frac" => self.dominant_frac = parse_f64()?,
+            "data.reshuffle" | "reshuffle" => self.reshuffle = parse_bool()?,
+            "net.preset" | "net" => self.net_preset = v.to_string(),
+            "net.base_step_s" | "base_step_s" => self.base_step_s = parse_f64()?,
+            "net.message_bytes" | "message_bytes" => {
+                self.message_bytes = Some(parse_usize()?)
+            }
+            "straggler" => {
+                // none | exp:<scale> | slow:<node>:<factor> | jitter:<j>
+                let parts: Vec<&str> = v.split(':').collect();
+                self.straggler = match parts[0] {
+                    "none" => StragglerModel::None,
+                    "exp" => StragglerModel::ShiftedExp {
+                        scale: parts.get(1).unwrap_or(&"0.2").parse()?,
+                    },
+                    "slow" => StragglerModel::SlowNode {
+                        node: parts.get(1).unwrap_or(&"0").parse()?,
+                        factor: parts.get(2).unwrap_or(&"3.0").parse()?,
+                    },
+                    "jitter" => StragglerModel::UniformJitter {
+                        jitter: parts.get(1).unwrap_or(&"0.1").parse()?,
+                    },
+                    other => bail!("unknown straggler model '{other}'"),
+                };
+            }
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            "out_dir" => self.out_dir = v.to_string(),
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Load a TOML-subset file, then apply `overrides` in order.
+    pub fn from_file(path: &str, overrides: &[(String, String)]) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut cfg = Self::default();
+        for (k, v) in toml::parse_flat(&text)? {
+            cfg.set(&k, &v)?;
+        }
+        for (k, v) in overrides {
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn network(&self) -> Result<NetworkModel> {
+        Ok(match self.net_preset.as_str() {
+            "paper40g" => NetworkModel::paper_40gbps(),
+            "slow10g" => NetworkModel::slow_10gbps(),
+            "fast" => NetworkModel::fast_fabric(),
+            other => bail!("unknown net preset '{other}' (paper40g|slow10g|fast)"),
+        })
+    }
+
+    /// Assemble the cluster timing model; `actual_model_bytes` is used when
+    /// `message_bytes = 0` is requested.
+    pub fn cluster(&self, actual_model_bytes: usize) -> Result<ClusterModel> {
+        let message_bytes = match self.message_bytes {
+            None => 11_173_962 * 4, // paper's ResNet-18
+            Some(0) => actual_model_bytes,
+            Some(b) => b,
+        };
+        Ok(ClusterModel {
+            workers: self.workers,
+            net: self.network()?,
+            compute: ComputeModel {
+                base_step_s: self.base_step_s,
+                straggler: self.straggler.clone(),
+            },
+            message_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_coherent() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.algo, Algo::OverlapM);
+        assert!(c.cluster(1000).is_ok());
+    }
+
+    #[test]
+    fn set_overrides_every_group() {
+        let mut c = ExperimentConfig::default();
+        c.set("algo", "cocod").unwrap();
+        c.set("tau", "24").unwrap();
+        c.set("data.noniid", "true").unwrap();
+        c.set("straggler", "slow:2:3.5").unwrap();
+        c.set("net.message_bytes", "0").unwrap();
+        assert_eq!(c.algo, Algo::Cocod);
+        assert_eq!(c.tau, 24);
+        assert!(c.noniid);
+        match c.straggler {
+            StragglerModel::SlowNode { node, factor } => {
+                assert_eq!(node, 2);
+                assert_eq!(factor, 3.5);
+            }
+            _ => panic!("wrong straggler"),
+        }
+        assert_eq!(c.cluster(1234).unwrap().message_bytes, 1234);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn algo_round_trips() {
+        for a in Algo::all() {
+            assert_eq!(Algo::parse(a.name()).unwrap(), *a);
+        }
+    }
+
+    #[test]
+    fn message_bytes_default_is_paper_scale() {
+        let c = ExperimentConfig::default();
+        let cl = c.cluster(40).unwrap();
+        assert_eq!(cl.message_bytes, 11_173_962 * 4);
+    }
+}

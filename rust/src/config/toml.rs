@@ -1,0 +1,143 @@
+//! TOML-subset parser (no `serde`/`toml` in the offline crate mirror).
+//!
+//! Supported grammar — everything experiment files use:
+//! * `# comments` and blank lines
+//! * `[section]` headers (flattened into dotted key prefixes)
+//! * `key = "string"`, `key = 123`, `key = 1.5e-3`, `key = true`
+//! * flat arrays `key = [1, 2, 3]` (flattened to a comma-joined value)
+//!
+//! Values are returned as raw strings; typing happens in
+//! `ExperimentConfig::set`, so the parser stays schema-free.
+
+use anyhow::{bail, Result};
+
+/// Parse into ordered `(dotted.key, value)` pairs.
+pub fn parse_flat(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            continue;
+        }
+        let Some(eq) = find_unquoted(line, '=') else {
+            bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let value = line[eq + 1..].trim();
+        if key.is_empty() || value.is_empty() {
+            bail!("line {}: empty key or value", lineno + 1);
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full_key, parse_value(value, lineno + 1)?));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    match find_unquoted(line, '#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Index of `target` outside double quotes.
+fn find_unquoted(s: &str, target: char) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            c if c == target && !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<String> {
+    let v = v.trim();
+    if let Some(inner) = v.strip_prefix('"') {
+        let Some(s) = inner.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string");
+        };
+        return Ok(s.to_string());
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            bail!("line {lineno}: unterminated array");
+        };
+        let items: Vec<String> = body
+            .split(',')
+            .map(|x| x.trim().trim_matches('"').to_string())
+            .filter(|x| !x.is_empty())
+            .collect();
+        return Ok(items.join(","));
+    }
+    // bare scalar: number or bool — validated downstream
+    Ok(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_and_strings() {
+        let text = r#"
+            # an experiment
+            name = "fig4"
+            tau = 2
+            alpha = 0.6   # tuned
+
+            [data]
+            train_n = 4096
+            noniid = true
+
+            [net]
+            preset = "paper40g"
+        "#;
+        let kv = parse_flat(text).unwrap();
+        let get = |k: &str| kv.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone());
+        assert_eq!(get("name").unwrap(), "fig4");
+        assert_eq!(get("tau").unwrap(), "2");
+        assert_eq!(get("alpha").unwrap(), "0.6");
+        assert_eq!(get("data.train_n").unwrap(), "4096");
+        assert_eq!(get("data.noniid").unwrap(), "true");
+        assert_eq!(get("net.preset").unwrap(), "paper40g");
+    }
+
+    #[test]
+    fn arrays_flatten_to_commas() {
+        let kv = parse_flat("taus = [1, 2, 8, 24]").unwrap();
+        assert_eq!(kv[0].1, "1,2,8,24");
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let kv = parse_flat(r#"name = "exp #7""#).unwrap();
+        assert_eq!(kv[0].1, "exp #7");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse_flat("[unterminated").is_err());
+        assert!(parse_flat("novalue =").is_err());
+        assert!(parse_flat("just a line").is_err());
+        assert!(parse_flat("s = \"open").is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! CoCoD-SGD baseline (Shen et al., IJCAI 2019 [20]).
+//!
+//! The other communication/computation-decoupled Local SGD variant the
+//! paper compares against. Per round:
+//!
+//! ```text
+//!   at boundary r:   launch all-reduce of the current models  (non-blocking)
+//!   during round r+1: τ local steps accumulate a delta Δ_i
+//!   at boundary r+1: x_i ← avg(x at boundary r) + Δ_i
+//! ```
+//!
+//! i.e. the local updates are applied on top of a τ-stale average. Same
+//! overlap benefit as Overlap-Local-SGD (and the same timing model here),
+//! but no pullback contraction — which is why it diverges for large τ in
+//! the non-IID setting (Table 2) while Overlap-Local-SGD does not.
+
+use anyhow::Result;
+
+use super::{Recorder, TrainContext, Workers};
+use crate::clock::Clocks;
+use crate::collective::{start_allreduce, NonBlockingAllReduce};
+use crate::metrics::TrainLog;
+
+pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
+    let m = ctx.cfg.workers;
+    let tau = ctx.cfg.tau.max(1);
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let total = ctx.total_steps();
+
+    // Round-r bookkeeping: each worker's model snapshot at the boundary
+    // (for the delta the round accumulates on top of the stale average).
+    let mut snapshots: Vec<Vec<f32>> = workers.params.clone();
+
+    let mut k = 0;
+    while k < total {
+        // Launch the all-reduce of the boundary models; it runs under the
+        // round's compute.
+        let pending: NonBlockingAllReduce = {
+            let refs: Vec<&[f32]> = workers.params.iter().map(|p| p.as_slice()).collect();
+            let start = (0..m).map(|w| clocks.now(w)).fold(0.0, f64::max);
+            rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+            snapshots.clone_from(&workers.params);
+            start_allreduce(&refs, &ctx.cluster.net, ctx.cluster.message_bytes, start)
+        };
+
+        // τ local steps per worker.
+        let steps = tau.min(total - k);
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0;
+        for w in 0..m {
+            for s in 0..steps {
+                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
+                loss_n += 1;
+            }
+        }
+        k += steps;
+
+        // Absorb: x_i = avg(boundary models) + (x_i - snapshot_i).
+        let h = pending;
+        for w in 0..m {
+            clocks.wait_comm_until(w, h.ready_at());
+            let p = &mut workers.params[w];
+            let snap = &snapshots[w];
+            for i in 0..p.len() {
+                p[i] = h.result[i] + (p[i] - snap[i]);
+            }
+        }
+
+        rec.push_loss(k - 1, loss_sum / loss_n as f64);
+        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}

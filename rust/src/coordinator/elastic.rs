@@ -1,0 +1,87 @@
+//! EASGD / EAMSGD baseline (Zhang, Choromanska, LeCun 2015 [19]).
+//!
+//! The ancestor of the paper's pullback idea: local models and a center
+//! variable z exchange *symmetrically* every τ steps,
+//!
+//! ```text
+//!   x_i ← (1 − α) x_i + α z          (local pull toward center)
+//!   z   ← (1 − α) z  + α · avg(x)    (center pull toward the average)
+//! ```
+//!
+//! using the *pre-update* values on both sides (one simultaneous elastic
+//! exchange — the symmetric doubly-stochastic mixing the paper contrasts
+//! its column-stochastic W against). Unlike Overlap-Local-SGD the exchange
+//! is **blocking**: the center update needs the fresh average before anyone
+//! proceeds, so stragglers and wire time hit the critical path.
+//!
+//! EAMSGD is the same schedule with local Nesterov momentum (`mu` > 0);
+//! `mu = 0` gives plain EASGD. The paper's Tables 1–2 show this family
+//! degrading fastest as τ grows — the center lags too far behind.
+
+use anyhow::Result;
+
+use super::{Recorder, TrainContext, Workers};
+use crate::clock::Clocks;
+use crate::metrics::TrainLog;
+use crate::model::vecmath;
+
+pub fn run(ctx: &TrainContext, mu: f32) -> Result<TrainLog> {
+    let m = ctx.cfg.workers;
+    let tau = ctx.cfg.tau.max(1);
+    let alpha = ctx.cfg.alpha;
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let total = ctx.total_steps();
+    let comm_t = ctx.cluster.allreduce_time();
+
+    // Center variable, same init as the replicas.
+    let mut z = workers.params[0].clone();
+
+    // EASGD/EAMSGD differ from the surrounding algorithms only in mu; a
+    // scoped config clone keeps Workers::local_step uniform.
+    let mut cfg = ctx.cfg.clone();
+    cfg.mu = mu;
+    let ctx = TrainContext {
+        rt: ctx.rt,
+        cfg: &cfg,
+        cluster: ctx.cluster.clone(),
+        schedule: ctx.schedule.clone(),
+        train: ctx.train,
+        test: ctx.test,
+        shards: ctx.shards.clone(),
+    };
+    let ctx = &ctx;
+
+    let mut k = 0;
+    while k < total {
+        let steps = tau.min(total - k);
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0;
+        for w in 0..m {
+            for s in 0..steps {
+                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
+                loss_n += 1;
+            }
+        }
+        k += steps;
+
+        // Blocking elastic exchange.
+        clocks.barrier();
+        for w in 0..m {
+            clocks.comm_blocked(w, comm_t);
+        }
+        let avg = workers.mean_params();
+        // Simultaneous symmetric update (pre-update values on both sides).
+        for w in 0..m {
+            vecmath::pullback_inplace(&mut workers.params[w], &z, alpha);
+        }
+        vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut z);
+        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+
+        rec.push_loss(k - 1, loss_sum / loss_n as f64);
+        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}

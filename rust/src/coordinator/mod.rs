@@ -1,0 +1,316 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! One driver per algorithm (see DESIGN.md §4); all share this module's
+//! infrastructure: per-worker replicas + batchers, the virtual cluster
+//! clock, loss/eval recording, and byte accounting. Numerics run for real
+//! through the PJRT artifacts; time comes from the simnet (see simnet/ for
+//! why that split reproduces the paper's observables).
+//!
+//! The algorithms differ ONLY in their mixing schedule — exactly the
+//! paper's framing (the mixing matrix W_k of Eq. 8):
+//!
+//! | driver    | schedule                                                  |
+//! |-----------|-----------------------------------------------------------|
+//! | sync      | all-reduce grads every step, blocking                     |
+//! | powersgd  | sync with rank-r compressed grads + error feedback        |
+//! | local     | all-reduce params every τ steps, blocking                 |
+//! | overlap   | pullback to stale anchor, NON-blocking all-reduce (Eq. 3-5)|
+//! | overlap-m | + anchor momentum (Eq. 10-11) — the headline algorithm    |
+//! | easgd     | symmetric elastic x↔z exchange, blocking                  |
+//! | eamsgd    | easgd + local Nesterov momentum                           |
+//! | cocod     | local delta applied onto a τ-stale average, overlapped    |
+
+mod cocod;
+mod elastic;
+mod local;
+mod overlap;
+mod sync;
+
+use anyhow::Result;
+
+use crate::clock::Clocks;
+use crate::config::{Algo, ExperimentConfig};
+use crate::data::{Batcher, Dataset, PX};
+use crate::metrics::{EvalRecord, TrainLog};
+use crate::optim::LrSchedule;
+use crate::runtime::ModelRuntime;
+use crate::simnet::ClusterModel;
+use crate::util::rng::Rng;
+
+/// Everything a driver needs for one run.
+pub struct TrainContext<'a> {
+    pub rt: &'a ModelRuntime,
+    pub cfg: &'a ExperimentConfig,
+    pub cluster: ClusterModel,
+    pub schedule: LrSchedule,
+    pub train: &'a Dataset,
+    pub test: &'a Dataset,
+    pub shards: Vec<Vec<u32>>,
+}
+
+impl<'a> TrainContext<'a> {
+    pub fn steps_per_epoch(&self) -> usize {
+        (self.shards[0].len() / self.rt.train_batch).max(1)
+    }
+
+    pub fn total_steps(&self) -> usize {
+        ((self.cfg.epochs * self.steps_per_epoch() as f64).round() as usize).max(1)
+    }
+}
+
+/// Mutable per-worker training state shared by all drivers.
+pub struct Workers {
+    pub m: usize,
+    pub params: Vec<Vec<f32>>,
+    pub mom: Vec<Vec<f32>>,
+    /// second-moment buffers (Adam local optimizer only)
+    pub mom2: Vec<Vec<f32>>,
+    /// per-worker 1-based Adam step counters (bias correction)
+    adam_t: Vec<f32>,
+    use_adam: bool,
+    batchers: Vec<Batcher>,
+    straggler_rng: Rng,
+    img_buf: Vec<f32>,
+    label_buf: Vec<i32>,
+}
+
+impl Workers {
+    pub fn new(ctx: &TrainContext) -> Self {
+        let m = ctx.cfg.workers;
+        let n = ctx.rt.n;
+        let init = crate::model::init_params(&ctx.rt.manifest, ctx.cfg.seed);
+        let batchers = (0..m)
+            .map(|w| {
+                Batcher::new(
+                    ctx.shards[w].clone(),
+                    ctx.cfg.seed,
+                    w,
+                    ctx.cfg.reshuffle,
+                )
+            })
+            .collect();
+        let use_adam = ctx.cfg.local_opt == "adam";
+        Self {
+            m,
+            params: vec![init.clone(); m],
+            mom: vec![vec![0.0f32; n]; m],
+            mom2: vec![vec![0.0f32; if use_adam { n } else { 0 }]; m],
+            adam_t: vec![0.0; m],
+            use_adam,
+            batchers,
+            straggler_rng: Rng::stream(ctx.cfg.seed, "straggler"),
+            img_buf: vec![0.0f32; ctx.rt.train_batch * PX],
+            label_buf: vec![0i32; ctx.rt.train_batch],
+        }
+    }
+
+    /// One fused local train step for worker `w` (real numerics + virtual
+    /// time). Returns the mini-batch loss.
+    pub fn local_step(
+        &mut self,
+        w: usize,
+        ctx: &TrainContext,
+        clocks: &mut Clocks,
+        step: usize,
+    ) -> Result<f64> {
+        let b = ctx.rt.train_batch;
+        self.batchers[w].next_batch(ctx.train, b, &mut self.img_buf, &mut self.label_buf);
+        let lr = ctx.schedule.lr_at_step(step);
+        let loss = if self.use_adam {
+            // §6 extension (Overlap-Local-Adam): grad + fused Adam artifact.
+            let (loss, g) =
+                ctx.rt.grad_step(&self.params[w], &self.img_buf, &self.label_buf)?;
+            self.adam_t[w] += 1.0;
+            let (p, m1, m2) = ctx.rt.adam_update(
+                &self.params[w],
+                &self.mom[w],
+                &self.mom2[w],
+                &g,
+                lr,
+                self.adam_t[w],
+            )?;
+            self.params[w] = p;
+            self.mom[w] = m1;
+            self.mom2[w] = m2;
+            loss
+        } else {
+            let (p, mom, loss) = ctx.rt.train_step(
+                &self.params[w],
+                &self.mom[w],
+                &self.img_buf,
+                &self.label_buf,
+                lr,
+                ctx.cfg.mu,
+                ctx.cfg.wd,
+            )?;
+            self.params[w] = p;
+            self.mom[w] = mom;
+            loss
+        };
+        clocks.compute(w, ctx.cluster.compute.step_time(w, &mut self.straggler_rng));
+        Ok(loss as f64)
+    }
+
+    /// Gradient-only step (sync / PowerSGD path). Returns (loss, grad).
+    pub fn local_grad(
+        &mut self,
+        w: usize,
+        ctx: &TrainContext,
+        clocks: &mut Clocks,
+    ) -> Result<(f64, Vec<f32>)> {
+        let b = ctx.rt.train_batch;
+        self.batchers[w].next_batch(ctx.train, b, &mut self.img_buf, &mut self.label_buf);
+        let (loss, g) = ctx.rt.grad_step(&self.params[w], &self.img_buf, &self.label_buf)?;
+        clocks.compute(w, ctx.cluster.compute.step_time(w, &mut self.straggler_rng));
+        Ok((loss as f64, g))
+    }
+
+    /// Consensus model for evaluation: plain average of worker replicas.
+    pub fn mean_params(&self) -> Vec<f32> {
+        let refs: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
+        crate::model::vecmath::mean(&refs)
+    }
+}
+
+/// Loss accumulation + eval cadence + byte accounting.
+pub struct Recorder {
+    records: Vec<EvalRecord>,
+    step_losses: Vec<(usize, f64)>,
+    loss_acc: f64,
+    loss_count: usize,
+    last_train_loss: f64,
+    bytes_sent: u64,
+    next_eval_step: usize,
+    eval_stride: usize,
+}
+
+impl Recorder {
+    pub fn new(ctx: &TrainContext) -> Self {
+        let stride = ((ctx.cfg.eval_every * ctx.steps_per_epoch() as f64).round() as usize).max(1);
+        Self {
+            records: Vec::new(),
+            step_losses: Vec::new(),
+            loss_acc: 0.0,
+            loss_count: 0,
+            last_train_loss: f64::NAN,
+            bytes_sent: 0,
+            next_eval_step: stride,
+            eval_stride: stride,
+        }
+    }
+
+    /// Record the mean training loss of one sync round at global step `k`.
+    pub fn push_loss(&mut self, k: usize, loss: f64) {
+        self.step_losses.push((k, loss));
+        self.loss_acc += loss;
+        self.loss_count += 1;
+    }
+
+    pub fn add_bytes(&mut self, b: u64) {
+        self.bytes_sent += b;
+    }
+
+    /// Called after every global step; runs the (virtually free) test-set
+    /// evaluation at the configured cadence.
+    pub fn maybe_eval(
+        &mut self,
+        k: usize,
+        ctx: &TrainContext,
+        workers: &Workers,
+        clocks: &Clocks,
+    ) -> Result<()> {
+        if k < self.next_eval_step {
+            return Ok(());
+        }
+        self.next_eval_step += self.eval_stride;
+        self.force_eval(k, ctx, workers, clocks)
+    }
+
+    pub fn force_eval(
+        &mut self,
+        k: usize,
+        ctx: &TrainContext,
+        workers: &Workers,
+        clocks: &Clocks,
+    ) -> Result<()> {
+        let mean = workers.mean_params();
+        let (test_loss, test_acc) =
+            ctx.rt.evaluate_set(&mean, &ctx.test.images, &ctx.test.labels)?;
+        let train_loss = if self.loss_count > 0 {
+            self.loss_acc / self.loss_count as f64
+        } else {
+            // No new losses since the last record (e.g. final force_eval
+            // right after a cadence eval): carry the last window forward.
+            self.last_train_loss
+        };
+        self.last_train_loss = train_loss;
+        self.loss_acc = 0.0;
+        self.loss_count = 0;
+        self.records.push(EvalRecord {
+            epoch: k as f64 / ctx.steps_per_epoch() as f64,
+            step: k,
+            sim_time: clocks.max_now(),
+            train_loss,
+            test_loss,
+            test_acc,
+        });
+        Ok(())
+    }
+
+    pub fn finish(self, ctx: &TrainContext, clocks: &Clocks, steps: usize) -> TrainLog {
+        clocks.check_invariants();
+        TrainLog {
+            algo: ctx.cfg.algo.name().to_string(),
+            tau: ctx.cfg.tau,
+            workers: ctx.cfg.workers,
+            records: self.records,
+            step_losses: self.step_losses,
+            total_sim_time: clocks.max_now(),
+            total_compute_s: clocks.total_compute(),
+            total_comm_blocked_s: clocks.total_comm_blocked(),
+            total_idle_s: clocks.total_idle(),
+            bytes_sent: self.bytes_sent,
+            steps,
+        }
+    }
+}
+
+/// Run the configured algorithm to completion.
+pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
+    match ctx.cfg.algo {
+        Algo::Sync => sync::run_sync(ctx),
+        Algo::PowerSgd => sync::run_powersgd(ctx),
+        Algo::Local => local::run(ctx),
+        Algo::Overlap => overlap::run(ctx, 0.0),
+        Algo::OverlapM => overlap::run(ctx, ctx.cfg.beta),
+        Algo::Easgd => elastic::run(ctx, 0.0),
+        Algo::Eamsgd => elastic::run(ctx, ctx.cfg.mu),
+        Algo::Cocod => cocod::run(ctx),
+    }
+}
+
+/// Convenience: build shards per the config's IID / non-IID setting.
+pub fn make_shards(cfg: &ExperimentConfig, train: &Dataset) -> Vec<Vec<u32>> {
+    let mut rng = Rng::stream(cfg.seed, "partition");
+    if cfg.noniid {
+        crate::data::partition_noniid(&train.labels, cfg.workers, cfg.dominant_frac, &mut rng)
+    } else {
+        crate::data::partition_iid(train.n, cfg.workers, &mut rng)
+    }
+}
+
+/// Assemble a context, run, and return the log — the one-call entrypoint
+/// used by the CLI, examples, and benches.
+pub fn run_experiment(
+    rt: &ModelRuntime,
+    cfg: &ExperimentConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> Result<TrainLog> {
+    let shards = make_shards(cfg, train);
+    let steps_per_epoch = (shards[0].len() / rt.train_batch).max(1);
+    let cluster = cfg.cluster(rt.n * 4)?;
+    let schedule = LrSchedule::paper_scaled(cfg.base_lr, cfg.epochs, steps_per_epoch);
+    let ctx = TrainContext { rt, cfg, cluster, schedule, train, test, shards };
+    run(&ctx)
+}

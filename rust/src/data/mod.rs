@@ -1,0 +1,416 @@
+//! Data substrate: deterministic synthetic-CIFAR + partitioners + batcher.
+//!
+//! The paper trains on CIFAR-10. In a sealed sandbox we substitute a
+//! generator with the same tensor interface (32x32x3 f32 images, 10
+//! classes) and CIFAR-like difficulty: a Gaussian mixture whose class means
+//! are mildly separated, heteroscedastic per-sample contrast, a second
+//! "style" direction shared across classes (so features correlate), and a
+//! small label-noise floor that caps attainable accuracy below 100 % —
+//! giving algorithms room to rank, exactly what Tables 1–2 need.
+//!
+//! Partitioners reproduce the paper's two settings:
+//! * **IID** — global shuffle, equal shards;
+//! * **non-IID** — each node's shard is dominated by one class (the paper:
+//!   3125 samples per node, 2000 of them one class ⇒ 64 % skew).
+
+use crate::util::rng::Rng;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+pub const PX: usize = H * W * C;
+pub const NUM_CLASSES: usize = 10;
+
+/// Generation knobs. Defaults are calibrated so the CNN lands in the high-80s
+/// / low-90s accuracy regime (CIFAR-like headroom), see data tests.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    pub signal: f32,
+    pub noise: f32,
+    pub style_strength: f32,
+    pub label_noise: f64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self { signal: 0.28, noise: 1.0, style_strength: 0.5, label_noise: 0.06 }
+    }
+}
+
+/// A dataset in NHWC f32 with i32 labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// labels before label-noise injection (for diagnostics)
+    pub clean_labels: Vec<i32>,
+    pub n: usize,
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * PX..(i + 1) * PX]
+    }
+}
+
+/// Deterministic synthetic-CIFAR. Train/test splits with different seeds
+/// share the same class prototypes (drawn from the base seed), so train and
+/// test are i.i.d. from one distribution.
+/// Build one smooth spatial prototype: a sum of random low-frequency 2-D
+/// cosine modes per channel. Smoothness matters: a conv net with small
+/// kernels + global average pooling can only exploit *spatially structured*
+/// signal, mirroring real image statistics (iid-noise prototypes would be
+/// invisible to it).
+fn smooth_prototype(rng: &mut Rng) -> Vec<f32> {
+    const MODES: usize = 6;
+    let mut proto = vec![0.0f32; PX];
+    for _ in 0..MODES {
+        // spatial frequency <= 4 cycles per image, random phase/orientation
+        let fx = rng.next_f64() * 4.0;
+        let fy = rng.next_f64() * 4.0;
+        let phase = rng.next_f64() * std::f64::consts::TAU;
+        let amp: [f32; C] = [
+            rng.next_normal() as f32,
+            rng.next_normal() as f32,
+            rng.next_normal() as f32,
+        ];
+        for y in 0..H {
+            for x in 0..W {
+                let t = std::f64::consts::TAU * (fx * x as f64 + fy * y as f64) / W as f64 + phase;
+                let v = t.cos() as f32;
+                let base = (y * W + x) * C;
+                for (c, &a) in amp.iter().enumerate() {
+                    proto[base + c] += a * v;
+                }
+            }
+        }
+    }
+    // Normalize to unit RMS so `signal` means the same for every class.
+    let rms = (proto.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / PX as f64).sqrt();
+    let inv = (1.0 / rms.max(1e-9)) as f32;
+    for v in proto.iter_mut() {
+        *v *= inv;
+    }
+    proto
+}
+
+pub fn generate(seed: u64, n: usize, split: &str, cfg: &GenConfig) -> Dataset {
+    // Class prototypes + shared style pattern from the base seed.
+    let mut proto_rng = Rng::stream(seed, "prototypes");
+    let mut protos = Vec::with_capacity(NUM_CLASSES * PX);
+    for _ in 0..NUM_CLASSES {
+        protos.extend(smooth_prototype(&mut proto_rng));
+    }
+    let style = smooth_prototype(&mut proto_rng);
+
+    let mut rng = Rng::stream(seed, &format!("samples/{split}"));
+    let mut images = vec![0.0f32; n * PX];
+    let mut labels = Vec::with_capacity(n);
+    let mut clean = Vec::with_capacity(n);
+
+    for i in 0..n {
+        let class = rng.next_below(NUM_CLASSES as u64) as usize;
+        clean.push(class as i32);
+        // contrast jitter: per-sample signal scale in [0.6, 1.4] * signal
+        let contrast = cfg.signal * (0.6 + 0.8 * rng.next_f32());
+        let style_coef = cfg.style_strength * rng.next_normal() as f32;
+        let img = &mut images[i * PX..(i + 1) * PX];
+        let p = &protos[class * PX..(class + 1) * PX];
+        for j in 0..PX {
+            let noise = cfg.noise * rng.next_normal() as f32;
+            img[j] = contrast * p[j] + style_coef * style[j] + noise;
+        }
+        // label noise caps the attainable accuracy
+        let label = if rng.next_f64() < cfg.label_noise {
+            rng.next_below(NUM_CLASSES as u64) as i32
+        } else {
+            class as i32
+        };
+        labels.push(label);
+    }
+
+    Dataset { images, labels, clean_labels: clean, n }
+}
+
+// --------------------------------------------------------------------------
+// Partitioners
+// --------------------------------------------------------------------------
+
+/// Equal IID shards after a global shuffle.
+pub fn partition_iid(n: usize, m: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut idx);
+    let per = n / m;
+    (0..m).map(|w| idx[w * per..(w + 1) * per].to_vec()).collect()
+}
+
+/// Paper-style skewed shards: a `dominant_frac` fraction of each node's
+/// shard comes from class `node % 10`; the rest is drawn uniformly from the
+/// remaining pool. (Paper: 2000/3125 = 64 % from one class.)
+pub fn partition_noniid(
+    labels: &[i32],
+    m: usize,
+    dominant_frac: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<u32>> {
+    let n = labels.len();
+    let per = n / m;
+    let want_dom = (per as f64 * dominant_frac).round() as usize;
+
+    // Pools per class, shuffled.
+    let mut pools: Vec<Vec<u32>> = vec![Vec::new(); NUM_CLASSES];
+    for (i, &l) in labels.iter().enumerate() {
+        pools[l as usize].push(i as u32);
+    }
+    for p in pools.iter_mut() {
+        rng.shuffle(p);
+    }
+
+    let mut shards: Vec<Vec<u32>> = vec![Vec::with_capacity(per); m];
+    // Dominant draws first (capped by pool size so small pools degrade
+    // gracefully instead of panicking).
+    for (w, shard) in shards.iter_mut().enumerate() {
+        let class = w % NUM_CLASSES;
+        let pool = &mut pools[class];
+        let take = want_dom.min(pool.len());
+        let split = pool.len() - take;
+        shard.extend(pool.drain(split..));
+    }
+    // Fill the rest round-robin from the leftover pool.
+    let mut leftovers: Vec<u32> = pools.into_iter().flatten().collect();
+    rng.shuffle(&mut leftovers);
+    let mut it = leftovers.into_iter();
+    for shard in shards.iter_mut() {
+        while shard.len() < per {
+            shard.push(it.next().expect("leftover pool exhausted"));
+        }
+    }
+    shards
+}
+
+// --------------------------------------------------------------------------
+// Batcher
+// --------------------------------------------------------------------------
+
+/// Per-worker mini-batch sampler. Reshuffles its shard every epoch with its
+/// own PRNG stream; `next_batch` fills caller-owned buffers (no allocation
+/// in the training hot loop).
+pub struct Batcher {
+    shard: Vec<u32>,
+    pos: usize,
+    rng: Rng,
+    pub epochs_completed: usize,
+    /// if false (paper: data "not shuffled during training"), the shard
+    /// order is fixed after the initial shuffle
+    pub reshuffle: bool,
+}
+
+impl Batcher {
+    pub fn new(shard: Vec<u32>, seed: u64, worker: usize, reshuffle: bool) -> Self {
+        let mut rng = Rng::stream(seed, &format!("batcher/{worker}"));
+        let mut shard = shard;
+        rng.shuffle(&mut shard);
+        Self { shard, pos: 0, rng, epochs_completed: 0, reshuffle }
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Steps per epoch at batch size `b` (drop-last semantics).
+    pub fn steps_per_epoch(&self, b: usize) -> usize {
+        self.shard.len() / b
+    }
+
+    /// Fill `images`/`labels` with the next batch of `b` samples.
+    pub fn next_batch(&mut self, ds: &Dataset, b: usize, images: &mut [f32], labels: &mut [i32]) {
+        assert_eq!(images.len(), b * PX);
+        assert_eq!(labels.len(), b);
+        for k in 0..b {
+            if self.pos >= self.shard.len() {
+                self.pos = 0;
+                self.epochs_completed += 1;
+                if self.reshuffle {
+                    self.rng.shuffle(&mut self.shard);
+                }
+            }
+            let i = self.shard[self.pos] as usize;
+            self.pos += 1;
+            images[k * PX..(k + 1) * PX].copy_from_slice(ds.image(i));
+            labels[k] = ds.labels[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = GenConfig::default();
+        let a = generate(1, 64, "train", &cfg);
+        let b = generate(1, 64, "train", &cfg);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn train_and_test_differ_but_share_distribution() {
+        let cfg = GenConfig::default();
+        let tr = generate(1, 256, "train", &cfg);
+        let te = generate(1, 256, "test", &cfg);
+        assert_ne!(tr.images, te.images);
+        // Both splits hit every class.
+        for split in [&tr, &te] {
+            let mut seen = [false; NUM_CLASSES];
+            for &l in &split.clean_labels {
+                seen[l as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn nearest_prototype_classifier_works_but_not_perfectly() {
+        // The generator must be learnable (signal present) yet non-trivial
+        // (label noise + overlap). A nearest-class-mean classifier on clean
+        // labels should score well above chance and below 100 %.
+        let cfg = GenConfig::default();
+        let tr = generate(3, 2000, "train", &cfg);
+        let te = generate(3, 500, "test", &cfg);
+        // class means from train
+        let mut means = vec![0.0f64; NUM_CLASSES * PX];
+        let mut counts = [0usize; NUM_CLASSES];
+        for i in 0..tr.n {
+            let c = tr.labels[i] as usize;
+            counts[c] += 1;
+            for j in 0..PX {
+                means[c * PX + j] += tr.image(i)[j] as f64;
+            }
+        }
+        for c in 0..NUM_CLASSES {
+            for j in 0..PX {
+                means[c * PX + j] /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..te.n {
+            let img = te.image(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..NUM_CLASSES {
+                let d: f64 = (0..PX)
+                    .map(|j| {
+                        let d = img[j] as f64 - means[c * PX + j];
+                        d * d
+                    })
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 as i32 == te.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / te.n as f64;
+        assert!(acc > 0.5, "generator unlearnable: acc {acc}");
+        assert!(acc < 0.995, "generator trivially separable: acc {acc}");
+    }
+
+    #[test]
+    fn iid_partition_covers_disjointly() {
+        let mut rng = Rng::seed_from(9);
+        let shards = partition_iid(1000, 8, &mut rng);
+        assert_eq!(shards.len(), 8);
+        let mut seen = vec![false; 1000];
+        for s in &shards {
+            assert_eq!(s.len(), 125);
+            for &i in s {
+                assert!(!seen[i as usize], "duplicate index {i}");
+                seen[i as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn noniid_partition_has_requested_skew() {
+        let cfg = GenConfig::default();
+        let ds = generate(5, 4000, "train", &cfg);
+        let mut rng = Rng::seed_from(7);
+        let shards = partition_noniid(&ds.labels, 8, 0.64, &mut rng);
+        for (w, shard) in shards.iter().enumerate() {
+            let dom = w % NUM_CLASSES;
+            let count = shard.iter().filter(|&&i| ds.labels[i as usize] == dom as i32).count();
+            let frac = count as f64 / shard.len() as f64;
+            assert!(frac > 0.5, "worker {w}: dominant frac {frac} too low");
+        }
+    }
+
+    #[test]
+    fn property_noniid_is_disjoint_partition() {
+        property("noniid disjoint", 40, |g| {
+            let n = g.usize_in(100, 2000);
+            let m = g.usize_in(1, 10);
+            let labels: Vec<i32> =
+                (0..n).map(|_| g.usize_in(0, NUM_CLASSES - 1) as i32).collect();
+            let frac = g.f64_in(0.0, 0.9);
+            let shards = partition_noniid(&labels, m, frac, g.rng());
+            let mut seen = vec![false; n];
+            let per = n / m;
+            for s in &shards {
+                assert_eq!(s.len(), per);
+                for &i in s {
+                    assert!(!seen[i as usize], "duplicate {i}");
+                    seen[i as usize] = true;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batcher_visits_whole_shard_each_epoch() {
+        let cfg = GenConfig::default();
+        let ds = generate(2, 64, "train", &cfg);
+        let shard: Vec<u32> = (0..64).collect();
+        let mut b = Batcher::new(shard, 0, 0, true);
+        let mut imgs = vec![0.0f32; 8 * PX];
+        let mut labels = vec![0i32; 8];
+        let mut seen = vec![0usize; 64];
+        for _ in 0..8 {
+            b.next_batch(&ds, 8, &mut imgs, &mut labels);
+            // find which dataset rows these came from by label+first pixel
+            for k in 0..8 {
+                let px0 = imgs[k * PX];
+                let row = (0..64).find(|&i| ds.image(i)[0] == px0).unwrap();
+                seen[row] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "epoch must visit each sample once");
+        assert_eq!(b.epochs_completed, 0);
+        b.next_batch(&ds, 8, &mut imgs, &mut labels);
+        assert_eq!(b.epochs_completed, 1);
+    }
+
+    #[test]
+    fn batcher_no_reshuffle_is_periodic() {
+        let cfg = GenConfig::default();
+        let ds = generate(2, 32, "train", &cfg);
+        let shard: Vec<u32> = (0..32).collect();
+        let mut b = Batcher::new(shard, 0, 3, false);
+        let mut i1 = vec![0.0f32; 16 * PX];
+        let mut l1 = vec![0i32; 16];
+        let mut first_epoch = Vec::new();
+        for _ in 0..2 {
+            b.next_batch(&ds, 16, &mut i1, &mut l1);
+            first_epoch.extend_from_slice(&l1);
+        }
+        let mut second_epoch = Vec::new();
+        for _ in 0..2 {
+            b.next_batch(&ds, 16, &mut i1, &mut l1);
+            second_epoch.extend_from_slice(&l1);
+        }
+        assert_eq!(first_epoch, second_epoch, "no-reshuffle must repeat order");
+    }
+}

@@ -1,0 +1,28 @@
+//! # olsgd — Overlap Local-SGD, reproduced as a Rust + JAX + Pallas stack
+//!
+//! Reproduction of *"Overlap Local-SGD: An Algorithmic Approach to Hide
+//! Communication Delays in Distributed SGD"* (Wang, Liang, Joshi, 2020).
+//!
+//! Layer 3 (this crate) is the distributed-training coordinator: worker
+//! scheduling, the paper's overlapped anchor synchronization, every baseline
+//! algorithm, the simulated 16-node cluster, and the experiment harness.
+//! Layers 2/1 (JAX model + Pallas kernels) are AOT-compiled to HLO text by
+//! `python/compile/` and executed here through PJRT — Python is never on the
+//! training path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod clock;
+pub mod collective;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod simnet;
+pub mod util;

@@ -1,0 +1,296 @@
+//! `olsgd` — leader entrypoint for the Overlap-Local-SGD reproduction.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline mirror):
+//!
+//! ```text
+//! olsgd info                              runtime + artifact inventory
+//! olsgd train   [--config F] [--set k=v]* [--out DIR] [--quiet]
+//! olsgd sweep   --algos a,b --taus 1,2,8 [--set k=v]* [--out DIR]
+//! olsgd report  --dir DIR                 summarize result JSONs
+//! ```
+//!
+//! Every `--set` key is a dotted config key (see config/mod.rs), e.g.
+//! `--set algo=overlap-m --set tau=2 --set data.noniid=true`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::coordinator;
+use olsgd::data::{self, GenConfig};
+use olsgd::metrics::{write_json, write_text};
+use olsgd::runtime::Runtime;
+use olsgd::util::json::Json;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "info" => cmd_info(&args[1..]),
+        "train" => cmd_train(&args[1..]),
+        "sweep" => cmd_sweep(&args[1..]),
+        "report" => cmd_report(&args[1..]),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: olsgd help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "olsgd — Overlap-Local-SGD (Wang, Liang, Joshi 2020) reproduction\n\
+         \n\
+         USAGE:\n  olsgd info\n  olsgd train  [--config FILE] [--set key=value]... [--out DIR] [--quiet]\n  \
+         olsgd sweep  --algos sync,local,overlap-m --taus 1,2,8,24 [--set key=value]... [--out DIR]\n  \
+         olsgd report --dir DIR\n\
+         \n\
+         Algorithms: sync local overlap overlap-m easgd eamsgd cocod powersgd\n\
+         Config keys: algo model workers epochs seed eval_every lr tau alpha beta mu wd rank\n\
+                      train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
+                      message_bytes straggler artifacts_dir out_dir"
+    );
+}
+
+/// Shared flag parsing for train/sweep/info.
+struct CommonArgs {
+    cfg: ExperimentConfig,
+    out: String,
+    quiet: bool,
+    algos: Vec<Algo>,
+    taus: Vec<usize>,
+}
+
+fn parse_common(args: &[String]) -> Result<CommonArgs> {
+    let mut config_file: Option<String> = None;
+    let mut overrides: Vec<(String, String)> = Vec::new();
+    let mut out = "results".to_string();
+    let mut quiet = false;
+    let mut algos = Vec::new();
+    let mut taus = Vec::new();
+
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                config_file = Some(next(args, &mut i, "--config")?);
+            }
+            "--set" => {
+                let kv = next(args, &mut i, "--set")?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("--set expects key=value, got '{kv}'"))?;
+                overrides.push((k.to_string(), v.to_string()));
+            }
+            "--out" | "-o" => {
+                out = next(args, &mut i, "--out")?;
+            }
+            "--quiet" | "-q" => quiet = true,
+            "--algos" => {
+                for a in next(args, &mut i, "--algos")?.split(',') {
+                    algos.push(Algo::parse(a.trim())?);
+                }
+            }
+            "--taus" => {
+                for t in next(args, &mut i, "--taus")?.split(',') {
+                    taus.push(t.trim().parse().with_context(|| format!("bad tau '{t}'"))?);
+                }
+            }
+            other => bail!("unknown flag '{other}'"),
+        }
+        i += 1;
+    }
+
+    let cfg = match config_file {
+        Some(f) => ExperimentConfig::from_file(&f, &overrides)?,
+        None => {
+            let mut c = ExperimentConfig::default();
+            for (k, v) in &overrides {
+                c.set(k, v)?;
+            }
+            c
+        }
+    };
+    Ok(CommonArgs { cfg, out, quiet, algos, taus })
+}
+
+fn next(args: &[String], i: &mut usize, flag: &str) -> Result<String> {
+    *i += 1;
+    args.get(*i)
+        .cloned()
+        .with_context(|| format!("{flag} requires a value"))
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let common = parse_common(args)?;
+    let rt = Runtime::new(Path::new(&common.cfg.artifacts_dir))?;
+    println!("platform: {}", rt.platform());
+    println!(
+        "artifacts: train_batch={} eval_batch={} image={:?}",
+        rt.manifest.train_batch, rt.manifest.eval_batch, rt.manifest.image_shape
+    );
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  model {name:<10} params={:<8} tensors={:<3} modules={:?}",
+            m.param_count,
+            m.tensors.len(),
+            m.modules.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+/// Cache of (model name, Runtime, compiled ModelRuntime) across sweep legs.
+type RtCache = Option<(String, Runtime, olsgd::runtime::ModelRuntime)>;
+
+/// Load runtime + data and run one configured experiment.
+fn run_one(
+    cfg: &ExperimentConfig,
+    rt_cache: &mut RtCache,
+    quiet: bool,
+) -> Result<olsgd::metrics::TrainLog> {
+    let reload = match rt_cache {
+        Some((name, _, _)) => name != &cfg.model,
+        None => true,
+    };
+    if reload {
+        let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+        let model = runtime.load_model(&cfg.model)?;
+        *rt_cache = Some((cfg.model.clone(), runtime, model));
+    }
+    let (_, _, model_rt) = rt_cache.as_ref().unwrap();
+
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+    if !quiet {
+        println!(
+            "run: algo={} model={} m={} tau={} alpha={} beta={} epochs={} {}",
+            cfg.algo.name(),
+            cfg.model,
+            cfg.workers,
+            cfg.tau,
+            cfg.alpha,
+            cfg.beta,
+            cfg.epochs,
+            if cfg.noniid { "non-IID" } else { "IID" }
+        );
+    }
+    let log = coordinator::run_experiment(model_rt, cfg, &train, &test)?;
+    if !quiet {
+        println!(
+            "  -> final acc {:.2}%  test loss {:.4}  sim time {:.1}s  comm ratio {:.1}%",
+            100.0 * log.final_acc(),
+            log.final_loss(),
+            log.total_sim_time,
+            100.0 * log.comm_ratio()
+        );
+    }
+    Ok(log)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let common = parse_common(args)?;
+    let mut cache = None;
+    let log = run_one(&common.cfg, &mut cache, common.quiet)?;
+    let out = Path::new(&common.out);
+    let tag = format!("{}_tau{}", common.cfg.algo.name(), common.cfg.tau);
+    write_json(out, &format!("{tag}.json"), &log.to_json())?;
+    write_text(out, &format!("{tag}.csv"), &log.to_csv())?;
+    println!("wrote {}/{tag}.{{json,csv}}", common.out);
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let common = parse_common(args)?;
+    if common.algos.is_empty() || common.taus.is_empty() {
+        bail!("sweep requires --algos and --taus");
+    }
+    let out = Path::new(&common.out);
+    let mut cache = None;
+    let mut summary_rows = Vec::new();
+    for &algo in &common.algos {
+        for &tau in &common.taus {
+            let mut cfg = common.cfg.clone();
+            cfg.algo = algo;
+            cfg.tau = tau;
+            let log = run_one(&cfg, &mut cache, common.quiet)?;
+            let tag = format!("{}_tau{tau}", algo.name());
+            write_json(out, &format!("{tag}.json"), &log.to_json())?;
+            summary_rows.push(format!(
+                "{:<10} tau={:<3} acc={:.2}% time/epoch={:.2}s comm_ratio={:.1}%",
+                algo.name(),
+                tau,
+                100.0 * log.final_acc(),
+                log.time_per_epoch(cfg.epochs),
+                100.0 * log.comm_ratio()
+            ));
+        }
+    }
+    println!("\n== sweep summary ==");
+    for r in &summary_rows {
+        println!("{r}");
+    }
+    write_text(out, "sweep_summary.txt", &summary_rows.join("\n"))?;
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let mut dir = "results".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--dir" => dir = next(args, &mut i, "--dir")?,
+            other => bail!("unknown flag '{other}'"),
+        }
+        i += 1;
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .with_context(|| format!("reading {dir}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort();
+    println!(
+        "{:<24} {:>8} {:>10} {:>12} {:>12}",
+        "run", "acc%", "test_loss", "sim_time_s", "comm%"
+    );
+    for path in entries {
+        let j = Json::parse(&std::fs::read_to_string(&path)?)?;
+        let name = path.file_stem().unwrap().to_string_lossy().to_string();
+        let acc = j.get("final_acc")?.as_f64().unwrap_or(f64::NAN);
+        let time = j.get("total_sim_time")?.as_f64().unwrap_or(f64::NAN);
+        let ratio = j.get("comm_ratio")?.as_f64().unwrap_or(f64::NAN);
+        let tl = j
+            .get("records")?
+            .as_arr()?
+            .last()
+            .and_then(|r| r.get("test_loss").ok())
+            .and_then(|x| x.as_f64().ok())
+            .unwrap_or(f64::NAN);
+        println!(
+            "{name:<24} {:>8.2} {tl:>10.4} {time:>12.1} {:>12.1}",
+            acc * 100.0,
+            ratio * 100.0
+        );
+    }
+    Ok(())
+}

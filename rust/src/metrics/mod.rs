@@ -1,0 +1,201 @@
+//! Metrics substrate: training logs, CSV/JSON emission, run summaries.
+//!
+//! Every algorithm driver produces a `TrainLog`; benches aggregate logs into
+//! the paper's tables/figures and write both human-readable rows (stdout)
+//! and machine-readable files under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, arr_f64, num, obj, s, Json};
+
+/// One evaluation point (cadence = config.eval_every epochs).
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub epoch: f64,
+    pub step: usize,
+    /// virtual cluster time (seconds) at this point
+    pub sim_time: f64,
+    /// mean training loss since the previous record
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+}
+
+/// Full record of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub algo: String,
+    pub tau: usize,
+    pub workers: usize,
+    pub records: Vec<EvalRecord>,
+    /// (step, mean loss across workers) every sync round
+    pub step_losses: Vec<(usize, f64)>,
+    pub total_sim_time: f64,
+    pub total_compute_s: f64,
+    pub total_comm_blocked_s: f64,
+    pub total_idle_s: f64,
+    pub bytes_sent: u64,
+    pub steps: usize,
+}
+
+impl TrainLog {
+    pub fn final_acc(&self) -> f64 {
+        self.records.last().map(|r| r.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.records.last().map(|r| r.test_loss).unwrap_or(f64::NAN)
+    }
+
+    /// Communication-to-computation ratio — the paper's E8 metric: time the
+    /// workers spent blocked (comm wait + straggler idle) over compute time.
+    pub fn comm_ratio(&self) -> f64 {
+        if self.total_compute_s == 0.0 {
+            0.0
+        } else {
+            (self.total_comm_blocked_s + self.total_idle_s) / self.total_compute_s
+        }
+    }
+
+    /// Average virtual seconds per epoch.
+    pub fn time_per_epoch(&self, epochs: f64) -> f64 {
+        if epochs == 0.0 {
+            0.0
+        } else {
+            self.total_sim_time / epochs
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("algo", s(&self.algo)),
+            ("tau", num(self.tau as f64)),
+            ("workers", num(self.workers as f64)),
+            ("steps", num(self.steps as f64)),
+            ("total_sim_time", num(self.total_sim_time)),
+            ("total_compute_s", num(self.total_compute_s)),
+            ("total_comm_blocked_s", num(self.total_comm_blocked_s)),
+            ("total_idle_s", num(self.total_idle_s)),
+            ("comm_ratio", num(self.comm_ratio())),
+            ("bytes_sent", num(self.bytes_sent as f64)),
+            ("final_acc", num(self.final_acc())),
+            (
+                "records",
+                arr(self.records.iter().map(|r| {
+                    obj(vec![
+                        ("epoch", num(r.epoch)),
+                        ("step", num(r.step as f64)),
+                        ("sim_time", num(r.sim_time)),
+                        ("train_loss", num(r.train_loss)),
+                        ("test_loss", num(r.test_loss)),
+                        ("test_acc", num(r.test_acc)),
+                    ])
+                })),
+            ),
+            (
+                "step_losses",
+                arr(self
+                    .step_losses
+                    .iter()
+                    .map(|&(k, l)| arr_f64(&[k as f64, l]))),
+            ),
+        ])
+    }
+
+    /// CSV of the eval records.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("epoch,step,sim_time,train_loss,test_loss,test_acc\n");
+        for r in &self.records {
+            let _ = writeln!(
+                out,
+                "{:.3},{},{:.4},{:.6},{:.6},{:.6}",
+                r.epoch, r.step, r.sim_time, r.train_loss, r.test_loss, r.test_acc
+            );
+        }
+        out
+    }
+}
+
+/// Write a JSON value to `dir/name`, creating `dir`.
+pub fn write_json(dir: &Path, name: &str, j: &Json) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let path = dir.join(name);
+    std::fs::write(&path, j.to_string_pretty()).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+pub fn write_text(dir: &Path, name: &str, text: &str) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let path = dir.join(name);
+    std::fs::write(&path, text).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> TrainLog {
+        TrainLog {
+            algo: "overlap-m".into(),
+            tau: 2,
+            workers: 8,
+            records: vec![
+                EvalRecord {
+                    epoch: 1.0,
+                    step: 16,
+                    sim_time: 3.5,
+                    train_loss: 2.0,
+                    test_loss: 1.9,
+                    test_acc: 0.42,
+                },
+                EvalRecord {
+                    epoch: 2.0,
+                    step: 32,
+                    sim_time: 7.0,
+                    train_loss: 1.2,
+                    test_loss: 1.1,
+                    test_acc: 0.61,
+                },
+            ],
+            step_losses: vec![(0, 2.3), (16, 1.5)],
+            total_sim_time: 7.0,
+            total_compute_s: 50.0,
+            total_comm_blocked_s: 4.0,
+            total_idle_s: 1.0,
+            bytes_sent: 1 << 20,
+            steps: 32,
+        }
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let log = sample_log();
+        assert_eq!(log.final_acc(), 0.61);
+        assert!((log.comm_ratio() - 0.1).abs() < 1e-12);
+        assert!((log.time_per_epoch(2.0) - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let j = sample_log().to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("algo").unwrap().as_str().unwrap(), "overlap-m");
+        assert_eq!(
+            parsed.get("records").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample_log().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("epoch,"));
+        assert!(lines[1].starts_with("1.000,16,"));
+    }
+}

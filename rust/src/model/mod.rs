@@ -1,0 +1,78 @@
+//! Flat parameter-vector substrate.
+//!
+//! Every algorithm in the paper is stated over flat vectors (the matrix-form
+//! update rule, Eq. 8, stacks them as columns of X_k). This module owns the
+//! vector math the Layer-3 coordinator performs outside the AOT artifacts:
+//! averaging (the content of the all-reduce), axpy-style mixing, norms —
+//! plus parameter initialization from the AOT manifest so Rust, not Python,
+//! owns the experiment seed.
+
+pub mod vecmath;
+
+use crate::runtime::manifest::ModelManifest;
+use crate::util::rng::Rng;
+
+/// Initialize a flat parameter vector per the manifest's tensor table
+/// (he_normal for weights, zeros for biases) with a dedicated PRNG stream.
+pub fn init_params(manifest: &ModelManifest, seed: u64) -> Vec<f32> {
+    let mut flat = vec![0.0f32; manifest.param_count];
+    for t in &manifest.tensors {
+        if t.init == "he_normal" {
+            let mut rng = Rng::stream(seed, &format!("init/{}", t.name));
+            rng.fill_normal(&mut flat[t.offset..t.offset + t.size], t.std);
+        }
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorManifest;
+
+    fn toy_manifest() -> ModelManifest {
+        ModelManifest {
+            param_count: 10,
+            tensors: vec![
+                TensorManifest {
+                    name: "w".into(),
+                    offset: 0,
+                    size: 6,
+                    shape: vec![2, 3],
+                    init: "he_normal".into(),
+                    std: 1.0,
+                    rows: 2,
+                    cols: 3,
+                    compress: true,
+                },
+                TensorManifest {
+                    name: "b".into(),
+                    offset: 6,
+                    size: 4,
+                    shape: vec![4],
+                    init: "zeros".into(),
+                    std: 0.0,
+                    rows: 1,
+                    cols: 4,
+                    compress: false,
+                },
+            ],
+            modules: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_weights_nonzero_biases_zero() {
+        let m = toy_manifest();
+        let p = init_params(&m, 1);
+        assert!(p[..6].iter().any(|&x| x != 0.0));
+        assert!(p[6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let m = toy_manifest();
+        assert_eq!(init_params(&m, 7), init_params(&m, 7));
+        assert_ne!(init_params(&m, 7), init_params(&m, 8));
+    }
+}

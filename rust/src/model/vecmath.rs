@@ -1,0 +1,180 @@
+//! Flat f32 vector math — the Layer-3 hot path outside PJRT.
+//!
+//! These loops sit inside the collective (averaging), the mixing updates,
+//! and PowerSGD. They are written as simple slice iterators, which LLVM
+//! auto-vectorizes on x86 (verified via the perf pass, EXPERIMENTS.md §Perf);
+//! no allocation happens inside any of them when an `_into` variant is used.
+
+/// out[i] = mean over vs of vs[j][i]. `out` must be zeroed or will be
+/// overwritten; all vectors must share a length.
+pub fn mean_into(vs: &[&[f32]], out: &mut [f32]) {
+    let m = vs.len();
+    assert!(m > 0, "mean of zero vectors");
+    for v in vs {
+        assert_eq!(v.len(), out.len(), "length mismatch in mean");
+    }
+    let inv = 1.0f32 / m as f32;
+    out.copy_from_slice(vs[0]);
+    for v in &vs[1..] {
+        for (o, &x) in out.iter_mut().zip(v.iter()) {
+            *o += x;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Convenience allocating mean.
+pub fn mean(vs: &[&[f32]]) -> Vec<f32> {
+    let mut out = vec![0.0; vs[0].len()];
+    mean_into(vs, &mut out);
+    out
+}
+
+/// y += a * x
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = a * x + b * y  (general mixing step)
+pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+/// Eq. (4) in place: x <- x - alpha * (x - z).
+pub fn pullback_inplace(x: &mut [f32], z: &[f32], alpha: f32) {
+    assert_eq!(x.len(), z.len());
+    for (xi, &zi) in x.iter_mut().zip(z) {
+        *xi -= alpha * (*xi - zi);
+    }
+}
+
+/// Eqs. (10)-(11) in place: v <- beta*v + (avg - z); z <- z + v.
+pub fn anchor_update_inplace(z: &mut [f32], v: &mut [f32], avg: &[f32], beta: f32) {
+    assert_eq!(z.len(), v.len());
+    assert_eq!(z.len(), avg.len());
+    for i in 0..z.len() {
+        v[i] = beta * v[i] + (avg[i] - z[i]);
+        z[i] += v[i];
+    }
+}
+
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// max_i |a[i] - b[i]|
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, property};
+
+    #[test]
+    fn mean_of_identical_is_identity() {
+        let v = vec![1.0f32, -2.0, 3.5];
+        let out = mean(&[&v, &v, &v]);
+        assert_close(&out, &v, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn mean_matches_manual() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        assert_close(&mean(&[&a, &b]), &[2.0, 4.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn pullback_endpoints() {
+        let z = vec![5.0f32; 4];
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let x0 = x.clone();
+        pullback_inplace(&mut x, &z, 0.0);
+        assert_close(&x, &x0, 0.0, 0.0);
+        pullback_inplace(&mut x, &z, 1.0);
+        assert_close(&x, &z, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn anchor_beta_zero_assigns_avg() {
+        let mut z = vec![1.0f32, 2.0];
+        let mut v = vec![9.0f32, 9.0];
+        let avg = vec![3.0f32, 5.0];
+        anchor_update_inplace(&mut z, &mut v, &avg, 0.0);
+        assert_close(&z, &avg, 1e-6, 0.0);
+        assert_close(&v, &[2.0, 3.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn property_mean_bounds_and_linearity() {
+        property("mean within min/max and linear", 200, |g| {
+            let n = g.usize_in(1, 400);
+            let m = g.usize_in(1, 12);
+            let vs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 5.0)).collect();
+            let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+            let out = mean(&refs);
+            for i in 0..n {
+                let lo = vs.iter().map(|v| v[i]).fold(f32::INFINITY, f32::min);
+                let hi = vs.iter().map(|v| v[i]).fold(f32::NEG_INFINITY, f32::max);
+                assert!(out[i] >= lo - 1e-4 && out[i] <= hi + 1e-4);
+                let manual: f32 = vs.iter().map(|v| v[i]).sum::<f32>() / m as f32;
+                assert!((out[i] - manual).abs() <= 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn property_pullback_is_convex_combination() {
+        property("pullback convexity", 200, |g| {
+            let n = g.usize_in(1, 300);
+            let mut x = g.vec_f32(n, 3.0);
+            let z = g.vec_f32(n, 3.0);
+            let alpha = g.f32_in(0.0, 1.0);
+            let x0 = x.clone();
+            pullback_inplace(&mut x, &z, alpha);
+            for i in 0..n {
+                let lo = x0[i].min(z[i]) - 1e-5;
+                let hi = x0[i].max(z[i]) + 1e-5;
+                assert!(x[i] >= lo && x[i] <= hi, "not convex at {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn property_axpby_matches_scalar_loop() {
+        property("axpby", 100, |g| {
+            let n = g.usize_in(1, 256);
+            let x = g.vec_f32(n, 2.0);
+            let mut y = g.vec_f32(n, 2.0);
+            let y0 = y.clone();
+            let (a, b) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
+            axpby(a, &x, b, &mut y);
+            for i in 0..n {
+                assert!((y[i] - (a * x[i] + b * y0[i])).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 5.0]), 0.5);
+    }
+}

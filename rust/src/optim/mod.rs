@@ -1,0 +1,133 @@
+//! Optimizer policy substrate: learning-rate schedules + hyper-parameter
+//! presets from the paper's §4 (base lr 0.1, 5-epoch warmup, x0.1 decay at
+//! epochs 150/250 of 300 — scaled proportionally to shorter runs here).
+
+/// Warmup + step-decay schedule over *steps*, stated in epochs.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    /// linear warmup from base_lr/warmup_epochs to base_lr (Goyal et al.)
+    pub warmup_epochs: f64,
+    /// (epoch, multiplier) milestones, applied cumulatively
+    pub milestones: Vec<(f64, f32)>,
+    pub steps_per_epoch: usize,
+}
+
+impl LrSchedule {
+    /// The paper's CIFAR-10 schedule scaled to `total_epochs`:
+    /// warmup 5/300, decays at 150/300 and 250/300 of the run.
+    pub fn paper_scaled(base_lr: f32, total_epochs: f64, steps_per_epoch: usize) -> Self {
+        let s = total_epochs / 300.0;
+        Self {
+            base_lr,
+            warmup_epochs: 5.0 * s,
+            milestones: vec![(150.0 * s, 0.1), (250.0 * s, 0.1)],
+            steps_per_epoch: steps_per_epoch.max(1),
+        }
+    }
+
+    /// Constant lr (for theory-check runs where the paper's Theorem 1
+    /// prescribes a fixed gamma).
+    pub fn constant(lr: f32) -> Self {
+        Self { base_lr: lr, warmup_epochs: 0.0, milestones: vec![], steps_per_epoch: 1 }
+    }
+
+    pub fn lr_at_step(&self, step: usize) -> f32 {
+        let epoch = step as f64 / self.steps_per_epoch as f64;
+        self.lr_at_epoch(epoch)
+    }
+
+    pub fn lr_at_epoch(&self, epoch: f64) -> f32 {
+        if self.warmup_epochs > 0.0 && epoch < self.warmup_epochs {
+            // Goyal et al. warmup: linear ramp from a small fraction of the
+            // base lr up to the base lr over the warmup window.
+            const WARMUP_START_FRAC: f32 = 0.1;
+            let frac = (epoch / self.warmup_epochs) as f32;
+            let start = self.base_lr * WARMUP_START_FRAC;
+            return start + (self.base_lr - start) * frac;
+        }
+        let mut lr = self.base_lr;
+        for &(at, mult) in &self.milestones {
+            if epoch >= at {
+                lr *= mult;
+            }
+        }
+        lr
+    }
+}
+
+/// Hyper-parameters shared by all Local-SGD-family algorithms.
+#[derive(Clone, Debug)]
+pub struct HyperParams {
+    /// local updates between synchronizations
+    pub tau: usize,
+    /// pullback strength (paper: 0.6 for tau >= 2, 0.5 for tau = 1)
+    pub alpha: f32,
+    /// anchor momentum (paper: 0.7, following SlowMo)
+    pub beta: f32,
+    /// local Nesterov momentum (paper recipe: 0.9)
+    pub mu: f32,
+    /// weight decay
+    pub wd: f32,
+}
+
+impl HyperParams {
+    /// The paper's tuned settings for a given tau (§4).
+    pub fn paper(tau: usize) -> Self {
+        Self {
+            tau,
+            alpha: if tau <= 1 { 0.5 } else { 0.6 },
+            beta: 0.7,
+            mu: 0.9,
+            wd: 1e-4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_to_base() {
+        let s = LrSchedule::paper_scaled(0.1, 300.0, 10);
+        assert!(s.lr_at_epoch(0.0) < 0.1);
+        assert!((s.lr_at_epoch(5.0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at_epoch(100.0) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn milestones_decay_cumulatively() {
+        let s = LrSchedule::paper_scaled(0.1, 300.0, 10);
+        assert!((s.lr_at_epoch(200.0) - 0.01).abs() < 1e-7);
+        assert!((s.lr_at_epoch(299.0) - 0.001).abs() < 1e-8);
+    }
+
+    #[test]
+    fn scaling_moves_milestones() {
+        let s = LrSchedule::paper_scaled(0.1, 30.0, 10);
+        assert!((s.lr_at_epoch(20.0) - 0.01).abs() < 1e-7); // 150/300 * 30 = 15
+        assert!(s.lr_at_epoch(14.0) > 0.05);
+    }
+
+    #[test]
+    fn lr_at_step_uses_steps_per_epoch() {
+        let s = LrSchedule::paper_scaled(0.1, 300.0, 100);
+        assert_eq!(s.lr_at_step(50_000), s.lr_at_epoch(500.0));
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.02);
+        assert_eq!(s.lr_at_step(0), 0.02);
+        assert_eq!(s.lr_at_step(10_000), 0.02);
+    }
+
+    #[test]
+    fn paper_hyperparams_follow_alpha_rule() {
+        assert_eq!(HyperParams::paper(1).alpha, 0.5);
+        assert_eq!(HyperParams::paper(2).alpha, 0.6);
+        assert_eq!(HyperParams::paper(24).alpha, 0.6);
+        assert_eq!(HyperParams::paper(2).beta, 0.7);
+    }
+}

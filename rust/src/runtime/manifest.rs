@@ -1,0 +1,191 @@
+//! Loader for `artifacts/manifest.json` — the contract between the AOT
+//! Python compile path and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor inside the flat vector (mirrors Python TensorSpec).
+#[derive(Clone, Debug)]
+pub struct TensorManifest {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub std: f32,
+    /// PowerSGD matricization: the tensor viewed as rows x cols.
+    pub rows: usize,
+    pub cols: usize,
+    /// false for biases — PowerSGD sends those uncompressed.
+    pub compress: bool,
+}
+
+/// Per-model artifact table.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub param_count: usize,
+    pub tensors: Vec<TensorManifest>,
+    /// tag ("train_step", "grad_step", "eval", "pullback", "anchor") -> file
+    pub modules: BTreeMap<String, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub image_shape: [usize; 3],
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let shape_arr = j.get("image_shape")?.as_arr()?;
+        anyhow::ensure!(shape_arr.len() == 3, "image_shape must have 3 dims");
+        let image_shape = [
+            shape_arr[0].as_usize()?,
+            shape_arr[1].as_usize()?,
+            shape_arr[2].as_usize()?,
+        ];
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let mut tensors = Vec::new();
+            for t in mj.get("tensors")?.as_arr()? {
+                tensors.push(TensorManifest {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    offset: t.get("offset")?.as_usize()?,
+                    size: t.get("size")?.as_usize()?,
+                    shape: t
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    init: t.get("init")?.as_str()?.to_string(),
+                    std: t.get("std")?.as_f64()? as f32,
+                    rows: t.get("rows")?.as_usize()?,
+                    cols: t.get("cols")?.as_usize()?,
+                    compress: t.get("compress")?.as_bool()?,
+                });
+            }
+            let mut modules = BTreeMap::new();
+            for (tag, file) in mj.get("modules")?.as_obj()? {
+                modules.insert(tag.clone(), file.as_str()?.to_string());
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    param_count: mj.get("param_count")?.as_usize()?,
+                    tensors,
+                    modules,
+                },
+            );
+        }
+
+        Ok(Self {
+            image_shape,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest (have: {:?})",
+                                     self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl ModelManifest {
+    /// Bytes on the wire for a full-model (or full-gradient) exchange.
+    pub fn message_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+
+    /// Sanity invariant: tensors tile the flat vector exactly.
+    pub fn check_layout(&self) -> Result<()> {
+        let mut off = 0;
+        for t in &self.tensors {
+            anyhow::ensure!(t.offset == off, "gap before {}", t.name);
+            anyhow::ensure!(
+                t.size == t.shape.iter().product::<usize>(),
+                "size/shape mismatch on {}",
+                t.name
+            );
+            anyhow::ensure!(t.rows * t.cols == t.size, "rows*cols != size on {}", t.name);
+            off += t.size;
+        }
+        anyhow::ensure!(off == self.param_count, "layout does not cover param vector");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "image_shape": [32, 32, 3],
+      "num_classes": 10,
+      "train_batch": 32,
+      "eval_batch": 100,
+      "models": {
+        "toy": {
+          "param_count": 10,
+          "tensors": [
+            {"name": "w", "shape": [2, 3], "offset": 0, "size": 6,
+             "init": "he_normal", "fan_in": 2, "std": 1.0,
+             "rows": 2, "cols": 3, "compress": true},
+            {"name": "b", "shape": [4], "offset": 6, "size": 4,
+             "init": "zeros", "fan_in": 2, "std": 0.0,
+             "rows": 1, "cols": 4, "compress": false}
+          ],
+          "modules": {"train_step": "train_step_toy.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.image_shape, [32, 32, 3]);
+        assert_eq!(m.train_batch, 32);
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.param_count, 10);
+        assert_eq!(toy.tensors.len(), 2);
+        assert_eq!(toy.tensors[0].rows, 2);
+        assert!(toy.check_layout().is_ok());
+        assert_eq!(toy.message_bytes(), 40);
+        assert_eq!(toy.modules["train_step"], "train_step_toy.hlo.txt");
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn layout_check_catches_gaps() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        let toy = m.models.get_mut("toy").unwrap();
+        toy.tensors[1].offset = 7;
+        assert!(toy.check_layout().is_err());
+    }
+}

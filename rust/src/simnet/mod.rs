@@ -1,0 +1,245 @@
+//! Simulated cluster substrate: network cost model + straggler model.
+//!
+//! The paper ran on 16 nodes with Titan X GPUs over 40 Gbps Ethernet (NCCL).
+//! We do not have that testbed; its *observable behaviour* for every claim in
+//! the paper is (a) how long a collective takes as a function of message
+//! size and node count, and (b) how per-step compute time varies across
+//! nodes (stragglers). Both are classic parametric models:
+//!
+//! * **Network** — α/β model per ring all-reduce: a fixed `handshake` per
+//!   collective (the term the paper blames for PowerSGD's latency floor),
+//!   plus `2(m-1)` hops each costing `latency + chunk/bandwidth` with
+//!   `chunk = bytes/m` (standard ring reduce-scatter + all-gather).
+//! * **Compute** — a base step time (calibrated from the paper: 4.6 s per
+//!   epoch / 24.4 steps ≈ 188 ms) perturbed by a straggler model: none,
+//!   shifted-exponential (the classic straggler distribution, cf. Dutta et
+//!   al. 2018 [6]), or a deterministic slow node.
+//!
+//! `NetworkModel::paper_40gbps()` is calibrated so fully-sync SGD shows the
+//! paper's measured 34.6 % communication-to-computation ratio at the
+//! ResNet-18 message size (44.7 MB) — see EXPERIMENTS.md E8.
+//!
+//! All times are f64 seconds of *virtual* time.
+
+use crate::util::rng::Rng;
+
+/// α/β-model network with a per-collective handshake.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// fixed cost per collective call (rendezvous / NCCL channel setup)
+    pub handshake_s: f64,
+    /// per-hop latency (one neighbour exchange in the ring)
+    pub latency_s: f64,
+    /// link bandwidth in bytes/second
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkModel {
+    /// Calibrated to the paper's testbed (40 Gbps Ethernet, NCCL ring).
+    /// With m=16 and 44.68 MB messages this yields ≈ 65 ms per all-reduce,
+    /// i.e. 34.6 % of the 188 ms compute step — the paper's sync-SGD ratio.
+    pub fn paper_40gbps() -> Self {
+        Self {
+            handshake_s: 30e-3,
+            latency_s: 0.5e-3,
+            bandwidth_bps: 5.0e9, // 40 Gbps
+        }
+    }
+
+    /// The "slow interconnect" the paper predicts would magnify the win.
+    pub fn slow_10gbps() -> Self {
+        Self {
+            handshake_s: 45e-3,
+            latency_s: 1.0e-3,
+            bandwidth_bps: 1.25e9, // 10 Gbps
+        }
+    }
+
+    /// An idealized fast fabric (for ablations).
+    pub fn fast_fabric() -> Self {
+        Self { handshake_s: 2e-3, latency_s: 0.05e-3, bandwidth_bps: 25.0e9 }
+    }
+
+    /// Ring all-reduce of `bytes` over `m` nodes:
+    /// handshake + 2(m-1) * (latency + bytes/(m * BW)).
+    pub fn allreduce_time(&self, bytes: usize, m: usize) -> f64 {
+        assert!(m >= 1);
+        if m == 1 {
+            return 0.0;
+        }
+        let hops = 2 * (m - 1);
+        let chunk = bytes as f64 / m as f64;
+        self.handshake_s + hops as f64 * (self.latency_s + chunk / self.bandwidth_bps)
+    }
+
+    /// Parameter-server exchange (up + down) — used by the PS ablation.
+    pub fn ps_exchange_time(&self, bytes: usize, m: usize) -> f64 {
+        // m clients share the server's ingress: serialized on the bottleneck
+        // link, one handshake per round.
+        self.handshake_s + 2.0 * (self.latency_s + (bytes as f64 * m as f64) / self.bandwidth_bps)
+    }
+
+    /// All-gather of per-node `bytes` (PowerSGD's second phase uses this
+    /// shape; cost equals a ring all-gather = (m-1) hops).
+    pub fn allgather_time(&self, bytes: usize, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let hops = m - 1;
+        let chunk = bytes as f64 / m as f64;
+        self.handshake_s + hops as f64 * (self.latency_s + chunk / self.bandwidth_bps)
+    }
+}
+
+/// Per-worker compute-time variability.
+#[derive(Clone, Debug)]
+pub enum StragglerModel {
+    /// all workers identical
+    None,
+    /// step time = base * (1 + Exp(mean = scale)) — shifted exponential
+    ShiftedExp { scale: f64 },
+    /// worker `node` runs `factor`x slower, deterministically
+    SlowNode { node: usize, factor: f64 },
+    /// uniform jitter in [1-jitter, 1+jitter]
+    UniformJitter { jitter: f64 },
+}
+
+impl StragglerModel {
+    /// Multiplier applied to the base step time for `worker` at this draw.
+    pub fn factor(&self, worker: usize, rng: &mut Rng) -> f64 {
+        match self {
+            StragglerModel::None => 1.0,
+            StragglerModel::ShiftedExp { scale } => 1.0 + rng.next_exp(*scale),
+            StragglerModel::SlowNode { node, factor } => {
+                if worker == *node {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            StragglerModel::UniformJitter { jitter } => {
+                1.0 + jitter * (2.0 * rng.next_f64() - 1.0)
+            }
+        }
+    }
+}
+
+/// Compute-time model: base seconds per local step, modulated by stragglers.
+#[derive(Clone, Debug)]
+pub struct ComputeModel {
+    /// seconds per local mini-batch step on an unperturbed node
+    pub base_step_s: f64,
+    pub straggler: StragglerModel,
+}
+
+impl ComputeModel {
+    /// Paper calibration: 4.6 s/epoch ÷ (50 000 / (128·16)) steps ≈ 188 ms.
+    pub fn paper_resnet18() -> Self {
+        Self { base_step_s: 0.188, straggler: StragglerModel::None }
+    }
+
+    pub fn step_time(&self, worker: usize, rng: &mut Rng) -> f64 {
+        self.base_step_s * self.straggler.factor(worker, rng)
+    }
+}
+
+/// Everything the timing side of an experiment needs.
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    pub workers: usize,
+    pub net: NetworkModel,
+    pub compute: ComputeModel,
+    /// bytes per full-model/full-gradient message. Decoupled from the local
+    /// numeric model so runtime figures keep the paper's ResNet-18 scale
+    /// (44.68 MB) while numerics run on the scaled-down CNN — see DESIGN.md §3.
+    pub message_bytes: usize,
+}
+
+impl ClusterModel {
+    pub fn paper_16node() -> Self {
+        Self {
+            workers: 16,
+            net: NetworkModel::paper_40gbps(),
+            compute: ComputeModel::paper_resnet18(),
+            message_bytes: 11_173_962 * 4, // ResNet-18 params * f32
+        }
+    }
+
+    pub fn allreduce_time(&self) -> f64 {
+        self.net.allreduce_time(self.message_bytes, self.workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn paper_calibration_hits_34_6_percent() {
+        let c = ClusterModel::paper_16node();
+        let ratio = c.allreduce_time() / c.compute.base_step_s;
+        // Paper: communication-to-computation ratio 34.6 % for sync SGD.
+        assert!((ratio - 0.346).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn allreduce_monotonic_in_bytes_and_includes_handshake() {
+        let net = NetworkModel::paper_40gbps();
+        let t1 = net.allreduce_time(1_000_000, 16);
+        let t2 = net.allreduce_time(10_000_000, 16);
+        assert!(t2 > t1);
+        assert!(t1 >= net.handshake_s);
+    }
+
+    #[test]
+    fn allreduce_single_node_is_free() {
+        let net = NetworkModel::paper_40gbps();
+        assert_eq!(net.allreduce_time(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn handshake_dominates_small_messages() {
+        // The paper's PowerSGD observation: even 243x compression cannot
+        // beat the handshake floor.
+        let net = NetworkModel::paper_40gbps();
+        let full = net.allreduce_time(44_700_000, 16);
+        let tiny = net.allreduce_time(44_700_000 / 243, 16);
+        assert!(tiny > 0.4 * full, "compression wins too much: {tiny} vs {full}");
+        assert!(tiny >= net.handshake_s);
+    }
+
+    #[test]
+    fn slow_node_factor() {
+        let s = StragglerModel::SlowNode { node: 2, factor: 3.0 };
+        let mut rng = Rng::seed_from(1);
+        assert_eq!(s.factor(2, &mut rng), 3.0);
+        assert_eq!(s.factor(0, &mut rng), 1.0);
+    }
+
+    #[test]
+    fn shifted_exp_is_always_slower_than_base() {
+        property("shifted exp >= 1", 200, |g| {
+            let s = StragglerModel::ShiftedExp { scale: g.f64_in(0.01, 2.0) };
+            let f = s.factor(g.usize_in(0, 15), g.rng());
+            assert!(f >= 1.0);
+        });
+    }
+
+    #[test]
+    fn uniform_jitter_bounded() {
+        property("jitter in band", 200, |g| {
+            let j = g.f64_in(0.0, 0.5);
+            let s = StragglerModel::UniformJitter { jitter: j };
+            let f = s.factor(0, g.rng());
+            assert!(f >= 1.0 - j - 1e-12 && f <= 1.0 + j + 1e-12);
+        });
+    }
+
+    #[test]
+    fn ring_beats_ps_at_scale() {
+        let net = NetworkModel::paper_40gbps();
+        let bytes = 44_700_000;
+        assert!(net.allreduce_time(bytes, 16) < net.ps_exchange_time(bytes, 16));
+    }
+}

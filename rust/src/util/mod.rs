@@ -1,0 +1,6 @@
+//! Cross-cutting substrates: PRNG, JSON, statistics, property testing.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

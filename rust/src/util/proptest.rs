@@ -1,0 +1,145 @@
+//! Hand-rolled property-testing harness (no `proptest` in the offline crate
+//! mirror). Deliberately small: a deterministic case generator driven by the
+//! repo PRNG, with shrink-free but *reproducible* failure reports — every
+//! failing case prints the seed that regenerates it.
+//!
+//! Usage:
+//! ```ignore
+//! property("allreduce is exact mean", 200, |g| {
+//!     let m = g.usize_in(1, 16);
+//!     let v = g.vec_f32(g.usize_in(1, 1000), 10.0);
+//!     /* ... assert ... */
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handed to the property body.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of f32 uniform in [-scale, scale].
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(-scale, scale)).collect()
+    }
+
+    /// Vector of standard normals scaled by `std`.
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics (with the reproducing seed)
+/// on the first failing case. The master seed is fixed so CI is stable;
+/// override with env `PROPTEST_SEED` to explore.
+pub fn property<F: Fn(&mut Gen)>(name: &str, cases: u32, body: F) {
+    let master: u64 = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut seeder = Rng::stream(master, name);
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut g = Gen { rng: Rng::seed_from(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (PROPTEST_SEED={master}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "mismatch at [{i}]: {x} vs {y} (|d|={}, tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0u32;
+        // Property bodies take &mut Gen; use a cell to count.
+        let counter = std::cell::Cell::new(0u32);
+        property("counting", 50, |_g| {
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn property_reports_failure_with_seed() {
+        property("fails", 10, |g| {
+            assert!(g.usize_in(0, 9) > 100, "always fails");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        property("ranges", 100, |g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 2.0);
+            assert!((-1.0..=2.0).contains(&f));
+            let len = g.usize_in(0, 50);
+            let v = g.vec_f32(len, 2.0);
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-8], 1e-6, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at [1]")]
+    fn assert_close_rejects_far() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 1e-6);
+    }
+}

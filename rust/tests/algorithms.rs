@@ -1,0 +1,198 @@
+//! Algorithm-level integration tests: every coordinator driver over the real
+//! artifacts, plus the cross-algorithm algebraic identities and timing
+//! invariants the paper's framing implies. Requires `make artifacts`.
+
+use std::path::Path;
+
+use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, Dataset, GenConfig};
+use olsgd::metrics::TrainLog;
+use olsgd::runtime::{ModelRuntime, Runtime};
+use olsgd::simnet::StragglerModel;
+
+struct Fixture {
+    _runtime: Runtime,
+    rt: ModelRuntime,
+    train: Dataset,
+    test: Dataset,
+}
+
+fn fixture() -> Fixture {
+    let runtime = Runtime::new(Path::new("artifacts")).expect("make artifacts first");
+    let rt = runtime.load_model("cnn").unwrap();
+    let gen = GenConfig::default();
+    let train = data::generate(1, 256, "train", &gen);
+    let test = data::generate(1, 100, "test", &gen);
+    Fixture { rt, _runtime: runtime, train, test }
+}
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 2;
+    cfg.epochs = 2.0;
+    cfg.train_n = 256;
+    cfg.test_n = 100;
+    cfg.eval_every = 1.0;
+    cfg
+}
+
+fn run(f: &Fixture, cfg: &ExperimentConfig) -> TrainLog {
+    run_experiment(&f.rt, cfg, &f.train, &f.test).unwrap()
+}
+
+#[test]
+fn every_algorithm_completes_and_accounts_time() {
+    let f = fixture();
+    for &algo in Algo::all() {
+        let mut cfg = tiny_cfg();
+        cfg.algo = algo;
+        let log = run(&f, &cfg);
+        assert!(log.steps > 0, "{algo:?} took no steps");
+        assert!(!log.records.is_empty(), "{algo:?} recorded nothing");
+        assert!(log.total_sim_time > 0.0);
+        assert!(log.final_loss().is_finite(), "{algo:?} diverged on IID tiny run");
+        // time monotone across records
+        let mut last = 0.0;
+        for r in &log.records {
+            assert!(r.sim_time >= last, "{algo:?} time went backwards");
+            last = r.sim_time;
+        }
+        // bytes were sent unless single worker
+        assert!(log.bytes_sent > 0, "{algo:?} sent no bytes");
+    }
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    let f = fixture();
+    let mut cfg = tiny_cfg();
+    cfg.algo = Algo::OverlapM;
+    let a = run(&f, &cfg);
+    let b = run(&f, &cfg);
+    assert_eq!(a.steps, b.steps);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.test_acc, rb.test_acc);
+        assert!((ra.train_loss - rb.train_loss).abs() < 1e-12);
+    }
+    assert_eq!(a.total_sim_time, b.total_sim_time);
+}
+
+#[test]
+fn sync_and_local_tau1_share_mean_trajectory() {
+    // Algebraic identity: with τ=1 and common init, Local SGD's averaged
+    // replica equals sync SGD's replica (mean of per-worker Nesterov steps
+    // = Nesterov step on mean gradient, since params are equal each round).
+    let f = fixture();
+    let mut c_sync = tiny_cfg();
+    c_sync.algo = Algo::Sync;
+    let mut c_local = tiny_cfg();
+    c_local.algo = Algo::Local;
+    c_local.tau = 1;
+    let a = run(&f, &c_sync);
+    let b = run(&f, &c_local);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert!(
+            (ra.test_loss - rb.test_loss).abs() < 2e-3,
+            "sync vs local tau=1 test loss diverged: {} vs {}",
+            ra.test_loss,
+            rb.test_loss
+        );
+    }
+}
+
+#[test]
+fn overlap_hides_communication_local_does_not() {
+    let f = fixture();
+    let mut c_local = tiny_cfg();
+    c_local.algo = Algo::Local;
+    c_local.tau = 4;
+    let mut c_over = c_local.clone();
+    c_over.algo = Algo::OverlapM;
+    let ll = run(&f, &c_local);
+    let lo = run(&f, &c_over);
+    assert!(
+        lo.total_comm_blocked_s < 0.2 * ll.total_comm_blocked_s,
+        "overlap did not hide comm: {} vs local {}",
+        lo.total_comm_blocked_s,
+        ll.total_comm_blocked_s
+    );
+    assert!(lo.total_sim_time < ll.total_sim_time);
+}
+
+#[test]
+fn overlap_comm_surfaces_when_wire_slower_than_round() {
+    // With τ=1 and a 10 Gbps wire, the all-reduce takes longer than one
+    // step of compute — the anchor is late and waits must appear.
+    let f = fixture();
+    let mut cfg = tiny_cfg();
+    cfg.algo = Algo::OverlapM;
+    cfg.tau = 1;
+    cfg.net_preset = "slow10g".into();
+    cfg.base_step_s = 0.05; // short compute round
+    let log = run(&f, &cfg);
+    assert!(
+        log.total_comm_blocked_s > 0.0,
+        "expected anchor waits with slow wire + tau=1"
+    );
+}
+
+#[test]
+fn sync_stalls_on_straggler_overlap_does_not() {
+    let f = fixture();
+    let straggler = StragglerModel::SlowNode { node: 0, factor: 3.0 };
+    let mut c_sync = tiny_cfg();
+    c_sync.algo = Algo::Sync;
+    c_sync.straggler = straggler.clone();
+    let mut c_over = tiny_cfg();
+    c_over.algo = Algo::OverlapM;
+    c_over.tau = 4;
+    c_over.straggler = straggler;
+    let ls = run(&f, &c_sync);
+    let lo = run(&f, &c_over);
+    assert!(ls.total_idle_s > 0.0, "sync must idle on the straggler");
+    assert_eq!(lo.total_idle_s, 0.0, "overlap must never barrier-idle");
+}
+
+#[test]
+fn powersgd_sends_fewer_bytes_than_sync() {
+    let f = fixture();
+    let mut c_sync = tiny_cfg();
+    c_sync.algo = Algo::Sync;
+    let mut c_pow = tiny_cfg();
+    c_pow.algo = Algo::PowerSgd;
+    c_pow.rank = 1;
+    let ls = run(&f, &c_sync);
+    let lp = run(&f, &c_pow);
+    assert!(
+        lp.bytes_sent < ls.bytes_sent / 5,
+        "powersgd rank-1 compression too weak: {} vs {}",
+        lp.bytes_sent,
+        ls.bytes_sent
+    );
+    // ... but its time per step keeps the handshake floor
+    assert!(lp.total_comm_blocked_s > 0.0);
+}
+
+#[test]
+fn noniid_partition_flows_through_training() {
+    let f = fixture();
+    let mut cfg = tiny_cfg();
+    cfg.algo = Algo::OverlapM;
+    cfg.noniid = true;
+    cfg.reshuffle = false;
+    let log = run(&f, &cfg);
+    assert!(log.final_loss().is_finite());
+}
+
+#[test]
+fn eval_cadence_respected() {
+    let f = fixture();
+    let mut cfg = tiny_cfg();
+    cfg.epochs = 3.0;
+    cfg.eval_every = 1.0;
+    cfg.algo = Algo::Local;
+    let log = run(&f, &cfg);
+    // one record per epoch + final (final coincides with last cadence point)
+    assert!(log.records.len() >= 3, "records: {}", log.records.len());
+}

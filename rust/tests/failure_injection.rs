@@ -1,0 +1,113 @@
+//! Failure injection: the system must fail loudly and helpfully, never
+//! silently — corrupted artifacts, shape mismatches, bad configs, and
+//! degenerate workloads.
+
+use std::path::Path;
+
+use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::runtime::manifest::Manifest;
+use olsgd::runtime::Runtime;
+
+#[test]
+fn missing_artifacts_dir_is_a_clear_error() {
+    let msg = match Runtime::new(Path::new("/nonexistent/artifacts")) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected error for missing artifacts dir"),
+    };
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupted_manifest_is_rejected() {
+    for bad in [
+        "",                                  // empty
+        "{",                                 // truncated
+        r#"{"image_shape": [32, 32]}"#,      // wrong rank
+        r#"{"image_shape": [32,32,3], "num_classes": 10}"#, // missing keys
+        r#"{"image_shape": [32,32,3], "num_classes": 10,
+            "train_batch": 32, "eval_batch": 100,
+            "models": {"x": {"param_count": "ten", "tensors": [], "modules": {}}}}"#,
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "accepted corrupt manifest: {bad:?}");
+    }
+}
+
+#[test]
+fn wrong_input_lengths_error_not_panic() {
+    let runtime = Runtime::new(Path::new("artifacts")).expect("make artifacts first");
+    let m = runtime.load_model("cnn").unwrap();
+    let short = vec![0.0f32; m.n - 1];
+    let ok_mom = vec![0.0f32; m.n];
+    let images = vec![0.0f32; m.train_batch * 32 * 32 * 3];
+    let labels = vec![0i32; m.train_batch];
+    assert!(m.train_step(&short, &ok_mom, &images, &labels, 0.1, 0.9, 0.0).is_err());
+    assert!(m.grad_step(&short, &images, &labels).is_err());
+    // wrong batch
+    let bad_imgs = vec![0.0f32; (m.train_batch - 1) * 32 * 32 * 3];
+    let okp = vec![0.0f32; m.n];
+    assert!(m.grad_step(&okp, &bad_imgs, &labels).is_err());
+    // eval set not a multiple of eval batch
+    let imgs = vec![0.0f32; 7 * 32 * 32 * 3];
+    let lbl = vec![0i32; 7];
+    assert!(m.evaluate_set(&okp, &imgs, &lbl).is_err());
+}
+
+#[test]
+fn unknown_model_is_rejected() {
+    let runtime = Runtime::new(Path::new("artifacts")).unwrap();
+    let msg = match runtime.load_model("resnet152") {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected error for unknown model"),
+    };
+    assert!(msg.contains("not in manifest"));
+}
+
+#[test]
+fn config_rejects_nonsense() {
+    let mut c = ExperimentConfig::default();
+    assert!(c.set("algo", "sgdx").is_err());
+    assert!(c.set("tau", "-3").is_err());
+    assert!(c.set("epochs", "many").is_err());
+    assert!(c.set("straggler", "quantum:2").is_err());
+    assert!(c.set("net", "infiniband").is_ok()); // stored...
+    assert!(c.network().is_err()); // ...but rejected at use
+}
+
+#[test]
+fn degenerate_single_worker_runs() {
+    // m=1: all collectives are free no-ops; every algorithm must still work.
+    let runtime = Runtime::new(Path::new("artifacts")).unwrap();
+    let rt = runtime.load_model("cnn").unwrap();
+    let gen = olsgd::data::GenConfig::default();
+    let train = olsgd::data::generate(1, 64, "train", &gen);
+    let test = olsgd::data::generate(1, 100, "test", &gen);
+    for algo in [Algo::Sync, Algo::OverlapM, Algo::Cocod] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 1;
+        cfg.epochs = 1.0;
+        cfg.train_n = 64;
+        cfg.test_n = 100;
+        cfg.algo = algo;
+        let log = olsgd::coordinator::run_experiment(&rt, &cfg, &train, &test).unwrap();
+        assert!(log.final_loss().is_finite(), "{algo:?} failed with m=1");
+        assert_eq!(log.total_idle_s, 0.0);
+    }
+}
+
+#[test]
+fn tau_larger_than_total_steps_degrades_gracefully() {
+    let runtime = Runtime::new(Path::new("artifacts")).unwrap();
+    let rt = runtime.load_model("cnn").unwrap();
+    let gen = olsgd::data::GenConfig::default();
+    let train = olsgd::data::generate(1, 128, "train", &gen);
+    let test = olsgd::data::generate(1, 100, "test", &gen);
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 2;
+    cfg.epochs = 1.0; // 2 steps per worker
+    cfg.train_n = 128;
+    cfg.test_n = 100;
+    cfg.tau = 1000; // way beyond the run
+    cfg.algo = Algo::OverlapM;
+    let log = olsgd::coordinator::run_experiment(&rt, &cfg, &train, &test).unwrap();
+    assert!(log.steps > 0 && log.final_loss().is_finite());
+}

@@ -1,0 +1,150 @@
+//! Integration tests over the real AOT artifacts: python-lowered HLO ->
+//! PJRT execution -> Rust coordinator substrates. Requires `make artifacts`.
+
+use std::path::Path;
+
+use olsgd::data::{self, GenConfig, PX};
+use olsgd::model::{init_params, vecmath};
+use olsgd::runtime::Runtime;
+use olsgd::util::proptest::assert_close;
+use olsgd::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_layouts_are_consistent_for_all_models() {
+    let rt = runtime();
+    assert!(!rt.manifest.models.is_empty());
+    for (name, m) in &rt.manifest.models {
+        m.check_layout().unwrap_or_else(|e| panic!("bad layout for {name}: {e}"));
+        for tag in ["train_step", "grad_step", "eval", "pullback", "anchor", "update"] {
+            assert!(m.modules.contains_key(tag), "{name} missing module {tag}");
+        }
+    }
+}
+
+#[test]
+fn train_step_equals_grad_step_plus_update() {
+    // The fused train_step artifact must compose exactly from the grad_step
+    // and update artifacts (same kernels, same order).
+    let rt = runtime();
+    let m = rt.load_model("cnn").unwrap();
+    let params = init_params(&m.manifest, 3);
+    let mom = vec![0.01f32; m.n];
+    let gen = GenConfig::default();
+    let ds = data::generate(9, 64, "train", &gen);
+    let images = ds.images[..m.train_batch * PX].to_vec();
+    let labels = ds.labels[..m.train_batch].to_vec();
+
+    let (p1, m1, loss1) = m
+        .train_step(&params, &mom, &images, &labels, 0.05, 0.9, 1e-4)
+        .unwrap();
+    let (loss2, g) = m.grad_step(&params, &images, &labels).unwrap();
+    let (p2, m2) = m.sgd_update(&params, &mom, &g, 0.05, 0.9, 1e-4).unwrap();
+
+    assert!((loss1 - loss2).abs() < 1e-5, "{loss1} vs {loss2}");
+    assert_close(&p1, &p2, 1e-4, 1e-6);
+    assert_close(&m1, &m2, 1e-4, 1e-6);
+}
+
+#[test]
+fn pullback_artifact_matches_rust_vecmath() {
+    let rt = runtime();
+    let m = rt.load_model("cnn").unwrap();
+    let mut rng = Rng::seed_from(5);
+    let mut x = vec![0.0f32; m.n];
+    let mut z = vec![0.0f32; m.n];
+    rng.fill_normal(&mut x, 1.0);
+    rng.fill_normal(&mut z, 1.0);
+    for alpha in [0.0f32, 0.5, 0.6, 1.0] {
+        let got = m.pullback(&x, &z, alpha).unwrap();
+        let mut want = x.clone();
+        vecmath::pullback_inplace(&mut want, &z, alpha);
+        assert_close(&got, &want, 1e-5, 1e-6);
+    }
+}
+
+#[test]
+fn anchor_artifact_matches_rust_vecmath() {
+    let rt = runtime();
+    let m = rt.load_model("cnn").unwrap();
+    let mut rng = Rng::seed_from(6);
+    let mut z = vec![0.0f32; m.n];
+    let mut v = vec![0.0f32; m.n];
+    let mut avg = vec![0.0f32; m.n];
+    rng.fill_normal(&mut z, 1.0);
+    rng.fill_normal(&mut v, 0.3);
+    rng.fill_normal(&mut avg, 1.0);
+    for beta in [0.0f32, 0.7] {
+        let (gz, gv) = m.anchor_update(&z, &v, &avg, beta).unwrap();
+        let mut wz = z.clone();
+        let mut wv = v.clone();
+        vecmath::anchor_update_inplace(&mut wz, &mut wv, &avg, beta);
+        assert_close(&gz, &wz, 1e-5, 1e-6);
+        assert_close(&gv, &wv, 1e-5, 1e-6);
+    }
+}
+
+#[test]
+fn evaluate_set_is_a_probability() {
+    let rt = runtime();
+    let m = rt.load_model("cnn").unwrap();
+    let params = init_params(&m.manifest, 1);
+    let gen = GenConfig::default();
+    let test = data::generate(2, 200, "test", &gen);
+    let (loss, acc) = m.evaluate_set(&params, &test.images, &test.labels).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+    // random-init accuracy should be near chance
+    assert!(acc < 0.5, "untrained model suspiciously good: {acc}");
+}
+
+#[test]
+fn repeated_training_steps_reduce_loss_mlp() {
+    let rt = runtime();
+    let m = rt.load_model("mlp").unwrap();
+    let mut params = init_params(&m.manifest, 7);
+    let mut mom = vec![0.0f32; m.n];
+    let gen = GenConfig::default();
+    let ds = data::generate(11, 64, "train", &gen);
+    let images = ds.images[..m.train_batch * PX].to_vec();
+    let labels = ds.labels[..m.train_batch].to_vec();
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..10 {
+        let (p, mo, loss) = m
+            .train_step(&params, &mom, &images, &labels, 0.05, 0.9, 0.0)
+            .unwrap();
+        params = p;
+        mom = mo;
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first * 0.8,
+        "loss did not drop fitting one batch: {first} -> {last}"
+    );
+}
+
+#[test]
+fn scalar_hyperparams_change_behaviour() {
+    // lr=0 must be a no-op on params; mu=0 must zero momentum influence.
+    let rt = runtime();
+    let m = rt.load_model("cnn").unwrap();
+    let params = init_params(&m.manifest, 3);
+    let mom = vec![0.5f32; m.n];
+    let mut g = vec![0.0f32; m.n];
+    Rng::seed_from(8).fill_normal(&mut g, 0.1);
+
+    let (p0, _) = m.sgd_update(&params, &mom, &g, 0.0, 0.9, 0.0).unwrap();
+    assert_close(&p0, &params, 0.0, 0.0);
+
+    let (p1, v1) = m.sgd_update(&params, &mom, &g, 0.1, 0.0, 0.0).unwrap();
+    assert_close(&v1, &g, 1e-6, 1e-7);
+    let want: Vec<f32> = params.iter().zip(&g).map(|(&p, &gi)| p - 0.1 * gi).collect();
+    assert_close(&p1, &want, 1e-5, 1e-7);
+}

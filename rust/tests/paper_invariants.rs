@@ -1,0 +1,286 @@
+//! Property tests of the paper's mathematical objects, independent of PJRT:
+//! the mixing matrix P (Eq. 9), its contraction factor zeta <= 1 - alpha,
+//! the virtual sequence y_k (Eq. 19), and the equivalence of our staggered
+//! (overlapped) schedule to the paper's instantaneous update rules.
+
+use olsgd::model::vecmath;
+use olsgd::util::proptest::{property, Gen};
+
+/// Build the (m+1)x(m+1) mixing matrix P of Eq. (9), row-major.
+/// Columns j < m are the local models, column m is the anchor.
+fn mixing_matrix(m: usize, alpha: f64) -> Vec<f64> {
+    let n = m + 1;
+    let mut p = vec![0.0; n * n];
+    // x_i' = (1-a) x_i + a z   -> column i gets (1-a) at row i... careful:
+    // the paper stacks columns X = [x_1..x_m, z] and multiplies on the
+    // right: X' = X P, so P[col j] describes what target j receives:
+    // x_j' = (1-a) x_j + a z          => P[j][j] = 1-a, P[m][j] = a
+    // z'   = (1/m) sum_i x_i' = (1-a)/m sum_i x_i + a z
+    //                                 => P[i][m] = (1-a)/m, P[m][m] = a
+    for j in 0..m {
+        p[j * n + j] = 1.0 - alpha;
+        p[m * n + j] = alpha;
+    }
+    for i in 0..m {
+        p[i * n + m] = (1.0 - alpha) / m as f64;
+    }
+    p[m * n + m] = alpha;
+    p
+}
+
+/// v = [(1-a)/m, ..., (1-a)/m, a]: the left-invariant vector with Pv = v.
+fn invariant_v(m: usize, alpha: f64) -> Vec<f64> {
+    let mut v = vec![(1.0 - alpha) / m as f64; m + 1];
+    v[m] = alpha;
+    v
+}
+
+fn matvec(p: &[f64], n: usize, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        for j in 0..n {
+            y[i] += p[i * n + j] * x[j];
+        }
+    }
+    y
+}
+
+/// ||M||_2 via power iteration on MᵀM.
+fn spectral_norm(mat: &[f64], n: usize) -> f64 {
+    let mut x: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64) * 0.37).collect();
+    let mt_m = {
+        let mut out = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += mat[k * n + i] * mat[k * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    };
+    let mut lambda = 0.0;
+    for _ in 0..200 {
+        let y = matvec(&mt_m, n, &x);
+        lambda = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if lambda == 0.0 {
+            return 0.0;
+        }
+        x = y.iter().map(|v| v / lambda).collect();
+    }
+    lambda.sqrt()
+}
+
+#[test]
+fn mixing_matrix_is_column_stochastic() {
+    property("P column-stochastic", 100, |g: &mut Gen| {
+        let m = g.usize_in(1, 12);
+        let alpha = g.f64_in(0.01, 0.99);
+        let n = m + 1;
+        let p = mixing_matrix(m, alpha);
+        for j in 0..n {
+            let col: f64 = (0..n).map(|i| p[i * n + j]).sum();
+            assert!((col - 1.0).abs() < 1e-12, "col {j} sums to {col}");
+        }
+    });
+}
+
+#[test]
+fn p_fixes_its_invariant_vector() {
+    property("Pv = v", 100, |g: &mut Gen| {
+        let m = g.usize_in(1, 12);
+        let alpha = g.f64_in(0.01, 0.99);
+        let p = mixing_matrix(m, alpha);
+        let v = invariant_v(m, alpha);
+        let pv = matvec(&p, m + 1, &v);
+        for (a, b) in pv.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-12, "Pv != v");
+        }
+    });
+}
+
+#[test]
+fn zeta_bounded_by_one_minus_alpha() {
+    // The paper's key spectral fact (via Haveliwala & Kamvar):
+    // zeta = ||P - v 1ᵀ||_2 <= 1 - alpha, strictly < 1 for alpha > 0.
+    property("zeta <= 1 - alpha", 60, |g: &mut Gen| {
+        let m = g.usize_in(1, 10);
+        let alpha = g.f64_in(0.05, 0.95);
+        let n = m + 1;
+        let p = mixing_matrix(m, alpha);
+        let v = invariant_v(m, alpha);
+        let mut diff = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                diff[i * n + j] = p[i * n + j] - v[i];
+            }
+        }
+        let zeta = spectral_norm(&diff, n);
+        assert!(
+            zeta <= (1.0 - alpha) + 1e-6,
+            "zeta {zeta} > 1 - alpha = {}",
+            1.0 - alpha
+        );
+    });
+}
+
+/// Reference: the paper's *instantaneous* update rules (Eqs. 3-5, beta=0):
+/// at each boundary, pull back toward z_k, then z_{k+1} = avg(x_{k+1}).
+fn run_instantaneous(
+    g: &mut Gen,
+    m: usize,
+    d: usize,
+    tau: usize,
+    steps: usize,
+    alpha: f32,
+    gamma: f32,
+    grads: &[Vec<Vec<f32>>],
+) -> (Vec<Vec<f32>>, Vec<f32>, Vec<Vec<f32>>) {
+    let x0: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(d, 1.0)).collect();
+    let mut xs = x0.clone();
+    let mut z = vecmath::mean(&xs.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+    // paper init: all equal; force x_i = z
+    for x in xs.iter_mut() {
+        x.copy_from_slice(&z);
+    }
+    let mut ys = Vec::new();
+    for k in 0..steps {
+        for (i, x) in xs.iter_mut().enumerate() {
+            vecmath::axpy(-gamma, &grads[k][i], x);
+        }
+        if (k + 1) % tau == 0 {
+            for x in xs.iter_mut() {
+                vecmath::pullback_inplace(x, &z, alpha);
+            }
+            z = vecmath::mean(&xs.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+        }
+        // y_k+1 = (1-a) avg x + a z
+        let mut y = vecmath::mean(&xs.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+        for (j, yj) in y.iter_mut().enumerate() {
+            *yj = (1.0 - alpha) * *yj + alpha * z[j];
+        }
+        ys.push(y);
+    }
+    (xs, z, ys)
+}
+
+#[test]
+fn virtual_sequence_follows_eq_19() {
+    // y_{k+1} = y_k - gamma_eff * avg_i g_k^i  with gamma_eff = (1-a)gamma,
+    // at EVERY k including pullback boundaries. This is the identity the
+    // whole convergence proof rests on.
+    property("Eq.19 virtual sequence", 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 6);
+        let d = g.usize_in(1, 20);
+        let tau = g.usize_in(1, 5);
+        let steps = tau * g.usize_in(1, 6);
+        let alpha = g.f32_in(0.05, 0.95);
+        let gamma = g.f32_in(0.001, 0.1);
+        let grads: Vec<Vec<Vec<f32>>> = (0..steps)
+            .map(|_| (0..m).map(|_| g.vec_f32(d, 1.0)).collect())
+            .collect();
+        let (_, _, ys) = run_instantaneous(g, m, d, tau, steps, alpha, gamma, &grads);
+
+        // y_0 = common init z0; reconstruct from first step:
+        // y_1 = y_0 - geff avg g_0  => y_0 = y_1 + geff avg g_0
+        let geff = (1.0 - alpha) * gamma;
+        for k in 1..steps {
+            let refs: Vec<&[f32]> = grads[k].iter().map(|v| v.as_slice()).collect();
+            let gbar = vecmath::mean(&refs);
+            for j in 0..d {
+                let want = ys[k - 1][j] - geff * gbar[j];
+                let got = ys[k][j];
+                assert!(
+                    (want - got).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "Eq.19 violated at k={k}, j={j}: {got} vs {want}"
+                );
+            }
+        }
+    });
+}
+
+/// Our coordinator's *staggered* schedule: the average computed at boundary
+/// B_{r-1} is only absorbed into z at boundary B_r (communication runs
+/// under round r's compute). The paper's Eq. (5) notes z_{a tau} is first
+/// USED at (a+1) tau — so both schedules must produce identical local-model
+/// trajectories.
+fn run_staggered(
+    m: usize,
+    d: usize,
+    tau: usize,
+    steps: usize,
+    alpha: f32,
+    gamma: f32,
+    x0: &[f32],
+    grads: &[Vec<Vec<f32>>],
+) -> Vec<Vec<f32>> {
+    let mut xs: Vec<Vec<f32>> = (0..m).map(|_| x0.to_vec()).collect();
+    let mut z = x0.to_vec();
+    let mut pending: Option<Vec<f32>> = None;
+    for k in 0..steps {
+        for (i, x) in xs.iter_mut().enumerate() {
+            vecmath::axpy(-gamma, &grads[k][i], x);
+        }
+        if (k + 1) % tau == 0 {
+            if let Some(avg) = pending.take() {
+                z = avg; // absorb previous boundary's collective
+            }
+            for x in xs.iter_mut() {
+                vecmath::pullback_inplace(x, &z, alpha);
+            }
+            pending = Some(vecmath::mean(
+                &xs.iter().map(|v| v.as_slice()).collect::<Vec<_>>(),
+            ));
+        }
+    }
+    xs
+}
+
+#[test]
+fn staggered_absorb_equals_instantaneous_rule() {
+    property("staggered == Eqs.(3)-(5)", 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 6);
+        let d = g.usize_in(1, 16);
+        let tau = g.usize_in(1, 4);
+        let rounds = g.usize_in(1, 6);
+        let steps = tau * rounds;
+        let alpha = g.f32_in(0.05, 0.95);
+        let gamma = g.f32_in(0.001, 0.1);
+        let grads: Vec<Vec<Vec<f32>>> = (0..steps)
+            .map(|_| (0..m).map(|_| g.vec_f32(d, 1.0)).collect())
+            .collect();
+        let x0 = g.vec_f32(d, 1.0);
+
+        // Instantaneous per the paper: z used at boundary r is the average
+        // formed at boundary r-1.
+        let mut xs_a: Vec<Vec<f32>> = (0..m).map(|_| x0.clone()).collect();
+        let mut z_hist = vec![x0.clone()]; // z values in boundary order
+        for k in 0..steps {
+            for (i, x) in xs_a.iter_mut().enumerate() {
+                vecmath::axpy(-gamma, &grads[k][i], x);
+            }
+            if (k + 1) % tau == 0 {
+                let r = (k + 1) / tau; // boundary index, 1-based
+                let z_used = z_hist[r - 1].clone();
+                for x in xs_a.iter_mut() {
+                    vecmath::pullback_inplace(x, &z_used, alpha);
+                }
+                z_hist.push(vecmath::mean(
+                    &xs_a.iter().map(|v| v.as_slice()).collect::<Vec<_>>(),
+                ));
+            }
+        }
+
+        let xs_b = run_staggered(m, d, tau, steps, alpha, gamma, &x0, &grads);
+        for i in 0..m {
+            for j in 0..d {
+                assert!(
+                    (xs_a[i][j] - xs_b[i][j]).abs() <= 1e-5 * (1.0 + xs_a[i][j].abs()),
+                    "trajectory mismatch worker {i} dim {j}"
+                );
+            }
+        }
+    });
+}
