@@ -20,7 +20,7 @@ use olsgd::config::ExperimentConfig;
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
 use olsgd::metrics::{write_json, write_text};
-use olsgd::runtime::Runtime;
+use olsgd::runtime::load_auto;
 
 fn main() -> Result<()> {
     let fast = std::env::args().any(|a| a == "fast");
@@ -35,8 +35,7 @@ fn main() -> Result<()> {
     cfg.test_n = 500;
     cfg.eval_every = 1.0;
 
-    let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-    let rt = runtime.load_model(&cfg.model)?;
+    let rt = load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);

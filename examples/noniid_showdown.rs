@@ -15,7 +15,7 @@ use anyhow::Result;
 use olsgd::config::{Algo, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
-use olsgd::runtime::Runtime;
+use olsgd::runtime::load_auto;
 
 fn main() -> Result<()> {
     let mut cfg = ExperimentConfig::default();
@@ -27,8 +27,7 @@ fn main() -> Result<()> {
     cfg.dominant_frac = 0.64; // the paper's 2000/3125
     cfg.reshuffle = false; // paper: "not shuffled during training"
 
-    let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-    let rt = runtime.load_model(&cfg.model)?;
+    let rt = load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);

@@ -13,7 +13,7 @@ use anyhow::Result;
 use olsgd::config::{Algo, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
-use olsgd::runtime::Runtime;
+use olsgd::runtime::load_auto;
 
 fn main() -> Result<()> {
     // Small-but-real workload: 8 workers, synthetic-CIFAR, the scaled CNN.
@@ -24,8 +24,7 @@ fn main() -> Result<()> {
     cfg.test_n = 500;
     cfg.tau = 2;
 
-    let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-    let rt = runtime.load_model(&cfg.model)?;
+    let rt = load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);

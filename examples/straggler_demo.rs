@@ -14,7 +14,7 @@ use anyhow::Result;
 use olsgd::config::{Algo, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
-use olsgd::runtime::Runtime;
+use olsgd::runtime::load_auto;
 use olsgd::simnet::StragglerModel;
 
 fn main() -> Result<()> {
@@ -25,8 +25,7 @@ fn main() -> Result<()> {
     cfg.train_n = 1024;
     cfg.test_n = 300;
 
-    let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-    let rt = runtime.load_model(&cfg.model)?;
+    let rt = load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);

@@ -1,0 +1,76 @@
+//! **Adaptive-τ ablation** (AdaComm, Wang & Joshi 2018 — PAPERS.md): the
+//! best error-runtime trade-off needs a τ that *varies* during training.
+//! `overlap-ada` starts at a large τ (cheap rounds early) and halves it on
+//! a loss-plateau signal, never below `tau_min`.
+//!
+//! Legs: fixed τ=1 (max communication), fixed τ=8 (max hiding), adaptive
+//! 8→1, and adaptive with heterogeneous τ under a 3x straggler. Wire set to
+//! 10 Gbps with a short compute step so τ=1 cannot fully hide the
+//! collective — the regime where the τ schedule matters.
+//!
+//! Invariants (asserted in rust/tests/hiding_claim.rs): adaptive τ is
+//! monotone non-increasing, and its bytes + blocked-comm never exceed a
+//! fixed run at τ = tau_min.
+
+use anyhow::Result;
+use olsgd::bench::experiments::{row, BenchCtx};
+use olsgd::config::Algo;
+use olsgd::simnet::StragglerModel;
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("adaptive_tau")?;
+    ctx.base.workers = 8;
+    ctx.base.net_preset = "slow10g".into();
+    ctx.base.base_step_s = 0.1;
+    ctx.base.tau_min = 1;
+    ctx.base.ada_patience = 1;
+    let epochs = ctx.base.epochs;
+    let msg_bytes = ctx.base.cluster(ctx.rt.n * 4)?.message_bytes.max(1) as u64;
+
+    println!("=== adaptive-τ ablation (m=8, 10 Gbps wire, 100 ms steps) ===");
+    println!(
+        "{:<26} {:>8} {:>10} {:>12} {:>14} {:>10}",
+        "configuration", "acc%", "comm%", "blocked(s)", "bytes(MB)", "rounds~"
+    );
+
+    let mut rows = Vec::new();
+    let legs: [(&str, Algo, usize, Option<StragglerModel>); 4] = [
+        ("overlap-m tau=1", Algo::OverlapM, 1, None),
+        ("overlap-m tau=8", Algo::OverlapM, 8, None),
+        ("overlap-ada 8->1", Algo::OverlapAda, 8, None),
+        (
+            "overlap-ada + hetero-tau",
+            Algo::OverlapAda,
+            8,
+            Some(StragglerModel::SlowNode { node: 0, factor: 3.0 }),
+        ),
+    ];
+    for (label, algo, tau, straggler) in legs {
+        let log = ctx.run_leg(&label.replace([' ', '>', '+'], "_"), |c| {
+            c.algo = algo;
+            c.tau = tau;
+            if let Some(s) = straggler.clone() {
+                c.straggler = s;
+                c.tau_hetero = true;
+            }
+        })?;
+        let rounds = log.bytes_sent / (log.workers as u64 * msg_bytes);
+        println!(
+            "{:<26} {:>8.2} {:>9.1}% {:>12.3} {:>14.1} {:>10}",
+            label,
+            100.0 * log.final_acc(),
+            100.0 * log.comm_ratio(),
+            log.total_comm_blocked_s,
+            log.bytes_sent as f64 / 1e6,
+            rounds
+        );
+        if !log.tau_trace.is_empty() {
+            let trace: Vec<String> =
+                log.tau_trace.iter().map(|&(k, t)| format!("step {k}: tau={t}")).collect();
+            println!("    tau schedule: {}", trace.join(", "));
+        }
+        rows.push(row(label, algo, tau, &log, epochs));
+    }
+    ctx.write_summary("summary.json", rows)?;
+    Ok(())
+}

@@ -11,12 +11,11 @@ use olsgd::collective::ring_allreduce_mean;
 use olsgd::compress::PowerSgd;
 use olsgd::data::{self, GenConfig, PX};
 use olsgd::model::vecmath;
-use olsgd::runtime::Runtime;
+use olsgd::runtime::load_auto;
 use olsgd::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let runtime = Runtime::new(Path::new("artifacts"))?;
-    let rt = runtime.load_model("cnn")?;
+    let rt = load_auto(Path::new("artifacts"), "cnn")?;
     let n = rt.n;
     let b = rt.train_batch;
 
@@ -30,7 +29,7 @@ fn main() -> Result<()> {
     let eval_images = ds.images[..rt.eval_batch * PX].to_vec();
     let eval_labels = ds.labels[..rt.eval_batch].to_vec();
 
-    println!("== PJRT artifact executions (model=cnn, {n} params, batch {b}) ==");
+    println!("== model-kernel executions (model={}, {n} params, batch {b}) ==", rt.name);
     bench("train_step (fwd+bwd+fused nesterov)", 2, 12, || {
         rt.train_step(&params, &mom, &images, &labels, 0.1, 0.9, 1e-4).unwrap()
     });

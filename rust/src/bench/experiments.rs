@@ -20,13 +20,12 @@ use crate::config::{Algo, ExperimentConfig};
 use crate::coordinator::run_experiment;
 use crate::data::{self, Dataset, GenConfig};
 use crate::metrics::{write_json, TrainLog};
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::runtime::{self, ModelRuntime};
 use crate::util::json::{arr, num, obj, s, Json};
 
-/// Bench-wide context: compiled model + datasets + output dir.
+/// Bench-wide context: loaded model + datasets + output dir.
 pub struct BenchCtx {
     pub rt: ModelRuntime,
-    _runtime: Runtime,
     pub base: ExperimentConfig,
     pub out: PathBuf,
     train_iid: Dataset,
@@ -53,15 +52,13 @@ impl BenchCtx {
             cfg.train_n = n.parse().unwrap_or(cfg.train_n);
         }
 
-        let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-        let rt = runtime.load_model(&cfg.model)?;
+        let rt = runtime::load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
         let gen = GenConfig::default();
         let train_iid = data::generate(cfg.seed, cfg.train_n, "train", &gen);
         let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
         let out = PathBuf::from(format!("results/{bench_name}"));
         Ok(Self {
             rt,
-            _runtime: runtime,
             train_cache_seed: cfg.seed,
             base: cfg,
             out,

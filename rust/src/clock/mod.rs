@@ -50,6 +50,17 @@ impl Clocks {
         self.workers.iter().map(|w| w.now).fold(0.0, f64::max)
     }
 
+    /// Earliest worker time.
+    pub fn min_now(&self) -> f64 {
+        self.workers.iter().map(|w| w.now).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Spread between the fastest and slowest worker — the straggler lag
+    /// the E9 scenarios quantify (0 right after a barrier).
+    pub fn lag(&self) -> f64 {
+        self.max_now() - self.min_now()
+    }
+
     pub fn worker(&self, w: usize) -> &WorkerClock {
         &self.workers[w]
     }
@@ -157,6 +168,19 @@ mod tests {
         c.wait_comm_until(0, 7.5);
         assert_eq!(c.now(0), 7.5);
         assert_eq!(c.worker(0).comm_blocked_s, 2.5);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn lag_tracks_spread_and_barrier_zeroes_it() {
+        let mut c = Clocks::new(3);
+        c.compute(0, 1.0);
+        c.compute(1, 4.0);
+        c.compute(2, 2.5);
+        assert_eq!(c.min_now(), 1.0);
+        assert_eq!(c.lag(), 3.0);
+        c.barrier();
+        assert_eq!(c.lag(), 0.0);
         c.check_invariants();
     }
 

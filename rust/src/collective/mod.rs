@@ -108,6 +108,17 @@ impl NonBlockingAllReduce {
     pub fn ready_at(&self) -> f64 {
         self.start_time + self.duration
     }
+
+    /// Absorb the collective on the virtual timeline: every worker
+    /// independently waits (blocked-on-comm) until the result is ready —
+    /// a no-op for workers whose clock is already past `ready_at()`, which
+    /// is exactly the paper's "communication hidden behind τ local steps".
+    pub fn absorb(&self, clocks: &mut crate::clock::Clocks) {
+        let t = self.ready_at();
+        for w in 0..clocks.len() {
+            clocks.wait_comm_until(w, t);
+        }
+    }
 }
 
 /// Launch a (virtually) non-blocking mean all-reduce of the workers'
@@ -218,6 +229,23 @@ mod tests {
         assert_close(&h.result, &vec![2.0f32; 10], 1e-6, 0.0);
         assert!(h.duration > 0.0);
         assert_eq!(h.ready_at(), 100.0 + h.duration);
+    }
+
+    #[test]
+    fn absorb_blocks_only_workers_behind_the_wire() {
+        use crate::clock::Clocks;
+        let net = NetworkModel::paper_40gbps();
+        let a = vec![1.0f32; 8];
+        let b = vec![3.0f32; 8];
+        let h = start_allreduce(&[&a, &b], &net, 1 << 20, 10.0);
+        let mut clocks = Clocks::new(2);
+        clocks.compute(0, 10.0 + h.duration + 5.0); // already past ready_at
+        clocks.compute(1, 10.0); // must wait the full wire duration
+        h.absorb(&mut clocks);
+        assert_eq!(clocks.worker(0).comm_blocked_s, 0.0);
+        assert!((clocks.worker(1).comm_blocked_s - h.duration).abs() < 1e-12);
+        assert_eq!(clocks.now(1), h.ready_at());
+        clocks.check_invariants();
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub enum Algo {
     Local,
     Overlap,
     OverlapM,
+    /// Overlap-m with the AdaComm-style adaptive-τ controller.
+    OverlapAda,
     Easgd,
     Eamsgd,
     Cocod,
@@ -32,12 +34,13 @@ impl Algo {
             "local" => Algo::Local,
             "overlap" => Algo::Overlap,
             "overlap-m" | "overlap_m" | "overlapm" => Algo::OverlapM,
+            "overlap-ada" | "overlap_ada" | "overlapada" => Algo::OverlapAda,
             "easgd" => Algo::Easgd,
             "eamsgd" => Algo::Eamsgd,
             "cocod" => Algo::Cocod,
             "powersgd" => Algo::PowerSgd,
             _ => bail!(
-                "unknown algorithm '{s}' (want sync|local|overlap|overlap-m|easgd|eamsgd|cocod|powersgd)"
+                "unknown algorithm '{s}' (want sync|local|overlap|overlap-m|overlap-ada|easgd|eamsgd|cocod|powersgd)"
             ),
         })
     }
@@ -48,6 +51,7 @@ impl Algo {
             Algo::Local => "local",
             Algo::Overlap => "overlap",
             Algo::OverlapM => "overlap-m",
+            Algo::OverlapAda => "overlap-ada",
             Algo::Easgd => "easgd",
             Algo::Eamsgd => "eamsgd",
             Algo::Cocod => "cocod",
@@ -61,6 +65,7 @@ impl Algo {
             Algo::Local,
             Algo::Overlap,
             Algo::OverlapM,
+            Algo::OverlapAda,
             Algo::Easgd,
             Algo::Eamsgd,
             Algo::Cocod,
@@ -85,6 +90,15 @@ pub struct ExperimentConfig {
     // optimizer
     pub base_lr: f32,
     pub tau: usize,
+    /// adaptive-τ floor (overlap-ada never shrinks τ below this)
+    pub tau_min: usize,
+    /// per-worker heterogeneous τ: stragglers run fewer local steps per
+    /// round so every worker hits the boundary at ≈ the same virtual time
+    pub tau_hetero: bool,
+    /// adaptive-τ: rounds without relative improvement before τ halves
+    pub ada_patience: usize,
+    /// adaptive-τ: relative round-loss improvement that counts as progress
+    pub ada_threshold: f64,
     pub alpha: f32,
     pub beta: f32,
     pub mu: f32,
@@ -128,6 +142,10 @@ impl Default for ExperimentConfig {
             // has no normalization layers, so 0.05 is its stable analogue
             base_lr: 0.05,
             tau: 2,
+            tau_min: 1,
+            tau_hetero: false,
+            ada_patience: 2,
+            ada_threshold: 0.02,
             alpha: 0.6,
             beta: 0.7,
             mu: 0.9,
@@ -172,6 +190,10 @@ impl ExperimentConfig {
             "eval_every" => self.eval_every = parse_f64()?,
             "base_lr" | "lr" => self.base_lr = parse_f64()? as f32,
             "tau" => self.tau = parse_usize()?,
+            "tau_min" => self.tau_min = parse_usize()?,
+            "tau_hetero" | "hetero_tau" => self.tau_hetero = parse_bool()?,
+            "ada_patience" => self.ada_patience = parse_usize()?,
+            "ada_threshold" => self.ada_threshold = parse_f64()?,
             "alpha" => self.alpha = parse_f64()? as f32,
             "beta" => self.beta = parse_f64()? as f32,
             "mu" | "momentum" => self.mu = parse_f64()? as f32,
@@ -304,6 +326,28 @@ mod tests {
         for a in Algo::all() {
             assert_eq!(Algo::parse(a.name()).unwrap(), *a);
         }
+        assert_eq!(Algo::all().len(), 9);
+    }
+
+    #[test]
+    fn adaptive_and_hetero_keys_parse() {
+        let mut c = ExperimentConfig::default();
+        c.set("algo", "overlap-ada").unwrap();
+        c.set("tau", "16").unwrap();
+        c.set("tau_min", "2").unwrap();
+        c.set("tau_hetero", "true").unwrap();
+        c.set("ada_patience", "3").unwrap();
+        c.set("ada_threshold", "0.05").unwrap();
+        assert_eq!(c.algo, Algo::OverlapAda);
+        assert_eq!(c.tau_min, 2);
+        assert!(c.tau_hetero);
+        assert_eq!(c.ada_patience, 3);
+        assert!((c.ada_threshold - 0.05).abs() < 1e-12);
+        // defaults stay benign for every other algorithm
+        let d = ExperimentConfig::default();
+        assert_eq!(d.tau_min, 1);
+        assert!(!d.tau_hetero);
+        assert!(c.set("ada_threshold", "much").is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! CoCoD-SGD baseline (Shen et al., IJCAI 2019 [20]).
+//! CoCoD-SGD baseline (Shen et al., IJCAI 2019 [20]) as an engine strategy.
 //!
 //! The other communication/computation-decoupled Local SGD variant the
 //! paper compares against. Per round:
@@ -13,64 +13,64 @@
 //! overlap benefit as Overlap-Local-SGD (and the same timing model here),
 //! but no pullback contraction — which is why it diverges for large τ in
 //! the non-IID setting (Table 2) while Overlap-Local-SGD does not.
+//!
+//! On the engine, the launch is the `before_local` hook (the collective
+//! runs under the round's compute) and the absorb is the mixing decision.
 
 use anyhow::Result;
 
-use super::{Recorder, TrainContext, Workers};
-use crate::clock::Clocks;
+use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
+use super::TrainContext;
 use crate::collective::{start_allreduce, NonBlockingAllReduce};
-use crate::metrics::TrainLog;
 
-pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
-    let m = ctx.cfg.workers;
-    let tau = ctx.cfg.tau.max(1);
-    let mut workers = Workers::new(ctx);
-    let mut clocks = Clocks::new(m);
-    let mut rec = Recorder::new(ctx);
-    let total = ctx.total_steps();
+/// Delta-on-stale-average mixing with a non-blocking collective.
+#[derive(Default)]
+pub struct CocodStrategy {
+    /// each worker's model snapshot at the launch boundary (for the delta
+    /// the round accumulates on top of the stale average)
+    snapshots: Vec<Vec<f32>>,
+    pending: Option<NonBlockingAllReduce>,
+}
 
-    // Round-r bookkeeping: each worker's model snapshot at the boundary
-    // (for the delta the round accumulates on top of the stale average).
-    let mut snapshots: Vec<Vec<f32>> = workers.params.clone();
+impl CocodStrategy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
-    let mut k = 0;
-    while k < total {
+impl MixingStrategy for CocodStrategy {
+    fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan {
+        plan_tau(eng, ctx, ctx.cfg.tau)
+    }
+
+    fn before_local(&mut self, eng: &mut Engine, ctx: &TrainContext) -> Result<()> {
         // Launch the all-reduce of the boundary models; it runs under the
         // round's compute.
-        let pending: NonBlockingAllReduce = {
-            let refs: Vec<&[f32]> = workers.params.iter().map(|p| p.as_slice()).collect();
-            let start = (0..m).map(|w| clocks.now(w)).fold(0.0, f64::max);
-            rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
-            snapshots.clone_from(&workers.params);
-            start_allreduce(&refs, &ctx.cluster.net, ctx.cluster.message_bytes, start)
-        };
-
-        // τ local steps per worker.
-        let steps = tau.min(total - k);
-        let mut loss_sum = 0.0;
-        let mut loss_n = 0;
-        for w in 0..m {
-            for s in 0..steps {
-                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
-                loss_n += 1;
-            }
-        }
-        k += steps;
-
-        // Absorb: x_i = avg(boundary models) + (x_i - snapshot_i).
-        let h = pending;
-        for w in 0..m {
-            clocks.wait_comm_until(w, h.ready_at());
-            let p = &mut workers.params[w];
-            let snap = &snapshots[w];
-            for i in 0..p.len() {
-                p[i] = h.result[i] + (p[i] - snap[i]);
-            }
-        }
-
-        rec.push_loss(k - 1, loss_sum / loss_n as f64);
-        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+        let m = eng.workers.m;
+        let start = eng.clocks.max_now();
+        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        self.snapshots.clone_from(&eng.workers.params);
+        let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
+        self.pending = Some(start_allreduce(
+            &refs,
+            &ctx.cluster.net,
+            ctx.cluster.message_bytes,
+            start,
+        ));
+        Ok(())
     }
-    rec.force_eval(total, ctx, &workers, &clocks)?;
-    Ok(rec.finish(ctx, &clocks, total))
+
+    fn mix(&mut self, eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
+        // Absorb: x_i = avg(boundary models) + (x_i - snapshot_i).
+        let h = self.pending.take().expect("cocod launch precedes absorb");
+        h.absorb(&mut eng.clocks);
+        for w in 0..eng.workers.m {
+            let p = &mut eng.workers.params[w];
+            let snap = &self.snapshots[w];
+            for (i, pi) in p.iter_mut().enumerate() {
+                *pi = h.result[i] + (*pi - snap[i]);
+            }
+        }
+        Ok(())
+    }
 }

@@ -1,4 +1,5 @@
-//! EASGD / EAMSGD baseline (Zhang, Choromanska, LeCun 2015 [19]).
+//! EASGD / EAMSGD baseline (Zhang, Choromanska, LeCun 2015 [19]) as an
+//! engine strategy.
 //!
 //! The ancestor of the paper's pullback idea: local models and a center
 //! variable z exchange *symmetrically* every τ steps,
@@ -20,29 +21,60 @@
 
 use anyhow::Result;
 
-use super::{Recorder, TrainContext, Workers};
-use crate::clock::Clocks;
+use super::engine::{self, plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
+use super::TrainContext;
 use crate::metrics::TrainLog;
 use crate::model::vecmath;
 
+/// Blocking symmetric elastic exchange every τ steps.
+pub struct ElasticStrategy {
+    comm_t: f64,
+    /// center variable, same init as the replicas
+    z: Vec<f32>,
+}
+
+impl ElasticStrategy {
+    pub fn new(ctx: &TrainContext) -> Self {
+        Self { comm_t: ctx.cluster.allreduce_time(), z: Vec::new() }
+    }
+}
+
+impl MixingStrategy for ElasticStrategy {
+    fn on_run_start(&mut self, eng: &mut Engine, _ctx: &TrainContext) -> Result<()> {
+        self.z = eng.workers.params[0].clone();
+        Ok(())
+    }
+
+    fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan {
+        plan_tau(eng, ctx, ctx.cfg.tau)
+    }
+
+    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
+        let m = eng.workers.m;
+        let alpha = ctx.cfg.alpha;
+        // Blocking elastic exchange.
+        eng.clocks.barrier();
+        for w in 0..m {
+            eng.clocks.comm_blocked(w, self.comm_t);
+        }
+        let avg = eng.workers.mean_params();
+        // Simultaneous symmetric update (pre-update values on both sides).
+        for w in 0..m {
+            vecmath::pullback_inplace(&mut eng.workers.params[w], &self.z, alpha);
+        }
+        vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut self.z);
+        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        Ok(())
+    }
+}
+
+/// Run EASGD (`mu = 0`) or EAMSGD (`mu > 0`). The local momentum is the only
+/// difference from the surrounding algorithms; a scoped config clone keeps
+/// `Workers::local_step` uniform.
 pub fn run(ctx: &TrainContext, mu: f32) -> Result<TrainLog> {
-    let m = ctx.cfg.workers;
-    let tau = ctx.cfg.tau.max(1);
-    let alpha = ctx.cfg.alpha;
-    let mut workers = Workers::new(ctx);
-    let mut clocks = Clocks::new(m);
-    let mut rec = Recorder::new(ctx);
-    let total = ctx.total_steps();
-    let comm_t = ctx.cluster.allreduce_time();
-
-    // Center variable, same init as the replicas.
-    let mut z = workers.params[0].clone();
-
-    // EASGD/EAMSGD differ from the surrounding algorithms only in mu; a
-    // scoped config clone keeps Workers::local_step uniform.
     let mut cfg = ctx.cfg.clone();
     cfg.mu = mu;
-    let ctx = TrainContext {
+    let scoped = TrainContext {
         rt: ctx.rt,
         cfg: &cfg,
         cluster: ctx.cluster.clone(),
@@ -51,37 +83,6 @@ pub fn run(ctx: &TrainContext, mu: f32) -> Result<TrainLog> {
         test: ctx.test,
         shards: ctx.shards.clone(),
     };
-    let ctx = &ctx;
-
-    let mut k = 0;
-    while k < total {
-        let steps = tau.min(total - k);
-        let mut loss_sum = 0.0;
-        let mut loss_n = 0;
-        for w in 0..m {
-            for s in 0..steps {
-                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
-                loss_n += 1;
-            }
-        }
-        k += steps;
-
-        // Blocking elastic exchange.
-        clocks.barrier();
-        for w in 0..m {
-            clocks.comm_blocked(w, comm_t);
-        }
-        let avg = workers.mean_params();
-        // Simultaneous symmetric update (pre-update values on both sides).
-        for w in 0..m {
-            vecmath::pullback_inplace(&mut workers.params[w], &z, alpha);
-        }
-        vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut z);
-        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
-
-        rec.push_loss(k - 1, loss_sum / loss_n as f64);
-        rec.maybe_eval(k, ctx, &workers, &clocks)?;
-    }
-    rec.force_eval(total, ctx, &workers, &clocks)?;
-    Ok(rec.finish(ctx, &clocks, total))
+    let mut strategy = ElasticStrategy::new(&scoped);
+    engine::run(&scoped, &mut strategy)
 }

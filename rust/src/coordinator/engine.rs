@@ -1,0 +1,226 @@
+//! Discrete-event round engine — the shared schedule machinery every
+//! algorithm plugs into.
+//!
+//! The paper's whole contribution is a *schedule*: how τ local steps, the
+//! collective, and the mixing step interleave on the virtual timeline. The
+//! engine owns everything the schedules share — the per-worker event
+//! timeline (local steps → mixing decision → eval cadence), the `Clocks`,
+//! the `Recorder`, loss aggregation, and the global step counter — and
+//! delegates only the *mixing decision* to a [`MixingStrategy`] (one impl
+//! per algorithm, matching the mixing-matrix framing of Eq. 8; see the
+//! driver table in `mod.rs` / DESIGN.md §4).
+//!
+//! One round on the engine's timeline:
+//!
+//! ```text
+//!   before_local   (CoCoD launches its non-blocking collective here)
+//!   plan           (steps per worker: uniform τ, adaptive τ, or hetero-τ)
+//!   local phase    (fused optimizer steps, or one gradient for sync-family)
+//!   mix            (absorb pending collective / barrier+all-reduce / pullback)
+//!   record         (round loss, eval cadence)
+//! ```
+//!
+//! Two scenario axes the old per-driver lockstep loops could not express
+//! live here as *plans*:
+//!
+//! * **adaptive τ** (AdaComm, Wang & Joshi 2018): start with a large τ and
+//!   shrink it on a loss-plateau signal — see `overlap.rs::AdaptiveTau`,
+//!   exposed as `--algo overlap-ada`;
+//! * **heterogeneous τ** (paper §straggler mitigation): [`hetero_plan`]
+//!   scales each worker's per-round step count by its *observed* step rate,
+//!   so a straggler runs fewer local steps and every worker reaches the
+//!   round boundary at ≈ the same virtual time (E9).
+
+use anyhow::Result;
+
+use super::{Recorder, TrainContext, Workers};
+use crate::clock::Clocks;
+use crate::metrics::TrainLog;
+
+/// Virtual cost of one fused elementwise pass over the paper-size model
+/// (44.7 MB / ~500 GB/s HBM ≈ 0.1 ms) — negligible but accounted. Charged
+/// for the pullback/anchor math at round boundaries.
+pub const PULLBACK_S: f64 = 1e-4;
+
+/// How the engine drives workers during a round's local phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalPhase {
+    /// τ fused optimizer steps per worker (the Local-SGD family).
+    FusedSteps,
+    /// One gradient computation per worker, no local update — the strategy
+    /// applies the averaged update itself (sync / PowerSGD family).
+    GradOnly,
+}
+
+/// Per-round work assignment produced by a strategy's `plan`.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    /// Local steps for each worker this round.
+    pub steps: Vec<usize>,
+    /// How far the global step counter advances (the nominal τ, capped by
+    /// the steps remaining; `steps[w] <= advance` for every worker).
+    pub advance: usize,
+}
+
+/// What the local phase produced, handed to the mixing decision.
+pub struct RoundOutcome {
+    /// Global step index at the round start.
+    pub start_step: usize,
+    /// Steps actually taken per worker.
+    pub steps: Vec<usize>,
+    /// Per-worker raw gradients (`GradOnly` phase only, in worker order).
+    pub grads: Vec<Vec<f32>>,
+    /// Mean mini-batch loss over all local steps of the round.
+    pub mean_loss: f64,
+}
+
+/// Engine-owned mutable run state: replicas, clocks, recorder, counters.
+/// Strategies receive `&mut Engine` and touch exactly these — no driver
+/// keeps private copies of the shared infrastructure.
+pub struct Engine {
+    pub workers: Workers,
+    pub clocks: Clocks,
+    pub rec: Recorder,
+    /// Global step counter (completed steps of the nominal schedule).
+    pub k: usize,
+    /// Total global steps in the run.
+    pub total: usize,
+    /// Completed rounds.
+    pub round: usize,
+    /// Per-worker completed local steps (diverges from `k` under hetero-τ).
+    pub steps_done: Vec<usize>,
+}
+
+impl Engine {
+    pub fn new(ctx: &TrainContext) -> Self {
+        let workers = Workers::new(ctx);
+        let m = workers.m;
+        Self {
+            workers,
+            clocks: Clocks::new(m),
+            rec: Recorder::new(ctx),
+            k: 0,
+            total: ctx.total_steps(),
+            round: 0,
+            steps_done: vec![0; m],
+        }
+    }
+
+    /// Steps remaining on the nominal schedule.
+    pub fn remaining(&self) -> usize {
+        self.total - self.k
+    }
+}
+
+/// The mixing decision — the only thing that differs between algorithms
+/// (the mixing matrix W_k of Eq. 8, plus *when* the wire is used).
+pub trait MixingStrategy {
+    /// What the local phase computes. Defaults to fused local steps.
+    fn phase(&self) -> LocalPhase {
+        LocalPhase::FusedSteps
+    }
+
+    /// Called once before the first round (anchor/center initialization).
+    fn on_run_start(&mut self, _eng: &mut Engine, _ctx: &TrainContext) -> Result<()> {
+        Ok(())
+    }
+
+    /// Steps per worker for the coming round.
+    fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan;
+
+    /// Hook before the local phase (CoCoD launches its collective here).
+    fn before_local(&mut self, _eng: &mut Engine, _ctx: &TrainContext) -> Result<()> {
+        Ok(())
+    }
+
+    /// The mixing decision at the round boundary.
+    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, out: RoundOutcome) -> Result<()>;
+}
+
+/// Uniform plan: every worker runs `tau` steps (capped by the remaining
+/// schedule) — the classic lockstep round.
+pub fn uniform_plan(eng: &Engine, tau: usize) -> RoundPlan {
+    let steps = tau.max(1).min(eng.remaining());
+    RoundPlan { steps: vec![steps; eng.workers.m], advance: steps }
+}
+
+/// Straggler-aware heterogeneous plan (paper §straggler mitigation, E9):
+/// scale each worker's step count by its observed per-step compute rate so
+/// all workers reach the round boundary at ≈ the same virtual time. Falls
+/// back to the uniform plan until every worker has been measured (round 1).
+pub fn hetero_plan(eng: &Engine, tau: usize) -> RoundPlan {
+    let advance = tau.max(1).min(eng.remaining());
+    let m = eng.workers.m;
+    let mut rates = Vec::with_capacity(m);
+    for w in 0..m {
+        let done = eng.steps_done[w];
+        if done == 0 {
+            return uniform_plan(eng, tau);
+        }
+        rates.push(eng.clocks.worker(w).compute_s / done as f64);
+    }
+    let fastest = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    let steps = rates
+        .iter()
+        .map(|&r| ((advance as f64 * fastest / r).round() as usize).clamp(1, advance))
+        .collect();
+    RoundPlan { steps, advance }
+}
+
+/// The τ-family plan honoring the config's `tau_hetero` switch.
+pub fn plan_tau(eng: &Engine, ctx: &TrainContext, tau: usize) -> RoundPlan {
+    if ctx.cfg.tau_hetero {
+        hetero_plan(eng, tau)
+    } else {
+        uniform_plan(eng, tau)
+    }
+}
+
+/// Drive `strategy` to completion: the one round loop every algorithm
+/// shares. Local-step order is worker-major (worker 0's whole burst, then
+/// worker 1's, ...) — the straggler RNG draw order every driver used, kept
+/// so the refactor is bit-identical to the lockstep loops (golden tests).
+pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<TrainLog> {
+    let mut eng = Engine::new(ctx);
+    strategy.on_run_start(&mut eng, ctx)?;
+    while eng.k < eng.total {
+        strategy.before_local(&mut eng, ctx)?;
+        let plan = strategy.plan(&eng, ctx);
+        debug_assert_eq!(plan.steps.len(), eng.workers.m, "plan must cover all workers");
+        let start_step = eng.k;
+        let mut grads = Vec::new();
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0usize;
+        match strategy.phase() {
+            LocalPhase::FusedSteps => {
+                for w in 0..eng.workers.m {
+                    for s in 0..plan.steps[w] {
+                        loss_sum +=
+                            eng.workers.local_step(w, ctx, &mut eng.clocks, start_step + s)?;
+                        loss_n += 1;
+                    }
+                    eng.steps_done[w] += plan.steps[w];
+                }
+            }
+            LocalPhase::GradOnly => {
+                debug_assert_eq!(plan.advance, 1, "grad-mode rounds are single-step");
+                for w in 0..eng.workers.m {
+                    let (loss, g) = eng.workers.local_grad(w, ctx, &mut eng.clocks)?;
+                    loss_sum += loss;
+                    loss_n += 1;
+                    grads.push(g);
+                    eng.steps_done[w] += 1;
+                }
+            }
+        }
+        eng.k = start_step + plan.advance;
+        eng.round += 1;
+        let mean_loss = loss_sum / loss_n.max(1) as f64;
+        let outcome = RoundOutcome { start_step, steps: plan.steps, grads, mean_loss };
+        strategy.mix(&mut eng, ctx, outcome)?;
+        eng.rec.push_loss(eng.k - 1, mean_loss);
+        eng.rec.maybe_eval(eng.k, ctx, &eng.workers, &eng.clocks)?;
+    }
+    eng.rec.force_eval(eng.total, ctx, &eng.workers, &eng.clocks)?;
+    Ok(eng.rec.finish(ctx, &eng.clocks, eng.total))
+}

@@ -1,50 +1,43 @@
-//! Local SGD (periodic averaging) — the paper's starting point.
+//! Local SGD (periodic averaging) — the paper's starting point — as an
+//! engine strategy.
 //!
 //! Each worker takes τ local steps, then a *blocking* all-reduce replaces
 //! every replica with the average (momentum buffers stay local, the
 //! standard recipe). Communication cost is amortized by τ but still sits
-//! on the critical path — exactly the trade-off Fig. 1 plots.
+//! on the critical path — exactly the trade-off Fig. 1 plots. Under
+//! `tau_hetero` a straggler runs fewer local steps per round (E9).
 
 use anyhow::Result;
 
-use super::{Recorder, TrainContext, Workers};
-use crate::clock::Clocks;
+use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
+use super::TrainContext;
 use crate::collective::ring_allreduce_mean;
-use crate::metrics::TrainLog;
 
-pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
-    let m = ctx.cfg.workers;
-    let tau = ctx.cfg.tau.max(1);
-    let mut workers = Workers::new(ctx);
-    let mut clocks = Clocks::new(m);
-    let mut rec = Recorder::new(ctx);
-    let total = ctx.total_steps();
-    let comm_t = ctx.cluster.allreduce_time();
+/// Blocking parameter averaging every τ steps.
+pub struct LocalAvgStrategy {
+    comm_t: f64,
+}
 
-    let mut k = 0;
-    while k < total {
-        let steps = tau.min(total - k);
-        let mut loss_sum = 0.0;
-        let mut loss_n = 0;
-        for w in 0..m {
-            for s in 0..steps {
-                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
-                loss_n += 1;
-            }
-        }
-        k += steps;
-
-        // Blocking param averaging.
-        clocks.barrier();
-        for w in 0..m {
-            clocks.comm_blocked(w, comm_t);
-        }
-        ring_allreduce_mean(&mut workers.params);
-        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
-
-        rec.push_loss(k - 1, loss_sum / loss_n as f64);
-        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+impl LocalAvgStrategy {
+    pub fn new(ctx: &TrainContext) -> Self {
+        Self { comm_t: ctx.cluster.allreduce_time() }
     }
-    rec.force_eval(total, ctx, &workers, &clocks)?;
-    Ok(rec.finish(ctx, &clocks, total))
+}
+
+impl MixingStrategy for LocalAvgStrategy {
+    fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan {
+        plan_tau(eng, ctx, ctx.cfg.tau)
+    }
+
+    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
+        let m = eng.workers.m;
+        // Blocking param averaging.
+        eng.clocks.barrier();
+        for w in 0..m {
+            eng.clocks.comm_blocked(w, self.comm_t);
+        }
+        ring_allreduce_mean(&mut eng.workers.params);
+        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        Ok(())
+    }
 }

@@ -1,30 +1,37 @@
 //! Layer-3 coordinator — the paper's system contribution.
 //!
-//! One driver per algorithm (see DESIGN.md §4); all share this module's
-//! infrastructure: per-worker replicas + batchers, the virtual cluster
-//! clock, loss/eval recording, and byte accounting. Numerics run for real
-//! through the PJRT artifacts; time comes from the simnet (see simnet/ for
-//! why that split reproduces the paper's observables).
+//! All scheduling runs on one **discrete-event round engine** (`engine.rs`):
+//! the engine owns the per-worker event timeline, the virtual cluster clock,
+//! loss/eval recording, and byte accounting, and delegates only the *mixing
+//! decision* to a `MixingStrategy` — one small impl per algorithm (see
+//! DESIGN.md §4). Numerics run for real through the model runtime (PJRT
+//! artifacts or the native backend); time comes from the simnet (see simnet/
+//! for why that split reproduces the paper's observables).
 //!
 //! The algorithms differ ONLY in their mixing schedule — exactly the
 //! paper's framing (the mixing matrix W_k of Eq. 8):
 //!
-//! | driver    | schedule                                                  |
-//! |-----------|-----------------------------------------------------------|
-//! | sync      | all-reduce grads every step, blocking                     |
-//! | powersgd  | sync with rank-r compressed grads + error feedback        |
-//! | local     | all-reduce params every τ steps, blocking                 |
-//! | overlap   | pullback to stale anchor, NON-blocking all-reduce (Eq. 3-5)|
-//! | overlap-m | + anchor momentum (Eq. 10-11) — the headline algorithm    |
-//! | easgd     | symmetric elastic x↔z exchange, blocking                  |
-//! | eamsgd    | easgd + local Nesterov momentum                           |
-//! | cocod     | local delta applied onto a τ-stale average, overlapped    |
+//! | strategy    | schedule                                                  |
+//! |-------------|-----------------------------------------------------------|
+//! | sync        | all-reduce grads every step, blocking                     |
+//! | powersgd    | sync with rank-r compressed grads + error feedback        |
+//! | local       | all-reduce params every τ steps, blocking                 |
+//! | overlap     | pullback to stale anchor, NON-blocking all-reduce (Eq. 3-5)|
+//! | overlap-m   | + anchor momentum (Eq. 10-11) — the headline algorithm    |
+//! | overlap-ada | overlap-m with AdaComm-style adaptive τ (plateau-shrink)  |
+//! | easgd       | symmetric elastic x↔z exchange, blocking                  |
+//! | eamsgd      | easgd + local Nesterov momentum                           |
+//! | cocod       | local delta applied onto a τ-stale average, overlapped    |
+//!
+//! Every τ-family strategy additionally supports per-worker heterogeneous τ
+//! (`tau_hetero`): see `engine::hetero_plan` (paper §straggler mitigation).
 
-mod cocod;
-mod elastic;
-mod local;
-mod overlap;
-mod sync;
+pub mod cocod;
+pub mod elastic;
+pub mod engine;
+pub mod local;
+pub mod overlap;
+pub mod sync;
 
 use anyhow::Result;
 
@@ -182,6 +189,7 @@ pub struct Recorder {
     bytes_sent: u64,
     next_eval_step: usize,
     eval_stride: usize,
+    tau_trace: Vec<(usize, usize)>,
 }
 
 impl Recorder {
@@ -196,6 +204,7 @@ impl Recorder {
             bytes_sent: 0,
             next_eval_step: stride,
             eval_stride: stride,
+            tau_trace: Vec::new(),
         }
     }
 
@@ -208,6 +217,11 @@ impl Recorder {
 
     pub fn add_bytes(&mut self, b: u64) {
         self.bytes_sent += b;
+    }
+
+    /// Record a (global step, τ) point of an adaptive-τ controller.
+    pub fn note_tau(&mut self, step: usize, tau: usize) {
+        self.tau_trace.push((step, tau));
     }
 
     /// Called after every global step; runs the (virtually free) test-set
@@ -265,6 +279,7 @@ impl Recorder {
             workers: ctx.cfg.workers,
             records: self.records,
             step_losses: self.step_losses,
+            tau_trace: self.tau_trace,
             total_sim_time: clocks.max_now(),
             total_compute_s: clocks.total_compute(),
             total_comm_blocked_s: clocks.total_comm_blocked(),
@@ -275,17 +290,23 @@ impl Recorder {
     }
 }
 
-/// Run the configured algorithm to completion.
+/// Run the configured algorithm to completion: pick its mixing strategy and
+/// hand it to the round engine (no driver keeps a private round loop).
 pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
     match ctx.cfg.algo {
-        Algo::Sync => sync::run_sync(ctx),
-        Algo::PowerSgd => sync::run_powersgd(ctx),
-        Algo::Local => local::run(ctx),
-        Algo::Overlap => overlap::run(ctx, 0.0),
-        Algo::OverlapM => overlap::run(ctx, ctx.cfg.beta),
+        Algo::Sync => engine::run(ctx, &mut sync::SyncStrategy::new(ctx)),
+        Algo::PowerSgd => engine::run(ctx, &mut sync::PowerSgdStrategy::new(ctx)),
+        Algo::Local => engine::run(ctx, &mut local::LocalAvgStrategy::new(ctx)),
+        Algo::Overlap => engine::run(ctx, &mut overlap::OverlapStrategy::new(ctx, 0.0, false)),
+        Algo::OverlapM => {
+            engine::run(ctx, &mut overlap::OverlapStrategy::new(ctx, ctx.cfg.beta, false))
+        }
+        Algo::OverlapAda => {
+            engine::run(ctx, &mut overlap::OverlapStrategy::new(ctx, ctx.cfg.beta, true))
+        }
         Algo::Easgd => elastic::run(ctx, 0.0),
         Algo::Eamsgd => elastic::run(ctx, ctx.cfg.mu),
-        Algo::Cocod => cocod::run(ctx),
+        Algo::Cocod => engine::run(ctx, &mut cocod::CocodStrategy::new()),
     }
 }
 

@@ -1,7 +1,9 @@
-//! **Overlap-Local-SGD** — the paper's contribution (Eqs. 3–5, 10–11).
+//! **Overlap-Local-SGD** — the paper's contribution (Eqs. 3–5, 10–11) — as
+//! an engine strategy, plus the AdaComm-style adaptive-τ controller.
 //!
 //! Each node keeps a local model x_i and an *anchor* z (a stale synchronized
-//! average, identical on every node). The round-r boundary does, in order:
+//! average, identical on every node). The round-r mixing decision does, in
+//! order:
 //!
 //! 1. *absorb* the all-reduce launched at boundary r-1 (waiting only if it
 //!    hasn't finished — with τ large enough it has, and the wait is zero:
@@ -15,85 +17,151 @@
 //! There is **no barrier anywhere**: a straggler delays only the moment the
 //! *collective* completes (it is the last to contribute), never the other
 //! workers' compute — the paper's straggler-mitigation claim, which E9
-//! measures.
+//! measures. Heterogeneous τ (`tau_hetero`) tightens this further by giving
+//! the straggler a shorter local burst.
 //!
-//! The pullback and anchor updates run through the AOT Pallas artifacts
+//! The pullback and anchor updates run through the runtime's fused kernels
 //! (Layer 1 on the hot path); their virtual-time cost is charged at HBM
 //! bandwidth (they are single-pass elementwise kernels).
+//!
+//! **Adaptive τ** (`--algo overlap-ada`, AdaComm: Wang & Joshi 2018): the
+//! best error-runtime trade-off needs a τ that *varies* during training —
+//! large early (cheap, fast progress per wall-second), small late (tight
+//! consensus). The controller starts at the configured τ and halves it,
+//! down to `tau_min`, whenever the round-mean loss has not improved by
+//! `ada_threshold` (relative) for `ada_patience` consecutive rounds. τ is
+//! monotone non-increasing, so total communication (rounds, hence bytes and
+//! potential blocking) never exceeds a fixed run at τ = `tau_min`.
 
 use anyhow::Result;
 
-use super::{Recorder, TrainContext, Workers};
-use crate::clock::Clocks;
+use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
+use super::TrainContext;
 use crate::collective::{start_allreduce, NonBlockingAllReduce};
-use crate::metrics::TrainLog;
 
-/// Virtual cost of one fused elementwise pass over the paper-size model
-/// (44.7 MB / ~500 GB/s HBM ≈ 0.1 ms) — negligible but accounted.
-const PULLBACK_S: f64 = 1e-4;
+/// Loss-plateau τ controller (AdaComm-style, shrink-only).
+#[derive(Clone, Debug)]
+pub struct AdaptiveTau {
+    tau_min: usize,
+    patience: usize,
+    threshold: f64,
+    best: f64,
+    stall: usize,
+}
 
-pub fn run(ctx: &TrainContext, beta: f32) -> Result<TrainLog> {
-    let m = ctx.cfg.workers;
-    let tau = ctx.cfg.tau.max(1);
-    let alpha = ctx.cfg.alpha;
-    let mut workers = Workers::new(ctx);
-    let mut clocks = Clocks::new(m);
-    let mut rec = Recorder::new(ctx);
-    let total = ctx.total_steps();
+impl AdaptiveTau {
+    pub fn new(ctx: &TrainContext) -> Self {
+        Self {
+            tau_min: ctx.cfg.tau_min.max(1),
+            patience: ctx.cfg.ada_patience.max(1),
+            threshold: ctx.cfg.ada_threshold,
+            best: f64::INFINITY,
+            stall: 0,
+        }
+    }
 
-    // Anchor state: z starts at the common init (paper: x_0^(i) = z_0);
-    // v is the anchor momentum buffer (Eq. 10), zero-initialized.
-    let mut z = workers.params[0].clone();
-    let mut v = vec![0.0f32; ctx.rt.n];
-    let mut pending: Option<NonBlockingAllReduce> = None;
-
-    let mut k = 0;
-    while k < total {
-        // --- τ local steps per worker, fully asynchronous ----------------
-        let steps = tau.min(total - k);
-        let mut loss_sum = 0.0;
-        let mut loss_n = 0;
-        for w in 0..m {
-            for s in 0..steps {
-                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
-                loss_n += 1;
+    /// Feed one round-mean loss; returns the τ for the next round.
+    pub fn observe(&mut self, loss: f64, tau: usize) -> usize {
+        if !loss.is_finite() {
+            return tau;
+        }
+        if loss < self.best * (1.0 - self.threshold) {
+            self.best = loss;
+            self.stall = 0;
+        } else {
+            self.stall += 1;
+            if self.stall >= self.patience && tau > self.tau_min {
+                self.stall = 0;
+                return (tau / 2).max(self.tau_min);
             }
         }
-        k += steps;
+        tau
+    }
+}
+
+/// Pullback-to-stale-anchor mixing with a non-blocking collective.
+pub struct OverlapStrategy {
+    beta: f32,
+    /// current τ (constant unless the adaptive controller shrinks it)
+    tau: usize,
+    adaptive: Option<AdaptiveTau>,
+    z: Vec<f32>,
+    v: Vec<f32>,
+    pending: Option<NonBlockingAllReduce>,
+}
+
+impl OverlapStrategy {
+    /// `beta = 0` gives the vanilla anchor update (Eq. 5); the paper's
+    /// headline algorithm uses the momentum form (Eqs. 10–11). `adaptive`
+    /// enables the AdaComm-style τ controller (`--algo overlap-ada`).
+    pub fn new(ctx: &TrainContext, beta: f32, adaptive: bool) -> Self {
+        Self {
+            beta,
+            tau: ctx.cfg.tau.max(1),
+            adaptive: if adaptive { Some(AdaptiveTau::new(ctx)) } else { None },
+            z: Vec::new(),
+            v: Vec::new(),
+            pending: None,
+        }
+    }
+}
+
+impl MixingStrategy for OverlapStrategy {
+    fn on_run_start(&mut self, eng: &mut Engine, ctx: &TrainContext) -> Result<()> {
+        // Anchor state: z starts at the common init (paper: x_0^(i) = z_0);
+        // v is the anchor momentum buffer (Eq. 10), zero-initialized.
+        self.z = eng.workers.params[0].clone();
+        self.v = vec![0.0f32; ctx.rt.n];
+        if self.adaptive.is_some() {
+            eng.rec.note_tau(0, self.tau);
+        }
+        Ok(())
+    }
+
+    fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan {
+        plan_tau(eng, ctx, self.tau)
+    }
+
+    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, out: RoundOutcome) -> Result<()> {
+        let m = eng.workers.m;
 
         // --- absorb the previous round's collective (Eq. 5 / 10-11) ------
-        if let Some(h) = pending.take() {
+        if let Some(h) = self.pending.take() {
             // Each worker independently waits until the anchor is ready; if
             // the wire finished during the τ steps this is a no-op.
-            for w in 0..m {
-                clocks.wait_comm_until(w, h.ready_at());
-            }
-            let (z2, v2) = ctx.rt.anchor_update(&z, &v, &h.result, beta)?;
-            z = z2;
-            v = v2;
+            h.absorb(&mut eng.clocks);
+            let (z2, v2) = ctx.rt.anchor_update(&self.z, &self.v, &h.result, self.beta)?;
+            self.z = z2;
+            self.v = v2;
         }
 
         // --- pullback (Eq. 4), local on every node ------------------------
         for w in 0..m {
-            workers.params[w] = ctx.rt.pullback(&workers.params[w], &z, alpha)?;
-            clocks.compute(w, PULLBACK_S);
+            eng.workers.params[w] =
+                ctx.rt.pullback(&eng.workers.params[w], &self.z, ctx.cfg.alpha)?;
+            eng.clocks.compute(w, PULLBACK_S);
         }
 
         // --- launch the next non-blocking all-reduce ----------------------
         // The ring effectively starts once the last participant joins.
-        let start = (0..m).map(|w| clocks.now(w)).fold(0.0, f64::max);
-        let refs: Vec<&[f32]> = workers.params.iter().map(|p| p.as_slice()).collect();
-        pending = Some(start_allreduce(
+        let start = eng.clocks.max_now();
+        let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
+        self.pending = Some(start_allreduce(
             &refs,
             &ctx.cluster.net,
             ctx.cluster.message_bytes,
             start,
         ));
-        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
 
-        rec.push_loss(k - 1, loss_sum / loss_n as f64);
-        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+        // --- adaptive-τ controller ---------------------------------------
+        if let Some(ada) = self.adaptive.as_mut() {
+            let next = ada.observe(out.mean_loss, self.tau);
+            if next != self.tau {
+                self.tau = next;
+                eng.rec.note_tau(eng.k, next);
+            }
+        }
+        Ok(())
     }
-    rec.force_eval(total, ctx, &workers, &clocks)?;
-    Ok(rec.finish(ctx, &clocks, total))
 }

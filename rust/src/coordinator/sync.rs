@@ -1,133 +1,134 @@
-//! Fully synchronous SGD (the paper's baseline) and its PowerSGD variant.
+//! Fully synchronous SGD (the paper's baseline) and its PowerSGD variant,
+//! as engine strategies.
 //!
-//! Every step: all workers compute a gradient on their own shard, a
-//! *blocking* all-reduce averages the gradients (everyone waits for the
-//! slowest worker, then for the wire), and the identical averaged update is
-//! applied everywhere through the fused Pallas `update` artifact.
+//! Every round is one step: all workers compute a gradient on their own
+//! shard (the engine's `GradOnly` phase), then the mixing decision runs a
+//! *blocking* all-reduce (everyone waits for the slowest worker, then for
+//! the wire) and applies the identical averaged update everywhere through
+//! the fused `update` kernel.
 
 use anyhow::Result;
 
-use super::{Recorder, TrainContext, Workers};
-use crate::clock::Clocks;
+use super::engine::{Engine, LocalPhase, MixingStrategy, RoundOutcome, RoundPlan};
+use super::TrainContext;
 use crate::collective::ring_allreduce_mean;
 use crate::compress::PowerSgd;
-use crate::metrics::TrainLog;
 
-pub fn run_sync(ctx: &TrainContext) -> Result<TrainLog> {
-    let m = ctx.cfg.workers;
-    let mut workers = Workers::new(ctx);
-    let mut clocks = Clocks::new(m);
-    let mut rec = Recorder::new(ctx);
-    let total = ctx.total_steps();
-    let comm_t = ctx.cluster.allreduce_time();
+/// Blocking per-step gradient averaging (mixing matrix = (1/m) 11ᵀ each step).
+pub struct SyncStrategy {
+    comm_t: f64,
+}
 
-    for k in 0..total {
-        // Parallel gradient computation.
-        let mut grads = Vec::with_capacity(m);
-        let mut loss_sum = 0.0;
-        for w in 0..m {
-            let (loss, g) = workers.local_grad(w, ctx, &mut clocks)?;
-            loss_sum += loss;
-            grads.push(g);
-        }
-        // Blocking collective: stragglers idle everyone, then the wire.
-        clocks.barrier();
-        for w in 0..m {
-            clocks.comm_blocked(w, comm_t);
-        }
-        ring_allreduce_mean(&mut grads);
-        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
-
-        // Identical update on every replica: apply once, copy (replicas are
-        // bit-identical in sync SGD, so this is exact, not an approximation).
-        let lr = ctx.schedule.lr_at_step(k);
-        let (p, mom) = ctx.rt.sgd_update(
-            &workers.params[0],
-            &workers.mom[0],
-            &grads[0],
-            lr,
-            ctx.cfg.mu,
-            ctx.cfg.wd,
-        )?;
-        for w in 0..m {
-            workers.params[w].copy_from_slice(&p);
-            workers.mom[w].copy_from_slice(&mom);
-        }
-
-        rec.push_loss(k, loss_sum / m as f64);
-        rec.maybe_eval(k + 1, ctx, &workers, &clocks)?;
+impl SyncStrategy {
+    pub fn new(ctx: &TrainContext) -> Self {
+        Self { comm_t: ctx.cluster.allreduce_time() }
     }
-    rec.force_eval(total, ctx, &workers, &clocks)?;
-    Ok(rec.finish(ctx, &clocks, total))
+}
+
+/// Apply one identical averaged-gradient update to every replica (replicas
+/// are bit-identical in the sync family, so apply once and copy is exact).
+fn apply_shared_update(
+    eng: &mut Engine,
+    ctx: &TrainContext,
+    avg_grad: &[f32],
+    step: usize,
+) -> Result<()> {
+    let lr = ctx.schedule.lr_at_step(step);
+    let (p, mom) = ctx.rt.sgd_update(
+        &eng.workers.params[0],
+        &eng.workers.mom[0],
+        avg_grad,
+        lr,
+        ctx.cfg.mu,
+        ctx.cfg.wd,
+    )?;
+    for w in 0..eng.workers.m {
+        eng.workers.params[w].copy_from_slice(&p);
+        eng.workers.mom[w].copy_from_slice(&mom);
+    }
+    Ok(())
+}
+
+impl MixingStrategy for SyncStrategy {
+    fn phase(&self) -> LocalPhase {
+        LocalPhase::GradOnly
+    }
+
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        RoundPlan { steps: vec![1; eng.workers.m], advance: 1 }
+    }
+
+    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, mut out: RoundOutcome) -> Result<()> {
+        let m = eng.workers.m;
+        // Blocking collective: stragglers idle everyone, then the wire.
+        eng.clocks.barrier();
+        for w in 0..m {
+            eng.clocks.comm_blocked(w, self.comm_t);
+        }
+        ring_allreduce_mean(&mut out.grads);
+        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        apply_shared_update(eng, ctx, &out.grads[0], out.start_step)
+    }
 }
 
 /// PowerSGD: sync SGD with rank-r compressed gradients. Two collectives per
 /// step (P then Q+raw) — two handshakes, the latency floor the paper points
 /// at — plus modeled encode/decode GEMM time on the accelerator.
-pub fn run_powersgd(ctx: &TrainContext) -> Result<TrainLog> {
+pub struct PowerSgdStrategy {
+    psgd: PowerSgd,
+    comm_t: f64,
+    scaled_bytes: usize,
+    flops_scale: f64,
+}
+
+impl PowerSgdStrategy {
     /// Effective GEMM throughput assumed for encode/decode cost (Titan X
     /// era, f32): 5 TFLOP/s.
     const GEMM_FLOPS: f64 = 5.0e12;
 
-    let m = ctx.cfg.workers;
-    let mut workers = Workers::new(ctx);
-    let mut clocks = Clocks::new(m);
-    let mut rec = Recorder::new(ctx);
-    let mut psgd = PowerSgd::new(&ctx.rt.manifest, ctx.cfg.rank, m, ctx.cfg.seed);
-    let total = ctx.total_steps();
+    pub fn new(ctx: &TrainContext) -> Self {
+        let m = ctx.cfg.workers;
+        let psgd = PowerSgd::new(&ctx.rt.manifest, ctx.cfg.rank, m, ctx.cfg.seed);
+        // Wire cost: the compressed message replaces the full one, but the
+        // *fraction* of compressed bytes in our scaled model equals the
+        // paper's fraction, so scale the paper-size message by it.
+        let full_bytes = ctx.rt.manifest.message_bytes();
+        let frac = psgd.bytes_per_round() as f64 / full_bytes as f64;
+        let scaled_bytes = (ctx.cluster.message_bytes as f64 * frac) as usize;
+        // The reference implementation flattens all P factors into ONE
+        // buffer (single all-reduce), then all Q factors + raw tensors into
+        // another, launched back-to-back in one comm group: one handshake,
+        // two wire passes' worth of bytes.
+        let comm_t = ctx.cluster.net.allreduce_time(scaled_bytes, m);
+        let flops_scale = (full_bytes as f64 / (ctx.rt.n * 4) as f64).max(1.0);
+        Self { psgd, comm_t, scaled_bytes, flops_scale }
+    }
+}
 
-    // Wire cost: the compressed message replaces the full one, but the
-    // *fraction* of compressed bytes in our scaled model equals the paper's
-    // fraction, so scale the paper-size message by it.
-    let full_bytes = ctx.rt.manifest.message_bytes();
-    let frac = psgd.bytes_per_round() as f64 / full_bytes as f64;
-    let scaled_bytes = (ctx.cluster.message_bytes as f64 * frac) as usize;
-    // The reference implementation flattens all P factors into ONE buffer
-    // (single all-reduce), then all Q factors + raw tensors into another,
-    // launched back-to-back in one comm group: one handshake, two wire
-    // passes' worth of bytes.
-    let comm_t = ctx.cluster.net.allreduce_time(scaled_bytes, m);
+impl MixingStrategy for PowerSgdStrategy {
+    fn phase(&self) -> LocalPhase {
+        LocalPhase::GradOnly
+    }
 
-    for k in 0..total {
-        let mut grads = Vec::with_capacity(m);
-        let mut loss_sum = 0.0;
-        for w in 0..m {
-            let (loss, g) = workers.local_grad(w, ctx, &mut clocks)?;
-            loss_sum += loss;
-            grads.push(g);
-        }
-        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let out = psgd.round(&grad_refs);
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        RoundPlan { steps: vec![1; eng.workers.m], advance: 1 }
+    }
+
+    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, out: RoundOutcome) -> Result<()> {
+        let m = eng.workers.m;
+        let grad_refs: Vec<&[f32]> = out.grads.iter().map(|g| g.as_slice()).collect();
+        let round = self.psgd.round(&grad_refs);
 
         // encode/decode compute, scaled to paper-model FLOPs.
-        let enc_t = out.encode_flops * (full_bytes as f64 / (ctx.rt.n * 4) as f64).max(1.0)
-            / GEMM_FLOPS;
+        let enc_t = round.encode_flops * self.flops_scale / Self::GEMM_FLOPS;
         for w in 0..m {
-            clocks.compute(w, enc_t);
+            eng.clocks.compute(w, enc_t);
         }
-        clocks.barrier();
+        eng.clocks.barrier();
         for w in 0..m {
-            clocks.comm_blocked(w, comm_t);
+            eng.clocks.comm_blocked(w, self.comm_t);
         }
-        rec.add_bytes((m * scaled_bytes) as u64);
-
-        let lr = ctx.schedule.lr_at_step(k);
-        let (p, mom) = ctx.rt.sgd_update(
-            &workers.params[0],
-            &workers.mom[0],
-            &out.avg_grad,
-            lr,
-            ctx.cfg.mu,
-            ctx.cfg.wd,
-        )?;
-        for w in 0..m {
-            workers.params[w].copy_from_slice(&p);
-            workers.mom[w].copy_from_slice(&mom);
-        }
-
-        rec.push_loss(k, loss_sum / m as f64);
-        rec.maybe_eval(k + 1, ctx, &workers, &clocks)?;
+        eng.rec.add_bytes((m * self.scaled_bytes) as u64);
+        apply_shared_update(eng, ctx, &round.avg_grad, out.start_step)
     }
-    rec.force_eval(total, ctx, &workers, &clocks)?;
-    Ok(rec.finish(ctx, &clocks, total))
 }

@@ -21,7 +21,7 @@ use olsgd::config::{Algo, ExperimentConfig};
 use olsgd::coordinator;
 use olsgd::data::{self, GenConfig};
 use olsgd::metrics::{write_json, write_text};
-use olsgd::runtime::Runtime;
+use olsgd::runtime::{self, ModelRuntime};
 use olsgd::util::json::Json;
 
 fn main() -> ExitCode {
@@ -61,8 +61,9 @@ fn print_usage() {
          olsgd sweep  --algos sync,local,overlap-m --taus 1,2,8,24 [--set key=value]... [--out DIR]\n  \
          olsgd report --dir DIR\n\
          \n\
-         Algorithms: sync local overlap overlap-m easgd eamsgd cocod powersgd\n\
-         Config keys: algo model workers epochs seed eval_every lr tau alpha beta mu wd rank\n\
+         Algorithms: sync local overlap overlap-m overlap-ada easgd eamsgd cocod powersgd\n\
+         Config keys: algo model workers epochs seed eval_every lr tau tau_min tau_hetero\n\
+                      ada_patience ada_threshold alpha beta mu wd rank\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
                       message_bytes straggler artifacts_dir out_dir"
     );
@@ -139,25 +140,36 @@ fn next(args: &[String], i: &mut usize, flag: &str) -> Result<String> {
 
 fn cmd_info(args: &[String]) -> Result<()> {
     let common = parse_common(args)?;
-    let rt = Runtime::new(Path::new(&common.cfg.artifacts_dir))?;
-    println!("platform: {}", rt.platform());
-    println!(
-        "artifacts: train_batch={} eval_batch={} image={:?}",
-        rt.manifest.train_batch, rt.manifest.eval_batch, rt.manifest.image_shape
-    );
-    for (name, m) in &rt.manifest.models {
+    let dir = Path::new(&common.cfg.artifacts_dir);
+    #[cfg(feature = "pjrt")]
+    if dir.join("manifest.json").exists() {
+        let rt = runtime::Runtime::new(dir)?;
+        println!("platform: {}", rt.platform());
         println!(
-            "  model {name:<10} params={:<8} tensors={:<3} modules={:?}",
-            m.param_count,
-            m.tensors.len(),
-            m.modules.keys().collect::<Vec<_>>()
+            "artifacts: train_batch={} eval_batch={} image={:?}",
+            rt.manifest.train_batch, rt.manifest.eval_batch, rt.manifest.image_shape
         );
+        for (name, m) in &rt.manifest.models {
+            println!(
+                "  model {name:<10} params={:<8} tensors={:<3} modules={:?}",
+                m.param_count,
+                m.tensors.len(),
+                m.modules.keys().collect::<Vec<_>>()
+            );
+        }
+        return Ok(());
     }
+    let rt = runtime::load_auto(dir, &common.cfg.model)?;
+    println!("platform: native (pure-Rust reference backend; no PJRT artifacts)");
+    println!(
+        "model {:<10} params={:<8} train_batch={} eval_batch={} image={:?}",
+        rt.name, rt.n, rt.train_batch, rt.eval_batch, rt.image_shape
+    );
     Ok(())
 }
 
-/// Cache of (model name, Runtime, compiled ModelRuntime) across sweep legs.
-type RtCache = Option<(String, Runtime, olsgd::runtime::ModelRuntime)>;
+/// Cache of (model name, loaded ModelRuntime) across sweep legs.
+type RtCache = Option<(String, ModelRuntime)>;
 
 /// Load runtime + data and run one configured experiment.
 fn run_one(
@@ -166,15 +178,14 @@ fn run_one(
     quiet: bool,
 ) -> Result<olsgd::metrics::TrainLog> {
     let reload = match rt_cache {
-        Some((name, _, _)) => name != &cfg.model,
+        Some((name, _)) => name != &cfg.model,
         None => true,
     };
     if reload {
-        let runtime = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-        let model = runtime.load_model(&cfg.model)?;
-        *rt_cache = Some((cfg.model.clone(), runtime, model));
+        let model = runtime::load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
+        *rt_cache = Some((cfg.model.clone(), model));
     }
-    let (_, _, model_rt) = rt_cache.as_ref().unwrap();
+    let (_, model_rt) = rt_cache.as_ref().unwrap();
 
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);

@@ -33,6 +33,9 @@ pub struct TrainLog {
     pub records: Vec<EvalRecord>,
     /// (step, mean loss across workers) every sync round
     pub step_losses: Vec<(usize, f64)>,
+    /// (step, τ) points recorded by an adaptive-τ controller; empty for
+    /// fixed-τ runs
+    pub tau_trace: Vec<(usize, usize)>,
     pub total_sim_time: f64,
     pub total_compute_s: f64,
     pub total_comm_blocked_s: f64,
@@ -102,7 +105,64 @@ impl TrainLog {
                     .iter()
                     .map(|&(k, l)| arr_f64(&[k as f64, l]))),
             ),
+            (
+                "tau_trace",
+                arr(self
+                    .tau_trace
+                    .iter()
+                    .map(|&(k, t)| arr_f64(&[k as f64, t as f64]))),
+            ),
         ])
+    }
+
+    /// Order-sensitive FNV-1a fingerprint over every observable of the run
+    /// (floats hashed by exact bits) — the golden-regression digest. Two
+    /// runs with identical schedules, numerics, and timing produce the same
+    /// digest; any drift in loss traces, eval records, virtual time, byte
+    /// accounting, or the τ schedule changes it.
+    pub fn digest(&self) -> u64 {
+        struct Fnv(u64);
+        impl Fnv {
+            fn bytes(&mut self, bytes: &[u8]) {
+                for &b in bytes {
+                    self.0 ^= b as u64;
+                    self.0 = self.0.wrapping_mul(0x100000001b3);
+                }
+            }
+            fn u64(&mut self, v: u64) {
+                self.bytes(&v.to_le_bytes());
+            }
+            fn f64(&mut self, v: f64) {
+                self.u64(v.to_bits());
+            }
+        }
+        let mut h = Fnv(0xcbf29ce484222325);
+        h.bytes(self.algo.as_bytes());
+        h.u64(self.tau as u64);
+        h.u64(self.workers as u64);
+        h.u64(self.steps as u64);
+        h.u64(self.bytes_sent);
+        h.f64(self.total_sim_time);
+        h.f64(self.total_compute_s);
+        h.f64(self.total_comm_blocked_s);
+        h.f64(self.total_idle_s);
+        for r in &self.records {
+            h.f64(r.epoch);
+            h.u64(r.step as u64);
+            h.f64(r.sim_time);
+            h.f64(r.train_loss);
+            h.f64(r.test_loss);
+            h.f64(r.test_acc);
+        }
+        for &(k, l) in &self.step_losses {
+            h.u64(k as u64);
+            h.f64(l);
+        }
+        for &(k, t) in &self.tau_trace {
+            h.u64(k as u64);
+            h.u64(t as u64);
+        }
+        h.0
     }
 
     /// CSV of the eval records.
@@ -162,6 +222,7 @@ mod tests {
                 },
             ],
             step_losses: vec![(0, 2.3), (16, 1.5)],
+            tau_trace: Vec::new(),
             total_sim_time: 7.0,
             total_compute_s: 50.0,
             total_comm_blocked_s: 4.0,
@@ -188,6 +249,18 @@ mod tests {
             parsed.get("records").unwrap().as_arr().unwrap().len(),
             2
         );
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let a = sample_log();
+        let mut b = sample_log();
+        assert_eq!(a.digest(), b.digest(), "identical logs must share a digest");
+        b.records[1].test_loss += 1e-9;
+        assert_ne!(a.digest(), b.digest(), "digest must see tiny numeric drift");
+        let mut c = sample_log();
+        c.tau_trace.push((8, 4));
+        assert_ne!(a.digest(), c.digest(), "digest must see the τ schedule");
     }
 
     #[test]

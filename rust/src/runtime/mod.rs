@@ -1,83 +1,45 @@
-//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//! Model runtime: the kernel contract between the coordinator and the
+//! numerics, with two interchangeable backends.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `compile` → `execute`). This is the only place Rust touches XLA; the
-//! coordinator above sees plain `&[f32]` in / `Vec<f32>` out.
+//! * **pjrt** (feature `pjrt`) — loads the AOT HLO-text artifacts produced by
+//!   `python/compile/` and executes them through PJRT; Python is never on
+//!   the training path. See `pjrt.rs`.
+//! * **native** (always available) — a pure-Rust reference model
+//!   (multinomial logistic regression) implementing the identical kernel
+//!   algebra (`python/compile/kernels/ref.py`), so every algorithm, test,
+//!   and bench runs end-to-end on a sealed machine with no XLA and no
+//!   artifacts. See `native.rs`.
 //!
-//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax≥0.5 64-bit-id
-//! protos; the text parser reassigns ids — see /opt/xla-example/README.md).
-//! All modules were lowered with `return_tuple=True`, so every result is a
-//! tuple literal.
+//! The coordinator sees one type either way: [`ModelRuntime`], plain
+//! `&[f32]` in / `Vec<f32>` out, with all shape validation centralized here
+//! (the system must fail loudly on malformed inputs regardless of backend).
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use std::path::{Path, PathBuf};
+use std::collections::BTreeMap;
+use std::path::Path;
 
-use anyhow::{Context, Result};
-use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+use anyhow::Result;
 
-use manifest::{Manifest, ModelManifest};
+use manifest::{ModelManifest, TensorManifest};
+use native::NativeModel;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
-/// Process-wide PJRT client + parsed manifest.
-pub struct Runtime {
-    client: PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
+use crate::data::{C, H, NUM_CLASSES, PX, W};
+
+/// Which engine executes the kernels.
+enum Backend {
+    Native(NativeModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(Box<pjrt::PjrtModel>),
 }
 
-impl Runtime {
-    /// `dir` is the artifacts directory produced by `make artifacts`.
-    pub fn new(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, dir: dir.to_path_buf(), manifest })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {file}"))
-    }
-
-    /// Compile all five modules of `model` into a ready-to-run bundle.
-    pub fn load_model(&self, model: &str) -> Result<ModelRuntime> {
-        let mm = self.manifest.model(model)?.clone();
-        mm.check_layout()?;
-        let get = |tag: &str| -> Result<PjRtLoadedExecutable> {
-            let file = mm
-                .modules
-                .get(tag)
-                .with_context(|| format!("module '{tag}' missing for model '{model}'"))?;
-            self.compile(file)
-        };
-        Ok(ModelRuntime {
-            name: model.to_string(),
-            n: mm.param_count,
-            train_batch: self.manifest.train_batch,
-            eval_batch: self.manifest.eval_batch,
-            image_shape: self.manifest.image_shape,
-            train_step: get("train_step")?,
-            grad_step: get("grad_step")?,
-            eval: get("eval")?,
-            pullback: get("pullback")?,
-            anchor: get("anchor")?,
-            update: get("update")?,
-            adam: get("adam")?,
-            manifest: mm,
-        })
-    }
-}
-
-/// One model's compiled executables. All methods take/return host `f32`
-/// slices; shapes are validated against the manifest.
+/// One model, ready to run. All methods take/return host `f32` slices;
+/// shapes are validated against the manifest before touching any backend.
 pub struct ModelRuntime {
     pub name: String,
     /// flat parameter count
@@ -86,55 +48,76 @@ pub struct ModelRuntime {
     pub eval_batch: usize,
     pub image_shape: [usize; 3],
     pub manifest: ModelManifest,
-    train_step: PjRtLoadedExecutable,
-    grad_step: PjRtLoadedExecutable,
-    eval: PjRtLoadedExecutable,
-    pullback: PjRtLoadedExecutable,
-    anchor: PjRtLoadedExecutable,
-    update: PjRtLoadedExecutable,
-    adam: PjRtLoadedExecutable,
+    backend: Backend,
 }
 
-fn vec_lit(v: &[f32]) -> Literal {
-    Literal::vec1(v)
-}
-
-fn scalar_lit(v: f32) -> Literal {
-    Literal::vec1(&[v])
-}
-
-fn images_lit(images: &[f32], batch: usize, shape: [usize; 3]) -> Result<Literal> {
-    let [h, w, c] = shape;
-    anyhow::ensure!(
-        images.len() == batch * h * w * c,
-        "image buffer len {} != {}x{}x{}x{}",
-        images.len(), batch, h, w, c
-    );
-    Ok(Literal::vec1(images).reshape(&[batch as i64, h as i64, w as i64, c as i64])?)
-}
-
-fn labels_lit(labels: &[i32], batch: usize) -> Result<Literal> {
-    anyhow::ensure!(labels.len() == batch, "label len {} != batch {batch}", labels.len());
-    Ok(Literal::vec1(labels))
-}
-
-fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
-    let result = exe.execute::<Literal>(args)?;
-    let lit = result[0][0].to_literal_sync()?;
-    Ok(lit.to_tuple()?)
-}
-
-fn f32_vec(lit: &Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
-}
-
-fn f32_scalar(lit: &Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>()?;
-    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
-    Ok(v[0])
+/// Manifest for the native linear model: one he-initialized weight matrix
+/// (PowerSGD-compressible) plus a raw bias, tiling the flat vector.
+fn native_manifest() -> ModelManifest {
+    let w_size = PX * NUM_CLASSES;
+    ModelManifest {
+        param_count: w_size + NUM_CLASSES,
+        tensors: vec![
+            TensorManifest {
+                name: "w".into(),
+                offset: 0,
+                size: w_size,
+                shape: vec![PX, NUM_CLASSES],
+                init: "he_normal".into(),
+                std: (2.0f32 / PX as f32).sqrt(),
+                rows: PX,
+                cols: NUM_CLASSES,
+                compress: true,
+            },
+            TensorManifest {
+                name: "b".into(),
+                offset: w_size,
+                size: NUM_CLASSES,
+                shape: vec![NUM_CLASSES],
+                init: "zeros".into(),
+                std: 0.0,
+                rows: 1,
+                cols: NUM_CLASSES,
+                compress: false,
+            },
+        ],
+        modules: BTreeMap::new(),
+    }
 }
 
 impl ModelRuntime {
+    /// Build the native (pure-Rust) runtime. `name` is recorded for logs;
+    /// the architecture is always the reference linear model.
+    pub fn native(name: &str) -> Result<Self> {
+        let manifest = native_manifest();
+        manifest.check_layout()?;
+        let model = NativeModel::new(PX, NUM_CLASSES);
+        Ok(Self {
+            name: name.to_string(),
+            n: manifest.param_count,
+            train_batch: 32,
+            eval_batch: 100,
+            image_shape: [H, W, C],
+            manifest,
+            backend: Backend::Native(model),
+        })
+    }
+
+    fn check_batch(&self, images: &[f32], labels: &[i32], batch: usize) -> Result<()> {
+        let [h, w, c] = self.image_shape;
+        anyhow::ensure!(
+            images.len() == batch * h * w * c,
+            "image buffer len {} != {}x{}x{}x{}",
+            images.len(),
+            batch,
+            h,
+            w,
+            c
+        );
+        anyhow::ensure!(labels.len() == batch, "label len {} != batch {batch}", labels.len());
+        Ok(())
+    }
+
     /// One local SGD/Nesterov step: `(params, mom, batch, lr, mu, wd)` →
     /// `(params', mom', loss)`. mu = 0 gives plain SGD.
     pub fn train_step(
@@ -148,20 +131,16 @@ impl ModelRuntime {
         wd: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
         anyhow::ensure!(params.len() == self.n && mom.len() == self.n, "param len mismatch");
-        let out = run(
-            &self.train_step,
-            &[
-                vec_lit(params),
-                vec_lit(mom),
-                images_lit(images, self.train_batch, self.image_shape)?,
-                labels_lit(labels, self.train_batch)?,
-                scalar_lit(lr),
-                scalar_lit(mu),
-                scalar_lit(wd),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 3, "train_step returned {} outputs", out.len());
-        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?, f32_scalar(&out[2])?))
+        self.check_batch(images, labels, self.train_batch)?;
+        match &self.backend {
+            Backend::Native(m) => {
+                let (loss, g) = m.grad_step(params, images, labels, self.train_batch);
+                let (p, v) = m.sgd_update(params, mom, &g, lr, mu, wd);
+                Ok((p, v, loss))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.train_step(params, mom, images, labels, lr, mu, wd),
+        }
     }
 
     /// Loss + raw gradient (for sync-SGD gradient averaging and PowerSGD).
@@ -172,40 +151,36 @@ impl ModelRuntime {
         labels: &[i32],
     ) -> Result<(f32, Vec<f32>)> {
         anyhow::ensure!(params.len() == self.n, "param len mismatch");
-        let out = run(
-            &self.grad_step,
-            &[
-                vec_lit(params),
-                images_lit(images, self.train_batch, self.image_shape)?,
-                labels_lit(labels, self.train_batch)?,
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 2, "grad_step returned {} outputs", out.len());
-        Ok((f32_scalar(&out[0])?, f32_vec(&out[1])?))
+        self.check_batch(images, labels, self.train_batch)?;
+        match &self.backend {
+            Backend::Native(m) => Ok(m.grad_step(params, images, labels, self.train_batch)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.grad_step(params, images, labels),
+        }
     }
 
     /// `(sum_loss, correct_count)` over one eval batch.
     pub fn evaluate(&self, params: &[f32], images: &[f32], labels: &[i32]) -> Result<(f32, f32)> {
-        let out = run(
-            &self.eval,
-            &[
-                vec_lit(params),
-                images_lit(images, self.eval_batch, self.image_shape)?,
-                labels_lit(labels, self.eval_batch)?,
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
-        Ok((f32_scalar(&out[0])?, f32_scalar(&out[1])?))
+        anyhow::ensure!(params.len() == self.n, "param len mismatch");
+        self.check_batch(images, labels, self.eval_batch)?;
+        match &self.backend {
+            Backend::Native(m) => Ok(m.evaluate(params, images, labels, self.eval_batch)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.evaluate(params, images, labels),
+        }
     }
 
-    /// Eq. (4) via the Pallas artifact: `x - alpha * (x - z)`.
+    /// Eq. (4): `x - alpha * (x - z)`.
     pub fn pullback(&self, x: &[f32], z: &[f32], alpha: f32) -> Result<Vec<f32>> {
-        let out = run(&self.pullback, &[vec_lit(x), vec_lit(z), scalar_lit(alpha)])?;
-        anyhow::ensure!(out.len() == 1, "pullback returned {} outputs", out.len());
-        f32_vec(&out[0])
+        anyhow::ensure!(x.len() == self.n && z.len() == self.n, "length mismatch");
+        match &self.backend {
+            Backend::Native(m) => Ok(m.pullback(x, z, alpha)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.pullback(x, z, alpha),
+        }
     }
 
-    /// Eqs. (10)-(11) via the Pallas artifact: returns `(z', v')`.
+    /// Eqs. (10)-(11): returns `(z', v')`.
     pub fn anchor_update(
         &self,
         z: &[f32],
@@ -213,12 +188,15 @@ impl ModelRuntime {
         avg: &[f32],
         beta: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let out = run(
-            &self.anchor,
-            &[vec_lit(z), vec_lit(v), vec_lit(avg), scalar_lit(beta)],
-        )?;
-        anyhow::ensure!(out.len() == 2, "anchor returned {} outputs", out.len());
-        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?))
+        anyhow::ensure!(
+            z.len() == self.n && v.len() == self.n && avg.len() == self.n,
+            "length mismatch"
+        );
+        match &self.backend {
+            Backend::Native(m) => Ok(m.anchor_update(z, v, avg, beta)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.anchor_update(z, v, avg, beta),
+        }
     }
 
     /// Fused Nesterov step with an externally averaged gradient (sync-SGD /
@@ -236,19 +214,11 @@ impl ModelRuntime {
             params.len() == self.n && mom.len() == self.n && grad.len() == self.n,
             "length mismatch"
         );
-        let out = run(
-            &self.update,
-            &[
-                vec_lit(params),
-                vec_lit(mom),
-                vec_lit(grad),
-                scalar_lit(lr),
-                scalar_lit(mu),
-                scalar_lit(wd),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 2, "update returned {} outputs", out.len());
-        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?))
+        match &self.backend {
+            Backend::Native(m) => Ok(m.sgd_update(params, mom, grad, lr, mu, wd)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.sgd_update(params, mom, grad, lr, mu, wd),
+        }
     }
 
     /// Fused Adam step (paper §6 extension). `t` is the 1-based step count
@@ -263,22 +233,17 @@ impl ModelRuntime {
         t: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         anyhow::ensure!(
-            params.len() == self.n && m1.len() == self.n && m2.len() == self.n,
+            params.len() == self.n
+                && m1.len() == self.n
+                && m2.len() == self.n
+                && grad.len() == self.n,
             "length mismatch"
         );
-        let out = run(
-            &self.adam,
-            &[
-                vec_lit(params),
-                vec_lit(m1),
-                vec_lit(m2),
-                vec_lit(grad),
-                scalar_lit(lr),
-                scalar_lit(t),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 3, "adam returned {} outputs", out.len());
-        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?, f32_vec(&out[2])?))
+        match &self.backend {
+            Backend::Native(m) => Ok(m.adam_update(params, m1, m2, grad, lr, t)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.adam_update(params, m1, m2, grad, lr, t),
+        }
     }
 
     /// Evaluate a whole test set (len must be a multiple of eval_batch).
@@ -310,5 +275,78 @@ impl ModelRuntime {
             correct += cnt as f64;
         }
         Ok((sum_loss / n as f64, correct / n as f64))
+    }
+}
+
+/// Load `model` for an experiment run: the PJRT artifacts when compiled with
+/// the `pjrt` feature and `dir` holds them, otherwise the native backend.
+/// This is the one loader the CLI, examples, and benches share.
+pub fn load_auto(dir: &Path, model: &str) -> Result<ModelRuntime> {
+    #[cfg(feature = "pjrt")]
+    if dir.join("manifest.json").exists() {
+        let runtime = Runtime::new(dir)?;
+        let rt = runtime.load_model(model)?;
+        // The executables hold their own references to the PJRT client;
+        // leak the Runtime so callers need not keep it alive explicitly.
+        std::mem::forget(runtime);
+        return Ok(rt);
+    }
+    let _ = dir;
+    ModelRuntime::native(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_manifest_layout_is_consistent() {
+        let m = native_manifest();
+        assert!(m.check_layout().is_ok());
+        assert_eq!(m.param_count, PX * NUM_CLASSES + NUM_CLASSES);
+        assert_eq!(m.message_bytes(), m.param_count * 4);
+    }
+
+    #[test]
+    fn native_runtime_composes_train_step_from_parts() {
+        let rt = ModelRuntime::native("linear").unwrap();
+        let params = crate::model::init_params(&rt.manifest, 3);
+        let mom = vec![0.01f32; rt.n];
+        let gen = crate::data::GenConfig::default();
+        let ds = crate::data::generate(9, 64, "train", &gen);
+        let images = ds.images[..rt.train_batch * PX].to_vec();
+        let labels = ds.labels[..rt.train_batch].to_vec();
+
+        let (p1, m1, loss1) = rt
+            .train_step(&params, &mom, &images, &labels, 0.05, 0.9, 1e-4)
+            .unwrap();
+        let (loss2, g) = rt.grad_step(&params, &images, &labels).unwrap();
+        let (p2, m2) = rt.sgd_update(&params, &mom, &g, 0.05, 0.9, 1e-4).unwrap();
+        assert_eq!(loss1, loss2);
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn load_auto_falls_back_to_native() {
+        let rt = load_auto(Path::new("/nonexistent/artifacts"), "cnn").unwrap();
+        assert_eq!(rt.name, "cnn");
+        assert!(rt.n > 0);
+    }
+
+    #[test]
+    fn wrapper_validates_shapes_for_native_backend() {
+        let rt = ModelRuntime::native("linear").unwrap();
+        let short = vec![0.0f32; rt.n - 1];
+        let ok = vec![0.0f32; rt.n];
+        let images = vec![0.0f32; rt.train_batch * PX];
+        let labels = vec![0i32; rt.train_batch];
+        assert!(rt.train_step(&short, &ok, &images, &labels, 0.1, 0.9, 0.0).is_err());
+        assert!(rt.grad_step(&short, &images, &labels).is_err());
+        let bad_imgs = vec![0.0f32; (rt.train_batch - 1) * PX];
+        assert!(rt.grad_step(&ok, &bad_imgs, &labels).is_err());
+        let imgs7 = vec![0.0f32; 7 * PX];
+        let lbl7 = vec![0i32; 7];
+        assert!(rt.evaluate_set(&ok, &imgs7, &lbl7).is_err());
     }
 }

@@ -1,0 +1,309 @@
+//! Native reference backend: a pure-Rust multinomial logistic-regression
+//! model implementing the full `ModelRuntime` kernel contract (forward,
+//! gradient, fused Nesterov/Adam updates, pullback, anchor).
+//!
+//! Purpose: the coordinator, the round engine, and every algorithm test can
+//! run end-to-end on a sealed machine with no XLA/PJRT and no AOT artifacts.
+//! The algebra of the *updates* (Nesterov, Adam, pullback, anchor) matches
+//! `python/compile/kernels/ref.py` exactly, so algorithm-level identities
+//! (e.g. sync == local@τ=1) hold on this backend just as on the artifacts;
+//! only the model architecture differs (linear instead of the scaled CNN).
+//!
+//! Everything is deterministic f32 arithmetic with a fixed accumulation
+//! order — the property the golden-regression digests rely on.
+
+use crate::model::vecmath;
+
+/// Softmax-regression model over flat `[px]` inputs and `classes` outputs.
+/// Parameter layout in the flat vector: `W` (px × classes, row-major) at
+/// offset 0, then the bias `b` (classes).
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub px: usize,
+    pub classes: usize,
+}
+
+impl NativeModel {
+    pub fn new(px: usize, classes: usize) -> Self {
+        Self { px, classes }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.px * self.classes + self.classes
+    }
+
+    /// Forward one batch; accumulate mean-loss pieces and (optionally) the
+    /// gradient of the mean cross-entropy loss.
+    ///
+    /// Returns `(sum_loss, correct_count)`; `grad`, when given, must be
+    /// zeroed by the caller and receives the *mean* gradient over the batch.
+    fn forward(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+        mut grad: Option<&mut [f32]>,
+    ) -> (f64, usize) {
+        let (px, nc) = (self.px, self.classes);
+        let w = &params[..px * nc];
+        let b = &params[px * nc..];
+        let inv_b = 1.0f32 / batch as f32;
+        let mut sum_loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut logits = vec![0.0f32; nc];
+        for i in 0..batch {
+            let x = &images[i * px..(i + 1) * px];
+            logits.copy_from_slice(b);
+            for (j, &xj) in x.iter().enumerate() {
+                if xj != 0.0 {
+                    let row = &w[j * nc..(j + 1) * nc];
+                    for (l, &wv) in logits.iter_mut().zip(row) {
+                        *l += xj * wv;
+                    }
+                }
+            }
+            // stable softmax cross-entropy
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum_exp = 0.0f32;
+            for &l in logits.iter() {
+                sum_exp += (l - max).exp();
+            }
+            let y = labels[i] as usize;
+            debug_assert!(y < nc, "label out of range");
+            let log_z = max + sum_exp.ln();
+            sum_loss += (log_z - logits[y]) as f64;
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            if argmax == y {
+                correct += 1;
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                let (gw, gb) = g.split_at_mut(px * nc);
+                for (c, &l) in logits.iter().enumerate() {
+                    let p = (l - max).exp() / sum_exp;
+                    let d = (p - if c == y { 1.0 } else { 0.0 }) * inv_b;
+                    gb[c] += d;
+                    for (j, &xj) in x.iter().enumerate() {
+                        gw[j * nc + c] += xj * d;
+                    }
+                }
+            }
+        }
+        (sum_loss, correct)
+    }
+
+    /// Loss + mean gradient over one training batch.
+    pub fn grad_step(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> (f32, Vec<f32>) {
+        let mut grad = vec![0.0f32; self.param_count()];
+        let (sum_loss, _) = self.forward(params, images, labels, batch, Some(&mut grad));
+        ((sum_loss / batch as f64) as f32, grad)
+    }
+
+    /// `(sum_loss, correct_count)` over one eval batch — the same contract
+    /// as the PJRT `eval` artifact.
+    pub fn evaluate(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> (f32, f32) {
+        let (sum_loss, correct) = self.forward(params, images, labels, batch, None);
+        (sum_loss as f32, correct as f32)
+    }
+
+    /// Fused Nesterov step (ref.py `nesterov_update`):
+    /// `g += wd*x; v' = mu*v + g; x' = x - lr*(g + mu*v')`.
+    pub fn sgd_update(
+        &self,
+        params: &[f32],
+        mom: &[f32],
+        grad: &[f32],
+        lr: f32,
+        mu: f32,
+        wd: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let n = params.len();
+        let mut p = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for i in 0..n {
+            let g = grad[i] + wd * params[i];
+            let vn = mu * mom[i] + g;
+            p[i] = params[i] - lr * (g + mu * vn);
+            v[i] = vn;
+        }
+        (p, v)
+    }
+
+    /// Fused Adam step (ref.py `adam_update`, b1=0.9, b2=0.999, eps=1e-8).
+    pub fn adam_update(
+        &self,
+        params: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+        grad: &[f32],
+        lr: f32,
+        t: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let n = params.len();
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        let mut p = vec![0.0f32; n];
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for i in 0..n {
+            let g = grad[i];
+            let mn = B1 * m1[i] + (1.0 - B1) * g;
+            let vn = B2 * m2[i] + (1.0 - B2) * g * g;
+            let mhat = mn / bc1;
+            let vhat = vn / bc2;
+            p[i] = params[i] - lr * mhat / (vhat.sqrt() + EPS);
+            m[i] = mn;
+            v[i] = vn;
+        }
+        (p, m, v)
+    }
+
+    /// Eq. (4): `x - alpha * (x - z)`.
+    pub fn pullback(&self, x: &[f32], z: &[f32], alpha: f32) -> Vec<f32> {
+        let mut out = x.to_vec();
+        vecmath::pullback_inplace(&mut out, z, alpha);
+        out
+    }
+
+    /// Eqs. (10)-(11): `v' = beta*v + (avg - z); z' = z + v'`.
+    pub fn anchor_update(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        avg: &[f32],
+        beta: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut zn = z.to_vec();
+        let mut vn = v.to_vec();
+        vecmath::anchor_update_inplace(&mut zn, &mut vn, avg, beta);
+        (zn, vn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::assert_close;
+    use crate::util::rng::Rng;
+
+    fn toy() -> NativeModel {
+        NativeModel::new(4, 3)
+    }
+
+    fn rand_params(m: &NativeModel, seed: u64) -> Vec<f32> {
+        let mut p = vec![0.0f32; m.param_count()];
+        Rng::seed_from(seed).fill_normal(&mut p, 0.5);
+        p
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let m = toy();
+        let params = rand_params(&m, 1);
+        let images = {
+            let mut v = vec![0.0f32; 2 * m.px];
+            Rng::seed_from(2).fill_normal(&mut v, 1.0);
+            v
+        };
+        let labels = vec![0i32, 2];
+        let (_, grad) = m.grad_step(&params, &images, &labels, 2);
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 7, m.param_count() - 1] {
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let (lp, _) = m.grad_step(&pp, &images, &labels, 2);
+            pp[idx] -= 2.0 * eps;
+            let (lm, _) = m.grad_step(&pp, &images, &labels, 2);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 1e-2 * (1.0 + fd.abs()),
+                "grad[{idx}]: fd {fd} vs analytic {}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn nesterov_mu_zero_is_plain_sgd() {
+        let m = toy();
+        let params = rand_params(&m, 3);
+        let mom = vec![0.5f32; m.param_count()];
+        let mut g = vec![0.0f32; m.param_count()];
+        Rng::seed_from(4).fill_normal(&mut g, 0.1);
+        let (p, v) = m.sgd_update(&params, &mom, &g, 0.1, 0.0, 0.0);
+        assert_close(&v, &g, 1e-6, 1e-7);
+        let want: Vec<f32> = params.iter().zip(&g).map(|(&p, &gi)| p - 0.1 * gi).collect();
+        assert_close(&p, &want, 1e-5, 1e-7);
+        // lr = 0 is a no-op on params
+        let (p0, _) = m.sgd_update(&params, &mom, &g, 0.0, 0.9, 0.0);
+        assert_close(&p0, &params, 0.0, 0.0);
+    }
+
+    #[test]
+    fn training_one_batch_reduces_loss() {
+        let m = NativeModel::new(8, 4);
+        let mut params = vec![0.0f32; m.param_count()];
+        let mut mom = vec![0.0f32; m.param_count()];
+        let b = 16;
+        let mut images = vec![0.0f32; b * m.px];
+        Rng::seed_from(5).fill_normal(&mut images, 1.0);
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 4).collect();
+        let (first, _) = m.grad_step(&params, &images, &labels, b);
+        let mut last = first;
+        for _ in 0..50 {
+            let (loss, g) = m.grad_step(&params, &images, &labels, b);
+            let (p, v) = m.sgd_update(&params, &mom, &g, 0.5, 0.9, 0.0);
+            params = p;
+            mom = v;
+            last = loss;
+        }
+        assert!(last < first * 0.5, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn evaluate_counts_are_sane() {
+        let m = toy();
+        let params = rand_params(&m, 7);
+        let b = 10;
+        let mut images = vec![0.0f32; b * m.px];
+        Rng::seed_from(8).fill_normal(&mut images, 1.0);
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 3).collect();
+        let (sum_loss, correct) = m.evaluate(&params, &images, &labels, b);
+        assert!(sum_loss.is_finite() && sum_loss > 0.0);
+        assert!((0.0..=b as f32).contains(&correct));
+    }
+
+    #[test]
+    fn adam_moves_against_gradient() {
+        let m = toy();
+        let params = vec![1.0f32; m.param_count()];
+        let m1 = vec![0.0f32; m.param_count()];
+        let m2 = vec![0.0f32; m.param_count()];
+        let g = vec![0.5f32; m.param_count()];
+        let (p, mm, vv) = m.adam_update(&params, &m1, &m2, &g, 0.01, 1.0);
+        for &x in &p {
+            assert!(x < 1.0);
+        }
+        assert!(mm[0] > 0.0 && vv[0] > 0.0);
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT backend: load the AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`). This is the only place Rust touches XLA; the
+//! coordinator above sees plain `&[f32]` in / `Vec<f32>` out via
+//! [`super::ModelRuntime`].
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax≥0.5 64-bit-id
+//! protos; the text parser reassigns ids — see /opt/xla-example/README.md).
+//! All modules were lowered with `return_tuple=True`, so every result is a
+//! tuple literal.
+//!
+//! Compiled only with the `pjrt` feature (which additionally needs the `xla`
+//! dependency from the offline mirror — see Cargo.toml).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+use super::{Backend, ModelRuntime};
+
+/// Process-wide PJRT client + parsed manifest.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// `dir` is the artifacts directory produced by `make artifacts`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {file}"))
+    }
+
+    /// Compile all modules of `model` into a ready-to-run bundle.
+    pub fn load_model(&self, model: &str) -> Result<ModelRuntime> {
+        let mm = self.manifest.model(model)?.clone();
+        mm.check_layout()?;
+        let get = |tag: &str| -> Result<PjRtLoadedExecutable> {
+            let file = mm
+                .modules
+                .get(tag)
+                .with_context(|| format!("module '{tag}' missing for model '{model}'"))?;
+            self.compile(file)
+        };
+        let exes = PjrtModel {
+            image_shape: self.manifest.image_shape,
+            train_batch: self.manifest.train_batch,
+            eval_batch: self.manifest.eval_batch,
+            train_step: get("train_step")?,
+            grad_step: get("grad_step")?,
+            eval: get("eval")?,
+            pullback: get("pullback")?,
+            anchor: get("anchor")?,
+            update: get("update")?,
+            adam: get("adam")?,
+        };
+        Ok(ModelRuntime {
+            name: model.to_string(),
+            n: mm.param_count,
+            train_batch: self.manifest.train_batch,
+            eval_batch: self.manifest.eval_batch,
+            image_shape: self.manifest.image_shape,
+            manifest: mm,
+            backend: Backend::Pjrt(Box::new(exes)),
+        })
+    }
+}
+
+/// One model's compiled executables. All methods take/return host `f32`
+/// slices; shape validation happens in the `ModelRuntime` wrapper.
+pub struct PjrtModel {
+    image_shape: [usize; 3],
+    train_batch: usize,
+    eval_batch: usize,
+    train_step: PjRtLoadedExecutable,
+    grad_step: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    pullback: PjRtLoadedExecutable,
+    anchor: PjRtLoadedExecutable,
+    update: PjRtLoadedExecutable,
+    adam: PjRtLoadedExecutable,
+}
+
+fn vec_lit(v: &[f32]) -> Literal {
+    Literal::vec1(v)
+}
+
+fn scalar_lit(v: f32) -> Literal {
+    Literal::vec1(&[v])
+}
+
+fn images_lit(images: &[f32], batch: usize, shape: [usize; 3]) -> Result<Literal> {
+    let [h, w, c] = shape;
+    Ok(Literal::vec1(images).reshape(&[batch as i64, h as i64, w as i64, c as i64])?)
+}
+
+fn labels_lit(labels: &[i32]) -> Literal {
+    Literal::vec1(labels)
+}
+
+fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+    let result = exe.execute::<Literal>(args)?;
+    let lit = result[0][0].to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+fn f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+fn f32_scalar(lit: &Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}
+
+impl PjrtModel {
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        mom: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        mu: f32,
+        wd: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let out = run(
+            &self.train_step,
+            &[
+                vec_lit(params),
+                vec_lit(mom),
+                images_lit(images, self.train_batch, self.image_shape)?,
+                labels_lit(labels),
+                scalar_lit(lr),
+                scalar_lit(mu),
+                scalar_lit(wd),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 3, "train_step returned {} outputs", out.len());
+        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?, f32_scalar(&out[2])?))
+    }
+
+    pub fn grad_step(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let out = run(
+            &self.grad_step,
+            &[
+                vec_lit(params),
+                images_lit(images, self.train_batch, self.image_shape)?,
+                labels_lit(labels),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 2, "grad_step returned {} outputs", out.len());
+        Ok((f32_scalar(&out[0])?, f32_vec(&out[1])?))
+    }
+
+    pub fn evaluate(&self, params: &[f32], images: &[f32], labels: &[i32]) -> Result<(f32, f32)> {
+        let out = run(
+            &self.eval,
+            &[
+                vec_lit(params),
+                images_lit(images, self.eval_batch, self.image_shape)?,
+                labels_lit(labels),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        Ok((f32_scalar(&out[0])?, f32_scalar(&out[1])?))
+    }
+
+    pub fn pullback(&self, x: &[f32], z: &[f32], alpha: f32) -> Result<Vec<f32>> {
+        let out = run(&self.pullback, &[vec_lit(x), vec_lit(z), scalar_lit(alpha)])?;
+        anyhow::ensure!(out.len() == 1, "pullback returned {} outputs", out.len());
+        f32_vec(&out[0])
+    }
+
+    pub fn anchor_update(
+        &self,
+        z: &[f32],
+        v: &[f32],
+        avg: &[f32],
+        beta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = run(
+            &self.anchor,
+            &[vec_lit(z), vec_lit(v), vec_lit(avg), scalar_lit(beta)],
+        )?;
+        anyhow::ensure!(out.len() == 2, "anchor returned {} outputs", out.len());
+        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?))
+    }
+
+    pub fn sgd_update(
+        &self,
+        params: &[f32],
+        mom: &[f32],
+        grad: &[f32],
+        lr: f32,
+        mu: f32,
+        wd: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = run(
+            &self.update,
+            &[
+                vec_lit(params),
+                vec_lit(mom),
+                vec_lit(grad),
+                scalar_lit(lr),
+                scalar_lit(mu),
+                scalar_lit(wd),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 2, "update returned {} outputs", out.len());
+        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?))
+    }
+
+    pub fn adam_update(
+        &self,
+        params: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+        grad: &[f32],
+        lr: f32,
+        t: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let out = run(
+            &self.adam,
+            &[
+                vec_lit(params),
+                vec_lit(m1),
+                vec_lit(m2),
+                vec_lit(grad),
+                scalar_lit(lr),
+                scalar_lit(t),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 3, "adam returned {} outputs", out.len());
+        Ok((f32_vec(&out[0])?, f32_vec(&out[1])?, f32_vec(&out[2])?))
+    }
+}

@@ -1,34 +1,35 @@
-//! Algorithm-level integration tests: every coordinator driver over the real
-//! artifacts, plus the cross-algorithm algebraic identities and timing
-//! invariants the paper's framing implies. Requires `make artifacts`.
-
-use std::path::Path;
+//! Algorithm-level integration tests: every mixing strategy driven through
+//! the round engine, plus the cross-algorithm algebraic identities and
+//! timing invariants the paper's framing implies.
+//!
+//! Runs on the native backend (no artifacts, no PJRT) so `cargo test -q`
+//! exercises the full coordinator on a sealed machine; the identities are
+//! model-independent (they are properties of the *schedules*).
 
 use olsgd::config::{Algo, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, Dataset, GenConfig};
 use olsgd::metrics::TrainLog;
-use olsgd::runtime::{ModelRuntime, Runtime};
+use olsgd::runtime::ModelRuntime;
 use olsgd::simnet::StragglerModel;
 
 struct Fixture {
-    _runtime: Runtime,
     rt: ModelRuntime,
     train: Dataset,
     test: Dataset,
 }
 
 fn fixture() -> Fixture {
-    let runtime = Runtime::new(Path::new("artifacts")).expect("make artifacts first");
-    let rt = runtime.load_model("cnn").unwrap();
+    let rt = ModelRuntime::native("linear").expect("native runtime");
     let gen = GenConfig::default();
     let train = data::generate(1, 256, "train", &gen);
     let test = data::generate(1, 100, "test", &gen);
-    Fixture { rt, _runtime: runtime, train, test }
+    Fixture { rt, train, test }
 }
 
 fn tiny_cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
     cfg.workers = 2;
     cfg.epochs = 2.0;
     cfg.train_n = 256;
@@ -76,6 +77,7 @@ fn runs_are_deterministic_given_seed() {
         assert!((ra.train_loss - rb.train_loss).abs() < 1e-12);
     }
     assert_eq!(a.total_sim_time, b.total_sim_time);
+    assert_eq!(a.digest(), b.digest());
 }
 
 #[test]
@@ -195,4 +197,45 @@ fn eval_cadence_respected() {
     let log = run(&f, &cfg);
     // one record per epoch + final (final coincides with last cadence point)
     assert!(log.records.len() >= 3, "records: {}", log.records.len());
+}
+
+#[test]
+fn overlap_ada_shrinks_tau_monotonically_to_floor() {
+    // Force a plateau every round (threshold 1.0 means no loss drop ever
+    // counts as progress): with patience 1 the controller must halve τ each
+    // round until the floor, and record the schedule in the log.
+    let f = fixture();
+    let mut cfg = tiny_cfg();
+    cfg.algo = Algo::OverlapAda;
+    cfg.tau = 8;
+    cfg.tau_min = 2;
+    cfg.ada_patience = 1;
+    cfg.ada_threshold = 1.0;
+    cfg.epochs = 6.0; // 24 global steps at 4 steps/epoch
+    let log = run(&f, &cfg);
+    assert_eq!(log.steps, 24);
+    assert!(log.final_loss().is_finite());
+    assert!(log.tau_trace.len() >= 3, "tau trace: {:?}", log.tau_trace);
+    assert_eq!(log.tau_trace[0], (0, 8), "trace starts at the configured τ");
+    for pair in log.tau_trace.windows(2) {
+        assert!(pair[1].1 < pair[0].1, "τ must shrink monotonically: {:?}", log.tau_trace);
+        assert!(pair[1].0 > pair[0].0, "trace steps must advance");
+    }
+    assert_eq!(log.tau_trace.last().unwrap().1, 2, "τ must reach tau_min");
+}
+
+#[test]
+fn hetero_tau_runs_end_to_end_for_every_tau_family_algorithm() {
+    let f = fixture();
+    for algo in [Algo::Local, Algo::Overlap, Algo::OverlapM, Algo::OverlapAda, Algo::Cocod] {
+        let mut cfg = tiny_cfg();
+        cfg.algo = algo;
+        cfg.tau = 4;
+        cfg.tau_hetero = true;
+        cfg.straggler = StragglerModel::SlowNode { node: 0, factor: 3.0 };
+        cfg.epochs = 4.0;
+        let log = run(&f, &cfg);
+        assert_eq!(log.steps, 16, "{algo:?} must complete the nominal schedule");
+        assert!(log.final_loss().is_finite(), "{algo:?} diverged under hetero-τ");
+    }
 }

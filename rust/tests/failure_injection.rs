@@ -1,20 +1,41 @@
-//! Failure injection: the system must fail loudly and helpfully, never
-//! silently — corrupted artifacts, shape mismatches, bad configs, and
-//! degenerate workloads.
-
-use std::path::Path;
+//! Failure injection + degraded-cluster scenarios: the system must fail
+//! loudly and helpfully on malformed inputs (corrupted artifacts, shape
+//! mismatches, bad configs), and must *degrade gracefully* on hostile
+//! clusters — slow nodes, τ larger than the run, single-worker clusters —
+//! including the new scenario axes (heterogeneous τ, adaptive τ).
+//!
+//! Artifact-free by default (native backend); the tests that exercise the
+//! PJRT artifact loader are gated on the `pjrt` feature.
 
 use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::metrics::TrainLog;
 use olsgd::runtime::manifest::Manifest;
-use olsgd::runtime::Runtime;
+use olsgd::runtime::ModelRuntime;
+use olsgd::simnet::StragglerModel;
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn missing_artifacts_dir_is_a_clear_error() {
-    let msg = match Runtime::new(Path::new("/nonexistent/artifacts")) {
+    use std::path::Path;
+    let msg = match olsgd::runtime::Runtime::new(Path::new("/nonexistent/artifacts")) {
         Err(e) => format!("{e:#}"),
         Ok(_) => panic!("expected error for missing artifacts dir"),
     };
     assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn unknown_model_is_rejected() {
+    use std::path::Path;
+    let runtime = olsgd::runtime::Runtime::new(Path::new("artifacts")).unwrap();
+    let msg = match runtime.load_model("resnet152") {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected error for unknown model"),
+    };
+    assert!(msg.contains("not in manifest"));
 }
 
 #[test]
@@ -34,8 +55,7 @@ fn corrupted_manifest_is_rejected() {
 
 #[test]
 fn wrong_input_lengths_error_not_panic() {
-    let runtime = Runtime::new(Path::new("artifacts")).expect("make artifacts first");
-    let m = runtime.load_model("cnn").unwrap();
+    let m = ModelRuntime::native("linear").unwrap();
     let short = vec![0.0f32; m.n - 1];
     let ok_mom = vec![0.0f32; m.n];
     let images = vec![0.0f32; m.train_batch * 32 * 32 * 3];
@@ -53,42 +73,38 @@ fn wrong_input_lengths_error_not_panic() {
 }
 
 #[test]
-fn unknown_model_is_rejected() {
-    let runtime = Runtime::new(Path::new("artifacts")).unwrap();
-    let msg = match runtime.load_model("resnet152") {
-        Err(e) => format!("{e:#}"),
-        Ok(_) => panic!("expected error for unknown model"),
-    };
-    assert!(msg.contains("not in manifest"));
-}
-
-#[test]
 fn config_rejects_nonsense() {
     let mut c = ExperimentConfig::default();
     assert!(c.set("algo", "sgdx").is_err());
     assert!(c.set("tau", "-3").is_err());
     assert!(c.set("epochs", "many").is_err());
     assert!(c.set("straggler", "quantum:2").is_err());
+    assert!(c.set("tau_min", "1.5").is_err());
+    assert!(c.set("tau_hetero", "maybe").is_err());
+    assert!(c.set("ada_patience", "-1").is_err());
     assert!(c.set("net", "infiniband").is_ok()); // stored...
     assert!(c.network().is_err()); // ...but rejected at use
+}
+
+fn native_run(cfg: &ExperimentConfig) -> TrainLog {
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    run_experiment(&rt, cfg, &train, &test).unwrap()
 }
 
 #[test]
 fn degenerate_single_worker_runs() {
     // m=1: all collectives are free no-ops; every algorithm must still work.
-    let runtime = Runtime::new(Path::new("artifacts")).unwrap();
-    let rt = runtime.load_model("cnn").unwrap();
-    let gen = olsgd::data::GenConfig::default();
-    let train = olsgd::data::generate(1, 64, "train", &gen);
-    let test = olsgd::data::generate(1, 100, "test", &gen);
-    for algo in [Algo::Sync, Algo::OverlapM, Algo::Cocod] {
+    for algo in [Algo::Sync, Algo::OverlapM, Algo::OverlapAda, Algo::Cocod] {
         let mut cfg = ExperimentConfig::default();
         cfg.workers = 1;
         cfg.epochs = 1.0;
         cfg.train_n = 64;
         cfg.test_n = 100;
         cfg.algo = algo;
-        let log = olsgd::coordinator::run_experiment(&rt, &cfg, &train, &test).unwrap();
+        let log = native_run(&cfg);
         assert!(log.final_loss().is_finite(), "{algo:?} failed with m=1");
         assert_eq!(log.total_idle_s, 0.0);
     }
@@ -96,11 +112,6 @@ fn degenerate_single_worker_runs() {
 
 #[test]
 fn tau_larger_than_total_steps_degrades_gracefully() {
-    let runtime = Runtime::new(Path::new("artifacts")).unwrap();
-    let rt = runtime.load_model("cnn").unwrap();
-    let gen = olsgd::data::GenConfig::default();
-    let train = olsgd::data::generate(1, 128, "train", &gen);
-    let test = olsgd::data::generate(1, 100, "test", &gen);
     let mut cfg = ExperimentConfig::default();
     cfg.workers = 2;
     cfg.epochs = 1.0; // 2 steps per worker
@@ -108,6 +119,81 @@ fn tau_larger_than_total_steps_degrades_gracefully() {
     cfg.test_n = 100;
     cfg.tau = 1000; // way beyond the run
     cfg.algo = Algo::OverlapM;
-    let log = olsgd::coordinator::run_experiment(&rt, &cfg, &train, &test).unwrap();
+    let log = native_run(&cfg);
     assert!(log.steps > 0 && log.final_loss().is_finite());
+}
+
+#[test]
+fn hetero_tau_degenerates_to_uniform_without_stragglers() {
+    // No straggler -> all observed rates equal -> the hetero plan must not
+    // change the schedule (identical digests).
+    let mut uni = ExperimentConfig::default();
+    uni.workers = 4;
+    uni.epochs = 4.0;
+    uni.train_n = 512;
+    uni.test_n = 100;
+    uni.tau = 4;
+    uni.algo = Algo::Local;
+    let mut het = uni.clone();
+    het.tau_hetero = true;
+    let a = native_run(&uni);
+    let b = native_run(&het);
+    assert_eq!(a.digest(), b.digest(), "hetero-τ must be a no-op on a uniform cluster");
+}
+
+/// E9 — the straggler claim, new scenario axis: a `SlowNode` cluster with
+/// heterogeneous τ must show (much) less idle time than with uniform τ,
+/// because the slow node runs proportionally fewer local steps per round
+/// and everyone reaches the blocking boundary at ≈ the same virtual time.
+#[test]
+fn slow_node_with_hetero_tau_idles_less_than_uniform_tau() {
+    let mut uni = ExperimentConfig::default();
+    uni.workers = 4;
+    uni.epochs = 8.0; // 4 steps/epoch at train_n=512/m=4/b=32 -> 8 rounds of τ=4
+    uni.train_n = 512;
+    uni.test_n = 100;
+    uni.tau = 4;
+    uni.algo = Algo::Local;
+    uni.straggler = StragglerModel::SlowNode { node: 0, factor: 3.0 };
+    let mut het = uni.clone();
+    het.tau_hetero = true;
+
+    let lu = native_run(&uni);
+    let lh = native_run(&het);
+    assert!(lu.total_idle_s > 0.0, "uniform τ must idle at the barrier");
+    assert!(
+        lh.total_idle_s < 0.5 * lu.total_idle_s,
+        "hetero-τ did not mitigate the straggler: idle {} vs uniform {}",
+        lh.total_idle_s,
+        lu.total_idle_s
+    );
+    // Mitigation also shows up as wall-clock: the hetero run finishes sooner.
+    assert!(lh.total_sim_time < lu.total_sim_time);
+    assert!(lh.final_loss().is_finite());
+}
+
+/// Same axis on the non-blocking family: with a slow node, hetero-τ reduces
+/// the collective's late start, so the overlapped run blocks less and ends
+/// sooner.
+#[test]
+fn slow_node_with_hetero_tau_speeds_up_overlap() {
+    let mut uni = ExperimentConfig::default();
+    uni.workers = 4;
+    uni.epochs = 8.0;
+    uni.train_n = 512;
+    uni.test_n = 100;
+    uni.tau = 4;
+    uni.algo = Algo::OverlapM;
+    uni.straggler = StragglerModel::SlowNode { node: 0, factor: 3.0 };
+    let mut het = uni.clone();
+    het.tau_hetero = true;
+
+    let lu = native_run(&uni);
+    let lh = native_run(&het);
+    assert!(
+        lh.total_sim_time < lu.total_sim_time,
+        "hetero-τ must shorten the straggled overlap run: {} vs {}",
+        lh.total_sim_time,
+        lu.total_sim_time
+    );
 }

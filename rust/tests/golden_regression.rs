@@ -1,0 +1,486 @@
+//! Golden regression: the round-engine refactor must be *behavior
+//! preserving*, bit for bit.
+//!
+//! The seed's per-driver lockstep loops are preserved here verbatim as
+//! reference implementations (built only from public coordinator API). For
+//! every algorithm we run a tiny fixed-seed config through BOTH the engine
+//! (`coordinator::run`) and the reference loop and assert equal
+//! [`TrainLog::digest`]s — covering the loss trace, eval records, virtual
+//! timing (sim_time / compute / comm_blocked / idle), and byte accounting.
+//! Future PRs that touch the engine cannot silently drift any observable.
+
+use olsgd::clock::Clocks;
+use olsgd::collective::{ring_allreduce_mean, start_allreduce, NonBlockingAllReduce};
+use olsgd::compress::PowerSgd;
+use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::coordinator::engine::PULLBACK_S;
+use olsgd::coordinator::{make_shards, run_experiment, Recorder, TrainContext, Workers};
+use olsgd::data::{self, Dataset, GenConfig};
+use olsgd::metrics::TrainLog;
+use olsgd::model::vecmath;
+use olsgd::optim::LrSchedule;
+use olsgd::runtime::ModelRuntime;
+use olsgd::simnet::StragglerModel;
+
+type R<T> = anyhow::Result<T>;
+
+fn make_ctx<'a>(
+    rt: &'a ModelRuntime,
+    cfg: &'a ExperimentConfig,
+    train: &'a Dataset,
+    test: &'a Dataset,
+) -> TrainContext<'a> {
+    // Mirrors coordinator::run_experiment's context assembly.
+    let shards = make_shards(cfg, train);
+    let steps_per_epoch = (shards[0].len() / rt.train_batch).max(1);
+    let cluster = cfg.cluster(rt.n * 4).unwrap();
+    let schedule = LrSchedule::paper_scaled(cfg.base_lr, cfg.epochs, steps_per_epoch);
+    TrainContext { rt, cfg, cluster, schedule, train, test, shards }
+}
+
+// ---------------------------------------------------------------------------
+// Reference drivers — the seed's lockstep loops, verbatim.
+// ---------------------------------------------------------------------------
+
+fn ref_sync(ctx: &TrainContext) -> R<TrainLog> {
+    let m = ctx.cfg.workers;
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let total = ctx.total_steps();
+    let comm_t = ctx.cluster.allreduce_time();
+
+    for k in 0..total {
+        let mut grads = Vec::with_capacity(m);
+        let mut loss_sum = 0.0;
+        for w in 0..m {
+            let (loss, g) = workers.local_grad(w, ctx, &mut clocks)?;
+            loss_sum += loss;
+            grads.push(g);
+        }
+        clocks.barrier();
+        for w in 0..m {
+            clocks.comm_blocked(w, comm_t);
+        }
+        ring_allreduce_mean(&mut grads);
+        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+
+        let lr = ctx.schedule.lr_at_step(k);
+        let (p, mom) = ctx.rt.sgd_update(
+            &workers.params[0],
+            &workers.mom[0],
+            &grads[0],
+            lr,
+            ctx.cfg.mu,
+            ctx.cfg.wd,
+        )?;
+        for w in 0..m {
+            workers.params[w].copy_from_slice(&p);
+            workers.mom[w].copy_from_slice(&mom);
+        }
+
+        rec.push_loss(k, loss_sum / m as f64);
+        rec.maybe_eval(k + 1, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}
+
+fn ref_powersgd(ctx: &TrainContext) -> R<TrainLog> {
+    const GEMM_FLOPS: f64 = 5.0e12;
+
+    let m = ctx.cfg.workers;
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let mut psgd = PowerSgd::new(&ctx.rt.manifest, ctx.cfg.rank, m, ctx.cfg.seed);
+    let total = ctx.total_steps();
+
+    let full_bytes = ctx.rt.manifest.message_bytes();
+    let frac = psgd.bytes_per_round() as f64 / full_bytes as f64;
+    let scaled_bytes = (ctx.cluster.message_bytes as f64 * frac) as usize;
+    let comm_t = ctx.cluster.net.allreduce_time(scaled_bytes, m);
+
+    for k in 0..total {
+        let mut grads = Vec::with_capacity(m);
+        let mut loss_sum = 0.0;
+        for w in 0..m {
+            let (loss, g) = workers.local_grad(w, ctx, &mut clocks)?;
+            loss_sum += loss;
+            grads.push(g);
+        }
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let out = psgd.round(&grad_refs);
+
+        let enc_t =
+            out.encode_flops * (full_bytes as f64 / (ctx.rt.n * 4) as f64).max(1.0) / GEMM_FLOPS;
+        for w in 0..m {
+            clocks.compute(w, enc_t);
+        }
+        clocks.barrier();
+        for w in 0..m {
+            clocks.comm_blocked(w, comm_t);
+        }
+        rec.add_bytes((m * scaled_bytes) as u64);
+
+        let lr = ctx.schedule.lr_at_step(k);
+        let (p, mom) = ctx.rt.sgd_update(
+            &workers.params[0],
+            &workers.mom[0],
+            &out.avg_grad,
+            lr,
+            ctx.cfg.mu,
+            ctx.cfg.wd,
+        )?;
+        for w in 0..m {
+            workers.params[w].copy_from_slice(&p);
+            workers.mom[w].copy_from_slice(&mom);
+        }
+
+        rec.push_loss(k, loss_sum / m as f64);
+        rec.maybe_eval(k + 1, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}
+
+fn ref_local(ctx: &TrainContext) -> R<TrainLog> {
+    let m = ctx.cfg.workers;
+    let tau = ctx.cfg.tau.max(1);
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let total = ctx.total_steps();
+    let comm_t = ctx.cluster.allreduce_time();
+
+    let mut k = 0;
+    while k < total {
+        let steps = tau.min(total - k);
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0;
+        for w in 0..m {
+            for s in 0..steps {
+                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
+                loss_n += 1;
+            }
+        }
+        k += steps;
+
+        clocks.barrier();
+        for w in 0..m {
+            clocks.comm_blocked(w, comm_t);
+        }
+        ring_allreduce_mean(&mut workers.params);
+        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+
+        rec.push_loss(k - 1, loss_sum / loss_n as f64);
+        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}
+
+fn ref_overlap(ctx: &TrainContext, beta: f32) -> R<TrainLog> {
+    let m = ctx.cfg.workers;
+    let tau = ctx.cfg.tau.max(1);
+    let alpha = ctx.cfg.alpha;
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let total = ctx.total_steps();
+
+    let mut z = workers.params[0].clone();
+    let mut v = vec![0.0f32; ctx.rt.n];
+    let mut pending: Option<NonBlockingAllReduce> = None;
+
+    let mut k = 0;
+    while k < total {
+        let steps = tau.min(total - k);
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0;
+        for w in 0..m {
+            for s in 0..steps {
+                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
+                loss_n += 1;
+            }
+        }
+        k += steps;
+
+        if let Some(h) = pending.take() {
+            for w in 0..m {
+                clocks.wait_comm_until(w, h.ready_at());
+            }
+            let (z2, v2) = ctx.rt.anchor_update(&z, &v, &h.result, beta)?;
+            z = z2;
+            v = v2;
+        }
+
+        for w in 0..m {
+            workers.params[w] = ctx.rt.pullback(&workers.params[w], &z, alpha)?;
+            clocks.compute(w, PULLBACK_S);
+        }
+
+        let start = (0..m).map(|w| clocks.now(w)).fold(0.0, f64::max);
+        let refs: Vec<&[f32]> = workers.params.iter().map(|p| p.as_slice()).collect();
+        pending = Some(start_allreduce(
+            &refs,
+            &ctx.cluster.net,
+            ctx.cluster.message_bytes,
+            start,
+        ));
+        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+
+        rec.push_loss(k - 1, loss_sum / loss_n as f64);
+        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}
+
+fn ref_elastic(ctx: &TrainContext, mu: f32) -> R<TrainLog> {
+    let m = ctx.cfg.workers;
+    let tau = ctx.cfg.tau.max(1);
+    let alpha = ctx.cfg.alpha;
+    let comm_t = ctx.cluster.allreduce_time();
+
+    let mut cfg = ctx.cfg.clone();
+    cfg.mu = mu;
+    let ctx = TrainContext {
+        rt: ctx.rt,
+        cfg: &cfg,
+        cluster: ctx.cluster.clone(),
+        schedule: ctx.schedule.clone(),
+        train: ctx.train,
+        test: ctx.test,
+        shards: ctx.shards.clone(),
+    };
+    let ctx = &ctx;
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let total = ctx.total_steps();
+
+    let mut z = workers.params[0].clone();
+
+    let mut k = 0;
+    while k < total {
+        let steps = tau.min(total - k);
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0;
+        for w in 0..m {
+            for s in 0..steps {
+                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
+                loss_n += 1;
+            }
+        }
+        k += steps;
+
+        clocks.barrier();
+        for w in 0..m {
+            clocks.comm_blocked(w, comm_t);
+        }
+        let avg = workers.mean_params();
+        for w in 0..m {
+            vecmath::pullback_inplace(&mut workers.params[w], &z, alpha);
+        }
+        vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut z);
+        rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+
+        rec.push_loss(k - 1, loss_sum / loss_n as f64);
+        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}
+
+fn ref_cocod(ctx: &TrainContext) -> R<TrainLog> {
+    let m = ctx.cfg.workers;
+    let tau = ctx.cfg.tau.max(1);
+    let mut workers = Workers::new(ctx);
+    let mut clocks = Clocks::new(m);
+    let mut rec = Recorder::new(ctx);
+    let total = ctx.total_steps();
+
+    let mut snapshots: Vec<Vec<f32>> = workers.params.clone();
+
+    let mut k = 0;
+    while k < total {
+        let pending: NonBlockingAllReduce = {
+            let refs: Vec<&[f32]> = workers.params.iter().map(|p| p.as_slice()).collect();
+            let start = (0..m).map(|w| clocks.now(w)).fold(0.0, f64::max);
+            rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+            snapshots.clone_from(&workers.params);
+            start_allreduce(&refs, &ctx.cluster.net, ctx.cluster.message_bytes, start)
+        };
+
+        let steps = tau.min(total - k);
+        let mut loss_sum = 0.0;
+        let mut loss_n = 0;
+        for w in 0..m {
+            for s in 0..steps {
+                loss_sum += workers.local_step(w, ctx, &mut clocks, k + s)?;
+                loss_n += 1;
+            }
+        }
+        k += steps;
+
+        let h = pending;
+        for w in 0..m {
+            clocks.wait_comm_until(w, h.ready_at());
+            let p = &mut workers.params[w];
+            let snap = &snapshots[w];
+            for i in 0..p.len() {
+                p[i] = h.result[i] + (p[i] - snap[i]);
+            }
+        }
+
+        rec.push_loss(k - 1, loss_sum / loss_n as f64);
+        rec.maybe_eval(k, ctx, &workers, &clocks)?;
+    }
+    rec.force_eval(total, ctx, &workers, &clocks)?;
+    Ok(rec.finish(ctx, &clocks, total))
+}
+
+// ---------------------------------------------------------------------------
+// The golden assertions
+// ---------------------------------------------------------------------------
+
+fn golden_cfg(straggler: &StragglerModel) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
+    cfg.workers = 3;
+    cfg.epochs = 2.0;
+    cfg.train_n = 192; // 64/shard -> 2 steps/epoch -> 4 global steps
+    cfg.test_n = 100;
+    cfg.eval_every = 1.0;
+    cfg.tau = 2;
+    cfg.rank = 2;
+    cfg.straggler = straggler.clone();
+    cfg
+}
+
+fn reference_log(ctx: &TrainContext) -> TrainLog {
+    match ctx.cfg.algo {
+        Algo::Sync => ref_sync(ctx),
+        Algo::PowerSgd => ref_powersgd(ctx),
+        Algo::Local => ref_local(ctx),
+        Algo::Overlap => ref_overlap(ctx, 0.0),
+        Algo::OverlapM => ref_overlap(ctx, ctx.cfg.beta),
+        Algo::Easgd => ref_elastic(ctx, 0.0),
+        Algo::Eamsgd => ref_elastic(ctx, ctx.cfg.mu),
+        Algo::Cocod => ref_cocod(ctx),
+        Algo::OverlapAda => unreachable!("new axis; no legacy reference"),
+    }
+    .unwrap()
+}
+
+#[test]
+fn engine_matches_legacy_lockstep_loops_for_all_eight_algorithms() {
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    let legacy = [
+        Algo::Sync,
+        Algo::PowerSgd,
+        Algo::Local,
+        Algo::Overlap,
+        Algo::OverlapM,
+        Algo::Easgd,
+        Algo::Eamsgd,
+        Algo::Cocod,
+    ];
+    for straggler in [StragglerModel::None, StragglerModel::UniformJitter { jitter: 0.2 }] {
+        for algo in legacy {
+            let mut cfg = golden_cfg(&straggler);
+            cfg.algo = algo;
+            let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+            let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+            let engine_log = run_experiment(&rt, &cfg, &train, &test).unwrap();
+            let ctx = make_ctx(&rt, &cfg, &train, &test);
+            let ref_log = reference_log(&ctx);
+
+            assert_eq!(
+                engine_log.digest(),
+                ref_log.digest(),
+                "{algo:?} ({straggler:?}): engine drifted from the legacy loop\n\
+                 engine: steps={} bytes={} sim={} comm={} idle={}\n\
+                 legacy: steps={} bytes={} sim={} comm={} idle={}",
+                engine_log.steps,
+                engine_log.bytes_sent,
+                engine_log.total_sim_time,
+                engine_log.total_comm_blocked_s,
+                engine_log.total_idle_s,
+                ref_log.steps,
+                ref_log.bytes_sent,
+                ref_log.total_sim_time,
+                ref_log.total_comm_blocked_s,
+                ref_log.total_idle_s,
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_ada_with_inert_controller_matches_overlap_m_observables() {
+    // With an effectively-infinite patience the adaptive controller never
+    // fires, so overlap-ada must produce overlap-m's exact observables
+    // (modulo the algo name and the τ-trace bookkeeping entry).
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    let mut cfg = golden_cfg(&StragglerModel::None);
+    cfg.algo = Algo::OverlapAda;
+    cfg.ada_patience = usize::MAX;
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    let ada = run_experiment(&rt, &cfg, &train, &test).unwrap();
+
+    let mut cfg_m = cfg.clone();
+    cfg_m.algo = Algo::OverlapM;
+    let m = run_experiment(&rt, &cfg_m, &train, &test).unwrap();
+
+    assert_eq!(ada.steps, m.steps);
+    assert_eq!(ada.bytes_sent, m.bytes_sent);
+    assert_eq!(ada.total_sim_time.to_bits(), m.total_sim_time.to_bits());
+    assert_eq!(ada.total_compute_s.to_bits(), m.total_compute_s.to_bits());
+    assert_eq!(
+        ada.total_comm_blocked_s.to_bits(),
+        m.total_comm_blocked_s.to_bits()
+    );
+    assert_eq!(ada.step_losses.len(), m.step_losses.len());
+    for (a, b) in ada.step_losses.iter().zip(&m.step_losses) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+    }
+    for (a, b) in ada.records.iter().zip(&m.records) {
+        assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+    }
+    assert_eq!(ada.tau_trace, vec![(0, cfg.tau)], "inert controller records only τ0");
+    assert!(m.tau_trace.is_empty());
+}
+
+#[test]
+fn golden_digests_are_reproducible_across_processes_inputs() {
+    // The digest must not depend on incidental state (allocation, ordering
+    // of independent runs): interleave two configs and re-run.
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    let mut first = Vec::new();
+    let mut second = Vec::new();
+    for pass in 0..2 {
+        for algo in [Algo::Sync, Algo::OverlapM, Algo::Cocod] {
+            let mut cfg = golden_cfg(&StragglerModel::ShiftedExp { scale: 0.3 });
+            cfg.algo = algo;
+            let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+            let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+            let d = run_experiment(&rt, &cfg, &train, &test).unwrap().digest();
+            if pass == 0 {
+                first.push(d);
+            } else {
+                second.push(d);
+            }
+        }
+    }
+    assert_eq!(first, second, "digests must be a pure function of the config");
+    assert_ne!(first[0], first[1], "different algorithms must not collide");
+}

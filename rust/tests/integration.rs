@@ -1,5 +1,8 @@
 //! Integration tests over the real AOT artifacts: python-lowered HLO ->
-//! PJRT execution -> Rust coordinator substrates. Requires `make artifacts`.
+//! PJRT execution -> Rust coordinator substrates. Requires the `pjrt`
+//! feature and `make artifacts`; compiled out otherwise (the artifact-free
+//! equivalents live in runtime::tests and tests/algorithms.rs).
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

@@ -1,0 +1,235 @@
+//! Offline stand-in for the `anyhow` crate (the sealed build environment has
+//! no registry). Implements the API surface this workspace actually uses —
+//! `Result`, a context-carrying `Error`, the `Context` extension trait, and
+//! the `anyhow!` / `bail!` / `ensure!` macros — with the same semantics:
+//!
+//! * `{}` displays the outermost message;
+//! * `{:#}` displays the whole chain, `outer: inner: root`;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A context-carrying error: the outermost message plus a cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `self` under a new outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        items.into_iter()
+    }
+
+    /// The innermost (root) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(e) = &cur.source {
+            cur = e;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = &self.source;
+        let mut first = true;
+        while let Some(e) = cur {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std error chain into our context chain.
+        let mut msgs = vec![e.to_string()];
+        let mut cur: Option<&dyn StdError> = e.source();
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error { msg: it.next().unwrap_or_default(), source: None };
+        for m in it {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Context::context(
+            std::result::Result::<(), _>::Err(io_err()),
+            "reading config",
+        )
+        .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "x".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(ok: bool) -> Result<u8> {
+            ensure!(ok, "flag was {}", ok);
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        let e = f(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        let e2 = anyhow!("code {}", 7);
+        assert_eq!(format!("{e2}"), "code 7");
+    }
+
+    #[test]
+    fn chain_and_root() {
+        let e = anyhow!("root").context("mid").context("outer");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "mid", "root"]);
+        assert_eq!(e.root_cause(), "root");
+    }
+}
