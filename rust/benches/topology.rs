@@ -1,0 +1,84 @@
+//! **Topology ablation** (E10): wall-clock across communication graphs on
+//! the paper's 16-node cluster, at 40 and 10 Gbps, straggler off and on.
+//!
+//! What the table shows (EXPERIMENTS.md E10):
+//!
+//! * blocking `local` pays each topology's collective on the critical path —
+//!   the chunked ring wins at the 44.7 MB message size, and the gap widens
+//!   on the slow wire (the unchunked tree pushes full messages per hop);
+//! * both overlap variants hide their exchange completely at τ = 2;
+//! * with a 3× slow node, `overlap-gossip` blocks only the straggler's
+//!   graph neighborhood per round instead of the whole ring — strictly less
+//!   blocked-communication time at equal τ (asserted in
+//!   rust/tests/topology.rs).
+
+use anyhow::Result;
+use olsgd::bench::experiments::{row, BenchCtx};
+use olsgd::config::Algo;
+use olsgd::simnet::StragglerModel;
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("topology")?;
+    ctx.base.workers = 16;
+    ctx.base.tau = 2;
+    let epochs = ctx.base.epochs;
+
+    let legs: [(&str, Algo, &str); 5] = [
+        ("local ring", Algo::Local, "ring"),
+        ("local hier(4)", Algo::Local, "hier"),
+        ("local tree", Algo::Local, "tree"),
+        ("overlap ring", Algo::Overlap, "ring"),
+        ("overlap-gossip k=4", Algo::OverlapGossip, "ring"), // derives its own graph
+    ];
+
+    let mut rows = Vec::new();
+    for (net, straggler) in [
+        ("paper40g", None),
+        ("slow10g", None),
+        ("paper40g", Some(StragglerModel::SlowNode { node: 0, factor: 3.0 })),
+    ] {
+        let strag_tag = if straggler.is_some() { "slow-node 3x" } else { "uniform" };
+        println!("\n=== topologies @ {net}, {strag_tag} (m=16, tau=2) ===");
+        println!(
+            "{:<20} {:>8} {:>11} {:>14} {:>12} {:>10} {:>10}",
+            "series", "acc%", "test_loss", "time/epoch(s)", "blocked(s)", "idle(s)", "comm%"
+        );
+        for (label, algo, topology) in legs {
+            let tag = format!("{}_{}_{}", label.replace(' ', "_"), net, strag_tag.replace(' ', "_"));
+            let log = ctx.run_leg(&tag, |c| {
+                c.algo = algo;
+                c.topology = topology.into();
+                c.net_preset = net.into();
+                c.gossip_degree = 4;
+                c.hier_groups = 4;
+                if let Some(s) = straggler.clone() {
+                    c.straggler = s;
+                }
+            })?;
+            println!(
+                "{:<20} {:>8.2} {:>11.4} {:>14.3} {:>12.2} {:>10.2} {:>9.1}%",
+                label,
+                100.0 * log.final_acc(),
+                log.final_loss(),
+                log.time_per_epoch(epochs),
+                log.total_comm_blocked_s,
+                log.total_idle_s,
+                100.0 * log.comm_ratio()
+            );
+            if log.neighbor_bytes.iter().any(|&b| b > 0) {
+                let (min, max) = (
+                    log.neighbor_bytes.iter().min().copied().unwrap_or(0),
+                    log.neighbor_bytes.iter().max().copied().unwrap_or(0),
+                );
+                println!(
+                    "    per-worker neighbor bytes: min {:.1} MB, max {:.1} MB",
+                    min as f64 / 1e6,
+                    max as f64 / 1e6
+                );
+            }
+            rows.push(row(&format!("{label} @ {net} {strag_tag}"), algo, 2, &log, epochs));
+        }
+    }
+    ctx.write_summary("summary.json", rows)?;
+    Ok(())
+}

@@ -20,6 +20,7 @@
 use std::thread;
 
 use crate::simnet::NetworkModel;
+use crate::topology::Topology;
 
 /// In-place chunked ring all-reduce (mean) across `m` equal-length buffers.
 ///
@@ -123,20 +124,38 @@ impl NonBlockingAllReduce {
 
 /// Launch a (virtually) non-blocking mean all-reduce of the workers'
 /// vectors. The data plane runs the real ring schedule; the timing plane
-/// stamps the completion with the simnet cost.
+/// stamps the completion with the simnet cost. (The seed's entrypoint —
+/// kept as the ring special case of [`start_collective`].)
 pub fn start_allreduce(
     inputs: &[&[f32]],
     net: &NetworkModel,
     message_bytes: usize,
     start_time: f64,
 ) -> NonBlockingAllReduce {
+    start_collective(&Topology::ring(inputs.len()), inputs, net, message_bytes, start_time)
+}
+
+/// Launch a non-blocking exact collective on an arbitrary topology: the data
+/// plane runs the topology's real reduce schedule (ring / hierarchical /
+/// tree — all exact, so one result vector serves every worker), the timing
+/// plane stamps the completion with the topology's cost formula. Gossip is
+/// not an exact collective and has its own launcher in
+/// `coordinator::gossip`.
+pub fn start_collective(
+    topo: &Topology,
+    inputs: &[&[f32]],
+    net: &NetworkModel,
+    message_bytes: usize,
+    start_time: f64,
+) -> NonBlockingAllReduce {
+    assert_eq!(inputs.len(), topo.m, "participant count != topology size");
     let mut buffers: Vec<Vec<f32>> = inputs.iter().map(|v| v.to_vec()).collect();
-    ring_allreduce_mean(&mut buffers);
+    topo.allreduce_mean(&mut buffers);
     let result = buffers.into_iter().next().expect("non-empty");
     NonBlockingAllReduce {
         result,
         start_time,
-        duration: net.allreduce_time(message_bytes, inputs.len()),
+        duration: topo.collective_time(net, message_bytes),
     }
 }
 
@@ -218,6 +237,25 @@ mod tests {
                 assert_close(b, &want, 1e-4, 1e-5);
             }
         });
+    }
+
+    #[test]
+    fn start_collective_is_exact_on_every_topology() {
+        let net = NetworkModel::paper_40gbps();
+        let inputs: Vec<Vec<f32>> = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![5.0, 4.0, 3.0],
+            vec![0.0, -6.0, 9.0],
+            vec![2.0, 8.0, 1.0],
+        ];
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let want = vecmath::mean(&refs);
+        for topo in [Topology::ring(4), Topology::hier(4, 2), Topology::tree(4)] {
+            let h = start_collective(&topo, &refs, &net, 1 << 20, 3.0);
+            assert_close(&h.result, &want, 1e-5, 1e-6);
+            assert_eq!(h.duration, topo.collective_time(&net, 1 << 20));
+            assert_eq!(h.start_time, 3.0);
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod toml;
 use anyhow::{bail, Context, Result};
 
 use crate::simnet::{ClusterModel, ComputeModel, NetworkModel, StragglerModel};
+use crate::topology::{Topology, TopologyKind};
 
 /// Which algorithm drives the run (see coordinator/).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,6 +22,9 @@ pub enum Algo {
     OverlapM,
     /// Overlap-m with the AdaComm-style adaptive-τ controller.
     OverlapAda,
+    /// Decentralized overlap: per-worker anchors pulled toward push-sum
+    /// neighbor averages on the gossip topology (DESIGN.md §8, E10).
+    OverlapGossip,
     Easgd,
     Eamsgd,
     Cocod,
@@ -35,12 +39,13 @@ impl Algo {
             "overlap" => Algo::Overlap,
             "overlap-m" | "overlap_m" | "overlapm" => Algo::OverlapM,
             "overlap-ada" | "overlap_ada" | "overlapada" => Algo::OverlapAda,
+            "overlap-gossip" | "overlap_gossip" | "overlapgossip" => Algo::OverlapGossip,
             "easgd" => Algo::Easgd,
             "eamsgd" => Algo::Eamsgd,
             "cocod" => Algo::Cocod,
             "powersgd" => Algo::PowerSgd,
             _ => bail!(
-                "unknown algorithm '{s}' (want sync|local|overlap|overlap-m|overlap-ada|easgd|eamsgd|cocod|powersgd)"
+                "unknown algorithm '{s}' (want sync|local|overlap|overlap-m|overlap-ada|overlap-gossip|easgd|eamsgd|cocod|powersgd)"
             ),
         })
     }
@@ -52,6 +57,7 @@ impl Algo {
             Algo::Overlap => "overlap",
             Algo::OverlapM => "overlap-m",
             Algo::OverlapAda => "overlap-ada",
+            Algo::OverlapGossip => "overlap-gossip",
             Algo::Easgd => "easgd",
             Algo::Eamsgd => "eamsgd",
             Algo::Cocod => "cocod",
@@ -66,6 +72,7 @@ impl Algo {
             Algo::Overlap,
             Algo::OverlapM,
             Algo::OverlapAda,
+            Algo::OverlapGossip,
             Algo::Easgd,
             Algo::Eamsgd,
             Algo::Cocod,
@@ -116,8 +123,14 @@ pub struct ExperimentConfig {
     pub dominant_frac: f64,
     pub reshuffle: bool,
 
-    // cluster timing
+    // cluster timing + communication graph
     pub net_preset: String,
+    /// communication topology: ring | hier | tree | gossip (DESIGN.md §8)
+    pub topology: String,
+    /// gossip graph degree (k-regular; clamped to a connected range)
+    pub gossip_degree: usize,
+    /// number of groups in the hierarchical two-level ring
+    pub hier_groups: usize,
     pub straggler: StragglerModel,
     pub base_step_s: f64,
     /// None -> paper ResNet-18 message size (44.7 MB); Some(0) -> actual
@@ -158,6 +171,9 @@ impl Default for ExperimentConfig {
             dominant_frac: 0.64,
             reshuffle: true,
             net_preset: "paper40g".into(),
+            topology: "ring".into(),
+            gossip_degree: 4,
+            hier_groups: 4,
             straggler: StragglerModel::None,
             base_step_s: 0.188,
             message_bytes: None,
@@ -212,6 +228,9 @@ impl ExperimentConfig {
             "data.dominant_frac" | "dominant_frac" => self.dominant_frac = parse_f64()?,
             "data.reshuffle" | "reshuffle" => self.reshuffle = parse_bool()?,
             "net.preset" | "net" => self.net_preset = v.to_string(),
+            "topology" | "net.topology" | "topo" => self.topology = v.to_string(),
+            "gossip_degree" | "net.gossip_degree" => self.gossip_degree = parse_usize()?,
+            "hier_groups" | "net.hier_groups" => self.hier_groups = parse_usize()?,
             "net.base_step_s" | "base_step_s" => self.base_step_s = parse_f64()?,
             "net.message_bytes" | "message_bytes" => {
                 self.message_bytes = Some(parse_usize()?)
@@ -263,6 +282,42 @@ impl ExperimentConfig {
         })
     }
 
+    /// The configured communication graph (validated here so bad specs fail
+    /// before any training state exists). An *explicitly* requested gossip
+    /// topology must be feasible as asked — a silently altered degree would
+    /// skew every byte/time observable against the recorded config. (The
+    /// auto-derived graph of `--algo overlap-gossip` on the default ring
+    /// clamps instead; see `coordinator::gossip`.)
+    pub fn topology(&self) -> Result<Topology> {
+        let t = Topology::from_spec(
+            &self.topology,
+            self.workers,
+            self.gossip_degree,
+            self.hier_groups,
+            self.seed,
+        )?;
+        if t.kind == TopologyKind::Gossip && t.degree() != self.gossip_degree {
+            bail!(
+                "gossip_degree {} is infeasible for {} workers (m = 2 admits only k = 1; \
+                 otherwise a connected k-regular graph needs 2 <= k <= m-1, with odd k \
+                 requiring even m; nearest feasible here: {}) — set a feasible \
+                 gossip_degree, or use the default ring topology with --algo \
+                 overlap-gossip to derive one automatically",
+                self.gossip_degree,
+                self.workers,
+                t.degree()
+            );
+        }
+        if t.kind == TopologyKind::Hier && t.group_bounds().len() != self.hier_groups {
+            bail!(
+                "hier_groups {} is infeasible for {} workers (need 1 <= groups <= m)",
+                self.hier_groups,
+                self.workers
+            );
+        }
+        Ok(t)
+    }
+
     /// Assemble the cluster timing model; `actual_model_bytes` is used when
     /// `message_bytes = 0` is requested.
     pub fn cluster(&self, actual_model_bytes: usize) -> Result<ClusterModel> {
@@ -279,6 +334,7 @@ impl ExperimentConfig {
                 straggler: self.straggler.clone(),
             },
             message_bytes,
+            topology: self.topology()?,
         })
     }
 }
@@ -326,7 +382,37 @@ mod tests {
         for a in Algo::all() {
             assert_eq!(Algo::parse(a.name()).unwrap(), *a);
         }
-        assert_eq!(Algo::all().len(), 9);
+        assert_eq!(Algo::all().len(), 10);
+    }
+
+    #[test]
+    fn topology_keys_parse_and_validate() {
+        use crate::topology::TopologyKind;
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.topology().unwrap().kind, TopologyKind::Ring);
+        c.set("topology", "gossip").unwrap();
+        c.set("gossip_degree", "6").unwrap();
+        c.set("hier_groups", "2").unwrap();
+        assert_eq!(c.gossip_degree, 6);
+        assert_eq!(c.hier_groups, 2);
+        let t = c.topology().unwrap();
+        assert_eq!(t.kind, TopologyKind::Gossip);
+        assert_eq!(t.degree(), 6);
+        assert_eq!(c.cluster(100).unwrap().topology.kind, TopologyKind::Gossip);
+        c.set("topology", "hier").unwrap();
+        assert_eq!(c.topology().unwrap().group_bounds().len(), 2);
+        // Infeasible explicit shapes are hard errors, not silent clamps.
+        c.set("topology", "gossip").unwrap();
+        c.set("gossip_degree", "1").unwrap(); // m=8 needs k >= 2
+        assert!(c.topology().is_err());
+        c.set("topology", "hier").unwrap();
+        c.set("hier_groups", "16").unwrap(); // > m=8 workers
+        assert!(c.topology().is_err());
+        c.set("hier_groups", "0").unwrap();
+        assert!(c.topology().is_err());
+        c.set("topology", "moebius").unwrap(); // stored...
+        assert!(c.topology().is_err()); // ...but rejected at use
+        assert!(c.set("gossip_degree", "many").is_err());
     }
 
     #[test]

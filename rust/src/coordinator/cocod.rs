@@ -20,8 +20,8 @@
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::TrainContext;
-use crate::collective::{start_allreduce, NonBlockingAllReduce};
+use super::{account_collective, TrainContext};
+use crate::collective::{start_collective, NonBlockingAllReduce};
 
 /// Delta-on-stale-average mixing with a non-blocking collective.
 #[derive(Default)]
@@ -44,14 +44,14 @@ impl MixingStrategy for CocodStrategy {
     }
 
     fn before_local(&mut self, eng: &mut Engine, ctx: &TrainContext) -> Result<()> {
-        // Launch the all-reduce of the boundary models; it runs under the
-        // round's compute.
-        let m = eng.workers.m;
+        // Launch the collective of the boundary models on the configured
+        // exact topology; it runs under the round's compute.
         let start = eng.clocks.max_now();
-        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         self.snapshots.clone_from(&eng.workers.params);
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
-        self.pending = Some(start_allreduce(
+        self.pending = Some(start_collective(
+            &ctx.cluster.topology,
             &refs,
             &ctx.cluster.net,
             ctx.cluster.message_bytes,

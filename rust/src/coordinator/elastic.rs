@@ -22,11 +22,13 @@
 use anyhow::Result;
 
 use super::engine::{self, plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::TrainContext;
+use super::{account_collective, TrainContext};
 use crate::metrics::TrainLog;
 use crate::model::vecmath;
 
-/// Blocking symmetric elastic exchange every τ steps.
+/// Blocking symmetric elastic exchange every τ steps. The exchange cost
+/// follows the configured exact topology; the center average itself is the
+/// exact mean (which every exact topology produces).
 pub struct ElasticStrategy {
     comm_t: f64,
     /// center variable, same init as the replicas
@@ -35,7 +37,7 @@ pub struct ElasticStrategy {
 
 impl ElasticStrategy {
     pub fn new(ctx: &TrainContext) -> Self {
-        Self { comm_t: ctx.cluster.allreduce_time(), z: Vec::new() }
+        Self { comm_t: ctx.cluster.collective_time(), z: Vec::new() }
     }
 }
 
@@ -63,7 +65,7 @@ impl MixingStrategy for ElasticStrategy {
             vecmath::pullback_inplace(&mut eng.workers.params[w], &self.z, alpha);
         }
         vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut self.z);
-        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         Ok(())
     }
 }

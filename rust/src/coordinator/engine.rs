@@ -31,7 +31,7 @@
 //!   so a straggler runs fewer local steps and every worker reaches the
 //!   round boundary at ≈ the same virtual time (E9).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::{Recorder, TrainContext, Workers};
 use crate::clock::Clocks;
@@ -55,7 +55,8 @@ pub enum LocalPhase {
 /// Per-round work assignment produced by a strategy's `plan`.
 #[derive(Clone, Debug)]
 pub struct RoundPlan {
-    /// Local steps for each worker this round.
+    /// Local steps for each worker this round (each in `[1, advance]`,
+    /// enforced by [`run`]).
     pub steps: Vec<usize>,
     /// How far the global step counter advances (the nominal τ, capped by
     /// the steps remaining; `steps[w] <= advance` for every worker).
@@ -186,7 +187,31 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
     while eng.k < eng.total {
         strategy.before_local(&mut eng, ctx)?;
         let plan = strategy.plan(&eng, ctx);
-        debug_assert_eq!(plan.steps.len(), eng.workers.m, "plan must cover all workers");
+        // Plan validation is a *hard* error in every profile: a ragged or
+        // over-advancing plan silently corrupts the schedule (and in release
+        // builds a debug_assert would wave it through) — see
+        // rust/tests/engine_plan.rs.
+        ensure!(
+            plan.steps.len() == eng.workers.m,
+            "malformed RoundPlan: {} step entries for {} workers",
+            plan.steps.len(),
+            eng.workers.m
+        );
+        ensure!(
+            plan.advance >= 1 && plan.advance <= eng.remaining(),
+            "malformed RoundPlan: advance {} outside [1, {}]",
+            plan.advance,
+            eng.remaining()
+        );
+        if let Some(w) =
+            (0..eng.workers.m).find(|&w| plan.steps[w] < 1 || plan.steps[w] > plan.advance)
+        {
+            anyhow::bail!(
+                "malformed RoundPlan: worker {w} assigned {} steps outside [1, {}]",
+                plan.steps[w],
+                plan.advance
+            );
+        }
         let start_step = eng.k;
         let mut grads = Vec::new();
         let mut loss_sum = 0.0;
@@ -203,7 +228,11 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
                 }
             }
             LocalPhase::GradOnly => {
-                debug_assert_eq!(plan.advance, 1, "grad-mode rounds are single-step");
+                ensure!(
+                    plan.advance == 1,
+                    "malformed RoundPlan: grad-mode rounds are single-step, got advance {}",
+                    plan.advance
+                );
                 for w in 0..eng.workers.m {
                     let (loss, g) = eng.workers.local_grad(w, ctx, &mut eng.clocks)?;
                     loss_sum += loss;

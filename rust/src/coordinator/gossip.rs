@@ -1,0 +1,133 @@
+//! **Overlap-Gossip** (`--algo overlap-gossip`) — the decentralized variant
+//! of the paper's anchor pullback, over the k-regular gossip topology
+//! (DESIGN.md §8, EXPERIMENTS.md E10).
+//!
+//! The mixing-matrix framing (Eq. 8) never required `W = (1/m)·11ᵀ`: any
+//! doubly-stochastic W over a connected graph has the same consensus fixed
+//! point. Here each worker keeps its **own** anchor `z_i`, pulled toward the
+//! *push-sum neighbor average* of the post-pullback models instead of the
+//! global mean — one column-stochastic mixing round per boundary, de-biased
+//! by the push-sum weight so the fixed point stays the exact global average
+//! (cf. Stochastic Gradient Push, Assran et al. 2018, PAPERS.md).
+//!
+//! Per round, mirroring `overlap.rs`:
+//!
+//! 1. *absorb* the exchange launched at the previous boundary — each worker
+//!    waits only for its **own neighborhood** (no cluster rendezvous, no
+//!    handshake: the decisive difference from every exact collective here);
+//! 2. `z_i ←` de-biased neighbor mix of the boundary models (vanilla Eq. 5
+//!    assignment, β = 0 — the `overlap` baseline this variant is measured
+//!    against in E10);
+//! 3. pull every local model toward its own anchor (Eq. 4);
+//! 4. launch the next exchange of the post-pullback models. Its per-worker
+//!    completion time is `max(own, neighbors' launch clocks) + degree·(lat +
+//!    bytes/BW)` — a straggler delays only its graph neighborhood, one hop
+//!    per round, instead of stalling all m workers at once (E10's
+//!    strictly-lower blocked-communication claim, asserted in
+//!    rust/tests/topology.rs).
+//!
+//! τ-family plans (`tau_hetero` included) work unchanged.
+
+use anyhow::Result;
+
+use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
+use super::{account_collective, TrainContext};
+use crate::config::Algo;
+use crate::topology::{Topology, TopologyKind};
+
+/// An in-flight gossip exchange: per-worker de-biased mixes plus per-worker
+/// virtual completion times (no single global `ready_at`).
+struct PendingGossip {
+    mixed: Vec<Vec<f32>>,
+    ready: Vec<f64>,
+}
+
+/// Pullback-to-neighbor-averaged-anchor mixing on the gossip graph.
+pub struct GossipStrategy {
+    topo: Topology,
+    z: Vec<Vec<f32>>,
+    pending: Option<PendingGossip>,
+}
+
+impl GossipStrategy {
+    /// Uses the configured topology when it is a gossip graph; on the
+    /// default ring config it derives one from `--gossip-degree`, so
+    /// `--algo overlap-gossip` works without an explicit `--topology`. Any
+    /// *other* explicit topology is rejected loudly by `coordinator::run`
+    /// before this constructor is reached.
+    pub fn new(ctx: &TrainContext) -> Result<Self> {
+        debug_assert_eq!(ctx.cfg.algo, Algo::OverlapGossip);
+        let topo = if ctx.cluster.topology.kind == TopologyKind::Gossip {
+            ctx.cluster.topology.clone()
+        } else {
+            Topology::gossip(ctx.cfg.workers, ctx.cfg.gossip_degree, ctx.cfg.seed)?
+        };
+        Ok(Self { topo, z: Vec::new(), pending: None })
+    }
+}
+
+impl MixingStrategy for GossipStrategy {
+    fn on_run_start(&mut self, eng: &mut Engine, _ctx: &TrainContext) -> Result<()> {
+        // Every anchor starts at the common init (x_0^(i) = z_0^(i)).
+        self.z = vec![eng.workers.params[0].clone(); eng.workers.m];
+        Ok(())
+    }
+
+    fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan {
+        plan_tau(eng, ctx, ctx.cfg.tau)
+    }
+
+    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
+        let m = eng.workers.m;
+
+        // --- absorb the previous boundary's exchange, per neighborhood ----
+        if let Some(p) = self.pending.take() {
+            for w in 0..m {
+                eng.clocks.wait_comm_until(w, p.ready[w]);
+            }
+            self.z = p.mixed;
+        }
+
+        // --- pullback toward the per-worker anchor (Eq. 4) ----------------
+        for w in 0..m {
+            eng.workers.params[w] =
+                ctx.rt.pullback(&eng.workers.params[w], &self.z[w], ctx.cfg.alpha)?;
+            eng.clocks.compute(w, PULLBACK_S);
+        }
+
+        // --- launch the next push-sum exchange ----------------------------
+        // Data plane: one column-stochastic mixing round over the boundary
+        // models, de-biased by the push-sum weights (exactly 1 on a regular
+        // graph; the correction is what keeps irregular/partial rounds
+        // exact — property-tested in rust/tests/topology.rs).
+        let ones = vec![1.0f64; m];
+        let (mixed_raw, weights) = self.topo.gossip_mix(&eng.workers.params, &ones);
+        let mixed = mixed_raw
+            .into_iter()
+            .zip(&weights)
+            .map(|(mut v, &w)| {
+                let inv = (1.0 / w) as f32;
+                for x in v.iter_mut() {
+                    *x *= inv;
+                }
+                v
+            })
+            .collect();
+        // Timing plane: worker i's exchange completes once its whole
+        // neighborhood has joined and `degree` neighbor messages have moved
+        // — no global handshake, no cluster-wide rendezvous.
+        let g_t = ctx.cluster.net.gossip_time(ctx.cluster.message_bytes, self.topo.degree());
+        let ready = (0..m)
+            .map(|i| {
+                let mut t = eng.clocks.now(i);
+                for &j in self.topo.neighbors(i) {
+                    t = t.max(eng.clocks.now(j));
+                }
+                t + g_t
+            })
+            .collect();
+        self.pending = Some(PendingGossip { mixed, ready });
+        account_collective(&mut eng.rec, &self.topo, ctx.cluster.message_bytes);
+        Ok(())
+    }
+}

@@ -10,17 +10,17 @@
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::TrainContext;
-use crate::collective::ring_allreduce_mean;
+use super::{account_collective, TrainContext};
 
-/// Blocking parameter averaging every τ steps.
+/// Blocking parameter averaging every τ steps, on the configured exact
+/// topology (ring / hierarchical / tree — see DESIGN.md §8).
 pub struct LocalAvgStrategy {
     comm_t: f64,
 }
 
 impl LocalAvgStrategy {
     pub fn new(ctx: &TrainContext) -> Self {
-        Self { comm_t: ctx.cluster.allreduce_time() }
+        Self { comm_t: ctx.cluster.collective_time() }
     }
 }
 
@@ -31,13 +31,13 @@ impl MixingStrategy for LocalAvgStrategy {
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
-        // Blocking param averaging.
+        // Blocking param averaging on the topology's real reduce schedule.
         eng.clocks.barrier();
         for w in 0..m {
             eng.clocks.comm_blocked(w, self.comm_t);
         }
-        ring_allreduce_mean(&mut eng.workers.params);
-        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        ctx.cluster.topology.allreduce_mean(&mut eng.workers.params);
+        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         Ok(())
     }
 }

@@ -19,21 +19,26 @@
 //! | overlap     | pullback to stale anchor, NON-blocking all-reduce (Eq. 3-5)|
 //! | overlap-m   | + anchor momentum (Eq. 10-11) — the headline algorithm    |
 //! | overlap-ada | overlap-m with AdaComm-style adaptive τ (plateau-shrink)  |
+//! | overlap-gossip | anchors ← push-sum neighbor averages, NO rendezvous (E10) |
 //! | easgd       | symmetric elastic x↔z exchange, blocking                  |
 //! | eamsgd      | easgd + local Nesterov momentum                           |
 //! | cocod       | local delta applied onto a τ-stale average, overlapped    |
 //!
 //! Every τ-family strategy additionally supports per-worker heterogeneous τ
 //! (`tau_hetero`): see `engine::hetero_plan` (paper §straggler mitigation).
+//! Every exact-collective strategy additionally runs on any exact topology
+//! (`--topology ring|hier|tree`, DESIGN.md §8): the data plane executes that
+//! graph's real reduce schedule and the timing plane charges its cost.
 
 pub mod cocod;
 pub mod elastic;
 pub mod engine;
+pub mod gossip;
 pub mod local;
 pub mod overlap;
 pub mod sync;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::clock::Clocks;
 use crate::config::{Algo, ExperimentConfig};
@@ -42,6 +47,7 @@ use crate::metrics::{EvalRecord, TrainLog};
 use crate::optim::LrSchedule;
 use crate::runtime::ModelRuntime;
 use crate::simnet::ClusterModel;
+use crate::topology::{Topology, TopologyKind};
 use crate::util::rng::Rng;
 
 /// Everything a driver needs for one run.
@@ -187,6 +193,9 @@ pub struct Recorder {
     loss_count: usize,
     last_train_loss: f64,
     bytes_sent: u64,
+    /// per-worker transmitted bytes on the topology axis (stays all-zero —
+    /// and out of the digest — on the seed's uniform ring path)
+    neighbor_bytes: Vec<u64>,
     next_eval_step: usize,
     eval_stride: usize,
     tau_trace: Vec<(usize, usize)>,
@@ -202,6 +211,7 @@ impl Recorder {
             loss_count: 0,
             last_train_loss: f64::NAN,
             bytes_sent: 0,
+            neighbor_bytes: vec![0; ctx.cfg.workers],
             next_eval_step: stride,
             eval_stride: stride,
             tau_trace: Vec::new(),
@@ -217,6 +227,15 @@ impl Recorder {
 
     pub fn add_bytes(&mut self, b: u64) {
         self.bytes_sent += b;
+    }
+
+    /// Credit per-worker transmitted bytes (topology axis; see
+    /// [`account_collective`]).
+    pub fn add_neighbor_bytes(&mut self, per_worker: &[u64]) {
+        assert_eq!(per_worker.len(), self.neighbor_bytes.len(), "worker count mismatch");
+        for (acc, &b) in self.neighbor_bytes.iter_mut().zip(per_worker) {
+            *acc += b;
+        }
     }
 
     /// Record a (global step, τ) point of an adaptive-τ controller.
@@ -285,14 +304,54 @@ impl Recorder {
             total_comm_blocked_s: clocks.total_comm_blocked(),
             total_idle_s: clocks.total_idle(),
             bytes_sent: self.bytes_sent,
+            neighbor_bytes: self.neighbor_bytes,
             steps,
         }
+    }
+}
+
+/// Account one collective on `rec`. The ring keeps the seed's convention —
+/// `m · message_bytes` total, no per-worker split — so every pre-topology
+/// digest is bit-identical. The other topologies record true per-link
+/// traffic: `bytes_sent` becomes the sum of per-worker transmissions and
+/// `TrainLog::neighbor_bytes` picks up the (non-uniform) per-worker split.
+pub fn account_collective(rec: &mut Recorder, topo: &Topology, message_bytes: usize) {
+    if topo.kind == TopologyKind::Ring {
+        rec.add_bytes((topo.m * message_bytes) as u64);
+    } else {
+        let per = topo.neighbor_bytes(message_bytes);
+        rec.add_bytes(per.iter().sum());
+        rec.add_neighbor_bytes(&per);
     }
 }
 
 /// Run the configured algorithm to completion: pick its mixing strategy and
 /// hand it to the round engine (no driver keeps a private round loop).
 pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
+    // The gossip graph is an *inexact* per-round mix: only the push-sum
+    // decentralized strategy knows how to de-bias it. Every exact-collective
+    // algorithm must refuse it loudly instead of averaging wrong — and the
+    // mismatch in the other direction is just as loud: overlap-gossip never
+    // silently discards an explicitly requested exact topology (the default
+    // ring is the one exception, standing in for "derive a gossip graph
+    // from --gossip-degree").
+    match (ctx.cluster.topology.kind, ctx.cfg.algo) {
+        (TopologyKind::Gossip, algo) if algo != Algo::OverlapGossip => bail!(
+            "topology 'gossip' is an inexact mixing graph; only --algo overlap-gossip \
+             can use it (got --algo {})",
+            algo.name()
+        ),
+        (kind, Algo::OverlapGossip)
+            if kind != TopologyKind::Gossip && kind != TopologyKind::Ring =>
+        {
+            bail!(
+                "--algo overlap-gossip runs on the gossip topology; got --topology {} \
+                 (use 'gossip', or omit the flag to derive a graph from --gossip-degree)",
+                kind.name()
+            )
+        }
+        _ => {}
+    }
     match ctx.cfg.algo {
         Algo::Sync => engine::run(ctx, &mut sync::SyncStrategy::new(ctx)),
         Algo::PowerSgd => engine::run(ctx, &mut sync::PowerSgdStrategy::new(ctx)),
@@ -303,6 +362,9 @@ pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
         }
         Algo::OverlapAda => {
             engine::run(ctx, &mut overlap::OverlapStrategy::new(ctx, ctx.cfg.beta, true))
+        }
+        Algo::OverlapGossip => {
+            engine::run(ctx, &mut gossip::GossipStrategy::new(ctx)?)
         }
         Algo::Easgd => elastic::run(ctx, 0.0),
         Algo::Eamsgd => elastic::run(ctx, ctx.cfg.mu),

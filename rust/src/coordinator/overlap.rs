@@ -36,8 +36,8 @@
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
-use super::TrainContext;
-use crate::collective::{start_allreduce, NonBlockingAllReduce};
+use super::{account_collective, TrainContext};
+use crate::collective::{start_collective, NonBlockingAllReduce};
 
 /// Loss-plateau τ controller (AdaComm-style, shrink-only).
 #[derive(Clone, Debug)]
@@ -142,17 +142,20 @@ impl MixingStrategy for OverlapStrategy {
             eng.clocks.compute(w, PULLBACK_S);
         }
 
-        // --- launch the next non-blocking all-reduce ----------------------
-        // The ring effectively starts once the last participant joins.
+        // --- launch the next non-blocking collective ----------------------
+        // An exact collective effectively starts once the last participant
+        // joins (the topology axis changes the wire cost, not the rendezvous
+        // — only overlap-gossip drops the global rendezvous).
         let start = eng.clocks.max_now();
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
-        self.pending = Some(start_allreduce(
+        self.pending = Some(start_collective(
+            &ctx.cluster.topology,
             &refs,
             &ctx.cluster.net,
             ctx.cluster.message_bytes,
             start,
         ));
-        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
 
         // --- adaptive-τ controller ---------------------------------------
         if let Some(ada) = self.adaptive.as_mut() {

@@ -10,8 +10,7 @@
 use anyhow::Result;
 
 use super::engine::{Engine, LocalPhase, MixingStrategy, RoundOutcome, RoundPlan};
-use super::TrainContext;
-use crate::collective::ring_allreduce_mean;
+use super::{account_collective, TrainContext};
 use crate::compress::PowerSgd;
 
 /// Blocking per-step gradient averaging (mixing matrix = (1/m) 11ᵀ each step).
@@ -21,7 +20,7 @@ pub struct SyncStrategy {
 
 impl SyncStrategy {
     pub fn new(ctx: &TrainContext) -> Self {
-        Self { comm_t: ctx.cluster.allreduce_time() }
+        Self { comm_t: ctx.cluster.collective_time() }
     }
 }
 
@@ -65,8 +64,8 @@ impl MixingStrategy for SyncStrategy {
         for w in 0..m {
             eng.clocks.comm_blocked(w, self.comm_t);
         }
-        ring_allreduce_mean(&mut out.grads);
-        eng.rec.add_bytes((m * ctx.cluster.message_bytes) as u64);
+        ctx.cluster.topology.allreduce_mean(&mut out.grads);
+        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         apply_shared_update(eng, ctx, &out.grads[0], out.start_step)
     }
 }
@@ -98,8 +97,9 @@ impl PowerSgdStrategy {
         // The reference implementation flattens all P factors into ONE
         // buffer (single all-reduce), then all Q factors + raw tensors into
         // another, launched back-to-back in one comm group: one handshake,
-        // two wire passes' worth of bytes.
-        let comm_t = ctx.cluster.net.allreduce_time(scaled_bytes, m);
+        // two wire passes' worth of bytes. The wire cost follows the
+        // configured exact topology at the compressed size.
+        let comm_t = ctx.cluster.topology.collective_time(&ctx.cluster.net, scaled_bytes);
         let flops_scale = (full_bytes as f64 / (ctx.rt.n * 4) as f64).max(1.0);
         Self { psgd, comm_t, scaled_bytes, flops_scale }
     }
@@ -128,7 +128,7 @@ impl MixingStrategy for PowerSgdStrategy {
         for w in 0..m {
             eng.clocks.comm_blocked(w, self.comm_t);
         }
-        eng.rec.add_bytes((m * self.scaled_bytes) as u64);
+        account_collective(&mut eng.rec, &ctx.cluster.topology, self.scaled_bytes);
         apply_shared_update(eng, ctx, &round.avg_grad, out.start_step)
     }
 }

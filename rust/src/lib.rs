@@ -32,4 +32,5 @@ pub mod model;
 pub mod optim;
 pub mod runtime;
 pub mod simnet;
+pub mod topology;
 pub mod util;

@@ -61,10 +61,13 @@ fn print_usage() {
          olsgd sweep  --algos sync,local,overlap-m --taus 1,2,8,24 [--set key=value]... [--out DIR]\n  \
          olsgd report --dir DIR\n\
          \n\
-         Algorithms: sync local overlap overlap-m overlap-ada easgd eamsgd cocod powersgd\n\
+         Algorithms: sync local overlap overlap-m overlap-ada overlap-gossip easgd eamsgd\n\
+                     cocod powersgd\n\
+         Topologies: --set topology=ring|hier|tree|gossip (gossip_degree, hier_groups)\n\
          Config keys: algo model workers epochs seed eval_every lr tau tau_min tau_hetero\n\
                       ada_patience ada_threshold alpha beta mu wd rank\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
+                      topology gossip_degree hier_groups\n\
                       message_bytes straggler artifacts_dir out_dir"
     );
 }

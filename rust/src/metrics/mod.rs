@@ -41,6 +41,10 @@ pub struct TrainLog {
     pub total_comm_blocked_s: f64,
     pub total_idle_s: f64,
     pub bytes_sent: u64,
+    /// per-worker transmitted bytes on the topology axis (hier leaders,
+    /// tree inner nodes, and gossip neighbors send different amounts);
+    /// all-zero on the seed's uniform ring accounting
+    pub neighbor_bytes: Vec<u64>,
     pub steps: usize,
 }
 
@@ -112,6 +116,10 @@ impl TrainLog {
                     .iter()
                     .map(|&(k, t)| arr_f64(&[k as f64, t as f64]))),
             ),
+            (
+                "neighbor_bytes",
+                arr(self.neighbor_bytes.iter().map(|&b| num(b as f64))),
+            ),
         ])
     }
 
@@ -161,6 +169,14 @@ impl TrainLog {
         for &(k, t) in &self.tau_trace {
             h.u64(k as u64);
             h.u64(t as u64);
+        }
+        // Topology-axis observable. Hashed only when engaged (any nonzero):
+        // the seed's ring runs keep their all-zero vector out of the digest,
+        // so every pre-topology golden digest is unchanged.
+        if self.neighbor_bytes.iter().any(|&b| b != 0) {
+            for &b in &self.neighbor_bytes {
+                h.u64(b);
+            }
         }
         h.0
     }
@@ -223,6 +239,7 @@ mod tests {
             ],
             step_losses: vec![(0, 2.3), (16, 1.5)],
             tau_trace: Vec::new(),
+            neighbor_bytes: vec![0; 8],
             total_sim_time: 7.0,
             total_compute_s: 50.0,
             total_comm_blocked_s: 4.0,
@@ -261,6 +278,13 @@ mod tests {
         let mut c = sample_log();
         c.tau_trace.push((8, 4));
         assert_ne!(a.digest(), c.digest(), "digest must see the τ schedule");
+        // The topology axis is digest-visible once engaged, but an all-zero
+        // (= ring) vector leaves the legacy digests untouched.
+        let mut d = sample_log();
+        d.neighbor_bytes = vec![0; 4];
+        assert_eq!(a.digest(), d.digest(), "inert neighbor accounting must not drift");
+        d.neighbor_bytes[2] = 1 << 10;
+        assert_ne!(a.digest(), d.digest(), "digest must see neighbor bytes");
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //!
 //! All times are f64 seconds of *virtual* time.
 
+use crate::topology::Topology;
 use crate::util::rng::Rng;
 
 /// α/β-model network with a per-collective handshake.
@@ -77,6 +78,43 @@ impl NetworkModel {
         // m clients share the server's ingress: serialized on the bottleneck
         // link, one handshake per round.
         self.handshake_s + 2.0 * (self.latency_s + (bytes as f64 * m as f64) / self.bandwidth_bps)
+    }
+
+    /// Hierarchical two-level all-reduce (topology axis, DESIGN.md §8):
+    /// ring within a group of `group_size`, ring across the `groups` leader
+    /// nodes, plus the leader→members broadcast — `group_size - 1` full
+    /// messages serialized on the leader's NIC, matching the per-link byte
+    /// accounting (`Topology::neighbor_bytes`) and the same serialization
+    /// model `gossip_time` uses. Each ring phase pays its own handshake
+    /// (two rendezvous groups).
+    pub fn hier_allreduce_time(&self, bytes: usize, group_size: usize, groups: usize) -> f64 {
+        let mut t = self.allreduce_time(bytes, group_size.max(1))
+            + self.allreduce_time(bytes, groups.max(1));
+        if group_size > 1 {
+            t += (group_size - 1) as f64 * (self.latency_s + bytes as f64 / self.bandwidth_bps);
+        }
+        t
+    }
+
+    /// Binary-tree reduce + broadcast: `2·⌈log2 m⌉` *full-message* hops
+    /// after one handshake. No chunking, so the tree is latency-optimal but
+    /// bandwidth-suboptimal — the opposite trade to the ring.
+    pub fn tree_allreduce_time(&self, bytes: usize, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let levels = usize::BITS - (m - 1).leading_zeros(); // ceil(log2 m)
+        self.handshake_s
+            + 2.0 * levels as f64 * (self.latency_s + bytes as f64 / self.bandwidth_bps)
+    }
+
+    /// k-regular gossip exchange: each node sends its full message to
+    /// `degree` neighbors, serialized on its own NIC — and crucially with
+    /// **no global handshake**: neighbors rendezvous pairwise, the cluster
+    /// never does. This is the term the paper blames for PowerSGD's latency
+    /// floor, removed entirely.
+    pub fn gossip_time(&self, bytes: usize, degree: usize) -> f64 {
+        degree as f64 * (self.latency_s + bytes as f64 / self.bandwidth_bps)
     }
 
     /// All-gather of per-node `bytes` (PowerSGD's second phase uses this
@@ -153,6 +191,8 @@ pub struct ClusterModel {
     /// numeric model so runtime figures keep the paper's ResNet-18 scale
     /// (44.68 MB) while numerics run on the scaled-down CNN — see DESIGN.md §3.
     pub message_bytes: usize,
+    /// the communication graph both planes run over (DESIGN.md §8)
+    pub topology: Topology,
 }
 
 impl ClusterModel {
@@ -162,11 +202,20 @@ impl ClusterModel {
             net: NetworkModel::paper_40gbps(),
             compute: ComputeModel::paper_resnet18(),
             message_bytes: 11_173_962 * 4, // ResNet-18 params * f32
+            topology: Topology::ring(16),
         }
     }
 
+    /// Ring all-reduce cost at the full message size (the seed's formula,
+    /// kept verbatim for the golden reference loops).
     pub fn allreduce_time(&self) -> f64 {
         self.net.allreduce_time(self.message_bytes, self.workers)
+    }
+
+    /// Cost of one full-message collective on the configured topology
+    /// (equals [`ClusterModel::allreduce_time`] on the ring).
+    pub fn collective_time(&self) -> f64 {
+        self.topology.collective_time(&self.net, self.message_bytes)
     }
 }
 
@@ -234,6 +283,28 @@ mod tests {
             let f = s.factor(0, g.rng());
             assert!(f >= 1.0 - j - 1e-12 && f <= 1.0 + j + 1e-12);
         });
+    }
+
+    #[test]
+    fn topology_costs_rank_as_designed() {
+        // At the paper's message size the chunked ring beats the unchunked
+        // tree and the two-handshake hierarchy, while a low-degree gossip
+        // exchange (no handshake, few hops) undercuts them all.
+        let net = NetworkModel::paper_40gbps();
+        let bytes = 44_700_000;
+        let ring = net.allreduce_time(bytes, 16);
+        let hier = net.hier_allreduce_time(bytes, 4, 4);
+        let tree = net.tree_allreduce_time(bytes, 16);
+        let gossip = net.gossip_time(bytes, 4);
+        assert!(gossip < ring, "gossip {gossip} vs ring {ring}");
+        assert!(ring < hier, "ring {ring} vs hier {hier}");
+        assert!(ring < tree, "ring {ring} vs tree {tree}");
+        // degenerate sizes are free
+        assert_eq!(net.tree_allreduce_time(bytes, 1), 0.0);
+        assert_eq!(net.gossip_time(bytes, 0), 0.0);
+        // the topology-aware cluster cost equals the seed formula on a ring
+        let c = ClusterModel::paper_16node();
+        assert_eq!(c.collective_time(), c.allreduce_time());
     }
 
     #[test]

@@ -1,0 +1,566 @@
+//! Communication-graph substrate: the topology axis of the simulated
+//! cluster.
+//!
+//! Overlap-Local-SGD's anchor pullback (Eq. 8's mixing-matrix framing) does
+//! not require a *global* all-reduce — the anchor can be synchronized over
+//! any connected graph, which is exactly the regime the paper targets
+//! (wireless/sensor networks where a full ring is the worst case; cf.
+//! Stochastic Gradient Push, Assran et al. 2018, PAPERS.md). This module
+//! owns both planes of that axis (DESIGN.md §8):
+//!
+//! * **Data plane** — exact reduce/mix schedules over neighbor buffers:
+//!   chunked ring (the seed's path, `collective::ring_allreduce_mean`),
+//!   two-level hierarchical ring (intra-group ring → size-weighted
+//!   inter-group ring over leaders → leader broadcast), binary-tree
+//!   reduce-broadcast, and k-regular push-sum gossip (one column-stochastic
+//!   mixing round per call; inexact per round, exact in the limit).
+//! * **Timing plane** — per-topology virtual cost formulas, delegated to
+//!   [`crate::simnet::NetworkModel`]: the ring's α/β model, hierarchical =
+//!   intra-ring + inter-ring (+ leader broadcast), tree = `2⌈log2 m⌉`
+//!   full-message hops, and gossip = `degree·(latency + bytes/BW)` with
+//!   **no global handshake** — gossip never rendezvouses the whole cluster.
+//!
+//! Push-sum (the SGP weight correction): every mixing round moves a scalar
+//! weight alongside each value with the *same* column-stochastic matrix, and
+//! estimates de-bias as `value/weight`. On a k-regular graph with uniform
+//! shares the matrix is doubly stochastic and the weights stay exactly 1,
+//! but the correction is what keeps the fixed point the exact global average
+//! under any column-stochastic schedule — e.g. the random edge-dropout
+//! rounds of [`Topology::gossip_mix_with`] (the foundation for the planned
+//! partial-participation scenarios), property-tested in
+//! rust/tests/topology.rs (E10).
+
+use anyhow::{bail, Result};
+
+use crate::collective::ring_allreduce_mean;
+use crate::simnet::NetworkModel;
+use crate::util::rng::Rng;
+
+/// Which communication graph the cluster synchronizes over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Chunked ring all-reduce (NCCL-style) — the seed's one topology.
+    Ring,
+    /// Two-level ring: intra-group, then inter-group over group leaders.
+    Hier,
+    /// Binary-tree reduce + broadcast (full message per hop).
+    Tree,
+    /// Connected k-regular gossip graph with push-sum weights (inexact per
+    /// round; only `overlap-gossip` may use it).
+    Gossip,
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Hier => "hier",
+            TopologyKind::Tree => "tree",
+            TopologyKind::Gossip => "gossip",
+        }
+    }
+}
+
+/// A concrete communication graph over `m` workers. Owns the exact data
+/// plane (reduce/mix schedules) and the per-collective timing formula.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    pub m: usize,
+    /// contiguous `[lo, hi)` worker ranges per group (`Hier` only; empty
+    /// otherwise)
+    groups: Vec<(usize, usize)>,
+    /// per-worker sorted neighbor lists (`Gossip` only; empty otherwise)
+    adjacency: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    pub fn ring(m: usize) -> Self {
+        assert!(m >= 1, "topology needs at least one worker");
+        Self { kind: TopologyKind::Ring, m, groups: Vec::new(), adjacency: Vec::new() }
+    }
+
+    /// Two-level hierarchy with (up to) `groups` contiguous groups; group
+    /// sizes differ by at most one. `groups` is clamped to `[1, m]`.
+    pub fn hier(m: usize, groups: usize) -> Self {
+        assert!(m >= 1, "topology needs at least one worker");
+        let g = groups.clamp(1, m);
+        let (base, rem) = (m / g, m % g);
+        let mut bounds = Vec::with_capacity(g);
+        let mut lo = 0;
+        for i in 0..g {
+            let size = base + usize::from(i < rem);
+            bounds.push((lo, lo + size));
+            lo += size;
+        }
+        Self { kind: TopologyKind::Hier, m, groups: bounds, adjacency: Vec::new() }
+    }
+
+    pub fn tree(m: usize) -> Self {
+        assert!(m >= 1, "topology needs at least one worker");
+        Self { kind: TopologyKind::Tree, m, groups: Vec::new(), adjacency: Vec::new() }
+    }
+
+    /// Connected k-regular gossip graph: circulant offsets `1..=k/2` (plus
+    /// the antipode `m/2` for odd k, which needs even `m`), relabeled by a
+    /// seeded random permutation so the graph is not axis-aligned with the
+    /// worker ids. The effective degree is clamped to `[2, m-1]` (a cycle is
+    /// the sparsest connected regular graph); odd k on odd `m` rounds down.
+    pub fn gossip(m: usize, degree: usize, seed: u64) -> Result<Self> {
+        assert!(m >= 1, "topology needs at least one worker");
+        if degree == 0 && m > 1 {
+            bail!("gossip_degree must be >= 1 (got 0) for m = {m}");
+        }
+        let mut adjacency = vec![Vec::new(); m];
+        if m >= 2 {
+            let k = if m == 2 { 1 } else { degree.clamp(2, m - 1) };
+            let k = if k % 2 == 1 && m % 2 == 1 { k - 1 } else { k };
+            // Neighbor offsets on the base circulant.
+            let mut neigh: Vec<Vec<usize>> = vec![Vec::new(); m];
+            for i in 0..m {
+                for o in 1..=(k / 2) {
+                    neigh[i].push((i + o) % m);
+                    neigh[i].push((i + m - o) % m);
+                }
+                if k % 2 == 1 {
+                    neigh[i].push((i + m / 2) % m);
+                }
+                neigh[i].sort_unstable();
+                neigh[i].dedup();
+            }
+            // Random relabeling (derived stream; perturbs no other consumer).
+            let mut perm: Vec<usize> = (0..m).collect();
+            Rng::stream(seed, "topology/gossip").shuffle(&mut perm);
+            for i in 0..m {
+                let mut ns: Vec<usize> = neigh[i].iter().map(|&j| perm[j]).collect();
+                ns.sort_unstable();
+                adjacency[perm[i]] = ns;
+            }
+        }
+        Ok(Self { kind: TopologyKind::Gossip, m, groups: Vec::new(), adjacency })
+    }
+
+    /// Build from a config spec string (`--topology ring|hier|tree|gossip`).
+    pub fn from_spec(
+        spec: &str,
+        m: usize,
+        gossip_degree: usize,
+        hier_groups: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        Ok(match spec {
+            "ring" => Self::ring(m),
+            "hier" | "hierarchical" => Self::hier(m, hier_groups),
+            "tree" => Self::tree(m),
+            "gossip" => Self::gossip(m, gossip_degree, seed)?,
+            other => bail!("unknown topology '{other}' (want ring|hier|tree|gossip)"),
+        })
+    }
+
+    /// Actual per-node degree of the gossip graph (0 unless `Gossip`).
+    pub fn degree(&self) -> usize {
+        self.adjacency.first().map(|n| n.len()).unwrap_or(0)
+    }
+
+    /// Gossip neighbors of worker `i` (empty unless `Gossip`).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        if self.adjacency.is_empty() {
+            &[]
+        } else {
+            &self.adjacency[i]
+        }
+    }
+
+    /// Hier group bounds `[lo, hi)` (empty unless `Hier`).
+    pub fn group_bounds(&self) -> &[(usize, usize)] {
+        &self.groups
+    }
+
+    // -- data plane ---------------------------------------------------------
+
+    /// Exact in-place all-reduce (mean) over the workers' equal-length
+    /// buffers using this topology's schedule. Panics for `Gossip`, whose
+    /// per-round mix is inexact — use [`Topology::gossip_mix`] there.
+    pub fn allreduce_mean(&self, buffers: &mut [Vec<f32>]) {
+        match self.kind {
+            TopologyKind::Ring => ring_allreduce_mean(buffers),
+            TopologyKind::Tree => tree_allreduce_mean(buffers),
+            TopologyKind::Hier => hier_allreduce_mean(buffers, &self.groups),
+            TopologyKind::Gossip => {
+                panic!("gossip topology has no exact all-reduce; use gossip_mix")
+            }
+        }
+    }
+
+    /// One push-sum gossip round over the full neighbor sets: returns the
+    /// new (biased) values and the matching push-sum weights. De-bias an
+    /// estimate as `values[i] / weights[i] as f32`.
+    pub fn gossip_mix(&self, values: &[Vec<f32>], weights: &[f64]) -> (Vec<Vec<f32>>, Vec<f64>) {
+        self.gossip_mix_with(values, weights, &self.adjacency)
+    }
+
+    /// Push-sum round over per-sender *subsets* of the out-edges (partial
+    /// participation / dropout). Column j spreads its value and weight
+    /// uniformly over itself plus `active_out[j]`; mass is conserved, so the
+    /// de-biased fixed point stays the exact global average even when the
+    /// matrix is only column-stochastic.
+    pub fn gossip_mix_with(
+        &self,
+        values: &[Vec<f32>],
+        weights: &[f64],
+        active_out: &[Vec<usize>],
+    ) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let m = values.len();
+        assert_eq!(m, self.m, "value count != topology size");
+        assert_eq!(weights.len(), m, "weight count != topology size");
+        assert_eq!(active_out.len(), m, "active_out count != topology size");
+        let n = values.first().map(|v| v.len()).unwrap_or(0);
+        let mut out = vec![vec![0.0f32; n]; m];
+        let mut w_out = vec![0.0f64; m];
+        for j in 0..m {
+            let share = 1.0f32 / (1 + active_out[j].len()) as f32;
+            for (o, &x) in out[j].iter_mut().zip(values[j].iter()) {
+                *o += share * x;
+            }
+            w_out[j] += share as f64 * weights[j];
+            for &i in &active_out[j] {
+                assert!(i < m, "active_out neighbor {i} out of range");
+                for (o, &x) in out[i].iter_mut().zip(values[j].iter()) {
+                    *o += share * x;
+                }
+                w_out[i] += share as f64 * weights[j];
+            }
+        }
+        (out, w_out)
+    }
+
+    /// The round mixing matrix W (row index = receiver, column = sender):
+    /// `(1/m)·11ᵀ` for the exact topologies, the uniform push-share matrix
+    /// for gossip. Doubly stochastic in every case (property-tested).
+    pub fn mixing_matrix(&self) -> Vec<Vec<f64>> {
+        let m = self.m;
+        match self.kind {
+            TopologyKind::Gossip => {
+                let mut w = vec![vec![0.0f64; m]; m];
+                for j in 0..m {
+                    let share = 1.0 / (1 + self.adjacency[j].len()) as f64;
+                    w[j][j] += share;
+                    for &i in &self.adjacency[j] {
+                        w[i][j] += share;
+                    }
+                }
+                w
+            }
+            _ => vec![vec![1.0 / m as f64; m]; m],
+        }
+    }
+
+    // -- timing plane -------------------------------------------------------
+
+    /// Virtual duration of one collective of `bytes` on this topology.
+    pub fn collective_time(&self, net: &NetworkModel, bytes: usize) -> f64 {
+        match self.kind {
+            TopologyKind::Ring => net.allreduce_time(bytes, self.m),
+            TopologyKind::Hier => {
+                // A single group degenerates to one plain ring (exactly what
+                // the data plane runs) — no second phase, no broadcast.
+                if self.groups.len() <= 1 {
+                    return net.allreduce_time(bytes, self.m);
+                }
+                let largest = self
+                    .groups
+                    .iter()
+                    .map(|&(lo, hi)| hi - lo)
+                    .max()
+                    .unwrap_or(self.m);
+                net.hier_allreduce_time(bytes, largest, self.groups.len())
+            }
+            TopologyKind::Tree => net.tree_allreduce_time(bytes, self.m),
+            TopologyKind::Gossip => net.gossip_time(bytes, self.degree()),
+        }
+    }
+
+    /// Per-worker bytes *transmitted* during one collective of
+    /// `message_bytes` — the `TrainLog::neighbor_bytes` accounting. The ring
+    /// keeps the seed's NCCL convention (one full message per worker); the
+    /// other topologies count true per-link traffic, which is deliberately
+    /// non-uniform (hier leaders and tree inner nodes send more).
+    pub fn neighbor_bytes(&self, message_bytes: usize) -> Vec<u64> {
+        let msg = message_bytes as u64;
+        match self.kind {
+            TopologyKind::Ring => vec![msg; self.m],
+            TopologyKind::Gossip => {
+                (0..self.m).map(|i| self.neighbors(i).len() as u64 * msg).collect()
+            }
+            TopologyKind::Hier => {
+                // A single group is one plain ring: keep the ring convention
+                // (matches the data plane's fallback and the timing plane).
+                if self.groups.len() <= 1 {
+                    return vec![msg; self.m];
+                }
+                // Members of non-trivial groups send one message in their
+                // intra-group ring; each leader additionally sends one in
+                // the inter-group ring and one broadcast copy per other
+                // member of its group. Size-1 groups have no intra traffic
+                // and no broadcast — their leader only rides the inter ring.
+                let mut per = vec![0u64; self.m];
+                for &(lo, hi) in &self.groups {
+                    let size = (hi - lo) as u64;
+                    if size > 1 {
+                        for w in per.iter_mut().take(hi).skip(lo) {
+                            *w += msg; // intra-group ring
+                        }
+                        per[lo] += (size - 1) * msg; // leader broadcast
+                    }
+                    per[lo] += msg; // inter-group ring
+                }
+                per
+            }
+            TopologyKind::Tree => {
+                // Reduce: at each doubling level, node `i+gap` sends its
+                // partial to `i`. Broadcast: the reverse — `i` sends to
+                // `i+gap` at each level.
+                let m = self.m;
+                let mut per = vec![0u64; m];
+                let mut gap = 1;
+                while gap < m {
+                    let mut i = 0;
+                    while i + gap < m {
+                        per[i + gap] += msg; // reduce hop up
+                        per[i] += msg; // broadcast hop down
+                        i += 2 * gap;
+                    }
+                    gap *= 2;
+                }
+                per
+            }
+        }
+    }
+}
+
+/// Binary-tree all-reduce (mean): pairwise reduction at doubling gaps, scale
+/// at the root, then broadcast back down. Exact global mean everywhere; no
+/// chunking, so vectors shorter than the worker count are handled trivially.
+fn tree_allreduce_mean(buffers: &mut [Vec<f32>]) {
+    let m = buffers.len();
+    assert!(m > 0, "no buffers");
+    let n = buffers[0].len();
+    for b in buffers.iter() {
+        assert_eq!(b.len(), n, "ragged buffers");
+    }
+    if m == 1 {
+        return;
+    }
+    let mut gap = 1;
+    while gap < m {
+        let mut i = 0;
+        while i + gap < m {
+            let (head, tail) = buffers.split_at_mut(i + gap);
+            let dst = &mut head[i];
+            let src = &tail[0];
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d += s;
+            }
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+    let inv = 1.0f32 / m as f32;
+    for v in buffers[0].iter_mut() {
+        *v *= inv;
+    }
+    let root = buffers[0].clone();
+    for b in buffers[1..].iter_mut() {
+        b.copy_from_slice(&root);
+    }
+}
+
+/// Hierarchical two-level all-reduce (mean): ring within each contiguous
+/// group, size-weighted ring across the group leaders, leader broadcast.
+/// Weighting by group size keeps the result the exact *global* mean even
+/// when `m % groups != 0`.
+fn hier_allreduce_mean(buffers: &mut [Vec<f32>], groups: &[(usize, usize)]) {
+    let m = buffers.len();
+    assert!(m > 0, "no buffers");
+    if m == 1 || groups.len() <= 1 {
+        ring_allreduce_mean(buffers);
+        return;
+    }
+    // Intra-group rings: every member of group g ends with the group mean.
+    for &(lo, hi) in groups {
+        ring_allreduce_mean(&mut buffers[lo..hi]);
+    }
+    // Inter-group ring over size-scaled leader copies:
+    // mean_g(size_g * mean_g) = (Σ size_g mean_g) / G, so scaling the ring
+    // output by G/m recovers the exact global mean.
+    let g = groups.len();
+    let mut leaders: Vec<Vec<f32>> = groups
+        .iter()
+        .map(|&(lo, hi)| {
+            let size = (hi - lo) as f32;
+            buffers[lo].iter().map(|&v| v * size).collect()
+        })
+        .collect();
+    ring_allreduce_mean(&mut leaders);
+    let scale = g as f32 / m as f32;
+    let mut result = leaders.into_iter().next().expect("non-empty groups");
+    for v in result.iter_mut() {
+        *v *= scale;
+    }
+    // Leader broadcast within each group.
+    for &(lo, hi) in groups {
+        for b in buffers[lo..hi].iter_mut() {
+            b.copy_from_slice(&result);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::vecmath;
+    use crate::util::proptest::assert_close;
+
+    #[test]
+    fn from_spec_round_trips_and_rejects_unknown() {
+        for spec in ["ring", "hier", "tree", "gossip"] {
+            let t = Topology::from_spec(spec, 8, 4, 2, 1).unwrap();
+            assert_eq!(t.kind.name(), spec);
+            assert_eq!(t.m, 8);
+        }
+        assert!(Topology::from_spec("torus", 8, 4, 2, 1).is_err());
+    }
+
+    #[test]
+    fn hier_groups_partition_the_workers() {
+        let t = Topology::hier(10, 4);
+        let bounds = t.group_bounds();
+        assert_eq!(bounds.len(), 4);
+        assert_eq!(bounds[0].0, 0);
+        assert_eq!(bounds.last().unwrap().1, 10);
+        for pair in bounds.windows(2) {
+            assert_eq!(pair[0].1, pair[1].0, "groups must be contiguous");
+        }
+        let sizes: Vec<usize> = bounds.iter().map(|&(lo, hi)| hi - lo).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn gossip_graph_is_regular_and_connected() {
+        for (m, k) in [(2usize, 1usize), (3, 2), (8, 3), (16, 4), (16, 2), (9, 3), (12, 11)] {
+            let t = Topology::gossip(m, k, 7).unwrap();
+            let deg = t.degree();
+            assert!(deg >= 1, "m={m} k={k}: degree 0");
+            let mut seen = vec![false; m];
+            let mut stack = vec![0usize];
+            seen[0] = true;
+            while let Some(v) = stack.pop() {
+                assert_eq!(t.neighbors(v).len(), deg, "m={m} k={k}: not regular");
+                for &u in t.neighbors(v) {
+                    assert_ne!(u, v, "self-loop");
+                    assert!(t.neighbors(u).contains(&v), "not symmetric");
+                    if !seen[u] {
+                        seen[u] = true;
+                        stack.push(u);
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "m={m} k={k}: disconnected");
+        }
+    }
+
+    #[test]
+    fn gossip_single_worker_is_empty_graph() {
+        let t = Topology::gossip(1, 4, 1).unwrap();
+        assert_eq!(t.degree(), 0);
+        let (vals, ws) = t.gossip_mix(&[vec![2.0f32, -1.0]], &[1.0]);
+        assert_close(&vals[0], &[2.0, -1.0], 1e-6, 0.0);
+        assert!((ws[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_and_hier_match_mean_small() {
+        let bufs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0], vec![5.0, 1.0]];
+        let want = vecmath::mean(&bufs.iter().map(|b| b.as_slice()).collect::<Vec<_>>());
+        let mut t = bufs.clone();
+        Topology::tree(3).allreduce_mean(&mut t);
+        for b in &t {
+            assert_close(b, &want, 1e-6, 1e-6);
+        }
+        let mut h = bufs.clone();
+        Topology::hier(3, 2).allreduce_mean(&mut h);
+        for b in &h {
+            assert_close(b, &want, 1e-5, 1e-6);
+        }
+    }
+
+    #[test]
+    fn ring_kind_delegates_to_the_seed_collective() {
+        let mut a = vec![vec![1.0f32, 5.0], vec![3.0, 7.0]];
+        let mut b = a.clone();
+        Topology::ring(2).allreduce_mean(&mut a);
+        ring_allreduce_mean(&mut b);
+        assert_eq!(a, b, "ring topology must be the seed's exact schedule");
+    }
+
+    #[test]
+    #[should_panic(expected = "gossip topology has no exact all-reduce")]
+    fn gossip_allreduce_panics() {
+        let t = Topology::gossip(4, 2, 1).unwrap();
+        let mut bufs = vec![vec![0.0f32; 2]; 4];
+        t.allreduce_mean(&mut bufs);
+    }
+
+    // (The doubly-stochastic and tree/hier-vs-mean *property* sweeps live in
+    // rust/tests/topology.rs — the E10 suite — to avoid duplicate CI work;
+    // the unit tests here are fast deterministic smokes for module hacking.)
+
+    #[test]
+    fn timing_formulas_are_positive_and_gossip_skips_the_handshake() {
+        let net = NetworkModel::paper_40gbps();
+        let bytes = 44_700_000;
+        let ring = Topology::ring(16).collective_time(&net, bytes);
+        let hier = Topology::hier(16, 4).collective_time(&net, bytes);
+        let tree = Topology::tree(16).collective_time(&net, bytes);
+        let gossip = Topology::gossip(16, 4, 1).unwrap().collective_time(&net, bytes);
+        for t in [ring, hier, tree, gossip] {
+            assert!(t > 0.0);
+        }
+        // Gossip has no rendezvous: for tiny messages its cost drops below
+        // every handshake-bearing collective.
+        let tiny = 1_000;
+        let g_tiny = Topology::gossip(16, 4, 1).unwrap().collective_time(&net, tiny);
+        assert!(g_tiny < net.handshake_s);
+        assert!(Topology::ring(16).collective_time(&net, tiny) >= net.handshake_s);
+    }
+
+    #[test]
+    fn neighbor_bytes_shapes() {
+        let msg = 1000usize;
+        let ring = Topology::ring(4).neighbor_bytes(msg);
+        assert_eq!(ring, vec![1000u64; 4]);
+        let gossip = Topology::gossip(6, 2, 1).unwrap();
+        let gb = gossip.neighbor_bytes(msg);
+        assert!(gb.iter().all(|&b| b == 2 * 1000));
+        // hier leaders send strictly more than members
+        let hier = Topology::hier(8, 2).neighbor_bytes(msg);
+        assert!(hier[0] > hier[1]);
+        assert_eq!(hier[1], 1000);
+        // degenerate hier shapes match their data/timing planes: one group
+        // is a plain ring; all-size-1 groups are just the inter-group ring
+        let net = NetworkModel::paper_40gbps();
+        assert_eq!(Topology::hier(4, 1).neighbor_bytes(msg), vec![1000u64; 4]);
+        assert_eq!(
+            Topology::hier(4, 1).collective_time(&net, msg),
+            Topology::ring(4).collective_time(&net, msg)
+        );
+        assert_eq!(Topology::hier(4, 4).neighbor_bytes(msg), vec![1000u64; 4]);
+        // mixed sizes: size-1 group's leader only rides the inter ring
+        assert_eq!(Topology::hier(3, 2).neighbor_bytes(msg), vec![3000, 1000, 1000]);
+        // tree totals: every non-root sends once up, every sender once down
+        let tree = Topology::tree(8).neighbor_bytes(msg);
+        let total: u64 = tree.iter().sum();
+        assert_eq!(total, 2 * 7 * 1000);
+    }
+}

@@ -50,6 +50,25 @@ impl Gen {
         v
     }
 
+    /// Random permutation of `0..n` (Fisher–Yates on the case RNG).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut idx);
+        idx
+    }
+
+    /// Random subset of `items`: each kept independently with probability
+    /// `keep_prob`. May be empty — callers needing non-empty subsets must
+    /// handle that (e.g. the push-sum dropout rounds, where an empty active
+    /// set just means "keep everything local this round").
+    pub fn subset<T: Copy>(&mut self, items: &[T], keep_prob: f64) -> Vec<T> {
+        items
+            .iter()
+            .copied()
+            .filter(|_| self.rng.next_f64() < keep_prob)
+            .collect()
+    }
+
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
@@ -129,6 +148,27 @@ mod tests {
             let len = g.usize_in(0, 50);
             let v = g.vec_f32(len, 2.0);
             assert!(v.iter().all(|x| x.abs() <= 2.0));
+        });
+    }
+
+    #[test]
+    fn permutation_and_subset_are_well_formed() {
+        property("gen permutation/subset", 60, |g| {
+            let n = g.usize_in(0, 40);
+            let mut p = g.permutation(n);
+            p.sort_unstable();
+            assert_eq!(p, (0..n).collect::<Vec<_>>());
+            let items: Vec<usize> = (0..n).collect();
+            let s = g.subset(&items, 0.5);
+            assert!(s.len() <= n);
+            let mut last = None;
+            for &x in &s {
+                assert!(items.contains(&x));
+                assert!(last.map(|l| l < x).unwrap_or(true), "subset keeps order");
+                last = Some(x);
+            }
+            assert!(g.subset(&items, 1.0).len() == n);
+            assert!(g.subset(&items, 0.0).is_empty());
         });
     }
 

@@ -1,0 +1,364 @@
+//! Round-plan hardening (the engine's schedule contract) + `hetero_plan`
+//! invariants (paper §straggler mitigation, E9).
+//!
+//! The plan-coverage and grad-mode checks in `engine::run` were
+//! `debug_assert!`s in the seed — release builds silently accepted ragged
+//! `RoundPlan`s. They are hard `ensure!` errors now; the malformed-plan
+//! tests below must fail the run in **both** profiles, which CI enforces by
+//! running the suite under `cargo test` and `cargo test --release`.
+//!
+//! `hetero_plan`'s invariants, property-tested on synthetic engine state and
+//! probed on real runs under `SlowNode` and `ShiftedExp` stragglers:
+//!
+//! * every worker's step count lands in `[1, advance]`;
+//! * every fastest-measured worker receives the full `advance`;
+//! * the per-worker *target* round durations (steps × measured rate) agree
+//!   within 1.5× the slowest worker's per-step time — i.e. round-boundary
+//!   virtual times stay within about one slowest-step of each other, which
+//!   the `SlowNode` probe also verifies on the realized clocks.
+
+use olsgd::clock::Clocks;
+use olsgd::config::ExperimentConfig;
+use olsgd::coordinator::engine::{
+    self, hetero_plan, uniform_plan, Engine, LocalPhase, MixingStrategy, RoundOutcome, RoundPlan,
+};
+use olsgd::coordinator::{make_shards, TrainContext};
+use olsgd::data::{self, Dataset, GenConfig};
+use olsgd::optim::LrSchedule;
+use olsgd::runtime::ModelRuntime;
+use olsgd::simnet::StragglerModel;
+use olsgd::util::proptest::property;
+
+type R<T> = anyhow::Result<T>;
+
+/// Everything a `TrainContext` borrows, owned in one bundle per test.
+struct Fixture {
+    rt: ModelRuntime,
+    cfg: ExperimentConfig,
+    train: Dataset,
+    test: Dataset,
+}
+
+impl Fixture {
+    fn new(cfg: ExperimentConfig) -> Self {
+        let rt = ModelRuntime::native("linear").unwrap();
+        let gen = GenConfig::default();
+        let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+        let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+        Self { rt, cfg, train, test }
+    }
+
+    /// Mirrors `coordinator::run_experiment`'s context assembly.
+    fn ctx(&self) -> TrainContext<'_> {
+        let shards = make_shards(&self.cfg, &self.train);
+        let steps_per_epoch = (shards[0].len() / self.rt.train_batch).max(1);
+        let cluster = self.cfg.cluster(self.rt.n * 4).unwrap();
+        let schedule =
+            LrSchedule::paper_scaled(self.cfg.base_lr, self.cfg.epochs, steps_per_epoch);
+        TrainContext {
+            rt: &self.rt,
+            cfg: &self.cfg,
+            cluster,
+            schedule,
+            train: &self.train,
+            test: &self.test,
+            shards,
+        }
+    }
+}
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
+    cfg.workers = 4;
+    cfg.train_n = 512; // 128/shard -> 4 steps/epoch
+    cfg.test_n = 100;
+    cfg.epochs = 2.0;
+    cfg.eval_every = 2.0;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Malformed plans are hard errors (in debug AND release)
+// ---------------------------------------------------------------------------
+
+struct RaggedPlan;
+impl MixingStrategy for RaggedPlan {
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        RoundPlan { steps: vec![1; eng.workers.m + 1], advance: 1 }
+    }
+    fn mix(&mut self, _eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> R<()> {
+        Ok(())
+    }
+}
+
+struct ZeroAdvance;
+impl MixingStrategy for ZeroAdvance {
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        RoundPlan { steps: vec![0; eng.workers.m], advance: 0 }
+    }
+    fn mix(&mut self, _eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> R<()> {
+        Ok(())
+    }
+}
+
+struct OverAdvance;
+impl MixingStrategy for OverAdvance {
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        let too_far = eng.remaining() + 1;
+        RoundPlan { steps: vec![1; eng.workers.m], advance: too_far }
+    }
+    fn mix(&mut self, _eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> R<()> {
+        Ok(())
+    }
+}
+
+struct StepsBeyondAdvance;
+impl MixingStrategy for StepsBeyondAdvance {
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        let mut steps = vec![1; eng.workers.m];
+        steps[0] = 2; // > advance
+        RoundPlan { steps, advance: 1 }
+    }
+    fn mix(&mut self, _eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> R<()> {
+        Ok(())
+    }
+}
+
+struct ZeroStepWorker;
+impl MixingStrategy for ZeroStepWorker {
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        let mut steps = vec![2; eng.workers.m];
+        steps[1] = 0; // a silently-idle worker would corrupt the mix
+        RoundPlan { steps, advance: 2 }
+    }
+    fn mix(&mut self, _eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> R<()> {
+        Ok(())
+    }
+}
+
+struct MultiStepGradRound;
+impl MixingStrategy for MultiStepGradRound {
+    fn phase(&self) -> LocalPhase {
+        LocalPhase::GradOnly
+    }
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        RoundPlan { steps: vec![2; eng.workers.m], advance: 2 }
+    }
+    fn mix(&mut self, _eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> R<()> {
+        Ok(())
+    }
+}
+
+fn expect_malformed(err: anyhow::Error, what: &str) {
+    let msg = format!("{err:#}");
+    assert!(msg.contains("malformed RoundPlan"), "{what}: unhelpful error '{msg}'");
+}
+
+#[test]
+fn malformed_plans_fail_the_run_in_every_profile() {
+    // This test runs under whichever profile `cargo test` was invoked with;
+    // CI invokes both, so a regression back to debug_assert! (which release
+    // compiles out) cannot pass unnoticed.
+    let f = Fixture::new(small_cfg());
+    let ctx = f.ctx();
+    expect_malformed(engine::run(&ctx, &mut RaggedPlan).unwrap_err(), "ragged");
+    expect_malformed(engine::run(&ctx, &mut ZeroAdvance).unwrap_err(), "zero advance");
+    expect_malformed(engine::run(&ctx, &mut OverAdvance).unwrap_err(), "over-advance");
+    expect_malformed(
+        engine::run(&ctx, &mut StepsBeyondAdvance).unwrap_err(),
+        "steps beyond advance",
+    );
+    expect_malformed(engine::run(&ctx, &mut ZeroStepWorker).unwrap_err(), "zero-step worker");
+    expect_malformed(
+        engine::run(&ctx, &mut MultiStepGradRound).unwrap_err(),
+        "multi-step grad round",
+    );
+    // Identical checks active regardless of debug assertions.
+    let _profile_independent = cfg!(debug_assertions);
+}
+
+#[test]
+fn well_formed_plans_still_run() {
+    // The hardening must not reject the legitimate plans.
+    let mut cfg = small_cfg();
+    cfg.tau = 4;
+    cfg.tau_hetero = true;
+    cfg.straggler = StragglerModel::SlowNode { node: 0, factor: 3.0 };
+    let f = Fixture::new(cfg);
+    let log = engine::run(&f.ctx(), &mut BarrierProbe::new(4, 0.0, 0)).unwrap();
+    assert_eq!(log.steps, 8);
+}
+
+// ---------------------------------------------------------------------------
+// hetero_plan invariants — property-tested on synthetic engine state
+// ---------------------------------------------------------------------------
+
+/// Install synthetic measured rates into a fresh engine: worker `w` has
+/// completed `done[w]` steps in `done[w] * rate[w]` compute seconds.
+fn install_rates(eng: &mut Engine, done: &[usize], rates: &[f64]) {
+    let m = eng.workers.m;
+    eng.clocks = Clocks::new(m);
+    eng.steps_done = done.to_vec();
+    for w in 0..m {
+        eng.clocks.compute(w, done[w] as f64 * rates[w]);
+    }
+}
+
+fn check_plan_invariants(plan: &RoundPlan, rates: &[f64], tau: usize) {
+    let m = rates.len();
+    assert_eq!(plan.steps.len(), m);
+    assert_eq!(plan.advance, tau, "advance is the nominal tau when remaining allows");
+    let fastest = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    let slowest = rates.iter().cloned().fold(0.0f64, f64::max);
+    for (w, &s) in plan.steps.iter().enumerate() {
+        assert!(
+            (1..=plan.advance).contains(&s),
+            "worker {w}: steps {s} outside [1, {}]",
+            plan.advance
+        );
+        if rates[w] == fastest {
+            assert_eq!(s, plan.advance, "fastest worker {w} must get the full advance");
+        }
+    }
+    // Target round durations agree within 1.5 slowest-steps (the rounding +
+    // clamp-to-1 worst case; measured sup over 2·10^5 random rate vectors
+    // is 1.0 slowest-steps).
+    let durs: Vec<f64> = plan.steps.iter().zip(rates).map(|(&s, &r)| s as f64 * r).collect();
+    let spread = durs.iter().cloned().fold(0.0f64, f64::max)
+        - durs.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        spread <= 1.5 * slowest + 1e-9,
+        "boundary spread {spread} exceeds 1.5 slowest-steps ({})",
+        1.5 * slowest
+    );
+}
+
+#[test]
+fn property_hetero_plan_invariants_under_slow_node_and_shifted_exp_rates() {
+    use std::cell::RefCell;
+    let f = Fixture::new(small_cfg()); // m = 4 replicas back the engine
+    let ctx = f.ctx();
+    {
+        let eng = RefCell::new(Engine::new(&ctx));
+        eng.borrow_mut().total = 1_000_000; // remaining never caps the plan
+        let m = eng.borrow().workers.m;
+        property("hetero_plan invariants", 300, |g| {
+            let tau = g.usize_in(2, 16);
+            let base = g.f64_in(0.05, 0.5);
+            // Rate vectors from both straggler families: a deterministic
+            // slow node, or per-worker shifted-exponential means.
+            let slow_node = g.bool();
+            let rates: Vec<f64> = (0..m)
+                .map(|w| {
+                    if slow_node {
+                        if w == 0 {
+                            base * g.f64_in(1.5, 4.0)
+                        } else {
+                            base
+                        }
+                    } else {
+                        base * (1.0 + g.rng().next_exp(0.5))
+                    }
+                })
+                .collect();
+            let done: Vec<usize> = (0..m).map(|_| g.usize_in(1, 40)).collect();
+            let mut eng = eng.borrow_mut();
+            install_rates(&mut eng, &done, &rates);
+            let plan = hetero_plan(&eng, tau);
+            check_plan_invariants(&plan, &rates, tau);
+        });
+
+        // Unmeasured workers (steps_done = 0) fall back to the uniform plan.
+        let mut eng = eng.borrow_mut();
+        install_rates(&mut eng, &[3, 0, 3, 3], &[0.2; 4]);
+        let plan = hetero_plan(&eng, 6);
+        let uniform = uniform_plan(&eng, 6);
+        assert_eq!(plan.steps, uniform.steps);
+        assert_eq!(plan.advance, uniform.advance);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hetero_plan probed on real engine runs (E9 scenarios)
+// ---------------------------------------------------------------------------
+
+/// Barrier-style probe (a `local`-like schedule minus the averaging): plans
+/// with `hetero_plan`, checks the invariants against the engine's real
+/// measured rates each round, optionally checks the *realized* boundary lag,
+/// then barriers like every blocking algorithm does.
+struct BarrierProbe {
+    tau: usize,
+    /// assert realized boundary lag <= 1.5 * this (0.0 disables the check —
+    /// realized lag is unbounded under stochastic stragglers)
+    max_step_s: f64,
+    rounds_seen: usize,
+    checks: usize,
+    skip_rounds: usize,
+}
+
+impl BarrierProbe {
+    fn new(tau: usize, max_step_s: f64, skip_rounds: usize) -> Self {
+        Self { tau, max_step_s, rounds_seen: 0, checks: 0, skip_rounds }
+    }
+}
+
+impl MixingStrategy for BarrierProbe {
+    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
+        let plan = hetero_plan(eng, self.tau);
+        if eng.steps_done.iter().all(|&d| d > 0) && plan.advance == self.tau {
+            let rates: Vec<f64> = (0..eng.workers.m)
+                .map(|w| eng.clocks.worker(w).compute_s / eng.steps_done[w] as f64)
+                .collect();
+            check_plan_invariants(&plan, &rates, self.tau);
+            self.checks += 1;
+        }
+        plan
+    }
+
+    fn mix(&mut self, eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> R<()> {
+        self.rounds_seen += 1;
+        if self.max_step_s > 0.0 && self.rounds_seen > self.skip_rounds {
+            let lag = eng.clocks.lag();
+            anyhow::ensure!(
+                lag <= 1.5 * self.max_step_s + 1e-9,
+                "round {}: realized boundary lag {lag} exceeds 1.5 slowest-steps ({})",
+                self.rounds_seen,
+                1.5 * self.max_step_s
+            );
+        }
+        eng.clocks.barrier();
+        Ok(())
+    }
+}
+
+#[test]
+fn slow_node_probe_keeps_round_boundaries_within_one_slowest_step() {
+    let mut cfg = small_cfg();
+    cfg.epochs = 8.0; // 32 steps -> 8 rounds at tau=4
+    cfg.tau = 4;
+    cfg.straggler = StragglerModel::SlowNode { node: 2, factor: 3.0 };
+    let max_step_s = cfg.base_step_s * 3.0;
+    let f = Fixture::new(cfg);
+    // Round 1 is the uniform fallback (nothing measured yet): its lag is
+    // the straggler gap by design, so the realized check skips it.
+    let mut probe = BarrierProbe::new(4, max_step_s, 1);
+    let log = engine::run(&f.ctx(), &mut probe).unwrap();
+    assert_eq!(log.steps, 32);
+    assert!(probe.checks >= 6, "probe must actually check plans: {}", probe.checks);
+}
+
+#[test]
+fn shifted_exp_probe_keeps_plan_invariants() {
+    let mut cfg = small_cfg();
+    cfg.epochs = 8.0;
+    cfg.tau = 4;
+    cfg.straggler = StragglerModel::ShiftedExp { scale: 0.5 };
+    let f = Fixture::new(cfg);
+    // Realized lag is unbounded for stochastic stragglers; the plan
+    // invariants (measured-rate targets) must still hold every round.
+    let mut probe = BarrierProbe::new(4, 0.0, 0);
+    let log = engine::run(&f.ctx(), &mut probe).unwrap();
+    assert_eq!(log.steps, 32);
+    assert!(probe.checks >= 6, "probe must actually check plans: {}", probe.checks);
+}

@@ -84,6 +84,10 @@ fn config_rejects_nonsense() {
     assert!(c.set("ada_patience", "-1").is_err());
     assert!(c.set("net", "infiniband").is_ok()); // stored...
     assert!(c.network().is_err()); // ...but rejected at use
+    assert!(c.set("topology", "hypercube").is_ok()); // stored...
+    assert!(c.topology().is_err()); // ...but rejected at use
+    assert!(c.set("gossip_degree", "-2").is_err());
+    assert!(c.set("hier_groups", "two").is_err());
 }
 
 fn native_run(cfg: &ExperimentConfig) -> TrainLog {
@@ -96,8 +100,9 @@ fn native_run(cfg: &ExperimentConfig) -> TrainLog {
 
 #[test]
 fn degenerate_single_worker_runs() {
-    // m=1: all collectives are free no-ops; every algorithm must still work.
-    for algo in [Algo::Sync, Algo::OverlapM, Algo::OverlapAda, Algo::Cocod] {
+    // m=1: all collectives are free no-ops; every algorithm must still work
+    // (overlap-gossip included: its graph degenerates to the empty graph).
+    for algo in [Algo::Sync, Algo::OverlapM, Algo::OverlapAda, Algo::OverlapGossip, Algo::Cocod] {
         let mut cfg = ExperimentConfig::default();
         cfg.workers = 1;
         cfg.epochs = 1.0;

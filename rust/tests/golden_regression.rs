@@ -2,12 +2,19 @@
 //! preserving*, bit for bit.
 //!
 //! The seed's per-driver lockstep loops are preserved here verbatim as
-//! reference implementations (built only from public coordinator API). For
-//! every algorithm we run a tiny fixed-seed config through BOTH the engine
-//! (`coordinator::run`) and the reference loop and assert equal
+//! reference implementations (built only from public coordinator API — the
+//! pre-topology `ring_allreduce_mean` / `NetworkModel::allreduce_time`
+//! path). For every algorithm we run a tiny fixed-seed config through BOTH
+//! the engine (`coordinator::run`) and the reference loop and assert equal
 //! [`TrainLog::digest`]s — covering the loss trace, eval records, virtual
 //! timing (sim_time / compute / comm_blocked / idle), and byte accounting.
 //! Future PRs that touch the engine cannot silently drift any observable.
+//!
+//! Because the references predate the `topology` subsystem, the same
+//! assertion also locks the `collective/` refactor: on the default ring
+//! topology every pre-existing algorithm's digest must stay bit-identical
+//! to the legacy loops (ISSUE 2 acceptance). The new topology axis gets its
+//! own fixed-seed digest locks below (`new_axis_digests_*`).
 
 use olsgd::clock::Clocks;
 use olsgd::collective::{ring_allreduce_mean, start_allreduce, NonBlockingAllReduce};
@@ -369,7 +376,9 @@ fn reference_log(ctx: &TrainContext) -> TrainLog {
         Algo::Easgd => ref_elastic(ctx, 0.0),
         Algo::Eamsgd => ref_elastic(ctx, ctx.cfg.mu),
         Algo::Cocod => ref_cocod(ctx),
-        Algo::OverlapAda => unreachable!("new axis; no legacy reference"),
+        Algo::OverlapAda | Algo::OverlapGossip => {
+            unreachable!("new axis; no legacy reference")
+        }
     }
     .unwrap()
 }
@@ -457,6 +466,76 @@ fn overlap_ada_with_inert_controller_matches_overlap_m_observables() {
     }
     assert_eq!(ada.tau_trace, vec![(0, cfg.tau)], "inert controller records only τ0");
     assert!(m.tau_trace.is_empty());
+}
+
+#[test]
+fn explicit_ring_topology_is_digest_identical_to_the_legacy_loops() {
+    // `--topology ring` must be the seed's exact path, not merely a similar
+    // one: same chunked schedule, same α/β cost, same byte convention, and
+    // an inert neighbor-bytes vector (which stays out of the digest).
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    for algo in [Algo::Sync, Algo::Local, Algo::OverlapM, Algo::Cocod, Algo::Eamsgd] {
+        let mut cfg = golden_cfg(&StragglerModel::UniformJitter { jitter: 0.2 });
+        cfg.algo = algo;
+        cfg.topology = "ring".into();
+        let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+        let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+        let engine_log = run_experiment(&rt, &cfg, &train, &test).unwrap();
+        assert!(engine_log.neighbor_bytes.iter().all(|&b| b == 0));
+        let ctx = make_ctx(&rt, &cfg, &train, &test);
+        let ref_log = reference_log(&ctx);
+        assert_eq!(
+            engine_log.digest(),
+            ref_log.digest(),
+            "{algo:?}: explicit ring topology drifted from the legacy loop"
+        );
+    }
+}
+
+/// Fixed-seed digest locks for the new axis: every topology (and the
+/// decentralized algorithm) must be a pure function of its config — two
+/// fresh runs agree bit-for-bit — and the axis must actually bite (each
+/// topology lands on a distinct digest, all distinct from the ring).
+#[test]
+fn new_axis_digests_are_stable_and_distinct() {
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    let legs: [(&str, Algo); 6] = [
+        ("ring", Algo::Local),
+        ("hier", Algo::Local),
+        ("tree", Algo::Local),
+        ("hier", Algo::OverlapM),
+        ("tree", Algo::OverlapM),
+        ("ring", Algo::OverlapGossip),
+    ];
+    let mut digests = Vec::new();
+    for (topology, algo) in legs {
+        let mut cfg = golden_cfg(&StragglerModel::None);
+        cfg.workers = 4;
+        cfg.train_n = 256; // keep 64/shard with the extra worker
+        cfg.algo = algo;
+        cfg.topology = topology.into();
+        cfg.hier_groups = 2;
+        cfg.gossip_degree = 2;
+        let run_digest = || {
+            let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+            let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+            run_experiment(&rt, &cfg, &train, &test).unwrap().digest()
+        };
+        let (a, b) = (run_digest(), run_digest());
+        assert_eq!(a, b, "{algo:?} on {topology}: digest not reproducible");
+        digests.push((topology, algo, a));
+    }
+    for i in 0..digests.len() {
+        for j in i + 1..digests.len() {
+            assert_ne!(
+                digests[i].2, digests[j].2,
+                "{:?} vs {:?}: the topology axis must be digest-visible",
+                digests[i], digests[j]
+            );
+        }
+    }
 }
 
 #[test]
