@@ -1,0 +1,206 @@
+//! **E12 — wall-clock hiding** (EXPERIMENTS.md): the first *real-time*
+//! point on the perf trajectory. Every other bench reports virtual simnet
+//! seconds; this one times the `--execution threads` backend on real
+//! cores, where the local phase runs one OS thread per worker and each
+//! collective runs on a background communicator thread.
+//!
+//! Protocol (equal global steps for every leg):
+//!
+//! * `sync τ=1`    — blocking collective every step: the baseline;
+//! * `local τ=T`   — blocking collective every T steps: amortization only;
+//! * `overlap-m τ=T` — non-blocking collective under the next round's
+//!   compute: amortization + hiding (the paper's schedule);
+//! * `overlap-gossip τ=T` — decentralized exchange, also hidden.
+//!
+//! Each leg runs under BOTH backends; the bench hard-asserts the two
+//! `TrainLog` digests are identical (the tentpole guarantee) and records
+//! the threads-backend wall time. Results land in `BENCH_wallclock.json`
+//! at the repo root plus per-leg JSONs under `results/wallclock/`.
+//!
+//! Sizing: `OLSGD_SMOKE=1` shrinks everything for CI; `OLSGD_WC_ASSERT=1`
+//! additionally hard-fails unless overlap-m beats sync by ≥ 1.2× (the
+//! ISSUE-3 acceptance bar — meaningful on ≥ 4 physical cores). A serial
+//! vs thread-parallel `mean_into` micro-comparison rides along.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+use olsgd::config::{Algo, Execution, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::metrics::{write_json, TrainLog};
+use olsgd::model::vecmath;
+use olsgd::runtime::ModelRuntime;
+use olsgd::util::json::{arr, num, obj, s, Json};
+
+struct Leg {
+    label: &'static str,
+    algo: Algo,
+    tau: usize,
+    wall_s: f64,
+    log: TrainLog,
+}
+
+fn run_both(cfg: &ExperimentConfig, rt: &ModelRuntime) -> Result<(f64, TrainLog)> {
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.execution = Execution::Sim;
+    let sim_log = run_experiment(rt, &sim_cfg, &train, &test)?;
+
+    let mut thr_cfg = cfg.clone();
+    thr_cfg.execution = Execution::Threads;
+    // Warm-up run (page in code/data, spin up the allocator), then timed.
+    run_experiment(rt, &thr_cfg, &train, &test)?;
+    let t0 = Instant::now();
+    let thr_log = run_experiment(rt, &thr_cfg, &train, &test)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    assert_eq!(
+        sim_log.digest(),
+        thr_log.digest(),
+        "{}: threads backend drifted from sim — the digest-identity \
+         guarantee is broken",
+        cfg.algo.name()
+    );
+    Ok((wall, thr_log))
+}
+
+fn mean_micro(threads: usize, smoke: bool) -> (f64, f64) {
+    // Paper-scale flat vectors (11.2 M params, 8 replicas); smoke mode
+    // shrinks them so CI runners don't pay ~400 MB for a footnote.
+    let n = if smoke { 1 << 20 } else { 11_173_962 };
+    let m = 8;
+    let vs: Vec<Vec<f32>> = (0..m).map(|w| vec![w as f32 * 0.25 + 0.1; n]).collect();
+    let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+    let mut out = vec![0.0f32; n];
+    // Warm both paths first so the serial leg doesn't eat the output
+    // buffer's first-touch page faults (which would flatter the parallel
+    // ratio); then time a second pass of each over resident memory.
+    vecmath::mean_into(&refs, &mut out);
+    vecmath::mean_into_parallel(&refs, &mut out, threads);
+    let t0 = Instant::now();
+    vecmath::mean_into(&refs, &mut out);
+    let serial = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    vecmath::mean_into_parallel(&refs, &mut out, threads);
+    let parallel = t1.elapsed().as_secs_f64();
+    (serial, parallel)
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::var("OLSGD_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+
+    let mut base = ExperimentConfig::default();
+    base.model = "linear".into();
+    base.workers = cores.clamp(2, 8);
+    if let Ok(w) = std::env::var("OLSGD_WC_WORKERS") {
+        base.workers = w.parse().unwrap_or(base.workers);
+    }
+    base.train_n = base.workers * if smoke { 64 } else { 256 };
+    base.test_n = 100;
+    base.epochs = if smoke { 2.0 } else { 8.0 };
+    if let Ok(e) = std::env::var("OLSGD_WC_EPOCHS") {
+        base.epochs = e.parse().unwrap_or(base.epochs);
+    }
+    base.eval_every = base.epochs; // eval only at the end: time the training
+    let tau = 8;
+
+    let rt = ModelRuntime::native(&base.model)?;
+    println!(
+        "=== E12 wall-clock hiding (threads backend, {} cores, m={}, {} global steps) ===",
+        cores,
+        base.workers,
+        (base.epochs * (base.train_n as f64 / base.workers as f64 / 32.0)).round()
+    );
+    println!("{:<22} {:>6} {:>12} {:>14} {:>12}", "leg", "tau", "wall (s)", "vs sync", "digest");
+
+    let specs: [(&'static str, Algo, usize); 4] = [
+        ("sync", Algo::Sync, 1),
+        ("local", Algo::Local, tau),
+        ("overlap-m", Algo::OverlapM, tau),
+        ("overlap-gossip", Algo::OverlapGossip, tau),
+    ];
+    let mut legs: Vec<Leg> = Vec::new();
+    for (label, algo, tau) in specs {
+        let mut cfg = base.clone();
+        cfg.algo = algo;
+        cfg.tau = tau;
+        let (wall_s, log) = run_both(&cfg, &rt)?;
+        legs.push(Leg { label, algo, tau, wall_s, log });
+    }
+
+    let sync_wall = legs[0].wall_s;
+    for leg in &legs {
+        println!(
+            "{:<22} {:>6} {:>12.4} {:>13.2}x {:>12}",
+            leg.label,
+            leg.tau,
+            leg.wall_s,
+            sync_wall / leg.wall_s,
+            "ok"
+        );
+    }
+    let overlap_speedup = sync_wall / legs[2].wall_s;
+    let hiding_speedup = legs[1].wall_s / legs[2].wall_s;
+    println!("\noverlap-m vs sync (equal steps): {overlap_speedup:.2}x");
+    println!("overlap-m vs local@same-tau (pure hiding): {hiding_speedup:.2}x");
+
+    let (mean_serial, mean_parallel) = mean_micro(base.workers, smoke);
+    println!(
+        "mean_into x 8 replicas: serial {:.1} ms, parallel({}) {:.1} ms ({:.2}x)",
+        1e3 * mean_serial,
+        base.workers,
+        1e3 * mean_parallel,
+        mean_serial / mean_parallel
+    );
+
+    let out = Path::new("results/wallclock");
+    for leg in &legs {
+        write_json(out, &format!("{}_tau{}.json", leg.algo.name(), leg.tau), &leg.log.to_json())?;
+    }
+    let summary = obj(vec![
+        ("bench", s("wallclock")),
+        ("experiment", s("E12")),
+        ("host_cores", num(cores as f64)),
+        ("workers", num(base.workers as f64)),
+        ("steps", num(legs[0].log.steps as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("digest_identical_sim_vs_threads", Json::Bool(true)),
+        (
+            "legs",
+            arr(legs.iter().map(|l| {
+                obj(vec![
+                    ("label", s(l.label)),
+                    ("algo", s(l.algo.name())),
+                    ("tau", num(l.tau as f64)),
+                    ("execution", s("threads")),
+                    ("wall_s", num(l.wall_s)),
+                    ("speedup_vs_sync", num(sync_wall / l.wall_s)),
+                    ("virtual_sim_time_s", num(l.log.total_sim_time)),
+                    ("digest", s(&format!("{:016x}", l.log.digest()))),
+                ])
+            })),
+        ),
+        ("speedup_overlap_vs_sync", num(overlap_speedup)),
+        ("speedup_overlap_vs_local", num(hiding_speedup)),
+        ("mean_into_serial_s", num(mean_serial)),
+        ("mean_into_parallel_s", num(mean_parallel)),
+    ]);
+    write_json(Path::new("."), "BENCH_wallclock.json", &summary)?;
+    println!("\nwrote BENCH_wallclock.json and {}/", out.display());
+
+    if std::env::var("OLSGD_WC_ASSERT").map(|v| v == "1").unwrap_or(false) {
+        anyhow::ensure!(
+            overlap_speedup >= 1.2,
+            "overlap-m wall-clock speedup {overlap_speedup:.2}x < 1.2x over sync \
+             (needs >= 4 physical cores to be meaningful; got {cores})"
+        );
+        println!("acceptance: overlap-m >= 1.2x over sync at equal steps — PASS");
+    }
+    Ok(())
+}

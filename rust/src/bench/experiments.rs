@@ -25,11 +25,15 @@ use crate::util::json::{arr, num, obj, s, Json};
 
 /// Bench-wide context: loaded model + datasets + output dir.
 pub struct BenchCtx {
+    /// the loaded model runtime shared by every leg
     pub rt: ModelRuntime,
+    /// the base config each leg clones and mutates
     pub base: ExperimentConfig,
+    /// results directory (`results/<bench>/`)
     pub out: PathBuf,
     train_iid: Dataset,
     train_cache_seed: u64,
+    /// the shared test split
     pub test: Dataset,
 }
 

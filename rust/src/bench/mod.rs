@@ -8,17 +8,25 @@ use std::time::Instant;
 
 use crate::util::stats::{percentile, Summary};
 
+/// Timing summary of one micro-benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// benchmark label
     pub name: String,
+    /// timed iterations
     pub iters: usize,
+    /// mean seconds per iteration
     pub mean_s: f64,
+    /// sample standard deviation
     pub std_s: f64,
+    /// median seconds
     pub p50_s: f64,
+    /// 99th-percentile seconds
     pub p99_s: f64,
 }
 
 impl BenchResult {
+    /// The stable one-line report format the perf pass greps.
     pub fn report(&self) -> String {
         format!(
             "bench {:<40} iters={:<5} mean={:>12} p50={:>12} p99={:>12} std={:>10}",
@@ -32,6 +40,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable seconds (s / ms / µs / ns).
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")

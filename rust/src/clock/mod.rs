@@ -16,8 +16,11 @@
 #[derive(Clone, Debug, Default)]
 pub struct WorkerClock {
     now: f64,
+    /// seconds spent computing
     pub compute_s: f64,
+    /// seconds blocked waiting on communication
     pub comm_blocked_s: f64,
+    /// seconds idle at barriers (waiting for stragglers)
     pub idle_s: f64,
 }
 
@@ -28,19 +31,23 @@ pub struct Clocks {
 }
 
 impl Clocks {
+    /// All-zero clocks for `m` workers.
     pub fn new(m: usize) -> Self {
         assert!(m > 0);
         Self { workers: vec![WorkerClock::default(); m] }
     }
 
+    /// Worker count.
     pub fn len(&self) -> usize {
         self.workers.len()
     }
 
+    /// Whether there are zero workers (never, by construction).
     pub fn is_empty(&self) -> bool {
         self.workers.is_empty()
     }
 
+    /// Worker `w`'s current virtual time.
     pub fn now(&self, w: usize) -> f64 {
         self.workers[w].now
     }
@@ -61,6 +68,7 @@ impl Clocks {
         self.max_now() - self.min_now()
     }
 
+    /// Worker `w`'s full time breakdown.
     pub fn worker(&self, w: usize) -> &WorkerClock {
         &self.workers[w]
     }
@@ -107,10 +115,12 @@ impl Clocks {
         self.workers.iter().map(|w| w.comm_blocked_s).sum()
     }
 
+    /// Total compute seconds across workers.
     pub fn total_compute(&self) -> f64 {
         self.workers.iter().map(|w| w.compute_s).sum()
     }
 
+    /// Total barrier-idle seconds across workers.
     pub fn total_idle(&self) -> f64 {
         self.workers.iter().map(|w| w.idle_s).sum()
     }

@@ -11,14 +11,21 @@
 //!   (`NetworkModel::allreduce_time`), because wall-clock on this 1-core box
 //!   says nothing about a 16-node 40 Gbps cluster.
 //!
-//! Non-blocking collectives (the paper's key mechanism) come in two forms:
-//! `NonBlockingAllReduce` couples the eagerly-computed result with its
-//! virtual completion time (the deterministic DES mode every experiment
-//! uses), and `spawn_background_mean` runs the averaging on a real OS thread
-//! (demonstrating the overlap mechanically; numerics are identical).
+//! Non-blocking collectives (the paper's key mechanism) dispatch through
+//! the execution backend: [`launch_collective`] hands the data-plane
+//! reduction to `Execution::start_reduce`, which computes it inline on the
+//! `sim` backend (the deterministic DES mode, eager like the seed) or on a
+//! **background communicator thread** on the `threads` backend — the real
+//! overlap `rust/benches/wallclock.rs` measures. Either way the result is
+//! bit-identical and the virtual completion time comes from the simnet
+//! cost model. `spawn_background_mean` survives as the original
+//! proof-of-concept of the threaded form.
 
 use std::thread;
 
+use crate::clock::Clocks;
+use crate::config::Execution;
+use crate::executor::ReduceHandle;
 use crate::simnet::NetworkModel;
 use crate::topology::Topology;
 
@@ -100,12 +107,16 @@ pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
 /// time at which it becomes visible to the workers.
 #[derive(Clone, Debug)]
 pub struct NonBlockingAllReduce {
+    /// the exact mean of the inputs (every exact topology produces it)
     pub result: Vec<f32>,
+    /// virtual time the collective was launched
     pub start_time: f64,
+    /// virtual wire duration (simnet cost model)
     pub duration: f64,
 }
 
 impl NonBlockingAllReduce {
+    /// Virtual time at which the result becomes visible to the workers.
     pub fn ready_at(&self) -> f64 {
         self.start_time + self.duration
     }
@@ -159,22 +170,91 @@ pub fn start_collective(
     }
 }
 
+/// A non-blocking exact collective whose data plane may still be running
+/// on a background communicator thread (`--execution threads`) or already
+/// holds its result (`sim`). Produced by [`launch_collective`]; virtual
+/// timing is fixed at launch, so observables never depend on wall clock.
+pub struct PendingCollective {
+    handle: ReduceHandle,
+    /// virtual time the collective was launched
+    pub start_time: f64,
+    /// virtual wire duration (simnet cost model)
+    pub duration: f64,
+}
+
+impl PendingCollective {
+    /// Virtual time at which the result becomes visible to the workers.
+    pub fn ready_at(&self) -> f64 {
+        self.start_time + self.duration
+    }
+
+    /// Block (for real, on the threads backend) until the data plane is
+    /// done and return the completed collective. Instant on `sim`.
+    pub fn wait(self) -> NonBlockingAllReduce {
+        let mut buffers = self.handle.wait();
+        NonBlockingAllReduce {
+            result: buffers.swap_remove(0),
+            start_time: self.start_time,
+            duration: self.duration,
+        }
+    }
+
+    /// Convenience: wait for the data plane, charge each worker's virtual
+    /// clock up to `ready_at` (no-op for workers already past it — the
+    /// paper's hidden communication), and return the averaged vector.
+    pub fn absorb(self, clocks: &mut Clocks) -> Vec<f32> {
+        let h = self.wait();
+        h.absorb(clocks);
+        h.result
+    }
+}
+
+/// Launch a non-blocking exact collective through the execution backend:
+/// the data plane (the topology's real reduce schedule over a snapshot of
+/// `inputs`) runs inline on `Execution::Sim` or on a background
+/// communicator thread on `Execution::Threads`; the timing plane stamps
+/// the completion with the topology's cost formula either way.
+pub fn launch_collective(
+    exec: &Execution,
+    topo: &Topology,
+    inputs: &[&[f32]],
+    net: &NetworkModel,
+    message_bytes: usize,
+    start_time: f64,
+) -> PendingCollective {
+    assert_eq!(inputs.len(), topo.m, "participant count != topology size");
+    let duration = topo.collective_time(net, message_bytes);
+    let buffers: Vec<Vec<f32>> = inputs.iter().map(|v| v.to_vec()).collect();
+    let topo = topo.clone();
+    let handle = exec.start_reduce(move || {
+        let mut buffers = buffers;
+        topo.allreduce_mean(&mut buffers);
+        buffers
+    });
+    PendingCollective { handle, start_time, duration }
+}
+
 /// Real-thread variant: computes the mean on a background OS thread, proving
 /// the coordinator's hot loop never blocks on averaging. Join to collect.
+/// (The seed's proof of concept — the execution path proper now goes
+/// through [`launch_collective`] + `Execution::start_reduce`.)
 pub struct BackgroundMean {
     handle: thread::JoinHandle<Vec<f32>>,
 }
 
 impl BackgroundMean {
+    /// Join the background thread and take the averaged vector.
     pub fn join(self) -> Vec<f32> {
         self.handle.join().expect("background mean thread panicked")
     }
 
+    /// Whether the background averaging has completed.
     pub fn is_finished(&self) -> bool {
         self.handle.is_finished()
     }
 }
 
+/// Spawn a background OS thread averaging `inputs` via the ring schedule.
 pub fn spawn_background_mean(inputs: Vec<Vec<f32>>) -> BackgroundMean {
     BackgroundMean {
         handle: thread::spawn(move || {
@@ -283,6 +363,50 @@ mod tests {
         assert_eq!(clocks.worker(0).comm_blocked_s, 0.0);
         assert!((clocks.worker(1).comm_blocked_s - h.duration).abs() < 1e-12);
         assert_eq!(clocks.now(1), h.ready_at());
+        clocks.check_invariants();
+    }
+
+    #[test]
+    fn launch_collective_is_backend_invariant() {
+        use crate::config::Execution;
+        let net = NetworkModel::paper_40gbps();
+        let inputs: Vec<Vec<f32>> =
+            vec![vec![1.0, 2.0, 3.0], vec![5.0, 4.0, 3.0], vec![0.0, -6.0, 9.0]];
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        for topo in [Topology::ring(3), Topology::tree(3)] {
+            let eager = start_collective(&topo, &refs, &net, 1 << 20, 2.0);
+            let sim = launch_collective(&Execution::Sim, &topo, &refs, &net, 1 << 20, 2.0);
+            let thr = launch_collective(&Execution::Threads, &topo, &refs, &net, 1 << 20, 2.0);
+            assert_eq!(sim.ready_at(), eager.ready_at());
+            assert_eq!(thr.ready_at(), eager.ready_at());
+            let (sim, thr) = (sim.wait(), thr.wait());
+            // Bit-identical across backends AND against the eager seed path.
+            for (a, b) in sim.result.iter().zip(&eager.result) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in thr.result.iter().zip(&eager.result) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pending_collective_absorb_matches_eager_absorb() {
+        use crate::clock::Clocks;
+        use crate::config::Execution;
+        let net = NetworkModel::paper_40gbps();
+        let a = vec![1.0f32; 8];
+        let b = vec![3.0f32; 8];
+        let pending =
+            launch_collective(&Execution::Threads, &Topology::ring(2), &[&a, &b], &net, 1 << 20, 10.0);
+        let ready = pending.ready_at();
+        let mut clocks = Clocks::new(2);
+        clocks.compute(0, ready + 5.0);
+        clocks.compute(1, 10.0);
+        let result = pending.absorb(&mut clocks);
+        assert_close(&result, &vec![2.0f32; 8], 1e-6, 0.0);
+        assert_eq!(clocks.worker(0).comm_blocked_s, 0.0);
+        assert_eq!(clocks.now(1), ready);
         clocks.check_invariants();
     }
 

@@ -33,6 +33,7 @@ pub use linalg::{matmul_nn, matmul_pqt, matmul_tn, orthonormalize_columns};
 
 /// Persistent PowerSGD state for one model + worker group.
 pub struct PowerSgd {
+    /// configured compression rank r
     pub rank: usize,
     n: usize,
     workers: usize,
@@ -57,6 +58,7 @@ pub struct RoundOutput {
 }
 
 impl PowerSgd {
+    /// Fresh state (warm-start Qs seeded identically on every worker).
     pub fn new(manifest: &ModelManifest, rank: usize, workers: usize, seed: u64) -> Self {
         assert!(rank >= 1, "rank must be >= 1");
         let mut mats = Vec::new();

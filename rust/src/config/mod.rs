@@ -13,25 +13,72 @@ use anyhow::{bail, Context, Result};
 use crate::simnet::{ClusterModel, ComputeModel, NetworkModel, StragglerModel};
 use crate::topology::{Topology, TopologyKind};
 
+/// Which execution backend drives the round loop (DESIGN.md §9).
+///
+/// Both backends produce bit-identical `TrainLog`s (the cross-backend
+/// golden tests in `rust/tests/golden_regression.rs` assert digest
+/// equality); they differ only in what runs on real OS threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Execution {
+    /// Single-threaded discrete-event simulation — the default. All
+    /// concurrency is virtual (clock arithmetic); nothing overlaps on
+    /// real cores.
+    Sim,
+    /// Real-thread backend: one OS thread per simulated worker for the
+    /// local phase, plus a background communicator thread per collective,
+    /// so overlapped schedules genuinely hide the reduction behind local
+    /// compute (measured by `rust/benches/wallclock.rs`, E12).
+    Threads,
+}
+
+impl Execution {
+    /// Parse a CLI/config spelling (`sim` | `threads`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sim" => Execution::Sim,
+            "threads" | "thread" => Execution::Threads,
+            _ => bail!("unknown execution backend '{s}' (want sim|threads)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`Execution::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Execution::Sim => "sim",
+            Execution::Threads => "threads",
+        }
+    }
+}
+
 /// Which algorithm drives the run (see coordinator/).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
+    /// Fully synchronous SGD: blocking gradient all-reduce every step.
     Sync,
+    /// Local SGD: blocking parameter averaging every τ steps.
     Local,
+    /// Overlap-Local-SGD, vanilla anchor (Eq. 5, β = 0).
     Overlap,
+    /// Overlap-Local-SGD with anchor momentum (Eqs. 10–11) — the paper's
+    /// headline algorithm.
     OverlapM,
     /// Overlap-m with the AdaComm-style adaptive-τ controller.
     OverlapAda,
     /// Decentralized overlap: per-worker anchors pulled toward push-sum
     /// neighbor averages on the gossip topology (DESIGN.md §8, E10).
     OverlapGossip,
+    /// EASGD: blocking symmetric elastic x↔z exchange every τ steps.
     Easgd,
+    /// EAMSGD: EASGD with local Nesterov momentum.
     Eamsgd,
+    /// CoCoD-SGD: local deltas applied onto a τ-stale average, overlapped.
     Cocod,
+    /// Sync SGD with rank-r PowerSGD gradient compression.
     PowerSgd,
 }
 
 impl Algo {
+    /// Parse a CLI/config spelling (accepts `-`/`_`/collapsed variants).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "sync" => Algo::Sync,
@@ -50,6 +97,7 @@ impl Algo {
         })
     }
 
+    /// Canonical name (round-trips through [`Algo::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Algo::Sync => "sync",
@@ -65,6 +113,7 @@ impl Algo {
         }
     }
 
+    /// Every algorithm, in the canonical sweep order.
     pub fn all() -> &'static [Algo] {
         &[
             Algo::Sync,
@@ -85,17 +134,28 @@ impl Algo {
 /// `set("dotted.key", "value")` so config files and CLI share one path.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// free-form experiment name (used in logs and output paths)
     pub name: String,
+    /// which mixing schedule drives the run
     pub algo: Algo,
+    /// model name handed to `runtime::load_auto` ("cnn", "linear", ...)
     pub model: String,
+    /// cluster size m (simulated workers)
     pub workers: usize,
+    /// training length in epochs (fractional allowed)
     pub epochs: f64,
+    /// the one experiment seed every PRNG stream is derived from
     pub seed: u64,
     /// evaluate every this many epochs (also the loss-record cadence)
     pub eval_every: f64,
+    /// execution backend: discrete-event `sim` or real-thread `threads`
+    /// (bit-identical observables either way; DESIGN.md §9)
+    pub execution: Execution,
 
     // optimizer
+    /// base learning rate before the paper's warmup/decay scaling
     pub base_lr: f32,
+    /// local steps per synchronization round (the paper's τ)
     pub tau: usize,
     /// adaptive-τ floor (overlap-ada never shrinks τ below this)
     pub tau_min: usize,
@@ -106,9 +166,13 @@ pub struct ExperimentConfig {
     pub ada_patience: usize,
     /// adaptive-τ: relative round-loss improvement that counts as progress
     pub ada_threshold: f64,
+    /// pullback / elastic strength α (Eq. 4)
     pub alpha: f32,
+    /// anchor momentum β (Eqs. 10–11); 0 gives the vanilla anchor
     pub beta: f32,
+    /// local Nesterov momentum μ
     pub mu: f32,
+    /// weight decay
     pub wd: f32,
     /// PowerSGD rank
     pub rank: usize,
@@ -117,13 +181,19 @@ pub struct ExperimentConfig {
     pub local_opt: String,
 
     // data
+    /// training-set size (synthetic-CIFAR samples)
     pub train_n: usize,
+    /// test-set size (must be a multiple of the eval batch)
     pub test_n: usize,
+    /// non-IID sharding: each worker's shard dominated by one class
     pub noniid: bool,
+    /// dominant-class fraction of each non-IID shard (paper: 0.64)
     pub dominant_frac: f64,
+    /// reshuffle each worker's shard every epoch
     pub reshuffle: bool,
 
     // cluster timing + communication graph
+    /// network cost preset: paper40g | slow10g | fast
     pub net_preset: String,
     /// communication topology: ring | hier | tree | gossip (DESIGN.md §8)
     pub topology: String,
@@ -131,13 +201,17 @@ pub struct ExperimentConfig {
     pub gossip_degree: usize,
     /// number of groups in the hierarchical two-level ring
     pub hier_groups: usize,
+    /// per-worker compute-time variability model
     pub straggler: StragglerModel,
+    /// seconds per local mini-batch step on an unperturbed node
     pub base_step_s: f64,
     /// None -> paper ResNet-18 message size (44.7 MB); Some(0) -> actual
     /// model size; Some(b) -> explicit bytes
     pub message_bytes: Option<usize>,
 
+    /// directory holding the AOT PJRT artifacts (feature `pjrt`)
     pub artifacts_dir: String,
+    /// default output directory for result JSON/CSV
     pub out_dir: String,
 }
 
@@ -151,6 +225,7 @@ impl Default for ExperimentConfig {
             epochs: 20.0,
             seed: 1,
             eval_every: 1.0,
+            execution: Execution::Sim,
             // paper recipe is 0.1 on BN-equipped ResNet-18; our scaled CNN
             // has no normalization layers, so 0.05 is its stable analogue
             base_lr: 0.05,
@@ -204,6 +279,7 @@ impl ExperimentConfig {
             "epochs" => self.epochs = parse_f64()?,
             "seed" => self.seed = v.parse().context("bad seed")?,
             "eval_every" => self.eval_every = parse_f64()?,
+            "execution" | "exec" => self.execution = Execution::parse(v)?,
             "base_lr" | "lr" => self.base_lr = parse_f64()? as f32,
             "tau" => self.tau = parse_usize()?,
             "tau_min" => self.tau_min = parse_usize()?,
@@ -273,6 +349,7 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// The wire cost model selected by `net_preset`.
     pub fn network(&self) -> Result<NetworkModel> {
         Ok(match self.net_preset.as_str() {
             "paper40g" => NetworkModel::paper_40gbps(),
@@ -434,6 +511,20 @@ mod tests {
         assert_eq!(d.tau_min, 1);
         assert!(!d.tau_hetero);
         assert!(c.set("ada_threshold", "much").is_err());
+    }
+
+    #[test]
+    fn execution_backend_parses_and_defaults_to_sim() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.execution, Execution::Sim);
+        c.set("execution", "threads").unwrap();
+        assert_eq!(c.execution, Execution::Threads);
+        c.set("exec", "sim").unwrap();
+        assert_eq!(c.execution, Execution::Sim);
+        assert!(c.set("execution", "fibers").is_err());
+        for e in [Execution::Sim, Execution::Threads] {
+            assert_eq!(Execution::parse(e.name()).unwrap(), e);
+        }
     }
 
     #[test]

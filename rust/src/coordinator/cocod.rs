@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
 use super::{account_collective, TrainContext};
-use crate::collective::{start_collective, NonBlockingAllReduce};
+use crate::collective::{launch_collective, PendingCollective};
 
 /// Delta-on-stale-average mixing with a non-blocking collective.
 #[derive(Default)]
@@ -29,10 +29,11 @@ pub struct CocodStrategy {
     /// each worker's model snapshot at the launch boundary (for the delta
     /// the round accumulates on top of the stale average)
     snapshots: Vec<Vec<f32>>,
-    pending: Option<NonBlockingAllReduce>,
+    pending: Option<PendingCollective>,
 }
 
 impl CocodStrategy {
+    /// Fresh strategy state (snapshots fill at the first launch).
     pub fn new() -> Self {
         Self::default()
     }
@@ -45,12 +46,16 @@ impl MixingStrategy for CocodStrategy {
 
     fn before_local(&mut self, eng: &mut Engine, ctx: &TrainContext) -> Result<()> {
         // Launch the collective of the boundary models on the configured
-        // exact topology; it runs under the round's compute.
+        // exact topology; it runs under the round's compute — genuinely so
+        // on the threads backend, where the communicator thread reduces
+        // while the worker threads take their τ local steps.
         let start = eng.clocks.max_now();
         account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         self.snapshots.clone_from(&eng.workers.params);
+        let exec = eng.exec;
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
-        self.pending = Some(start_collective(
+        self.pending = Some(launch_collective(
+            &exec,
             &ctx.cluster.topology,
             &refs,
             &ctx.cluster.net,
@@ -63,12 +68,12 @@ impl MixingStrategy for CocodStrategy {
     fn mix(&mut self, eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
         // Absorb: x_i = avg(boundary models) + (x_i - snapshot_i).
         let h = self.pending.take().expect("cocod launch precedes absorb");
-        h.absorb(&mut eng.clocks);
+        let avg = h.absorb(&mut eng.clocks);
         for w in 0..eng.workers.m {
             let p = &mut eng.workers.params[w];
             let snap = &self.snapshots[w];
             for (i, pi) in p.iter_mut().enumerate() {
-                *pi = h.result[i] + (*pi - snap[i]);
+                *pi = avg[i] + (*pi - snap[i]);
             }
         }
         Ok(())

@@ -36,6 +36,8 @@ pub struct ElasticStrategy {
 }
 
 impl ElasticStrategy {
+    /// Strategy with the per-round exchange cost precomputed; the center
+    /// variable initializes at `on_run_start`.
     pub fn new(ctx: &TrainContext) -> Self {
         Self { comm_t: ctx.cluster.collective_time(), z: Vec::new() }
     }

@@ -35,6 +35,7 @@ use anyhow::{ensure, Result};
 
 use super::{Recorder, TrainContext, Workers};
 use crate::clock::Clocks;
+use crate::config::Execution;
 use crate::metrics::TrainLog;
 
 /// Virtual cost of one fused elementwise pass over the paper-size model
@@ -79,8 +80,11 @@ pub struct RoundOutcome {
 /// Strategies receive `&mut Engine` and touch exactly these — no driver
 /// keeps private copies of the shared infrastructure.
 pub struct Engine {
+    /// per-worker training state (replicas, batchers, RNG streams)
     pub workers: Workers,
+    /// per-worker virtual clocks
     pub clocks: Clocks,
+    /// loss/eval/byte recorder
     pub rec: Recorder,
     /// Global step counter (completed steps of the nominal schedule).
     pub k: usize,
@@ -90,9 +94,17 @@ pub struct Engine {
     pub round: usize,
     /// Per-worker completed local steps (diverges from `k` under hetero-τ).
     pub steps_done: Vec<usize>,
+    /// Execution backend (`cfg.execution`): runs the local phase and
+    /// dispatches reduction jobs — inline on `sim`, on real OS threads on
+    /// `threads`. Strategies launch their collectives through it (see
+    /// `collective::launch_collective` / `Execution::start_reduce` in the
+    /// `executor` module).
+    pub exec: Execution,
 }
 
 impl Engine {
+    /// Fresh engine state for one run; the execution backend comes from
+    /// the config's `execution` mode.
     pub fn new(ctx: &TrainContext) -> Self {
         let workers = Workers::new(ctx);
         let m = workers.m;
@@ -104,6 +116,7 @@ impl Engine {
             total: ctx.total_steps(),
             round: 0,
             steps_done: vec![0; m],
+            exec: ctx.cfg.execution,
         }
     }
 
@@ -178,9 +191,13 @@ pub fn plan_tau(eng: &Engine, ctx: &TrainContext, tau: usize) -> RoundPlan {
 }
 
 /// Drive `strategy` to completion: the one round loop every algorithm
-/// shares. Local-step order is worker-major (worker 0's whole burst, then
-/// worker 1's, ...) — the straggler RNG draw order every driver used, kept
-/// so the refactor is bit-identical to the lockstep loops (golden tests).
+/// shares. The engine owns the *schedule* (plans, folding order, the
+/// virtual timeline); the workers own their state; the executor
+/// (`cfg.execution`) owns where the state's work physically runs. Every
+/// cross-worker fold is worker-major (worker 0's results, then worker
+/// 1's, ...) and every straggler draw comes from that worker's own RNG
+/// stream, so the observables are bit-identical whether the local phase
+/// ran sequentially or on one OS thread per worker (golden tests).
 pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<TrainLog> {
     let mut eng = Engine::new(ctx);
     strategy.on_run_start(&mut eng, ctx)?;
@@ -212,34 +229,36 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
                 plan.advance
             );
         }
+        let phase = strategy.phase();
+        if phase == LocalPhase::GradOnly {
+            ensure!(
+                plan.advance == 1,
+                "malformed RoundPlan: grad-mode rounds are single-step, got advance {}",
+                plan.advance
+            );
+        }
         let start_step = eng.k;
+        // Local phase: the executor runs each worker's burst — sequentially
+        // on `sim`, one OS thread per worker on `threads`. Either way the
+        // per-worker results come back in worker order and are folded here
+        // in that order, so losses, clocks, and gradients are bit-identical
+        // across backends (DESIGN.md §9).
+        let exec = eng.exec;
+        let rounds = exec.run_phase(eng.workers.step_views(), ctx, &plan, start_step, phase)?;
         let mut grads = Vec::new();
         let mut loss_sum = 0.0;
         let mut loss_n = 0usize;
-        match strategy.phase() {
-            LocalPhase::FusedSteps => {
-                for w in 0..eng.workers.m {
-                    for s in 0..plan.steps[w] {
-                        loss_sum +=
-                            eng.workers.local_step(w, ctx, &mut eng.clocks, start_step + s)?;
-                        loss_n += 1;
-                    }
-                    eng.steps_done[w] += plan.steps[w];
-                }
+        for (w, mut r) in rounds.into_iter().enumerate() {
+            for &loss in &r.losses {
+                loss_sum += loss;
             }
-            LocalPhase::GradOnly => {
-                ensure!(
-                    plan.advance == 1,
-                    "malformed RoundPlan: grad-mode rounds are single-step, got advance {}",
-                    plan.advance
-                );
-                for w in 0..eng.workers.m {
-                    let (loss, g) = eng.workers.local_grad(w, ctx, &mut eng.clocks)?;
-                    loss_sum += loss;
-                    loss_n += 1;
-                    grads.push(g);
-                    eng.steps_done[w] += 1;
-                }
+            loss_n += r.losses.len();
+            for &dt in &r.dts {
+                eng.clocks.compute(w, dt);
+            }
+            eng.steps_done[w] += r.losses.len();
+            if let Some(g) = r.grad.take() {
+                grads.push(g);
             }
         }
         eng.k = start_step + plan.advance;

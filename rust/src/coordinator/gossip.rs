@@ -32,13 +32,31 @@ use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
 use super::{account_collective, TrainContext};
-use crate::config::Algo;
+use crate::config::{Algo, Execution};
+use crate::executor::ReduceHandle;
 use crate::topology::{Topology, TopologyKind};
 
-/// An in-flight gossip exchange: per-worker de-biased mixes plus per-worker
-/// virtual completion times (no single global `ready_at`).
+/// De-bias one push-sum round's outputs: estimate = value / weight
+/// (exactly 1 on a regular graph with full participation).
+fn de_bias(mixed_raw: Vec<Vec<f32>>, weights: &[f64]) -> Vec<Vec<f32>> {
+    mixed_raw
+        .into_iter()
+        .zip(weights)
+        .map(|(mut v, &w)| {
+            let inv = (1.0 / w) as f32;
+            for x in v.iter_mut() {
+                *x *= inv;
+            }
+            v
+        })
+        .collect()
+}
+
+/// An in-flight gossip exchange: the per-worker de-biased mixes (possibly
+/// still computing on the communicator thread) plus per-worker virtual
+/// completion times (no single global `ready_at`).
 struct PendingGossip {
-    mixed: Vec<Vec<f32>>,
+    mixed: ReduceHandle,
     ready: Vec<f64>,
 }
 
@@ -85,7 +103,9 @@ impl MixingStrategy for GossipStrategy {
             for w in 0..m {
                 eng.clocks.wait_comm_until(w, p.ready[w]);
             }
-            self.z = p.mixed;
+            // Join the communicator thread (threads backend) / take the
+            // eager result (sim) — bit-identical either way.
+            self.z = p.mixed.wait();
         }
 
         // --- pullback toward the per-worker anchor (Eq. 4) ----------------
@@ -99,20 +119,26 @@ impl MixingStrategy for GossipStrategy {
         // Data plane: one column-stochastic mixing round over the boundary
         // models, de-biased by the push-sum weights (exactly 1 on a regular
         // graph; the correction is what keeps irregular/partial rounds
-        // exact — property-tested in rust/tests/topology.rs).
+        // exact — property-tested in rust/tests/topology.rs). Sim computes
+        // it eagerly over a borrow (the seed path, no copies); the threads
+        // backend hands an owned snapshot to the communicator thread, which
+        // mixes under the next round's local compute — same inputs, same
+        // code, bit-identical output.
         let ones = vec![1.0f64; m];
-        let (mixed_raw, weights) = self.topo.gossip_mix(&eng.workers.params, &ones);
-        let mixed = mixed_raw
-            .into_iter()
-            .zip(&weights)
-            .map(|(mut v, &w)| {
-                let inv = (1.0 / w) as f32;
-                for x in v.iter_mut() {
-                    *x *= inv;
-                }
-                v
-            })
-            .collect();
+        let mixed = match eng.exec {
+            Execution::Sim => {
+                let (mixed_raw, weights) = self.topo.gossip_mix(&eng.workers.params, &ones);
+                ReduceHandle::Ready(de_bias(mixed_raw, &weights))
+            }
+            Execution::Threads => {
+                let snapshot = eng.workers.params.clone();
+                let topo = self.topo.clone();
+                eng.exec.start_reduce(move || {
+                    let (mixed_raw, weights) = topo.gossip_mix(&snapshot, &ones);
+                    de_bias(mixed_raw, &weights)
+                })
+            }
+        };
         // Timing plane: worker i's exchange completes once its whole
         // neighborhood has joined and `degree` neighbor messages have moved
         // — no global handshake, no cluster-wide rendezvous.

@@ -19,6 +19,7 @@ pub struct LocalAvgStrategy {
 }
 
 impl LocalAvgStrategy {
+    /// Strategy with the per-round blocking collective cost precomputed.
     pub fn new(ctx: &TrainContext) -> Self {
         Self { comm_t: ctx.cluster.collective_time() }
     }

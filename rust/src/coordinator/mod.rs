@@ -29,6 +29,10 @@
 //! Every exact-collective strategy additionally runs on any exact topology
 //! (`--topology ring|hier|tree`, DESIGN.md §8): the data plane executes that
 //! graph's real reduce schedule and the timing plane charges its cost.
+//! Every strategy also runs unchanged on either execution backend
+//! (`--execution sim|threads`, DESIGN.md §9): the engine's executor decides
+//! whether the local phase and the collectives run sequentially or on real
+//! OS threads, with bit-identical observables either way.
 
 pub mod cocod;
 pub mod elastic;
@@ -52,29 +56,48 @@ use crate::util::rng::Rng;
 
 /// Everything a driver needs for one run.
 pub struct TrainContext<'a> {
+    /// the loaded model runtime (PJRT artifacts or the native backend)
     pub rt: &'a ModelRuntime,
+    /// the full experiment description
     pub cfg: &'a ExperimentConfig,
+    /// the cluster timing model + communication graph
     pub cluster: ClusterModel,
+    /// learning-rate schedule (warmup + paper decay)
     pub schedule: LrSchedule,
+    /// training split
     pub train: &'a Dataset,
+    /// held-out evaluation split
     pub test: &'a Dataset,
+    /// per-worker sample-index shards
     pub shards: Vec<Vec<u32>>,
 }
 
 impl<'a> TrainContext<'a> {
+    /// Global steps per epoch (drop-last semantics on shard 0).
     pub fn steps_per_epoch(&self) -> usize {
         (self.shards[0].len() / self.rt.train_batch).max(1)
     }
 
+    /// Total global steps of the run (`epochs × steps_per_epoch`, min 1).
     pub fn total_steps(&self) -> usize {
         ((self.cfg.epochs * self.steps_per_epoch() as f64).round() as usize).max(1)
     }
 }
 
 /// Mutable per-worker training state shared by all drivers.
+///
+/// Storage is struct-of-arrays so strategies can mix over `params`
+/// directly, but every array is strictly per-worker — including the
+/// straggler RNG stream and the batch staging buffers — so the executor
+/// can hand each worker's slice of state to its own OS thread
+/// ([`Workers::step_views`]) without changing a single draw or bit
+/// relative to the sequential backend (DESIGN.md §9).
 pub struct Workers {
+    /// cluster size m
     pub m: usize,
+    /// per-worker model replicas (flat f32)
     pub params: Vec<Vec<f32>>,
+    /// per-worker momentum buffers
     pub mom: Vec<Vec<f32>>,
     /// second-moment buffers (Adam local optimizer only)
     pub mom2: Vec<Vec<f32>>,
@@ -82,12 +105,84 @@ pub struct Workers {
     adam_t: Vec<f32>,
     use_adam: bool,
     batchers: Vec<Batcher>,
-    straggler_rng: Rng,
-    img_buf: Vec<f32>,
-    label_buf: Vec<i32>,
+    /// per-worker straggler-draw streams: worker w consumes only its own
+    /// stream, so the draw sequence is independent of which thread (or
+    /// interleaving) runs the steps
+    straggler_rngs: Vec<Rng>,
+    img_bufs: Vec<Vec<f32>>,
+    label_bufs: Vec<Vec<i32>>,
+}
+
+/// One worker's complete mutable state, borrowed disjointly from
+/// [`Workers`] — the unit of work the executor schedules (sequentially on
+/// the `sim` backend, one OS thread each on `threads`).
+///
+/// All training numerics live on this view ([`StepView::fused_step`],
+/// [`StepView::grad_only`]); both backends drive the *same* code over the
+/// same per-worker state, which is the digest-identity argument of
+/// DESIGN.md §9.
+pub struct StepView<'a> {
+    w: usize,
+    use_adam: bool,
+    params: &'a mut Vec<f32>,
+    mom: &'a mut Vec<f32>,
+    mom2: &'a mut Vec<f32>,
+    adam_t: &'a mut f32,
+    batcher: &'a mut Batcher,
+    rng: &'a mut Rng,
+    img_buf: &'a mut Vec<f32>,
+    label_buf: &'a mut Vec<i32>,
+}
+
+impl StepView<'_> {
+    /// One fused local train step at global step index `step`. Returns
+    /// `(mini-batch loss, virtual compute seconds)` — the caller charges
+    /// the duration to this worker's clock.
+    pub fn fused_step(&mut self, ctx: &TrainContext, step: usize) -> Result<(f64, f64)> {
+        let b = ctx.rt.train_batch;
+        self.batcher.next_batch(ctx.train, b, self.img_buf, self.label_buf);
+        let lr = ctx.schedule.lr_at_step(step);
+        let loss = if self.use_adam {
+            // §6 extension (Overlap-Local-Adam): grad + fused Adam artifact.
+            let (loss, g) = ctx.rt.grad_step(self.params, self.img_buf, self.label_buf)?;
+            *self.adam_t += 1.0;
+            let (p, m1, m2) =
+                ctx.rt.adam_update(self.params, self.mom, self.mom2, &g, lr, *self.adam_t)?;
+            *self.params = p;
+            *self.mom = m1;
+            *self.mom2 = m2;
+            loss
+        } else {
+            let (p, mom, loss) = ctx.rt.train_step(
+                self.params,
+                self.mom,
+                self.img_buf,
+                self.label_buf,
+                lr,
+                ctx.cfg.mu,
+                ctx.cfg.wd,
+            )?;
+            *self.params = p;
+            *self.mom = mom;
+            loss
+        };
+        let dt = ctx.cluster.compute.step_time(self.w, self.rng);
+        Ok((loss as f64, dt))
+    }
+
+    /// Gradient-only step (sync / PowerSGD path). Returns
+    /// `(loss, virtual compute seconds, gradient)`.
+    pub fn grad_only(&mut self, ctx: &TrainContext) -> Result<(f64, f64, Vec<f32>)> {
+        let b = ctx.rt.train_batch;
+        self.batcher.next_batch(ctx.train, b, self.img_buf, self.label_buf);
+        let (loss, g) = ctx.rt.grad_step(self.params, self.img_buf, self.label_buf)?;
+        let dt = ctx.cluster.compute.step_time(self.w, self.rng);
+        Ok((loss as f64, dt, g))
+    }
 }
 
 impl Workers {
+    /// Build fresh per-worker state (identical replicas) for one run.
     pub fn new(ctx: &TrainContext) -> Self {
         let m = ctx.cfg.workers;
         let n = ctx.rt.n;
@@ -111,9 +206,71 @@ impl Workers {
             adam_t: vec![0.0; m],
             use_adam,
             batchers,
-            straggler_rng: Rng::stream(ctx.cfg.seed, "straggler"),
-            img_buf: vec![0.0f32; ctx.rt.train_batch * PX],
-            label_buf: vec![0i32; ctx.rt.train_batch],
+            straggler_rngs: (0..m)
+                .map(|w| Rng::stream(ctx.cfg.seed, &format!("straggler/{w}")))
+                .collect(),
+            img_bufs: vec![vec![0.0f32; ctx.rt.train_batch * PX]; m],
+            label_bufs: vec![vec![0i32; ctx.rt.train_batch]; m],
+        }
+    }
+
+    /// Disjoint mutable views, one per worker in worker order — everything
+    /// the executor needs to run the round's local phase (possibly on m OS
+    /// threads at once).
+    pub fn step_views(&mut self) -> Vec<StepView<'_>> {
+        let Workers {
+            m,
+            params,
+            mom,
+            mom2,
+            adam_t,
+            use_adam,
+            batchers,
+            straggler_rngs,
+            img_bufs,
+            label_bufs,
+        } = self;
+        let mut views = Vec::with_capacity(*m);
+        let it = params
+            .iter_mut()
+            .zip(mom.iter_mut())
+            .zip(mom2.iter_mut())
+            .zip(adam_t.iter_mut())
+            .zip(batchers.iter_mut())
+            .zip(straggler_rngs.iter_mut())
+            .zip(img_bufs.iter_mut())
+            .zip(label_bufs.iter_mut())
+            .enumerate();
+        for (w, (((((((p, mo), m2), at), b), r), ib), lb)) in it {
+            views.push(StepView {
+                w,
+                use_adam: *use_adam,
+                params: p,
+                mom: mo,
+                mom2: m2,
+                adam_t: at,
+                batcher: b,
+                rng: r,
+                img_buf: ib,
+                label_buf: lb,
+            });
+        }
+        views
+    }
+
+    /// Single-worker view (the sequential entrypoints below build on it).
+    fn view_at(&mut self, w: usize) -> StepView<'_> {
+        StepView {
+            w,
+            use_adam: self.use_adam,
+            params: &mut self.params[w],
+            mom: &mut self.mom[w],
+            mom2: &mut self.mom2[w],
+            adam_t: &mut self.adam_t[w],
+            batcher: &mut self.batchers[w],
+            rng: &mut self.straggler_rngs[w],
+            img_buf: &mut self.img_bufs[w],
+            label_buf: &mut self.label_bufs[w],
         }
     }
 
@@ -126,42 +283,9 @@ impl Workers {
         clocks: &mut Clocks,
         step: usize,
     ) -> Result<f64> {
-        let b = ctx.rt.train_batch;
-        self.batchers[w].next_batch(ctx.train, b, &mut self.img_buf, &mut self.label_buf);
-        let lr = ctx.schedule.lr_at_step(step);
-        let loss = if self.use_adam {
-            // §6 extension (Overlap-Local-Adam): grad + fused Adam artifact.
-            let (loss, g) =
-                ctx.rt.grad_step(&self.params[w], &self.img_buf, &self.label_buf)?;
-            self.adam_t[w] += 1.0;
-            let (p, m1, m2) = ctx.rt.adam_update(
-                &self.params[w],
-                &self.mom[w],
-                &self.mom2[w],
-                &g,
-                lr,
-                self.adam_t[w],
-            )?;
-            self.params[w] = p;
-            self.mom[w] = m1;
-            self.mom2[w] = m2;
-            loss
-        } else {
-            let (p, mom, loss) = ctx.rt.train_step(
-                &self.params[w],
-                &self.mom[w],
-                &self.img_buf,
-                &self.label_buf,
-                lr,
-                ctx.cfg.mu,
-                ctx.cfg.wd,
-            )?;
-            self.params[w] = p;
-            self.mom[w] = mom;
-            loss
-        };
-        clocks.compute(w, ctx.cluster.compute.step_time(w, &mut self.straggler_rng));
-        Ok(loss as f64)
+        let (loss, dt) = self.view_at(w).fused_step(ctx, step)?;
+        clocks.compute(w, dt);
+        Ok(loss)
     }
 
     /// Gradient-only step (sync / PowerSGD path). Returns (loss, grad).
@@ -171,11 +295,9 @@ impl Workers {
         ctx: &TrainContext,
         clocks: &mut Clocks,
     ) -> Result<(f64, Vec<f32>)> {
-        let b = ctx.rt.train_batch;
-        self.batchers[w].next_batch(ctx.train, b, &mut self.img_buf, &mut self.label_buf);
-        let (loss, g) = ctx.rt.grad_step(&self.params[w], &self.img_buf, &self.label_buf)?;
-        clocks.compute(w, ctx.cluster.compute.step_time(w, &mut self.straggler_rng));
-        Ok((loss as f64, g))
+        let (loss, dt, g) = self.view_at(w).grad_only(ctx)?;
+        clocks.compute(w, dt);
+        Ok((loss, g))
     }
 
     /// Consensus model for evaluation: plain average of worker replicas.
@@ -202,6 +324,7 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// Fresh recorder with the eval cadence derived from the config.
     pub fn new(ctx: &TrainContext) -> Self {
         let stride = ((ctx.cfg.eval_every * ctx.steps_per_epoch() as f64).round() as usize).max(1);
         Self {
@@ -225,6 +348,7 @@ impl Recorder {
         self.loss_count += 1;
     }
 
+    /// Credit `b` transmitted bytes to the run total.
     pub fn add_bytes(&mut self, b: u64) {
         self.bytes_sent += b;
     }
@@ -259,6 +383,7 @@ impl Recorder {
         self.force_eval(k, ctx, workers, clocks)
     }
 
+    /// Evaluate the consensus model now, regardless of cadence.
     pub fn force_eval(
         &mut self,
         k: usize,
@@ -290,6 +415,7 @@ impl Recorder {
         Ok(())
     }
 
+    /// Seal the run into its `TrainLog` (checks the clock invariants).
     pub fn finish(self, ctx: &TrainContext, clocks: &Clocks, steps: usize) -> TrainLog {
         clocks.check_invariants();
         TrainLog {

@@ -37,7 +37,7 @@ use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
 use super::{account_collective, TrainContext};
-use crate::collective::{start_collective, NonBlockingAllReduce};
+use crate::collective::{launch_collective, PendingCollective};
 
 /// Loss-plateau τ controller (AdaComm-style, shrink-only).
 #[derive(Clone, Debug)]
@@ -50,6 +50,7 @@ pub struct AdaptiveTau {
 }
 
 impl AdaptiveTau {
+    /// Controller from the config's `tau_min` / `ada_*` knobs.
     pub fn new(ctx: &TrainContext) -> Self {
         Self {
             tau_min: ctx.cfg.tau_min.max(1),
@@ -87,7 +88,7 @@ pub struct OverlapStrategy {
     adaptive: Option<AdaptiveTau>,
     z: Vec<f32>,
     v: Vec<f32>,
-    pending: Option<NonBlockingAllReduce>,
+    pending: Option<PendingCollective>,
 }
 
 impl OverlapStrategy {
@@ -127,10 +128,12 @@ impl MixingStrategy for OverlapStrategy {
 
         // --- absorb the previous round's collective (Eq. 5 / 10-11) ------
         if let Some(h) = self.pending.take() {
-            // Each worker independently waits until the anchor is ready; if
-            // the wire finished during the τ steps this is a no-op.
-            h.absorb(&mut eng.clocks);
-            let (z2, v2) = ctx.rt.anchor_update(&self.z, &self.v, &h.result, self.beta)?;
+            // Join the communicator (threads backend) / take the eager
+            // result (sim), then each worker independently waits on the
+            // virtual timeline until the anchor is ready; if the wire
+            // finished during the τ steps that wait is a no-op.
+            let avg = h.absorb(&mut eng.clocks);
+            let (z2, v2) = ctx.rt.anchor_update(&self.z, &self.v, &avg, self.beta)?;
             self.z = z2;
             self.v = v2;
         }
@@ -145,10 +148,14 @@ impl MixingStrategy for OverlapStrategy {
         // --- launch the next non-blocking collective ----------------------
         // An exact collective effectively starts once the last participant
         // joins (the topology axis changes the wire cost, not the rendezvous
-        // — only overlap-gossip drops the global rendezvous).
+        // — only overlap-gossip drops the global rendezvous). On the threads
+        // backend the launch spawns the background communicator that the τ
+        // local steps of the NEXT round genuinely overlap.
         let start = eng.clocks.max_now();
+        let exec = eng.exec;
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
-        self.pending = Some(start_collective(
+        self.pending = Some(launch_collective(
+            &exec,
             &ctx.cluster.topology,
             &refs,
             &ctx.cluster.net,

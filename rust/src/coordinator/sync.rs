@@ -19,6 +19,7 @@ pub struct SyncStrategy {
 }
 
 impl SyncStrategy {
+    /// Strategy with the per-step blocking collective cost precomputed.
     pub fn new(ctx: &TrainContext) -> Self {
         Self { comm_t: ctx.cluster.collective_time() }
     }
@@ -85,6 +86,7 @@ impl PowerSgdStrategy {
     /// era, f32): 5 TFLOP/s.
     const GEMM_FLOPS: f64 = 5.0e12;
 
+    /// Strategy with the compressed wire cost and FLOP scaling precomputed.
     pub fn new(ctx: &TrainContext) -> Self {
         let m = ctx.cfg.workers;
         let psgd = PowerSgd::new(&ctx.rt.manifest, ctx.cfg.rank, m, ctx.cfg.seed);

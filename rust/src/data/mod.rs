@@ -15,19 +15,28 @@
 
 use crate::util::rng::Rng;
 
+/// Image height.
 pub const H: usize = 32;
+/// Image width.
 pub const W: usize = 32;
+/// Image channels.
 pub const C: usize = 3;
+/// Pixels per image (flat NHWC length).
 pub const PX: usize = H * W * C;
+/// Number of label classes.
 pub const NUM_CLASSES: usize = 10;
 
 /// Generation knobs. Defaults are calibrated so the CNN lands in the high-80s
 /// / low-90s accuracy regime (CIFAR-like headroom), see data tests.
 #[derive(Clone, Debug)]
 pub struct GenConfig {
+    /// class-signal amplitude (prototype scale)
     pub signal: f32,
+    /// per-pixel Gaussian noise amplitude
     pub noise: f32,
+    /// amplitude of the shared cross-class style direction
     pub style_strength: f32,
+    /// probability a label is resampled uniformly (caps accuracy)
     pub label_noise: f64,
 }
 
@@ -40,14 +49,18 @@ impl Default for GenConfig {
 /// A dataset in NHWC f32 with i32 labels.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// flat NHWC image tensor (`n * PX` f32)
     pub images: Vec<f32>,
+    /// (possibly noisy) training labels
     pub labels: Vec<i32>,
     /// labels before label-noise injection (for diagnostics)
     pub clean_labels: Vec<i32>,
+    /// sample count
     pub n: usize,
 }
 
 impl Dataset {
+    /// Flat pixels of sample `i`.
     pub fn image(&self, i: usize) -> &[f32] {
         &self.images[i * PX..(i + 1) * PX]
     }
@@ -94,6 +107,9 @@ fn smooth_prototype(rng: &mut Rng) -> Vec<f32> {
     proto
 }
 
+/// Generate `n` deterministic synthetic-CIFAR samples for `split`
+/// (train/test share class prototypes via the base seed but draw disjoint
+/// sample streams).
 pub fn generate(seed: u64, n: usize, split: &str, cfg: &GenConfig) -> Dataset {
     // Class prototypes + shared style pattern from the base seed.
     let mut proto_rng = Rng::stream(seed, "prototypes");
@@ -199,6 +215,7 @@ pub struct Batcher {
     shard: Vec<u32>,
     pos: usize,
     rng: Rng,
+    /// completed passes over the shard
     pub epochs_completed: usize,
     /// if false (paper: data "not shuffled during training"), the shard
     /// order is fixed after the initial shuffle
@@ -206,6 +223,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Sampler over `shard` with worker-keyed shuffling.
     pub fn new(shard: Vec<u32>, seed: u64, worker: usize, reshuffle: bool) -> Self {
         let mut rng = Rng::stream(seed, &format!("batcher/{worker}"));
         let mut shard = shard;
@@ -213,6 +231,7 @@ impl Batcher {
         Self { shard, pos: 0, rng, epochs_completed: 0, reshuffle }
     }
 
+    /// Samples in this worker's shard.
     pub fn shard_len(&self) -> usize {
         self.shard.len()
     }

@@ -1,0 +1,193 @@
+//! Execution backends: how one round of scheduled work actually runs.
+//!
+//! The round **engine** (`coordinator::engine`) decides *what* happens —
+//! the plan, the mixing decision, the virtual timeline. The execution
+//! mode ([`Execution`], from the config's `execution` key) decides
+//! *where* it happens; this module implements both backends on that
+//! enum:
+//!
+//! * [`Execution::Sim`] — everything on the calling thread, in
+//!   worker-major order. Concurrency is purely virtual (clock
+//!   arithmetic). This is the deterministic discrete-event mode every
+//!   experiment defaults to.
+//! * [`Execution::Threads`] — the round's local phase runs on **one OS
+//!   thread per simulated worker** (`threads.rs`), and every collective
+//!   launched through [`Execution::start_reduce`] runs on a **background
+//!   communicator thread**, so an overlapped schedule genuinely computes
+//!   local steps while the previous round's all-reduce is in flight.
+//!   This is the backend `rust/benches/wallclock.rs` measures (E12).
+//!
+//! **Digest identity** (asserted for every algorithm by
+//! `rust/tests/golden_regression.rs`): the two backends produce
+//! bit-identical `TrainLog`s because
+//!
+//! 1. all training numerics run on per-worker [`StepView`]s — no state is
+//!    shared between workers during a local phase, and each worker's
+//!    operation sequence (batch draws, RNG stream, kernel calls) is the
+//!    same regardless of which thread runs it;
+//! 2. cross-worker reductions (loss folding, clock charging, gradient
+//!    collection) happen on the coordinator in fixed worker order, fed
+//!    from the per-worker [`WorkerRound`] results;
+//! 3. a background collective computes the *same* reduction code over the
+//!    *same* snapshot the sim backend reduces eagerly, and its virtual
+//!    completion time comes from the simnet cost model, never from wall
+//!    clock.
+
+pub mod threads;
+
+use anyhow::Result;
+
+use crate::config::Execution;
+use crate::coordinator::engine::{LocalPhase, RoundPlan};
+use crate::coordinator::{StepView, TrainContext};
+
+/// What one worker produced during a round's local phase, in its own step
+/// order. The engine folds these in worker-major order, so the fold is
+/// identical no matter how the phase was scheduled.
+pub struct WorkerRound {
+    /// per-step mini-batch losses (length = planned steps; 1 in grad mode)
+    pub losses: Vec<f64>,
+    /// per-step virtual compute durations, parallel to `losses`
+    pub dts: Vec<f64>,
+    /// the raw gradient (grad-only phase; `None` for fused steps)
+    pub grad: Option<Vec<f32>>,
+}
+
+/// Run one worker's share of a round: `steps` fused steps, or one
+/// gradient. Both backends call exactly this function — the sim backend on
+/// the coordinator thread, the threads backend on the worker's own thread.
+pub(crate) fn drive_worker(
+    view: &mut StepView<'_>,
+    ctx: &TrainContext,
+    steps: usize,
+    start_step: usize,
+    phase: LocalPhase,
+) -> Result<WorkerRound> {
+    match phase {
+        LocalPhase::FusedSteps => {
+            let mut losses = Vec::with_capacity(steps);
+            let mut dts = Vec::with_capacity(steps);
+            for s in 0..steps {
+                let (loss, dt) = view.fused_step(ctx, start_step + s)?;
+                losses.push(loss);
+                dts.push(dt);
+            }
+            Ok(WorkerRound { losses, dts, grad: None })
+        }
+        LocalPhase::GradOnly => {
+            let (loss, dt, g) = view.grad_only(ctx)?;
+            Ok(WorkerRound { losses: vec![loss], dts: vec![dt], grad: Some(g) })
+        }
+    }
+}
+
+// The execution *behavior* lives here, as inherent methods on the config
+// enum — one type names the axis end to end, so a future third backend is
+// added in exactly one place. Worker threads are scoped to each round and
+// communicator threads to each collective; no backend keeps a pool, so a
+// run can never leak threads past its own lifetime.
+impl Execution {
+    /// Execute one round's local phase over the per-worker views (worker
+    /// order in, worker order out). `plan.steps[w]` fused steps per worker,
+    /// or one gradient each in grad mode. `Sim` drives the views
+    /// sequentially on the calling thread; `Threads` spawns one OS thread
+    /// per worker.
+    pub fn run_phase(
+        &self,
+        views: Vec<StepView<'_>>,
+        ctx: &TrainContext,
+        plan: &RoundPlan,
+        start_step: usize,
+        phase: LocalPhase,
+    ) -> Result<Vec<WorkerRound>> {
+        match self {
+            Execution::Sim => {
+                let mut out = Vec::with_capacity(views.len());
+                for (w, mut view) in views.into_iter().enumerate() {
+                    out.push(drive_worker(&mut view, ctx, plan.steps[w], start_step, phase)?);
+                }
+                Ok(out)
+            }
+            Execution::Threads => threads::run_phase(views, ctx, plan, start_step, phase),
+        }
+    }
+
+    /// Run a reduction job — the data plane of a collective or gossip
+    /// exchange over an owned snapshot. `Sim` computes it inline (eager,
+    /// the seed semantics); `Threads` spawns a background communicator
+    /// thread and returns immediately, which is what lets the next round's
+    /// local compute overlap the wire work for real.
+    ///
+    /// The `'static` bound exists for the communicator thread; on the sim
+    /// backend, callers with borrowable inputs can skip the snapshot and
+    /// build a [`ReduceHandle::Ready`] directly (see
+    /// `coordinator::gossip`).
+    pub fn start_reduce(
+        &self,
+        job: impl FnOnce() -> Vec<Vec<f32>> + Send + 'static,
+    ) -> ReduceHandle {
+        match self {
+            Execution::Sim => ReduceHandle::Ready(job()),
+            Execution::Threads => ReduceHandle::InFlight(threads::spawn_communicator(job)),
+        }
+    }
+}
+
+/// Handle to a (possibly in-flight) reduction launched via
+/// [`Execution::start_reduce`]. Dropping an `InFlight` handle detaches the
+/// communicator thread (it owns only its snapshot, so this is safe — it
+/// happens when a run ends with a collective still pending, exactly like
+/// the sim backend dropping an unabsorbed result).
+pub enum ReduceHandle {
+    /// the reduction already ran inline (sim backend)
+    Ready(Vec<Vec<f32>>),
+    /// the reduction is running on a background communicator thread
+    InFlight(std::thread::JoinHandle<Vec<Vec<f32>>>),
+}
+
+impl ReduceHandle {
+    /// Block until the reduction is done and take its output buffers.
+    /// Instant on `Ready`; joins the communicator thread on `InFlight`.
+    pub fn wait(self) -> Vec<Vec<f32>> {
+        match self {
+            ReduceHandle::Ready(v) => v,
+            ReduceHandle::InFlight(h) => h.join().expect("communicator thread panicked"),
+        }
+    }
+
+    /// Whether `wait` would return without blocking.
+    pub fn is_finished(&self) -> bool {
+        match self {
+            ReduceHandle::Ready(_) => true,
+            ReduceHandle::InFlight(h) => h.is_finished(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_job(inputs: Vec<Vec<f32>>) -> impl FnOnce() -> Vec<Vec<f32>> + Send + 'static {
+        move || {
+            let mut acc = vec![0.0f32; inputs[0].len()];
+            for v in &inputs {
+                for (a, &x) in acc.iter_mut().zip(v) {
+                    *a += x;
+                }
+            }
+            vec![acc]
+        }
+    }
+
+    #[test]
+    fn start_reduce_is_backend_invariant() {
+        let inputs = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
+        let a = Execution::Sim.start_reduce(sum_job(inputs.clone()));
+        let b = Execution::Threads.start_reduce(sum_job(inputs));
+        assert!(a.is_finished());
+        let (ra, rb) = (a.wait(), b.wait());
+        assert_eq!(ra, rb);
+        assert_eq!(ra, vec![vec![11.0, 22.0, 33.0]]);
+    }
+}

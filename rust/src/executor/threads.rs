@@ -1,0 +1,87 @@
+//! Real-thread backend: one OS thread per simulated worker, plus a
+//! background communicator thread per collective.
+//!
+//! Generalizes the seed's `collective::spawn_background_mean` proof of
+//! concept into the execution path proper. Two kinds of threads exist:
+//!
+//! * **worker threads** — scoped to one round's local phase. Each receives
+//!   its worker's [`StepView`] (a disjoint `&mut` borrow of the shared
+//!   `Workers` state, so no locks and no copies) and runs the *same*
+//!   `drive_worker` burst the sim backend runs sequentially. Results come
+//!   back over an mpsc channel tagged with the worker id; the coordinator
+//!   reassembles them in worker order before folding, which pins the
+//!   cross-worker reduction order regardless of thread completion order.
+//! * **communicator threads** — detached, one per collective
+//!   ([`spawn_communicator`]). They own a snapshot of the inputs and run
+//!   the exact topology reduce schedule while the *next* round's worker
+//!   threads compute — the paper's overlap, on real cores. The strategy
+//!   joins the thread at the next boundary (`ReduceHandle::wait`).
+//!
+//! Wall-clock time never leaks into any observable: virtual durations
+//! still come from the simnet cost model, so `TrainLog`s are bit-identical
+//! to the sim backend (`rust/tests/golden_regression.rs`) while
+//! `rust/benches/wallclock.rs` measures the real speedup.
+//!
+//! Scoped threads (`std::thread::scope`) let the worker closures borrow
+//! the `TrainContext` directly; this requires the model runtime to be
+//! `Sync`, which both the native backend and the vendored PJRT stub are.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::{drive_worker, WorkerRound};
+use crate::coordinator::engine::{LocalPhase, RoundPlan};
+use crate::coordinator::{StepView, TrainContext};
+
+/// Run one round's local phase with one OS thread per worker. Spawns
+/// `views.len()` scoped threads, collects `(worker id, result)` over a
+/// channel, and returns the results in worker order.
+pub(crate) fn run_phase(
+    views: Vec<StepView<'_>>,
+    ctx: &TrainContext,
+    plan: &RoundPlan,
+    start_step: usize,
+    phase: LocalPhase,
+) -> Result<Vec<WorkerRound>> {
+    let m = views.len();
+    let (tx, rx) = mpsc::channel::<(usize, Result<WorkerRound>)>();
+    thread::scope(|s| {
+        for (w, mut view) in views.into_iter().enumerate() {
+            let tx = tx.clone();
+            let steps = plan.steps[w];
+            s.spawn(move || {
+                let out = drive_worker(&mut view, ctx, steps, start_step, phase);
+                // A send can only fail if the coordinator already bailed;
+                // the round is doomed either way, so the result may drop.
+                let _ = tx.send((w, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<WorkerRound>> = (0..m).map(|_| None).collect();
+        for _ in 0..m {
+            let (w, out) = rx
+                .recv()
+                .map_err(|_| anyhow!("worker thread exited without reporting its round"))?;
+            slots[w] = Some(out?);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(w, r)| r.ok_or_else(|| anyhow!("worker {w} reported no round result")))
+            .collect()
+    })
+}
+
+/// Spawn the background communicator thread for one collective. The job
+/// owns its snapshot, so the thread is detached-safe: if the run ends with
+/// the collective still pending, the thread finishes into the void.
+pub(crate) fn spawn_communicator(
+    job: impl FnOnce() -> Vec<Vec<f32>> + Send + 'static,
+) -> thread::JoinHandle<Vec<Vec<f32>>> {
+    thread::Builder::new()
+        .name("olsgd-communicator".into())
+        .spawn(job)
+        .expect("spawning the communicator thread failed")
+}

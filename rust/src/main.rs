@@ -4,13 +4,17 @@
 //!
 //! ```text
 //! olsgd info                              runtime + artifact inventory
-//! olsgd train   [--config F] [--set k=v]* [--out DIR] [--quiet]
+//! olsgd train   [--config F] [--set k=v]* [--execution sim|threads]
+//!               [--out DIR] [--quiet]
 //! olsgd sweep   --algos a,b --taus 1,2,8 [--set k=v]* [--out DIR]
 //! olsgd report  --dir DIR                 summarize result JSONs
 //! ```
 //!
 //! Every `--set` key is a dotted config key (see config/mod.rs), e.g.
 //! `--set algo=overlap-m --set tau=2 --set data.noniid=true`.
+//! `--execution threads` runs the real-thread backend (one OS thread per
+//! worker + background communicator threads, DESIGN.md §9) — identical
+//! results, real wall-clock overlap.
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -57,15 +61,18 @@ fn print_usage() {
     println!(
         "olsgd — Overlap-Local-SGD (Wang, Liang, Joshi 2020) reproduction\n\
          \n\
-         USAGE:\n  olsgd info\n  olsgd train  [--config FILE] [--set key=value]... [--out DIR] [--quiet]\n  \
+         USAGE:\n  olsgd info\n  olsgd train  [--config FILE] [--set key=value]... [--execution sim|threads]\n               \
+         [--out DIR] [--quiet]\n  \
          olsgd sweep  --algos sync,local,overlap-m --taus 1,2,8,24 [--set key=value]... [--out DIR]\n  \
          olsgd report --dir DIR\n\
          \n\
          Algorithms: sync local overlap overlap-m overlap-ada overlap-gossip easgd eamsgd\n\
                      cocod powersgd\n\
          Topologies: --set topology=ring|hier|tree|gossip (gossip_degree, hier_groups)\n\
-         Config keys: algo model workers epochs seed eval_every lr tau tau_min tau_hetero\n\
-                      ada_patience ada_threshold alpha beta mu wd rank\n\
+         Execution:  --execution sim|threads (threads = one OS thread per worker +\n\
+                     background communicator; bit-identical results, real overlap)\n\
+         Config keys: algo model workers epochs seed eval_every execution lr tau tau_min\n\
+                      tau_hetero ada_patience ada_threshold alpha beta mu wd rank\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
                       topology gossip_degree hier_groups\n\
                       message_bytes straggler artifacts_dir out_dir"
@@ -101,6 +108,10 @@ fn parse_common(args: &[String]) -> Result<CommonArgs> {
                     .split_once('=')
                     .with_context(|| format!("--set expects key=value, got '{kv}'"))?;
                 overrides.push((k.to_string(), v.to_string()));
+            }
+            "--execution" => {
+                let v = next(args, &mut i, "--execution")?;
+                overrides.push(("execution".to_string(), v));
             }
             "--out" | "-o" => {
                 out = next(args, &mut i, "--out")?;
@@ -196,7 +207,7 @@ fn run_one(
 
     if !quiet {
         println!(
-            "run: algo={} model={} m={} tau={} alpha={} beta={} epochs={} {}",
+            "run: algo={} model={} m={} tau={} alpha={} beta={} epochs={} exec={} {}",
             cfg.algo.name(),
             cfg.model,
             cfg.workers,
@@ -204,6 +215,7 @@ fn run_one(
             cfg.alpha,
             cfg.beta,
             cfg.epochs,
+            cfg.execution.name(),
             if cfg.noniid { "non-IID" } else { "IID" }
         );
     }

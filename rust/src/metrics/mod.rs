@@ -14,45 +14,61 @@ use crate::util::json::{arr, arr_f64, num, obj, s, Json};
 /// One evaluation point (cadence = config.eval_every epochs).
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
+    /// fractional epoch of this record
     pub epoch: f64,
+    /// global step of this record
     pub step: usize,
     /// virtual cluster time (seconds) at this point
     pub sim_time: f64,
     /// mean training loss since the previous record
     pub train_loss: f64,
+    /// mean test-set loss of the consensus model
     pub test_loss: f64,
+    /// test-set accuracy of the consensus model
     pub test_acc: f64,
 }
 
 /// Full record of one training run.
 #[derive(Clone, Debug)]
 pub struct TrainLog {
+    /// algorithm name (`Algo::name`)
     pub algo: String,
+    /// configured τ
     pub tau: usize,
+    /// cluster size m
     pub workers: usize,
+    /// evaluation records at the configured cadence
     pub records: Vec<EvalRecord>,
     /// (step, mean loss across workers) every sync round
     pub step_losses: Vec<(usize, f64)>,
     /// (step, τ) points recorded by an adaptive-τ controller; empty for
     /// fixed-τ runs
     pub tau_trace: Vec<(usize, usize)>,
+    /// final virtual cluster time (max worker clock)
     pub total_sim_time: f64,
+    /// total compute seconds across workers
     pub total_compute_s: f64,
+    /// total blocked-on-communication seconds across workers
     pub total_comm_blocked_s: f64,
+    /// total barrier-idle seconds across workers
     pub total_idle_s: f64,
+    /// total bytes put on the wire
     pub bytes_sent: u64,
     /// per-worker transmitted bytes on the topology axis (hier leaders,
     /// tree inner nodes, and gossip neighbors send different amounts);
     /// all-zero on the seed's uniform ring accounting
     pub neighbor_bytes: Vec<u64>,
+    /// total global steps of the run
     pub steps: usize,
 }
 
 impl TrainLog {
+    /// Test accuracy of the last evaluation record.
     pub fn final_acc(&self) -> f64 {
         self.records.last().map(|r| r.test_acc).unwrap_or(0.0)
     }
 
+    /// Test loss of the last evaluation record.
     pub fn final_loss(&self) -> f64 {
         self.records.last().map(|r| r.test_loss).unwrap_or(f64::NAN)
     }
@@ -76,6 +92,7 @@ impl TrainLog {
         }
     }
 
+    /// The run as a JSON object (the result-file format).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("algo", s(&self.algo)),
@@ -203,6 +220,7 @@ pub fn write_json(dir: &Path, name: &str, j: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Write text to `dir/name`, creating `dir`.
 pub fn write_text(dir: &Path, name: &str, text: &str) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
     let path = dir.join(name);

@@ -5,8 +5,9 @@
 //! auto-vectorizes on x86 (verified via the perf pass, EXPERIMENTS.md §Perf);
 //! no allocation happens inside any of them when an `_into` variant is used.
 
-/// out[i] = mean over vs of vs[j][i]. `out` must be zeroed or will be
-/// overwritten; all vectors must share a length.
+/// out[i] = mean over vs of vs[j][i]. `out` is unconditionally
+/// overwritten (its prior contents are irrelevant); all vectors must share
+/// a length.
 pub fn mean_into(vs: &[&[f32]], out: &mut [f32]) {
     let m = vs.len();
     assert!(m > 0, "mean of zero vectors");
@@ -30,6 +31,45 @@ pub fn mean(vs: &[&[f32]]) -> Vec<f32> {
     let mut out = vec![0.0; vs[0].len()];
     mean_into(vs, &mut out);
     out
+}
+
+/// Thread-parallel [`mean_into`] with a deterministic chunked reduction:
+/// the output index range is split into `threads` contiguous chunks, each
+/// reduced on its own scoped OS thread. Every output element is computed
+/// by the *same* per-element operation sequence as the serial version
+/// (accumulate `vs[0][i], vs[1][i], ...` then scale), so the result is
+/// **bit-identical** to [`mean_into`] — property-tested below. `out` is
+/// unconditionally overwritten.
+pub fn mean_into_parallel(vs: &[&[f32]], out: &mut [f32], threads: usize) {
+    let m = vs.len();
+    assert!(m > 0, "mean of zero vectors");
+    for v in vs {
+        assert_eq!(v.len(), out.len(), "length mismatch in mean");
+    }
+    let n = out.len();
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 {
+        return mean_into(vs, out);
+    }
+    let chunk = n.div_ceil(t);
+    let inv = 1.0f32 / m as f32;
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            s.spawn(move || {
+                let len = out_chunk.len();
+                out_chunk.copy_from_slice(&vs[0][lo..lo + len]);
+                for v in &vs[1..] {
+                    for (o, &x) in out_chunk.iter_mut().zip(&v[lo..lo + len]) {
+                        *o += x;
+                    }
+                }
+                for o in out_chunk.iter_mut() {
+                    *o *= inv;
+                }
+            });
+        }
+    });
 }
 
 /// y += a * x
@@ -66,10 +106,12 @@ pub fn anchor_update_inplace(z: &mut [f32], v: &mut [f32], avg: &[f32], beta: f3
     }
 }
 
+/// Euclidean norm, accumulated in f64.
 pub fn l2_norm(x: &[f32]) -> f64 {
     x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
 }
 
+/// Dot product, accumulated in f64.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
@@ -135,6 +177,33 @@ mod tests {
                 assert!(out[i] >= lo - 1e-4 && out[i] <= hi + 1e-4);
                 let manual: f32 = vs.iter().map(|v| v[i]).sum::<f32>() / m as f32;
                 assert!((out[i] - manual).abs() <= 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn property_parallel_mean_is_bit_identical_to_serial() {
+        // The threads execution backend leans on exactly this guarantee:
+        // chunking an elementwise reduction across threads must not change
+        // a single bit relative to the serial loop.
+        property("parallel mean == serial mean (bits)", 150, |g| {
+            let n = g.usize_in(1, 2000);
+            let m = g.usize_in(1, 12);
+            let threads = g.usize_in(1, 9); // including > n and 1
+            let vs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 50.0)).collect();
+            let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+            let mut serial = vec![0.0f32; n];
+            mean_into(&refs, &mut serial);
+            // Pre-poison the parallel output: "unconditionally overwritten"
+            // must hold for any prior contents.
+            let mut parallel = vec![f32::NAN; n];
+            mean_into_parallel(&refs, &mut parallel, threads);
+            for i in 0..n {
+                assert_eq!(
+                    serial[i].to_bits(),
+                    parallel[i].to_bits(),
+                    "bit drift at {i} with {threads} threads"
+                );
             }
         });
     }

@@ -5,11 +5,13 @@
 /// Warmup + step-decay schedule over *steps*, stated in epochs.
 #[derive(Clone, Debug)]
 pub struct LrSchedule {
+    /// the post-warmup learning rate
     pub base_lr: f32,
     /// linear warmup from base_lr/warmup_epochs to base_lr (Goyal et al.)
     pub warmup_epochs: f64,
     /// (epoch, multiplier) milestones, applied cumulatively
     pub milestones: Vec<(f64, f32)>,
+    /// steps-per-epoch used to convert step indices to epochs
     pub steps_per_epoch: usize,
 }
 
@@ -32,11 +34,13 @@ impl LrSchedule {
         Self { base_lr: lr, warmup_epochs: 0.0, milestones: vec![], steps_per_epoch: 1 }
     }
 
+    /// Learning rate at a global step index.
     pub fn lr_at_step(&self, step: usize) -> f32 {
         let epoch = step as f64 / self.steps_per_epoch as f64;
         self.lr_at_epoch(epoch)
     }
 
+    /// Learning rate at a (fractional) epoch.
     pub fn lr_at_epoch(&self, epoch: f64) -> f32 {
         if self.warmup_epochs > 0.0 && epoch < self.warmup_epochs {
             // Goyal et al. warmup: linear ramp from a small fraction of the

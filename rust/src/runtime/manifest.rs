@@ -11,14 +11,21 @@ use crate::util::json::Json;
 /// One parameter tensor inside the flat vector (mirrors Python TensorSpec).
 #[derive(Clone, Debug)]
 pub struct TensorManifest {
+    /// tensor name (e.g. "conv1.w")
     pub name: String,
+    /// start offset in the flat parameter vector
     pub offset: usize,
+    /// flat element count
     pub size: usize,
+    /// original tensor shape
     pub shape: Vec<usize>,
+    /// initializer name ("he_normal" | "zeros")
     pub init: String,
+    /// he_normal standard deviation
     pub std: f32,
     /// PowerSGD matricization: the tensor viewed as rows x cols.
     pub rows: usize,
+    /// matricization columns (see `rows`)
     pub cols: usize,
     /// false for biases — PowerSGD sends those uncompressed.
     pub compress: bool,
@@ -27,22 +34,31 @@ pub struct TensorManifest {
 /// Per-model artifact table.
 #[derive(Clone, Debug)]
 pub struct ModelManifest {
+    /// total flat parameter count
     pub param_count: usize,
+    /// tensor table, in flat-vector order
     pub tensors: Vec<TensorManifest>,
     /// tag ("train_step", "grad_step", "eval", "pullback", "anchor") -> file
     pub modules: BTreeMap<String, String>,
 }
 
+/// The whole artifact directory's manifest (all models + batch geometry).
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// input image shape (H, W, C)
     pub image_shape: [usize; 3],
+    /// label class count
     pub num_classes: usize,
+    /// training batch size the artifacts were compiled for
     pub train_batch: usize,
+    /// evaluation batch size the artifacts were compiled for
     pub eval_batch: usize,
+    /// per-model artifact tables, by model name
     pub models: BTreeMap<String, ModelManifest>,
 }
 
 impl Manifest {
+    /// Load `dir/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -50,6 +66,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Self> {
         let j = Json::parse(text)?;
         let shape_arr = j.get("image_shape")?.as_arr()?;
@@ -104,6 +121,7 @@ impl Manifest {
         })
     }
 
+    /// Look up one model's table by name.
     pub fn model(&self, name: &str) -> Result<&ModelManifest> {
         self.models
             .get(name)

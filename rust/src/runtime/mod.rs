@@ -41,12 +41,17 @@ enum Backend {
 /// One model, ready to run. All methods take/return host `f32` slices;
 /// shapes are validated against the manifest before touching any backend.
 pub struct ModelRuntime {
+    /// model name (for logs)
     pub name: String,
     /// flat parameter count
     pub n: usize,
+    /// training batch size
     pub train_batch: usize,
+    /// evaluation batch size
     pub eval_batch: usize,
+    /// input image shape (H, W, C)
     pub image_shape: [usize; 3],
+    /// tensor layout table (initialization, PowerSGD matricization)
     pub manifest: ModelManifest,
     backend: Backend,
 }

@@ -19,15 +19,19 @@ use crate::model::vecmath;
 /// offset 0, then the bias `b` (classes).
 #[derive(Clone, Debug)]
 pub struct NativeModel {
+    /// flat input pixel count
     pub px: usize,
+    /// output class count
     pub classes: usize,
 }
 
 impl NativeModel {
+    /// Model over `px`-pixel inputs and `classes` outputs.
     pub fn new(px: usize, classes: usize) -> Self {
         Self { px, classes }
     }
 
+    /// Flat parameter count (weights + biases).
     pub fn param_count(&self) -> usize {
         self.px * self.classes + self.classes
     }

@@ -25,6 +25,7 @@ use super::{Backend, ModelRuntime};
 pub struct Runtime {
     client: PjRtClient,
     dir: PathBuf,
+    /// the parsed artifact manifest
     pub manifest: Manifest,
 }
 
@@ -36,6 +37,7 @@ impl Runtime {
         Ok(Self { client, dir: dir.to_path_buf(), manifest })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -134,6 +136,7 @@ fn f32_scalar(lit: &Literal) -> Result<f32> {
 }
 
 impl PjrtModel {
+    /// Fused train step via the `train_step` artifact.
     pub fn train_step(
         &self,
         params: &[f32],
@@ -160,6 +163,7 @@ impl PjrtModel {
         Ok((f32_vec(&out[0])?, f32_vec(&out[1])?, f32_scalar(&out[2])?))
     }
 
+    /// Loss + raw gradient via the `grad_step` artifact.
     pub fn grad_step(
         &self,
         params: &[f32],
@@ -178,6 +182,7 @@ impl PjrtModel {
         Ok((f32_scalar(&out[0])?, f32_vec(&out[1])?))
     }
 
+    /// `(sum_loss, correct_count)` via the `eval` artifact.
     pub fn evaluate(&self, params: &[f32], images: &[f32], labels: &[i32]) -> Result<(f32, f32)> {
         let out = run(
             &self.eval,
@@ -191,12 +196,14 @@ impl PjrtModel {
         Ok((f32_scalar(&out[0])?, f32_scalar(&out[1])?))
     }
 
+    /// Eq. (4) pullback via the `pullback` artifact.
     pub fn pullback(&self, x: &[f32], z: &[f32], alpha: f32) -> Result<Vec<f32>> {
         let out = run(&self.pullback, &[vec_lit(x), vec_lit(z), scalar_lit(alpha)])?;
         anyhow::ensure!(out.len() == 1, "pullback returned {} outputs", out.len());
         f32_vec(&out[0])
     }
 
+    /// Eqs. (10)-(11) anchor update via the `anchor` artifact.
     pub fn anchor_update(
         &self,
         z: &[f32],
@@ -212,6 +219,7 @@ impl PjrtModel {
         Ok((f32_vec(&out[0])?, f32_vec(&out[1])?))
     }
 
+    /// Fused Nesterov update via the `sgd_update` artifact.
     pub fn sgd_update(
         &self,
         params: &[f32],
@@ -236,6 +244,7 @@ impl PjrtModel {
         Ok((f32_vec(&out[0])?, f32_vec(&out[1])?))
     }
 
+    /// Fused Adam update via the `adam_update` artifact.
     pub fn adam_update(
         &self,
         params: &[f32],

@@ -167,6 +167,7 @@ impl StragglerModel {
 pub struct ComputeModel {
     /// seconds per local mini-batch step on an unperturbed node
     pub base_step_s: f64,
+    /// per-worker variability applied on top of the base time
     pub straggler: StragglerModel,
 }
 
@@ -176,6 +177,8 @@ impl ComputeModel {
         Self { base_step_s: 0.188, straggler: StragglerModel::None }
     }
 
+    /// One local step's virtual duration for `worker` (consumes a draw
+    /// from `rng` only for the stochastic straggler models).
     pub fn step_time(&self, worker: usize, rng: &mut Rng) -> f64 {
         self.base_step_s * self.straggler.factor(worker, rng)
     }
@@ -184,8 +187,11 @@ impl ComputeModel {
 /// Everything the timing side of an experiment needs.
 #[derive(Clone, Debug)]
 pub struct ClusterModel {
+    /// cluster size m
     pub workers: usize,
+    /// wire cost model
     pub net: NetworkModel,
+    /// per-step compute cost model
     pub compute: ComputeModel,
     /// bytes per full-model/full-gradient message. Decoupled from the local
     /// numeric model so runtime figures keep the paper's ResNet-18 scale
@@ -196,6 +202,7 @@ pub struct ClusterModel {
 }
 
 impl ClusterModel {
+    /// The paper's testbed: 16 nodes, 40 Gbps, ResNet-18 messages.
     pub fn paper_16node() -> Self {
         Self {
             workers: 16,

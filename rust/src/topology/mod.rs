@@ -51,6 +51,7 @@ pub enum TopologyKind {
 }
 
 impl TopologyKind {
+    /// Canonical config-spec name of the graph kind.
     pub fn name(&self) -> &'static str {
         match self {
             TopologyKind::Ring => "ring",
@@ -65,7 +66,9 @@ impl TopologyKind {
 /// plane (reduce/mix schedules) and the per-collective timing formula.
 #[derive(Clone, Debug)]
 pub struct Topology {
+    /// which graph family this is
     pub kind: TopologyKind,
+    /// worker count m
     pub m: usize,
     /// contiguous `[lo, hi)` worker ranges per group (`Hier` only; empty
     /// otherwise)
@@ -75,6 +78,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// The seed's chunked NCCL-style ring over `m` workers.
     pub fn ring(m: usize) -> Self {
         assert!(m >= 1, "topology needs at least one worker");
         Self { kind: TopologyKind::Ring, m, groups: Vec::new(), adjacency: Vec::new() }
@@ -96,6 +100,7 @@ impl Topology {
         Self { kind: TopologyKind::Hier, m, groups: bounds, adjacency: Vec::new() }
     }
 
+    /// Binary-tree reduce-broadcast over `m` workers.
     pub fn tree(m: usize) -> Self {
         assert!(m >= 1, "topology needs at least one worker");
         Self { kind: TopologyKind::Tree, m, groups: Vec::new(), adjacency: Vec::new() }

@@ -10,17 +10,25 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed JSON value (numbers are f64, objects are ordered maps).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object (key-sorted)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing characters are an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -34,6 +42,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Object field lookup; errors on missing key or non-object.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key '{key}'")),
@@ -41,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Optional object field lookup (None on missing key or non-object).
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -48,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -63,6 +75,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// The value as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -70,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -77,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -84,6 +99,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -93,12 +109,14 @@ impl Json {
 
     // ---- writer ----------------------------------------------------------
 
+    /// Serialize with two-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, true);
         s
     }
 
+    /// Serialize without any whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, false);
@@ -188,18 +206,22 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// A number value.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// A string value.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// An array from any iterator of values.
 pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }
 
+/// An array of numbers.
 pub fn arr_f64(items: &[f64]) -> Json {
     Json::Arr(items.iter().map(|&x| Json::Num(x)).collect())
 }

@@ -17,23 +17,28 @@ use super::rng::Rng;
 /// Per-case generator handed to the property body.
 pub struct Gen {
     rng: Rng,
+    /// the seed that regenerates exactly this case
     pub seed: u64,
 }
 
 impl Gen {
+    /// Uniform usize in `[lo, hi]` (inclusive).
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo <= hi);
         lo + self.rng.next_below((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// Uniform f32 in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.f64_in(lo as f64, hi as f64) as f32
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
@@ -69,6 +74,7 @@ impl Gen {
             .collect()
     }
 
+    /// Direct access to the case RNG (for bespoke draws).
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }

@@ -18,10 +18,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Expander seeded at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 expanded bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -65,6 +67,7 @@ impl Rng {
         Self::seed_from(seed ^ h)
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
         let t = self.s[1] << 17;
@@ -83,6 +86,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn next_f32(&mut self) -> f32 {
         self.next_f64() as f32
     }

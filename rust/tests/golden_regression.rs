@@ -19,7 +19,7 @@
 use olsgd::clock::Clocks;
 use olsgd::collective::{ring_allreduce_mean, start_allreduce, NonBlockingAllReduce};
 use olsgd::compress::PowerSgd;
-use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::config::{Algo, Execution, ExperimentConfig};
 use olsgd::coordinator::engine::PULLBACK_S;
 use olsgd::coordinator::{make_shards, run_experiment, Recorder, TrainContext, Workers};
 use olsgd::data::{self, Dataset, GenConfig};
@@ -535,6 +535,87 @@ fn new_axis_digests_are_stable_and_distinct() {
                 digests[i], digests[j]
             );
         }
+    }
+}
+
+/// Cross-backend golden lock (ISSUE 3): on the paper_16node cluster shape
+/// (m = 16, the paper's 40 Gbps ring and 188 ms steps) every algorithm
+/// must produce the *same* `TrainLog` digest under `--execution threads`
+/// as under `sim` — real worker threads, real background communicator
+/// threads, zero drift in any observable. Jitter stragglers are on, so the
+/// per-worker RNG streams are exercised under true concurrency.
+#[test]
+fn threads_execution_is_digest_identical_to_sim_for_all_ten_algorithms() {
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    for algo in Algo::all() {
+        let mut cfg = golden_cfg(&StragglerModel::UniformJitter { jitter: 0.2 });
+        cfg.workers = 16; // paper_16node cluster size
+        cfg.train_n = 16 * 64; // keep 64/shard -> 2 steps/epoch -> 4 steps
+        cfg.algo = *algo;
+        let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+        let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+        assert_eq!(cfg.execution, Execution::Sim);
+        let sim = run_experiment(&rt, &cfg, &train, &test).unwrap();
+        cfg.execution = Execution::Threads;
+        let thr = run_experiment(&rt, &cfg, &train, &test).unwrap();
+
+        assert_eq!(
+            sim.digest(),
+            thr.digest(),
+            "{algo:?}: threads backend drifted from sim\n\
+             sim:     steps={} bytes={} sim_time={} comm={} idle={}\n\
+             threads: steps={} bytes={} sim_time={} comm={} idle={}",
+            sim.steps,
+            sim.bytes_sent,
+            sim.total_sim_time,
+            sim.total_comm_blocked_s,
+            sim.total_idle_s,
+            thr.steps,
+            thr.bytes_sent,
+            thr.total_sim_time,
+            thr.total_comm_blocked_s,
+            thr.total_idle_s,
+        );
+    }
+}
+
+/// The same cross-backend lock on the non-ring topologies (every exact
+/// graph plus the gossip axis): the executor must not interact with the
+/// topology subsystem's data or timing planes.
+#[test]
+fn threads_execution_is_digest_identical_to_sim_across_topologies() {
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    let legs: [(&str, Algo); 7] = [
+        ("hier", Algo::Local),
+        ("hier", Algo::OverlapM),
+        ("hier", Algo::Cocod),
+        ("tree", Algo::Local),
+        ("tree", Algo::OverlapM),
+        ("tree", Algo::Sync),
+        ("gossip", Algo::OverlapGossip),
+    ];
+    for (topology, algo) in legs {
+        let mut cfg = golden_cfg(&StragglerModel::ShiftedExp { scale: 0.3 });
+        cfg.workers = 4;
+        cfg.train_n = 256;
+        cfg.algo = algo;
+        cfg.topology = topology.into();
+        cfg.hier_groups = 2;
+        cfg.gossip_degree = 2;
+        let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+        let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+
+        let sim = run_experiment(&rt, &cfg, &train, &test).unwrap();
+        cfg.execution = Execution::Threads;
+        let thr = run_experiment(&rt, &cfg, &train, &test).unwrap();
+        assert_eq!(
+            sim.digest(),
+            thr.digest(),
+            "{algo:?} on {topology}: threads backend drifted from sim"
+        );
     }
 }
 
