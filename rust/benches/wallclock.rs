@@ -1,8 +1,9 @@
-//! **E12 — wall-clock hiding** (EXPERIMENTS.md): the first *real-time*
-//! point on the perf trajectory. Every other bench reports virtual simnet
-//! seconds; this one times the `--execution threads` backend on real
-//! cores, where the local phase runs one OS thread per worker and each
-//! collective runs on a background communicator thread.
+//! **E12/E13 — wall-clock hiding + the zero-allocation steady state**
+//! (EXPERIMENTS.md): the real-time points on the perf trajectory. Every
+//! other bench reports virtual simnet seconds; this one times the
+//! `--execution threads` backend on real cores, where the local phase runs
+//! on the persistent worker pool and each collective runs on the parked
+//! communicator thread.
 //!
 //! Protocol (equal global steps for every leg):
 //!
@@ -14,13 +15,23 @@
 //!
 //! Each leg runs under BOTH backends; the bench hard-asserts the two
 //! `TrainLog` digests are identical (the tentpole guarantee) and records
-//! the threads-backend wall time. Results land in `BENCH_wallclock.json`
-//! at the repo root plus per-leg JSONs under `results/wallclock/`.
+//! the threads-backend wall time. E13 instrumentation rides on every leg:
+//!
+//! * the tracked counters from `TrainLog::hot` — steady-state thread
+//!   spawns and pooled-buffer allocations, hard-asserted **zero** on every
+//!   leg (the persistent pool + buffer pool contract, DESIGN.md §10);
+//! * ground-truth allocator traffic for the timed run, via the
+//!   `util::memcount::CountingAlloc` global allocator installed by this
+//!   binary.
+//!
+//! Results land in `BENCH_wallclock.json` at the repo root plus per-leg
+//! JSONs under `results/wallclock/`. CI fails if the JSON is missing or a
+//! steady-state counter is nonzero (the E13 gate).
 //!
 //! Sizing: `OLSGD_SMOKE=1` shrinks everything for CI; `OLSGD_WC_ASSERT=1`
 //! additionally hard-fails unless overlap-m beats sync by ≥ 1.2× (the
 //! ISSUE-3 acceptance bar — meaningful on ≥ 4 physical cores). A serial
-//! vs thread-parallel `mean_into` micro-comparison rides along.
+//! vs pool-parallel mean micro-comparison rides along.
 
 use std::path::Path;
 use std::time::Instant;
@@ -29,20 +40,29 @@ use anyhow::Result;
 use olsgd::config::{Algo, Execution, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
+use olsgd::executor::Executor;
 use olsgd::metrics::{write_json, TrainLog};
 use olsgd::model::vecmath;
 use olsgd::runtime::ModelRuntime;
 use olsgd::util::json::{arr, num, obj, s, Json};
+use olsgd::util::memcount::{self, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 struct Leg {
     label: &'static str,
     algo: Algo,
     tau: usize,
     wall_s: f64,
+    /// allocator calls during the timed threads run (whole process)
+    timed_allocs: u64,
+    /// bytes requested during the timed threads run
+    timed_alloc_bytes: u64,
     log: TrainLog,
 }
 
-fn run_both(cfg: &ExperimentConfig, rt: &ModelRuntime) -> Result<(f64, TrainLog)> {
+fn run_both(cfg: &ExperimentConfig, rt: &ModelRuntime) -> Result<(f64, u64, u64, TrainLog)> {
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
@@ -55,9 +75,11 @@ fn run_both(cfg: &ExperimentConfig, rt: &ModelRuntime) -> Result<(f64, TrainLog)
     thr_cfg.execution = Execution::Threads;
     // Warm-up run (page in code/data, spin up the allocator), then timed.
     run_experiment(rt, &thr_cfg, &train, &test)?;
+    let mem0 = memcount::snapshot();
     let t0 = Instant::now();
     let thr_log = run_experiment(rt, &thr_cfg, &train, &test)?;
     let wall = t0.elapsed().as_secs_f64();
+    let mem = memcount::since(mem0);
 
     assert_eq!(
         sim_log.digest(),
@@ -66,10 +88,10 @@ fn run_both(cfg: &ExperimentConfig, rt: &ModelRuntime) -> Result<(f64, TrainLog)
          guarantee is broken",
         cfg.algo.name()
     );
-    Ok((wall, thr_log))
+    Ok((wall, mem.allocs, mem.bytes, thr_log))
 }
 
-fn mean_micro(threads: usize, smoke: bool) -> (f64, f64) {
+fn mean_micro(workers: usize, smoke: bool) -> (f64, f64) {
     // Paper-scale flat vectors (11.2 M params, 8 replicas); smoke mode
     // shrinks them so CI runners don't pay ~400 MB for a footnote.
     let n = if smoke { 1 << 20 } else { 11_173_962 };
@@ -77,18 +99,21 @@ fn mean_micro(threads: usize, smoke: bool) -> (f64, f64) {
     let vs: Vec<Vec<f32>> = (0..m).map(|w| vec![w as f32 * 0.25 + 0.1; n]).collect();
     let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
     let mut out = vec![0.0f32; n];
+    // The pooled mean (E13): parked pool threads instead of per-call
+    // spawns — same bit-identical chunked reduction.
+    let exec = Executor::new(Execution::Threads, workers);
     // Warm both paths first so the serial leg doesn't eat the output
     // buffer's first-touch page faults (which would flatter the parallel
     // ratio); then time a second pass of each over resident memory.
     vecmath::mean_into(&refs, &mut out);
-    vecmath::mean_into_parallel(&refs, &mut out, threads);
+    exec.mean_into(&refs, &mut out);
     let t0 = Instant::now();
     vecmath::mean_into(&refs, &mut out);
     let serial = t0.elapsed().as_secs_f64();
     let t1 = Instant::now();
-    vecmath::mean_into_parallel(&refs, &mut out, threads);
-    let parallel = t1.elapsed().as_secs_f64();
-    (serial, parallel)
+    exec.mean_into(&refs, &mut out);
+    let pooled = t1.elapsed().as_secs_f64();
+    (serial, pooled)
 }
 
 fn main() -> Result<()> {
@@ -112,12 +137,15 @@ fn main() -> Result<()> {
 
     let rt = ModelRuntime::native(&base.model)?;
     println!(
-        "=== E12 wall-clock hiding (threads backend, {} cores, m={}, {} global steps) ===",
+        "=== E12/E13 wall-clock hiding (threads backend, {} cores, m={}, {} global steps) ===",
         cores,
         base.workers,
         (base.epochs * (base.train_n as f64 / base.workers as f64 / 32.0)).round()
     );
-    println!("{:<22} {:>6} {:>12} {:>14} {:>12}", "leg", "tau", "wall (s)", "vs sync", "digest");
+    println!(
+        "{:<22} {:>6} {:>12} {:>14} {:>10} {:>12} {:>12}",
+        "leg", "tau", "wall (s)", "vs sync", "spawns", "steady", "allocs/run"
+    );
 
     let specs: [(&'static str, Algo, usize); 4] = [
         ("sync", Algo::Sync, 1),
@@ -130,19 +158,21 @@ fn main() -> Result<()> {
         let mut cfg = base.clone();
         cfg.algo = algo;
         cfg.tau = tau;
-        let (wall_s, log) = run_both(&cfg, &rt)?;
-        legs.push(Leg { label, algo, tau, wall_s, log });
+        let (wall_s, timed_allocs, timed_alloc_bytes, log) = run_both(&cfg, &rt)?;
+        legs.push(Leg { label, algo, tau, wall_s, timed_allocs, timed_alloc_bytes, log });
     }
 
     let sync_wall = legs[0].wall_s;
     for leg in &legs {
         println!(
-            "{:<22} {:>6} {:>12.4} {:>13.2}x {:>12}",
+            "{:<22} {:>6} {:>12.4} {:>13.2}x {:>10} {:>12} {:>12}",
             leg.label,
             leg.tau,
             leg.wall_s,
             sync_wall / leg.wall_s,
-            "ok"
+            leg.log.hot.thread_spawns_total,
+            leg.log.hot.steady_thread_spawns + leg.log.hot.steady_buffer_allocs,
+            leg.timed_allocs,
         );
     }
     let overlap_speedup = sync_wall / legs[2].wall_s;
@@ -150,13 +180,35 @@ fn main() -> Result<()> {
     println!("\noverlap-m vs sync (equal steps): {overlap_speedup:.2}x");
     println!("overlap-m vs local@same-tau (pure hiding): {hiding_speedup:.2}x");
 
-    let (mean_serial, mean_parallel) = mean_micro(base.workers, smoke);
+    // E13 hard gate: after warm-up the pooled backend must spawn no
+    // threads and miss the buffer pool zero times, on every schedule.
+    let mut steady_spawns_max = 0u64;
+    let mut steady_allocs_max = 0u64;
+    for leg in &legs {
+        steady_spawns_max = steady_spawns_max.max(leg.log.hot.steady_thread_spawns);
+        steady_allocs_max = steady_allocs_max.max(leg.log.hot.steady_buffer_allocs);
+        anyhow::ensure!(
+            leg.log.hot.steady_thread_spawns == 0,
+            "{}: {} thread spawns after warm-up (want 0)",
+            leg.label,
+            leg.log.hot.steady_thread_spawns
+        );
+        anyhow::ensure!(
+            leg.log.hot.steady_buffer_allocs == 0,
+            "{}: {} tracked allocations after warm-up (want 0)",
+            leg.label,
+            leg.log.hot.steady_buffer_allocs
+        );
+    }
+    println!("E13: steady-state spawns = 0 and tracked allocs = 0 on every leg — PASS");
+
+    let (mean_serial, mean_pooled) = mean_micro(base.workers, smoke);
     println!(
-        "mean_into x 8 replicas: serial {:.1} ms, parallel({}) {:.1} ms ({:.2}x)",
+        "mean_into x 8 replicas: serial {:.1} ms, pooled({}) {:.1} ms ({:.2}x)",
         1e3 * mean_serial,
         base.workers,
-        1e3 * mean_parallel,
-        mean_serial / mean_parallel
+        1e3 * mean_pooled,
+        mean_serial / mean_pooled
     );
 
     let out = Path::new("results/wallclock");
@@ -165,7 +217,7 @@ fn main() -> Result<()> {
     }
     let summary = obj(vec![
         ("bench", s("wallclock")),
-        ("experiment", s("E12")),
+        ("experiment", s("E12+E13")),
         ("host_cores", num(cores as f64)),
         ("workers", num(base.workers as f64)),
         ("steps", num(legs[0].log.steps as f64)),
@@ -183,13 +235,38 @@ fn main() -> Result<()> {
                     ("speedup_vs_sync", num(sync_wall / l.wall_s)),
                     ("virtual_sim_time_s", num(l.log.total_sim_time)),
                     ("digest", s(&format!("{:016x}", l.log.digest()))),
+                    ("rounds", num(l.log.hot.rounds as f64)),
+                    (
+                        "thread_spawns_total",
+                        num(l.log.hot.thread_spawns_total as f64),
+                    ),
+                    (
+                        "steady_thread_spawns",
+                        num(l.log.hot.steady_thread_spawns as f64),
+                    ),
+                    (
+                        "buffer_allocs_total",
+                        num(l.log.hot.buffer_allocs_total as f64),
+                    ),
+                    (
+                        "steady_buffer_allocs",
+                        num(l.log.hot.steady_buffer_allocs as f64),
+                    ),
+                    (
+                        "steady_buffer_alloc_bytes",
+                        num(l.log.hot.steady_buffer_alloc_bytes as f64),
+                    ),
+                    ("timed_run_allocs", num(l.timed_allocs as f64)),
+                    ("timed_run_alloc_bytes", num(l.timed_alloc_bytes as f64)),
                 ])
             })),
         ),
         ("speedup_overlap_vs_sync", num(overlap_speedup)),
         ("speedup_overlap_vs_local", num(hiding_speedup)),
+        ("steady_thread_spawns_max", num(steady_spawns_max as f64)),
+        ("steady_buffer_allocs_max", num(steady_allocs_max as f64)),
         ("mean_into_serial_s", num(mean_serial)),
-        ("mean_into_parallel_s", num(mean_parallel)),
+        ("mean_into_pooled_s", num(mean_pooled)),
     ]);
     write_json(Path::new("."), "BENCH_wallclock.json", &summary)?;
     println!("\nwrote BENCH_wallclock.json and {}/", out.display());

@@ -12,29 +12,58 @@
 //!   says nothing about a 16-node 40 Gbps cluster.
 //!
 //! Non-blocking collectives (the paper's key mechanism) dispatch through
-//! the execution backend: [`launch_collective`] hands the data-plane
-//! reduction to `Execution::start_reduce`, which computes it inline on the
-//! `sim` backend (the deterministic DES mode, eager like the seed) or on a
-//! **background communicator thread** on the `threads` backend — the real
-//! overlap `rust/benches/wallclock.rs` measures. Either way the result is
-//! bit-identical and the virtual completion time comes from the simnet
-//! cost model. `spawn_background_mean` survives as the original
-//! proof-of-concept of the threaded form.
-
-use std::thread;
+//! the execution backend: [`launch_collective`] snapshots the inputs into
+//! **pooled** buffers (`util::pool::BufferPool` — recycled across rounds,
+//! so the steady-state loop allocates nothing; DESIGN.md §10) and hands the
+//! data-plane reduction to `Executor::start_reduce`, which computes it
+//! inline on the `sim` backend (the deterministic DES mode, eager like the
+//! seed) or on the pool's parked **communicator thread** on `threads` — the
+//! real overlap `rust/benches/wallclock.rs` measures. Either way the result
+//! is bit-identical (pooled buffers are fully overwritten before any
+//! arithmetic reads them) and the virtual completion time comes from the
+//! simnet cost model.
+//!
+//! Every reduce schedule threads a [`ReduceScratch`] through its working
+//! storage: the ring's snapshot arena, the tree's broadcast root, and the
+//! hierarchy's leader set all live in one reusable bundle owned by the
+//! executing thread, so repeated collectives stop allocating once warm.
 
 use crate::clock::Clocks;
-use crate::config::Execution;
-use crate::executor::ReduceHandle;
+use crate::executor::{Executor, ReduceHandle};
 use crate::simnet::NetworkModel;
 use crate::topology::Topology;
+use crate::util::pool::BufferPool;
+
+/// Reusable working storage for the exact reduce schedules, owned by
+/// whichever thread executes the data plane (the pool's communicator
+/// thread keeps one for its lifetime; the coordinator keeps one in the
+/// `Executor` for inline reductions). Grows to the run's working-set size
+/// during warm-up and allocates nothing afterwards.
+#[derive(Default)]
+pub struct ReduceScratch {
+    /// the ring's "simultaneous send" snapshot arena (§Perf it. 3)
+    pub(crate) arena: Vec<f32>,
+    /// the tree's reduced-root broadcast copy
+    pub(crate) root: Vec<f32>,
+    /// the hierarchy's size-scaled leader buffers
+    pub(crate) leaders: Vec<Vec<f32>>,
+}
 
 /// In-place chunked ring all-reduce (mean) across `m` equal-length buffers.
 ///
 /// Implements reduce-scatter + all-gather exactly as a ring would: after
 /// `m-1` reduce-scatter steps rank r owns the fully-reduced chunk
 /// `(r+1) mod m`; `m-1` all-gather steps then circulate the reduced chunks.
+/// Allocates a fresh arena per call; hot paths use
+/// [`ring_allreduce_mean_with`] to reuse one.
 pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
+    ring_allreduce_mean_with(buffers, &mut Vec::new());
+}
+
+/// [`ring_allreduce_mean`] with a caller-provided snapshot arena (grown as
+/// needed, never shrunk — every element is overwritten before it is read,
+/// so reuse cannot change a bit of the result).
+pub fn ring_allreduce_mean_with(buffers: &mut [Vec<f32>], arena: &mut Vec<f32>) {
     let m = buffers.len();
     assert!(m > 0, "no buffers");
     let n = buffers[0].len();
@@ -53,7 +82,9 @@ pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
     // chunk c of rank r lands at arena[r * max_chunk ..] (§Perf it. 3 —
     // removes 2(m-1)·m transient allocations per collective).
     let max_chunk = (0..m).map(|c| end(c) - start(c)).max().unwrap_or(0);
-    let mut arena = vec![0.0f32; m * max_chunk];
+    if arena.len() < m * max_chunk {
+        arena.resize(m * max_chunk, 0.0);
+    }
 
     // Reduce-scatter: at step s, rank r sends chunk (r - s) mod m to r+1,
     // which accumulates it into its own copy of that chunk.
@@ -151,7 +182,8 @@ pub fn start_allreduce(
 /// tree — all exact, so one result vector serves every worker), the timing
 /// plane stamps the completion with the topology's cost formula. Gossip is
 /// not an exact collective and has its own launcher in
-/// `coordinator::gossip`.
+/// `coordinator::gossip`. (Eager and allocating — the reference-loop
+/// semantics; the engine's hot path goes through [`launch_collective`].)
 pub fn start_collective(
     topo: &Topology,
     inputs: &[&[f32]],
@@ -171,11 +203,13 @@ pub fn start_collective(
 }
 
 /// A non-blocking exact collective whose data plane may still be running
-/// on a background communicator thread (`--execution threads`) or already
+/// on the pool's communicator thread (`--execution threads`) or already
 /// holds its result (`sim`). Produced by [`launch_collective`]; virtual
 /// timing is fixed at launch, so observables never depend on wall clock.
+/// Its buffers come from — and return to — the run's `BufferPool`.
 pub struct PendingCollective {
     handle: ReduceHandle,
+    pool: BufferPool,
     /// virtual time the collective was launched
     pub start_time: f64,
     /// virtual wire duration (simnet cost model)
@@ -189,11 +223,15 @@ impl PendingCollective {
     }
 
     /// Block (for real, on the threads backend) until the data plane is
-    /// done and return the completed collective. Instant on `sim`.
+    /// done and return the completed collective. Instant on `sim`. All
+    /// buffers except the result vector are recycled back into the pool;
+    /// callers recycle the result itself once they are done with it.
     pub fn wait(self) -> NonBlockingAllReduce {
         let mut buffers = self.handle.wait();
+        let result = buffers.swap_remove(0);
+        self.pool.put_set(buffers);
         NonBlockingAllReduce {
-            result: buffers.swap_remove(0),
+            result,
             start_time: self.start_time,
             duration: self.duration,
         }
@@ -210,12 +248,15 @@ impl PendingCollective {
 }
 
 /// Launch a non-blocking exact collective through the execution backend:
-/// the data plane (the topology's real reduce schedule over a snapshot of
-/// `inputs`) runs inline on `Execution::Sim` or on a background
-/// communicator thread on `Execution::Threads`; the timing plane stamps
-/// the completion with the topology's cost formula either way.
+/// the inputs are snapshotted into pooled buffers (bit-exact copies, zero
+/// steady-state allocations once the pool is warm), and the data plane —
+/// the topology's real reduce schedule over that snapshot — runs inline on
+/// the `sim` backend or on the parked communicator thread on `threads`;
+/// the timing plane stamps the completion with the topology's cost formula
+/// either way. (The ring's `Topology` clone is allocation-free; hier and
+/// gossip graphs carry small structure vectors — see DESIGN.md §10.)
 pub fn launch_collective(
-    exec: &Execution,
+    exec: &Executor,
     topo: &Topology,
     inputs: &[&[f32]],
     net: &NetworkModel,
@@ -224,50 +265,20 @@ pub fn launch_collective(
 ) -> PendingCollective {
     assert_eq!(inputs.len(), topo.m, "participant count != topology size");
     let duration = topo.collective_time(net, message_bytes);
-    let buffers: Vec<Vec<f32>> = inputs.iter().map(|v| v.to_vec()).collect();
+    let pool = exec.buffers().clone();
+    let mut buffers = pool.take_set_copy(inputs);
     let topo = topo.clone();
-    let handle = exec.start_reduce(move || {
-        let mut buffers = buffers;
-        topo.allreduce_mean(&mut buffers);
+    let handle = exec.start_reduce(move |scratch| {
+        topo.allreduce_mean_with(&mut buffers, scratch);
         buffers
     });
-    PendingCollective { handle, start_time, duration }
-}
-
-/// Real-thread variant: computes the mean on a background OS thread, proving
-/// the coordinator's hot loop never blocks on averaging. Join to collect.
-/// (The seed's proof of concept — the execution path proper now goes
-/// through [`launch_collective`] + `Execution::start_reduce`.)
-pub struct BackgroundMean {
-    handle: thread::JoinHandle<Vec<f32>>,
-}
-
-impl BackgroundMean {
-    /// Join the background thread and take the averaged vector.
-    pub fn join(self) -> Vec<f32> {
-        self.handle.join().expect("background mean thread panicked")
-    }
-
-    /// Whether the background averaging has completed.
-    pub fn is_finished(&self) -> bool {
-        self.handle.is_finished()
-    }
-}
-
-/// Spawn a background OS thread averaging `inputs` via the ring schedule.
-pub fn spawn_background_mean(inputs: Vec<Vec<f32>>) -> BackgroundMean {
-    BackgroundMean {
-        handle: thread::spawn(move || {
-            let mut buffers = inputs;
-            ring_allreduce_mean(&mut buffers);
-            buffers.into_iter().next().expect("non-empty")
-        }),
-    }
+    PendingCollective { handle, pool, start_time, duration }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Execution;
     use crate::model::vecmath;
     use crate::util::proptest::{assert_close, property};
 
@@ -285,6 +296,27 @@ mod tests {
         let mut bufs = vec![vec![5.0f32, -1.0]];
         ring_allreduce_mean(&mut bufs);
         assert_close(&bufs[0], &[5.0, -1.0], 0.0, 0.0);
+    }
+
+    #[test]
+    fn ring_with_reused_arena_is_bit_identical() {
+        // One arena across many differently-shaped collectives: stale
+        // contents must never surface (every slot is written before read).
+        let mut arena = vec![7.0f32; 3]; // poisoned + deliberately small
+        for (m, n) in [(1usize, 40usize), (4, 300), (10, 7), (3, 1), (8, 128), (2, 33)] {
+            let inputs: Vec<Vec<f32>> = (0..m)
+                .map(|w| (0..n).map(|i| ((w * 37 + i * 11) % 97) as f32 * 0.21 - 9.0).collect())
+                .collect();
+            let mut fresh = inputs.clone();
+            ring_allreduce_mean(&mut fresh);
+            let mut reused = inputs;
+            ring_allreduce_mean_with(&mut reused, &mut arena);
+            for (a, b) in fresh.iter().zip(&reused) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "arena reuse drifted (m={m}, n={n})");
+                }
+            }
+        }
     }
 
     #[test]
@@ -367,16 +399,17 @@ mod tests {
     }
 
     #[test]
-    fn launch_collective_is_backend_invariant() {
-        use crate::config::Execution;
+    fn launch_collective_is_backend_invariant_and_pooled() {
         let net = NetworkModel::paper_40gbps();
         let inputs: Vec<Vec<f32>> =
             vec![vec![1.0, 2.0, 3.0], vec![5.0, 4.0, 3.0], vec![0.0, -6.0, 9.0]];
         let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let sim_exec = Executor::new(Execution::Sim, 3);
+        let thr_exec = Executor::new(Execution::Threads, 3);
         for topo in [Topology::ring(3), Topology::tree(3)] {
             let eager = start_collective(&topo, &refs, &net, 1 << 20, 2.0);
-            let sim = launch_collective(&Execution::Sim, &topo, &refs, &net, 1 << 20, 2.0);
-            let thr = launch_collective(&Execution::Threads, &topo, &refs, &net, 1 << 20, 2.0);
+            let sim = launch_collective(&sim_exec, &topo, &refs, &net, 1 << 20, 2.0);
+            let thr = launch_collective(&thr_exec, &topo, &refs, &net, 1 << 20, 2.0);
             assert_eq!(sim.ready_at(), eager.ready_at());
             assert_eq!(thr.ready_at(), eager.ready_at());
             let (sim, thr) = (sim.wait(), thr.wait());
@@ -388,17 +421,33 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }
+        // Second launch on each backend reuses the first launch's buffers
+        // (the result vector is the one buffer the caller keeps).
+        for exec in [&sim_exec, &thr_exec] {
+            let warm = exec.snapshot();
+            let h = launch_collective(exec, &Topology::ring(3), &refs, &net, 1 << 20, 2.0);
+            exec.buffers().put(h.wait().result);
+            let h = launch_collective(exec, &Topology::ring(3), &refs, &net, 1 << 20, 2.0);
+            let steady = exec.snapshot();
+            assert_eq!(
+                steady.buffer_allocs,
+                warm.buffer_allocs + 1,
+                "only the not-yet-returned result slot may allocate"
+            );
+            assert!(steady.buffer_hits > warm.buffer_hits);
+            exec.buffers().put(h.wait().result);
+        }
     }
 
     #[test]
     fn pending_collective_absorb_matches_eager_absorb() {
         use crate::clock::Clocks;
-        use crate::config::Execution;
         let net = NetworkModel::paper_40gbps();
         let a = vec![1.0f32; 8];
         let b = vec![3.0f32; 8];
+        let exec = Executor::new(Execution::Threads, 2);
         let pending =
-            launch_collective(&Execution::Threads, &Topology::ring(2), &[&a, &b], &net, 1 << 20, 10.0);
+            launch_collective(&exec, &Topology::ring(2), &[&a, &b], &net, 1 << 20, 10.0);
         let ready = pending.ready_at();
         let mut clocks = Clocks::new(2);
         clocks.compute(0, ready + 5.0);
@@ -408,12 +457,5 @@ mod tests {
         assert_eq!(clocks.worker(0).comm_blocked_s, 0.0);
         assert_eq!(clocks.now(1), ready);
         clocks.check_invariants();
-    }
-
-    #[test]
-    fn background_thread_mean() {
-        let h = spawn_background_mean(vec![vec![2.0f32; 64], vec![4.0f32; 64]]);
-        let out = h.join();
-        assert_close(&out, &vec![3.0f32; 64], 1e-6, 0.0);
     }
 }

@@ -47,15 +47,16 @@ impl MixingStrategy for CocodStrategy {
     fn before_local(&mut self, eng: &mut Engine, ctx: &TrainContext) -> Result<()> {
         // Launch the collective of the boundary models on the configured
         // exact topology; it runs under the round's compute — genuinely so
-        // on the threads backend, where the communicator thread reduces
-        // while the worker threads take their τ local steps.
+        // on the threads backend, where the parked communicator thread
+        // reduces (over a pooled snapshot) while the worker threads take
+        // their τ local steps. `clone_from` reuses the delta snapshots'
+        // capacity, so this hook allocates nothing once warm.
         let start = eng.clocks.max_now();
         account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         self.snapshots.clone_from(&eng.workers.params);
-        let exec = eng.exec;
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
         self.pending = Some(launch_collective(
-            &exec,
+            &eng.exec,
             &ctx.cluster.topology,
             &refs,
             &ctx.cluster.net,
@@ -76,6 +77,8 @@ impl MixingStrategy for CocodStrategy {
                 *pi = avg[i] + (*pi - snap[i]);
             }
         }
+        // The absorbed average returns to the pool for the next launch.
+        eng.exec.buffers().put(avg);
         Ok(())
     }
 }

@@ -61,12 +61,21 @@ impl MixingStrategy for ElasticStrategy {
         for w in 0..m {
             eng.clocks.comm_blocked(w, self.comm_t);
         }
-        let avg = eng.workers.mean_params();
+        // Center average into a pooled buffer, through the executor's mean
+        // (serial on sim; chunked over the parked pool threads on the
+        // threads backend — bit-identical either way, so the digest cannot
+        // see the backend).
+        let mut avg = eng.exec.buffers().take_for_overwrite(ctx.rt.n);
+        {
+            let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
+            eng.exec.mean_into(&refs, &mut avg);
+        }
         // Simultaneous symmetric update (pre-update values on both sides).
         for w in 0..m {
             vecmath::pullback_inplace(&mut eng.workers.params[w], &self.z, alpha);
         }
         vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut self.z);
+        eng.exec.buffers().put(avg);
         account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         Ok(())
     }

@@ -35,13 +35,21 @@ use anyhow::{ensure, Result};
 
 use super::{Recorder, TrainContext, Workers};
 use crate::clock::Clocks;
-use crate::config::Execution;
-use crate::metrics::TrainLog;
+use crate::executor::{ExecSnapshot, Executor};
+use crate::metrics::{HotPathCounters, TrainLog};
 
 /// Virtual cost of one fused elementwise pass over the paper-size model
 /// (44.7 MB / ~500 GB/s HBM ≈ 0.1 ms) — negligible but accounted. Charged
 /// for the pullback/anchor math at round boundaries.
 pub const PULLBACK_S: f64 = 1e-4;
+
+/// Rounds counted as warm-up before the steady-state window of the
+/// hot-path counters (`TrainLog::hot`). Two rounds prime every pooled
+/// path: round 1 allocates the collective snapshot buffers (the pool is
+/// empty), round 2 is the first whose absorb returns them — from then on
+/// launches must hit the free list and the executor must spawn nothing
+/// (hard-asserted by `rust/tests/hot_path.rs`).
+pub const WARMUP_ROUNDS: usize = 2;
 
 /// How the engine drives workers during a round's local phase.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -94,12 +102,14 @@ pub struct Engine {
     pub round: usize,
     /// Per-worker completed local steps (diverges from `k` under hetero-τ).
     pub steps_done: Vec<usize>,
-    /// Execution backend (`cfg.execution`): runs the local phase and
-    /// dispatches reduction jobs — inline on `sim`, on real OS threads on
-    /// `threads`. Strategies launch their collectives through it (see
-    /// `collective::launch_collective` / `Execution::start_reduce` in the
-    /// `executor` module).
-    pub exec: Execution,
+    /// Execution backend object (from `cfg.execution`): runs the local
+    /// phase and dispatches reduction jobs — inline on `sim`, on the
+    /// persistent worker pool on `threads` — and owns the run's recycled
+    /// hot-path memory (`executor::Executor`, DESIGN.md §10). Strategies
+    /// launch their collectives through it (`collective::launch_collective`
+    /// / `Executor::start_reduce`) and recycle absorbed result buffers into
+    /// `exec.buffers()`.
+    pub exec: Executor,
 }
 
 impl Engine {
@@ -116,7 +126,7 @@ impl Engine {
             total: ctx.total_steps(),
             round: 0,
             steps_done: vec![0; m],
-            exec: ctx.cfg.execution,
+            exec: Executor::new(ctx.cfg.execution, m),
         }
     }
 
@@ -201,6 +211,9 @@ pub fn plan_tau(eng: &Engine, ctx: &TrainContext, tau: usize) -> RoundPlan {
 pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<TrainLog> {
     let mut eng = Engine::new(ctx);
     strategy.on_run_start(&mut eng, ctx)?;
+    // Tracked-counter snapshot at the warm-up boundary: everything after
+    // it is the steady-state window that must stay at zero spawns/allocs.
+    let mut warm: Option<ExecSnapshot> = None;
     while eng.k < eng.total {
         strategy.before_local(&mut eng, ctx)?;
         let plan = strategy.plan(&eng, ctx);
@@ -239,16 +252,16 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
         }
         let start_step = eng.k;
         // Local phase: the executor runs each worker's burst — sequentially
-        // on `sim`, one OS thread per worker on `threads`. Either way the
-        // per-worker results come back in worker order and are folded here
-        // in that order, so losses, clocks, and gradients are bit-identical
-        // across backends (DESIGN.md §9).
-        let exec = eng.exec;
-        let rounds = exec.run_phase(eng.workers.step_views(), ctx, &plan, start_step, phase)?;
+        // on `sim`, on the persistent per-worker pool threads on `threads`.
+        // Either way the per-worker results come back in worker order and
+        // are folded here in that order, so losses, clocks, and gradients
+        // are bit-identical across backends (DESIGN.md §9).
+        let views = eng.workers.step_views();
+        let mut rounds = eng.exec.run_phase(views, ctx, &plan, start_step, phase)?;
         let mut grads = Vec::new();
         let mut loss_sum = 0.0;
         let mut loss_n = 0usize;
-        for (w, mut r) in rounds.into_iter().enumerate() {
+        for (w, r) in rounds.iter_mut().enumerate() {
             for &loss in &r.losses {
                 loss_sum += loss;
             }
@@ -261,14 +274,33 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
                 grads.push(g);
             }
         }
+        eng.exec.recycle_rounds(rounds);
         eng.k = start_step + plan.advance;
         eng.round += 1;
+        if eng.round == WARMUP_ROUNDS {
+            warm = Some(eng.exec.snapshot());
+        }
         let mean_loss = loss_sum / loss_n.max(1) as f64;
         let outcome = RoundOutcome { start_step, steps: plan.steps, grads, mean_loss };
         strategy.mix(&mut eng, ctx, outcome)?;
         eng.rec.push_loss(eng.k - 1, mean_loss);
         eng.rec.maybe_eval(eng.k, ctx, &eng.workers, &eng.clocks)?;
     }
+    let end = eng.exec.snapshot();
+    // Short runs (fewer rounds than the warm-up) have an empty steady
+    // window; the deltas below are then zero by construction.
+    let warm = warm.unwrap_or(end);
+    eng.rec.set_hot(HotPathCounters {
+        rounds: eng.round as u64,
+        warmup_rounds: WARMUP_ROUNDS.min(eng.round) as u64,
+        thread_spawns_total: end.thread_spawns,
+        steady_thread_spawns: end.thread_spawns - warm.thread_spawns,
+        buffer_allocs_total: end.buffer_allocs,
+        steady_buffer_allocs: end.buffer_allocs - warm.buffer_allocs,
+        buffer_alloc_bytes_total: end.buffer_alloc_bytes,
+        steady_buffer_alloc_bytes: end.buffer_alloc_bytes - warm.buffer_alloc_bytes,
+        buffer_hits_total: end.buffer_hits,
+    });
     eng.rec.force_eval(eng.total, ctx, &eng.workers, &eng.clocks)?;
     Ok(eng.rec.finish(ctx, &eng.clocks, eng.total))
 }

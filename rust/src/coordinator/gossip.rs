@@ -28,29 +28,15 @@
 //!
 //! τ-family plans (`tau_hetero` included) work unchanged.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
 use super::{account_collective, TrainContext};
-use crate::config::{Algo, Execution};
+use crate::config::Algo;
 use crate::executor::ReduceHandle;
 use crate::topology::{Topology, TopologyKind};
-
-/// De-bias one push-sum round's outputs: estimate = value / weight
-/// (exactly 1 on a regular graph with full participation).
-fn de_bias(mixed_raw: Vec<Vec<f32>>, weights: &[f64]) -> Vec<Vec<f32>> {
-    mixed_raw
-        .into_iter()
-        .zip(weights)
-        .map(|(mut v, &w)| {
-            let inv = (1.0 / w) as f32;
-            for x in v.iter_mut() {
-                *x *= inv;
-            }
-            v
-        })
-        .collect()
-}
 
 /// An in-flight gossip exchange: the per-worker de-biased mixes (possibly
 /// still computing on the communicator thread) plus per-worker virtual
@@ -60,9 +46,13 @@ struct PendingGossip {
     ready: Vec<f64>,
 }
 
-/// Pullback-to-neighbor-averaged-anchor mixing on the gossip graph.
+/// Pullback-to-neighbor-averaged-anchor mixing on the gossip graph. The
+/// graph lives behind an `Arc` so each round's mix job shares it with the
+/// communicator thread without cloning adjacency lists.
 pub struct GossipStrategy {
-    topo: Topology,
+    topo: Arc<Topology>,
+    /// push-sum input weights (all-ones under full participation)
+    ones: Arc<Vec<f64>>,
     z: Vec<Vec<f32>>,
     pending: Option<PendingGossip>,
 }
@@ -80,7 +70,12 @@ impl GossipStrategy {
         } else {
             Topology::gossip(ctx.cfg.workers, ctx.cfg.gossip_degree, ctx.cfg.seed)?
         };
-        Ok(Self { topo, z: Vec::new(), pending: None })
+        Ok(Self {
+            topo: Arc::new(topo),
+            ones: Arc::new(vec![1.0f64; ctx.cfg.workers]),
+            z: Vec::new(),
+            pending: None,
+        })
     }
 }
 
@@ -104,14 +99,16 @@ impl MixingStrategy for GossipStrategy {
                 eng.clocks.wait_comm_until(w, p.ready[w]);
             }
             // Join the communicator thread (threads backend) / take the
-            // eager result (sim) — bit-identical either way.
-            self.z = p.mixed.wait();
+            // eager result (sim) — bit-identical either way. The displaced
+            // anchors return to the buffer pool, balancing the buffers the
+            // next launch takes out (zero steady-state allocations).
+            let old = std::mem::replace(&mut self.z, p.mixed.wait());
+            eng.exec.buffers().put_set(old);
         }
 
         // --- pullback toward the per-worker anchor (Eq. 4) ----------------
         for w in 0..m {
-            eng.workers.params[w] =
-                ctx.rt.pullback(&eng.workers.params[w], &self.z[w], ctx.cfg.alpha)?;
+            ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z[w], ctx.cfg.alpha)?;
             eng.clocks.compute(w, PULLBACK_S);
         }
 
@@ -119,26 +116,33 @@ impl MixingStrategy for GossipStrategy {
         // Data plane: one column-stochastic mixing round over the boundary
         // models, de-biased by the push-sum weights (exactly 1 on a regular
         // graph; the correction is what keeps irregular/partial rounds
-        // exact — property-tested in rust/tests/topology.rs). Sim computes
-        // it eagerly over a borrow (the seed path, no copies); the threads
-        // backend hands an owned snapshot to the communicator thread, which
-        // mixes under the next round's local compute — same inputs, same
-        // code, bit-identical output.
-        let ones = vec![1.0f64; m];
-        let mixed = match eng.exec {
-            Execution::Sim => {
-                let (mixed_raw, weights) = self.topo.gossip_mix(&eng.workers.params, &ones);
-                ReduceHandle::Ready(de_bias(mixed_raw, &weights))
-            }
-            Execution::Threads => {
-                let snapshot = eng.workers.params.clone();
-                let topo = self.topo.clone();
-                eng.exec.start_reduce(move || {
-                    let (mixed_raw, weights) = topo.gossip_mix(&snapshot, &ones);
-                    de_bias(mixed_raw, &weights)
-                })
-            }
+        // exact — property-tested in rust/tests/topology.rs). Both backends
+        // mix over a pooled bit-exact snapshot of the boundary models: sim
+        // computes the job eagerly at launch (the seed's sequence point),
+        // the threads backend runs it on the parked communicator thread
+        // under the next round's local compute — same inputs, same code,
+        // bit-identical output.
+        let pool = eng.exec.buffers().clone();
+        let snapshot = {
+            let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
+            pool.take_set_copy(&refs)
         };
+        let mut out = pool.take_set_zeroed(m, ctx.rt.n);
+        let topo = Arc::clone(&self.topo);
+        let ones = Arc::clone(&self.ones);
+        let mixed = eng.exec.start_reduce(move |_scratch| {
+            let mut w_out = vec![0.0f64; ones.len()];
+            topo.gossip_mix_into(&snapshot, &ones, &mut out, &mut w_out);
+            // De-bias in place: estimate = value / weight.
+            for (v, &wt) in out.iter_mut().zip(w_out.iter()) {
+                let inv = (1.0 / wt) as f32;
+                for x in v.iter_mut() {
+                    *x *= inv;
+                }
+            }
+            pool.put_set(snapshot);
+            out
+        });
         // Timing plane: worker i's exchange completes once its whole
         // neighborhood has joined and `degree` neighbor messages have moved
         // — no global handshake, no cluster-wide rendezvous.

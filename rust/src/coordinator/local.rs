@@ -32,12 +32,16 @@ impl MixingStrategy for LocalAvgStrategy {
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
-        // Blocking param averaging on the topology's real reduce schedule.
+        // Blocking param averaging on the topology's real reduce schedule,
+        // inline on the coordinator over the executor's reusable scratch
+        // (bit-identical to fresh scratch; DESIGN.md §10).
         eng.clocks.barrier();
         for w in 0..m {
             eng.clocks.comm_blocked(w, self.comm_t);
         }
-        ctx.cluster.topology.allreduce_mean(&mut eng.workers.params);
+        ctx.cluster
+            .topology
+            .allreduce_mean_with(&mut eng.workers.params, &mut *eng.exec.reduce_scratch());
         account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         Ok(())
     }

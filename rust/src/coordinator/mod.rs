@@ -47,7 +47,7 @@ use anyhow::{bail, Result};
 use crate::clock::Clocks;
 use crate::config::{Algo, ExperimentConfig};
 use crate::data::{Batcher, Dataset, PX};
-use crate::metrics::{EvalRecord, TrainLog};
+use crate::metrics::{EvalRecord, HotPathCounters, TrainLog};
 use crate::optim::LrSchedule;
 use crate::runtime::ModelRuntime;
 use crate::simnet::ClusterModel;
@@ -111,6 +111,9 @@ pub struct Workers {
     straggler_rngs: Vec<Rng>,
     img_bufs: Vec<Vec<f32>>,
     label_bufs: Vec<Vec<i32>>,
+    /// per-worker gradient scratch: every fused step reuses it, so the
+    /// steady-state training kernels allocate nothing (DESIGN.md §10)
+    grad_bufs: Vec<Vec<f32>>,
 }
 
 /// One worker's complete mutable state, borrowed disjointly from
@@ -132,6 +135,7 @@ pub struct StepView<'a> {
     rng: &'a mut Rng,
     img_buf: &'a mut Vec<f32>,
     label_buf: &'a mut Vec<i32>,
+    grad_buf: &'a mut Vec<f32>,
 }
 
 impl StepView<'_> {
@@ -142,18 +146,26 @@ impl StepView<'_> {
         let b = ctx.rt.train_batch;
         self.batcher.next_batch(ctx.train, b, self.img_buf, self.label_buf);
         let lr = ctx.schedule.lr_at_step(step);
+        // Every kernel below runs in place over this worker's buffers with
+        // the gradient landing in the per-worker scratch — bit-identical to
+        // the allocating forms (asserted in runtime tests), with zero
+        // steady-state allocations (DESIGN.md §10).
         let loss = if self.use_adam {
-            // §6 extension (Overlap-Local-Adam): grad + fused Adam artifact.
-            let (loss, g) = ctx.rt.grad_step(self.params, self.img_buf, self.label_buf)?;
+            // §6 extension (Overlap-Local-Adam): grad + fused Adam kernel.
+            let loss =
+                ctx.rt.grad_step_into(self.params, self.img_buf, self.label_buf, self.grad_buf)?;
             *self.adam_t += 1.0;
-            let (p, m1, m2) =
-                ctx.rt.adam_update(self.params, self.mom, self.mom2, &g, lr, *self.adam_t)?;
-            *self.params = p;
-            *self.mom = m1;
-            *self.mom2 = m2;
+            ctx.rt.adam_update_inplace(
+                self.params,
+                self.mom,
+                self.mom2,
+                self.grad_buf,
+                lr,
+                *self.adam_t,
+            )?;
             loss
         } else {
-            let (p, mom, loss) = ctx.rt.train_step(
+            ctx.rt.train_step_inplace(
                 self.params,
                 self.mom,
                 self.img_buf,
@@ -161,10 +173,8 @@ impl StepView<'_> {
                 lr,
                 ctx.cfg.mu,
                 ctx.cfg.wd,
-            )?;
-            *self.params = p;
-            *self.mom = mom;
-            loss
+                self.grad_buf,
+            )?
         };
         let dt = ctx.cluster.compute.step_time(self.w, self.rng);
         Ok((loss as f64, dt))
@@ -211,6 +221,10 @@ impl Workers {
                 .collect(),
             img_bufs: vec![vec![0.0f32; ctx.rt.train_batch * PX]; m],
             label_bufs: vec![vec![0i32; ctx.rt.train_batch]; m],
+            // Lazily sized: the first fused step grows each worker's
+            // scratch to n (warm-up); grad-mode algorithms (sync/powersgd)
+            // never touch it and never pay for it.
+            grad_bufs: vec![Vec::new(); m],
         }
     }
 
@@ -229,6 +243,7 @@ impl Workers {
             straggler_rngs,
             img_bufs,
             label_bufs,
+            grad_bufs,
         } = self;
         let mut views = Vec::with_capacity(*m);
         let it = params
@@ -240,8 +255,9 @@ impl Workers {
             .zip(straggler_rngs.iter_mut())
             .zip(img_bufs.iter_mut())
             .zip(label_bufs.iter_mut())
+            .zip(grad_bufs.iter_mut())
             .enumerate();
-        for (w, (((((((p, mo), m2), at), b), r), ib), lb)) in it {
+        for (w, ((((((((p, mo), m2), at), b), r), ib), lb), gb)) in it {
             views.push(StepView {
                 w,
                 use_adam: *use_adam,
@@ -253,6 +269,7 @@ impl Workers {
                 rng: r,
                 img_buf: ib,
                 label_buf: lb,
+                grad_buf: gb,
             });
         }
         views
@@ -271,6 +288,7 @@ impl Workers {
             rng: &mut self.straggler_rngs[w],
             img_buf: &mut self.img_bufs[w],
             label_buf: &mut self.label_bufs[w],
+            grad_buf: &mut self.grad_bufs[w],
         }
     }
 
@@ -321,6 +339,9 @@ pub struct Recorder {
     next_eval_step: usize,
     eval_stride: usize,
     tau_trace: Vec<(usize, usize)>,
+    /// tracked hot-path counters (set by the engine at run end; all-zero
+    /// for the reference loops, and never part of the digest)
+    hot: HotPathCounters,
 }
 
 impl Recorder {
@@ -338,7 +359,15 @@ impl Recorder {
             next_eval_step: stride,
             eval_stride: stride,
             tau_trace: Vec::new(),
+            hot: HotPathCounters::default(),
         }
+    }
+
+    /// Install the run's tracked hot-path counters (engine only; see
+    /// `TrainLog::hot`). Counters are reporting-only: they are excluded
+    /// from the digest by construction.
+    pub fn set_hot(&mut self, hot: HotPathCounters) {
+        self.hot = hot;
     }
 
     /// Record the mean training loss of one sync round at global step `k`.
@@ -432,6 +461,7 @@ impl Recorder {
             bytes_sent: self.bytes_sent,
             neighbor_bytes: self.neighbor_bytes,
             steps,
+            hot: self.hot,
         }
     }
 }

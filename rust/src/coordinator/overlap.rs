@@ -131,17 +131,18 @@ impl MixingStrategy for OverlapStrategy {
             // Join the communicator (threads backend) / take the eager
             // result (sim), then each worker independently waits on the
             // virtual timeline until the anchor is ready; if the wire
-            // finished during the τ steps that wait is a no-op.
+            // finished during the τ steps that wait is a no-op. The anchor
+            // update runs in place (bit-identical to the allocating form)
+            // and the absorbed average goes back into the buffer pool — the
+            // return half of the zero-allocation steady state.
             let avg = h.absorb(&mut eng.clocks);
-            let (z2, v2) = ctx.rt.anchor_update(&self.z, &self.v, &avg, self.beta)?;
-            self.z = z2;
-            self.v = v2;
+            ctx.rt.anchor_update_inplace(&mut self.z, &mut self.v, &avg, self.beta)?;
+            eng.exec.buffers().put(avg);
         }
 
         // --- pullback (Eq. 4), local on every node ------------------------
         for w in 0..m {
-            eng.workers.params[w] =
-                ctx.rt.pullback(&eng.workers.params[w], &self.z, ctx.cfg.alpha)?;
+            ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z, ctx.cfg.alpha)?;
             eng.clocks.compute(w, PULLBACK_S);
         }
 
@@ -149,13 +150,13 @@ impl MixingStrategy for OverlapStrategy {
         // An exact collective effectively starts once the last participant
         // joins (the topology axis changes the wire cost, not the rendezvous
         // — only overlap-gossip drops the global rendezvous). On the threads
-        // backend the launch spawns the background communicator that the τ
-        // local steps of the NEXT round genuinely overlap.
+        // backend the launch dispatches to the pool's parked communicator
+        // thread, which the τ local steps of the NEXT round genuinely
+        // overlap; its snapshot reuses pooled buffers.
         let start = eng.clocks.max_now();
-        let exec = eng.exec;
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
         self.pending = Some(launch_collective(
-            &exec,
+            &eng.exec,
             &ctx.cluster.topology,
             &refs,
             &ctx.cluster.net,

@@ -65,7 +65,11 @@ impl MixingStrategy for SyncStrategy {
         for w in 0..m {
             eng.clocks.comm_blocked(w, self.comm_t);
         }
-        ctx.cluster.topology.allreduce_mean(&mut out.grads);
+        // Inline reduce on the coordinator, over the executor's reusable
+        // scratch (bit-identical to fresh scratch; DESIGN.md §10).
+        ctx.cluster
+            .topology
+            .allreduce_mean_with(&mut out.grads, &mut *eng.exec.reduce_scratch());
         account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
         apply_shared_update(eng, ctx, &out.grads[0], out.start_step)
     }

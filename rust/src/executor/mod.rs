@@ -2,20 +2,30 @@
 //!
 //! The round **engine** (`coordinator::engine`) decides *what* happens —
 //! the plan, the mixing decision, the virtual timeline. The execution
-//! mode ([`Execution`], from the config's `execution` key) decides
-//! *where* it happens; this module implements both backends on that
-//! enum:
+//! mode (`config::Execution`) decides *where*; the engine materializes
+//! that choice once per run as an [`Executor`], which this module
+//! implements:
 //!
-//! * [`Execution::Sim`] — everything on the calling thread, in
-//!   worker-major order. Concurrency is purely virtual (clock
-//!   arithmetic). This is the deterministic discrete-event mode every
-//!   experiment defaults to.
-//! * [`Execution::Threads`] — the round's local phase runs on **one OS
-//!   thread per simulated worker** (`threads.rs`), and every collective
-//!   launched through [`Execution::start_reduce`] runs on a **background
-//!   communicator thread**, so an overlapped schedule genuinely computes
-//!   local steps while the previous round's all-reduce is in flight.
-//!   This is the backend `rust/benches/wallclock.rs` measures (E12).
+//! * `sim` — everything on the calling thread, in worker-major order.
+//!   Concurrency is purely virtual (clock arithmetic). This is the
+//!   deterministic discrete-event mode every experiment defaults to.
+//! * `threads` — a persistent worker pool (`pool.rs`: m parked worker
+//!   threads, spawned once per run) runs each round's local phase, and
+//!   every collective dispatched through
+//!   [`Executor::start_reduce`] runs on the pool's dedicated
+//!   **communicator thread**, so an overlapped schedule genuinely
+//!   computes local steps while the previous round's all-reduce is in
+//!   flight. Threads are spawned once per run and parked between jobs —
+//!   the steady-state round loop performs **zero** thread spawns
+//!   (DESIGN.md §10; previously every round paid ~m scoped spawns plus a
+//!   detached thread per collective). This is the backend
+//!   `rust/benches/wallclock.rs` measures (E12/E13).
+//!
+//! Either way the `Executor` owns the run's hot-path memory: the
+//! [`BufferPool`] that recycles collective snapshot storage, a free list
+//! of per-round result buffers, and the coordinator-side
+//! [`ReduceScratch`]. [`Executor::snapshot`] exposes the tracked
+//! allocation/spawn counters the engine surfaces in `TrainLog::hot`.
 //!
 //! **Digest identity** (asserted for every algorithm by
 //! `rust/tests/golden_regression.rs`): the two backends produce
@@ -28,22 +38,44 @@
 //! 2. cross-worker reductions (loss folding, clock charging, gradient
 //!    collection) happen on the coordinator in fixed worker order, fed
 //!    from the per-worker [`WorkerRound`] results;
-//! 3. a background collective computes the *same* reduction code over the
-//!    *same* snapshot the sim backend reduces eagerly, and its virtual
-//!    completion time comes from the simnet cost model, never from wall
-//!    clock.
+//! 3. a background collective computes the *same* reduction code over a
+//!    bit-exact snapshot of the same inputs the sim backend reduces
+//!    eagerly (pooled storage is fully overwritten before use), and its
+//!    virtual completion time comes from the simnet cost model, never
+//!    from wall clock.
 
-pub mod threads;
+mod pool;
+
+use std::cell::RefCell;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::collective::ReduceScratch;
 use crate::config::Execution;
 use crate::coordinator::engine::{LocalPhase, RoundPlan};
 use crate::coordinator::{StepView, TrainContext};
+use crate::model::vecmath;
+use crate::util::pool::BufferPool;
+
+use pool::WorkerPool;
+
+/// A reduction job: the data plane of a collective or gossip exchange over
+/// owned (pooled) snapshots, given the executing thread's persistent
+/// scratch.
+pub(crate) type CommJob = Box<dyn FnOnce(&mut ReduceScratch) -> Vec<Vec<f32>> + Send + 'static>;
+
+/// The pool communicator's shared reply channel: results tagged with their
+/// launch sequence number, consumed by [`ReduceHandle::wait`].
+pub(crate) type CommReplyRx = Arc<Mutex<Receiver<(u64, Vec<Vec<f32>>)>>>;
 
 /// What one worker produced during a round's local phase, in its own step
 /// order. The engine folds these in worker-major order, so the fold is
-/// identical no matter how the phase was scheduled.
+/// identical no matter how the phase was scheduled. Instances are recycled
+/// across rounds through [`Executor::recycle_rounds`], so their vectors
+/// stop allocating once warm.
+#[derive(Default)]
 pub struct WorkerRound {
     /// per-step mini-batch losses (length = planned steps; 1 in grad mode)
     pub losses: Vec<f64>,
@@ -53,45 +85,128 @@ pub struct WorkerRound {
     pub grad: Option<Vec<f32>>,
 }
 
-/// Run one worker's share of a round: `steps` fused steps, or one
-/// gradient. Both backends call exactly this function — the sim backend on
-/// the coordinator thread, the threads backend on the worker's own thread.
+/// Run one worker's share of a round into `out` (cleared first): `steps`
+/// fused steps, or one gradient. Both backends call exactly this function —
+/// the sim backend on the coordinator thread, the pool on the worker's own
+/// parked thread.
 pub(crate) fn drive_worker(
     view: &mut StepView<'_>,
     ctx: &TrainContext,
     steps: usize,
     start_step: usize,
     phase: LocalPhase,
-) -> Result<WorkerRound> {
+    out: &mut WorkerRound,
+) -> Result<()> {
+    out.losses.clear();
+    out.dts.clear();
+    out.grad = None;
     match phase {
         LocalPhase::FusedSteps => {
-            let mut losses = Vec::with_capacity(steps);
-            let mut dts = Vec::with_capacity(steps);
             for s in 0..steps {
                 let (loss, dt) = view.fused_step(ctx, start_step + s)?;
-                losses.push(loss);
-                dts.push(dt);
+                out.losses.push(loss);
+                out.dts.push(dt);
             }
-            Ok(WorkerRound { losses, dts, grad: None })
         }
         LocalPhase::GradOnly => {
             let (loss, dt, g) = view.grad_only(ctx)?;
-            Ok(WorkerRound { losses: vec![loss], dts: vec![dt], grad: Some(g) })
+            out.losses.push(loss);
+            out.dts.push(dt);
+            out.grad = Some(g);
         }
     }
+    Ok(())
 }
 
-// The execution *behavior* lives here, as inherent methods on the config
-// enum — one type names the axis end to end, so a future third backend is
-// added in exactly one place. Worker threads are scoped to each round and
-// communicator threads to each collective; no backend keeps a pool, so a
-// run can never leak threads past its own lifetime.
-impl Execution {
+enum Mode {
+    Sim,
+    Pool(WorkerPool),
+}
+
+/// Tracked hot-path counters at one instant (monotone totals since the
+/// executor was built). The engine snapshots these at the warm-up boundary
+/// and at run end to compute the steady-state deltas in `TrainLog::hot`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecSnapshot {
+    /// OS threads spawned by the executor (pool startup only; 0 on `sim`)
+    pub thread_spawns: u64,
+    /// tracked buffer-pool allocations (free-list misses)
+    pub buffer_allocs: u64,
+    /// bytes those allocations created
+    pub buffer_alloc_bytes: u64,
+    /// buffer-pool requests served without allocating
+    pub buffer_hits: u64,
+}
+
+/// The per-run execution backend object: where local phases and reduction
+/// jobs physically run, plus the run's recycled hot-path storage. Built by
+/// `coordinator::engine::Engine::new` from the config's `execution` mode;
+/// strategies reach it as `eng.exec`.
+pub struct Executor {
+    mode: Mode,
+    buffers: BufferPool,
+    scratch: RefCell<ReduceScratch>,
+    rounds: RefCell<Vec<WorkerRound>>,
+}
+
+impl Executor {
+    /// Build the backend for one run of `m` workers. `Execution::Threads`
+    /// spawns the persistent pool (m + 1 threads) here — the run's one and
+    /// only spawn site.
+    pub fn new(mode: Execution, m: usize) -> Self {
+        let mode = match mode {
+            Execution::Sim => Mode::Sim,
+            Execution::Threads => Mode::Pool(WorkerPool::new(m)),
+        };
+        Self {
+            mode,
+            buffers: BufferPool::new(),
+            scratch: RefCell::new(ReduceScratch::default()),
+            rounds: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// The config axis this executor realizes.
+    pub fn execution(&self) -> Execution {
+        match self.mode {
+            Mode::Sim => Execution::Sim,
+            Mode::Pool(_) => Execution::Threads,
+        }
+    }
+
+    /// The run's shared buffer pool (collective snapshots and mix outputs
+    /// recycle through it; see `util::pool`).
+    pub fn buffers(&self) -> &BufferPool {
+        &self.buffers
+    }
+
+    /// The coordinator-side reduce scratch, for strategies that run their
+    /// collective inline at the boundary (sync/local/elastic). The
+    /// communicator thread keeps its own.
+    pub fn reduce_scratch(&self) -> std::cell::RefMut<'_, ReduceScratch> {
+        self.scratch.borrow_mut()
+    }
+
+    /// Current tracked counters (spawns + buffer-pool traffic).
+    pub fn snapshot(&self) -> ExecSnapshot {
+        let stats = self.buffers.stats();
+        ExecSnapshot {
+            thread_spawns: match &self.mode {
+                Mode::Sim => 0,
+                Mode::Pool(p) => p.spawns(),
+            },
+            buffer_allocs: stats.allocs,
+            buffer_alloc_bytes: stats.alloc_bytes,
+            buffer_hits: stats.hits,
+        }
+    }
+
     /// Execute one round's local phase over the per-worker views (worker
     /// order in, worker order out). `plan.steps[w]` fused steps per worker,
     /// or one gradient each in grad mode. `Sim` drives the views
-    /// sequentially on the calling thread; `Threads` spawns one OS thread
-    /// per worker.
+    /// sequentially on the calling thread; `Threads` dispatches each view
+    /// to its parked pool thread. Result buffers come from the recycle
+    /// list, so steady-state rounds reuse their capacity.
     pub fn run_phase(
         &self,
         views: Vec<StepView<'_>>,
@@ -100,66 +215,111 @@ impl Execution {
         start_step: usize,
         phase: LocalPhase,
     ) -> Result<Vec<WorkerRound>> {
-        match self {
-            Execution::Sim => {
-                let mut out = Vec::with_capacity(views.len());
+        let m = views.len();
+        let mut bufs: Vec<WorkerRound> = {
+            let mut stash = self.rounds.borrow_mut();
+            (0..m).map(|_| stash.pop().unwrap_or_default()).collect()
+        };
+        match &self.mode {
+            Mode::Sim => {
                 for (w, mut view) in views.into_iter().enumerate() {
-                    out.push(drive_worker(&mut view, ctx, plan.steps[w], start_step, phase)?);
+                    drive_worker(&mut view, ctx, plan.steps[w], start_step, phase, &mut bufs[w])?;
                 }
-                Ok(out)
+                Ok(bufs)
             }
-            Execution::Threads => threads::run_phase(views, ctx, plan, start_step, phase),
+            Mode::Pool(p) => p.run_phase(views, ctx, plan, start_step, phase, bufs),
+        }
+    }
+
+    /// Return a round's folded result buffers for reuse by the next round.
+    pub fn recycle_rounds(&self, rounds: Vec<WorkerRound>) {
+        let mut stash = self.rounds.borrow_mut();
+        for mut r in rounds {
+            r.losses.clear();
+            r.dts.clear();
+            r.grad = None;
+            stash.push(r);
         }
     }
 
     /// Run a reduction job — the data plane of a collective or gossip
-    /// exchange over an owned snapshot. `Sim` computes it inline (eager,
-    /// the seed semantics); `Threads` spawns a background communicator
-    /// thread and returns immediately, which is what lets the next round's
-    /// local compute overlap the wire work for real.
+    /// exchange over pooled snapshots. `Sim` computes it inline (eager, the
+    /// seed semantics) using the coordinator-side scratch; `Threads` hands
+    /// it to the parked communicator thread and returns immediately, which
+    /// is what lets the next round's local compute overlap the wire work
+    /// for real.
     ///
-    /// The `'static` bound exists for the communicator thread; on the sim
-    /// backend, callers with borrowable inputs can skip the snapshot and
-    /// build a [`ReduceHandle::Ready`] directly (see
-    /// `coordinator::gossip`).
+    /// Handles must be waited **in launch order** (or dropped): the
+    /// communicator serves one FIFO queue, and a `wait` skips — and drops —
+    /// the results of earlier, abandoned launches to reach its own (see
+    /// [`ReduceHandle::wait`]). Every in-repo caller holds at most one
+    /// in-flight handle at a time.
     pub fn start_reduce(
         &self,
-        job: impl FnOnce() -> Vec<Vec<f32>> + Send + 'static,
+        job: impl FnOnce(&mut ReduceScratch) -> Vec<Vec<f32>> + Send + 'static,
     ) -> ReduceHandle {
-        match self {
-            Execution::Sim => ReduceHandle::Ready(job()),
-            Execution::Threads => ReduceHandle::InFlight(threads::spawn_communicator(job)),
+        match &self.mode {
+            Mode::Sim => ReduceHandle::Ready(job(&mut *self.scratch.borrow_mut())),
+            Mode::Pool(p) => p.start_reduce(Box::new(job)),
+        }
+    }
+
+    /// Elementwise mean into `out`, *bit*-identical to
+    /// [`vecmath::mean_into`] on either backend: serial on `sim`, chunked
+    /// over the parked pool threads on `threads` (the same deterministic
+    /// chunking as `vecmath::mean_into_parallel`, without its per-call
+    /// spawns).
+    pub fn mean_into(&self, vs: &[&[f32]], out: &mut [f32]) {
+        match &self.mode {
+            Mode::Sim => vecmath::mean_into(vs, out),
+            Mode::Pool(p) => p.mean_into(vs, out),
         }
     }
 }
 
 /// Handle to a (possibly in-flight) reduction launched via
-/// [`Execution::start_reduce`]. Dropping an `InFlight` handle detaches the
-/// communicator thread (it owns only its snapshot, so this is safe — it
-/// happens when a run ends with a collective still pending, exactly like
-/// the sim backend dropping an unabsorbed result).
+/// [`Executor::start_reduce`]. Dropping a `Pending` handle abandons the
+/// job (its result is skipped by sequence number, never misdelivered) —
+/// this happens when a run ends with a collective still pending, exactly
+/// like the sim backend dropping an unabsorbed result.
 pub enum ReduceHandle {
     /// the reduction already ran inline (sim backend)
     Ready(Vec<Vec<f32>>),
-    /// the reduction is running on a background communicator thread
-    InFlight(std::thread::JoinHandle<Vec<Vec<f32>>>),
+    /// the reduction is queued on the pool's communicator thread
+    Pending {
+        /// the pool's shared reply channel
+        reply: CommReplyRx,
+        /// this job's launch sequence number
+        seq: u64,
+    },
 }
 
 impl ReduceHandle {
     /// Block until the reduction is done and take its output buffers.
-    /// Instant on `Ready`; joins the communicator thread on `InFlight`.
+    /// Instant on `Ready`; waits on the communicator's reply on `Pending`.
+    ///
+    /// Replies arrive in launch order, and results bearing an earlier
+    /// sequence number than this handle's are treated as abandoned and
+    /// dropped — so live handles must be waited in launch order: waiting a
+    /// newer handle first discards an older live handle's result, and the
+    /// older `wait` would then block forever. (In-repo, strategies hold at
+    /// most one in-flight collective, which satisfies this by
+    /// construction.)
     pub fn wait(self) -> Vec<Vec<f32>> {
         match self {
             ReduceHandle::Ready(v) => v,
-            ReduceHandle::InFlight(h) => h.join().expect("communicator thread panicked"),
-        }
-    }
-
-    /// Whether `wait` would return without blocking.
-    pub fn is_finished(&self) -> bool {
-        match self {
-            ReduceHandle::Ready(_) => true,
-            ReduceHandle::InFlight(h) => h.is_finished(),
+            ReduceHandle::Pending { reply, seq } => {
+                let rx = reply.lock().expect("communicator reply channel poisoned");
+                loop {
+                    let (s, v) = rx.recv().expect("communicator thread exited mid-reduce");
+                    if s == seq {
+                        return v;
+                    }
+                    // Cold path (at most once per abandoned launch), so the
+                    // FIFO invariant stays a hard check in release builds.
+                    assert!(s < seq, "communicator replies out of order");
+                }
+            }
         }
     }
 }
@@ -167,9 +327,10 @@ impl ReduceHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::property;
 
-    fn sum_job(inputs: Vec<Vec<f32>>) -> impl FnOnce() -> Vec<Vec<f32>> + Send + 'static {
-        move || {
+    fn sum_job(inputs: Vec<Vec<f32>>) -> CommJob {
+        Box::new(move |_scratch| {
             let mut acc = vec![0.0f32; inputs[0].len()];
             for v in &inputs {
                 for (a, &x) in acc.iter_mut().zip(v) {
@@ -177,17 +338,65 @@ mod tests {
                 }
             }
             vec![acc]
-        }
+        })
     }
 
     #[test]
     fn start_reduce_is_backend_invariant() {
         let inputs = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
-        let a = Execution::Sim.start_reduce(sum_job(inputs.clone()));
-        let b = Execution::Threads.start_reduce(sum_job(inputs));
-        assert!(a.is_finished());
+        let sim = Executor::new(Execution::Sim, 2);
+        let thr = Executor::new(Execution::Threads, 2);
+        let a = sim.start_reduce(sum_job(inputs.clone()));
+        let b = thr.start_reduce(sum_job(inputs));
         let (ra, rb) = (a.wait(), b.wait());
         assert_eq!(ra, rb);
         assert_eq!(ra, vec![vec![11.0, 22.0, 33.0]]);
+    }
+
+    #[test]
+    fn abandoned_reduce_results_are_skipped_not_misdelivered() {
+        let thr = Executor::new(Execution::Threads, 2);
+        let abandoned = thr.start_reduce(sum_job(vec![vec![1.0f32]]));
+        drop(abandoned);
+        let kept = thr.start_reduce(sum_job(vec![vec![5.0f32], vec![7.0]]));
+        assert_eq!(kept.wait(), vec![vec![12.0f32]]);
+    }
+
+    #[test]
+    fn executor_counts_spawns_once() {
+        let sim = Executor::new(Execution::Sim, 4);
+        assert_eq!(sim.snapshot().thread_spawns, 0);
+        let thr = Executor::new(Execution::Threads, 4);
+        let s0 = thr.snapshot();
+        assert_eq!(s0.thread_spawns, 5, "m workers + 1 communicator");
+        for _ in 0..3 {
+            thr.start_reduce(sum_job(vec![vec![1.0f32]])).wait();
+        }
+        assert_eq!(thr.snapshot().thread_spawns, 5, "no spawns after startup");
+    }
+
+    #[test]
+    fn property_pooled_mean_is_bit_identical_to_serial() {
+        // The elastic strategy and the wallclock micro-bench route their
+        // averages through the pool; chunking across parked threads must
+        // not change a single bit relative to the serial loop.
+        let thr = Executor::new(Execution::Threads, 5);
+        property("pooled mean == serial mean (bits)", 80, |g| {
+            let n = g.usize_in(1, 2000);
+            let m = g.usize_in(1, 12);
+            let vs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 50.0)).collect();
+            let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+            let mut serial = vec![0.0f32; n];
+            vecmath::mean_into(&refs, &mut serial);
+            let mut pooled = vec![f32::NAN; n];
+            thr.mean_into(&refs, &mut pooled);
+            for i in 0..n {
+                assert_eq!(
+                    serial[i].to_bits(),
+                    pooled[i].to_bits(),
+                    "bit drift at {i} (n={n}, m={m})"
+                );
+            }
+        });
     }
 }

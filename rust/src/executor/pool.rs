@@ -1,0 +1,386 @@
+//! Persistent execution pool: m parked worker threads plus one dedicated
+//! communicator thread, alive for a whole training run (DESIGN.md §10).
+//!
+//! The previous threads backend re-spawned `thread::scope` workers every
+//! round and a detached OS thread for every collective — ~m+1 spawns per
+//! round of pure fixed overhead that capped the measured overlap speedup
+//! (the failure mode persistent-communication-worker designs like DaSGD
+//! and Stochastic Gradient Push engineer around; PAPERS.md). This pool
+//! spawns each thread **once** per run and drives it by channel dispatch:
+//!
+//! * **worker threads** — each parks on its own job channel. Per round the
+//!   coordinator sends worker w a [`PhaseJob`] (that worker's `StepView`
+//!   plus its step budget) and the thread runs the *same*
+//!   `executor::drive_worker` burst as the sim backend, reporting back
+//!   over a shared result channel. Worker w's jobs always run on thread w.
+//!   The same threads also serve chunk jobs for the pooled bit-identical
+//!   parallel mean ([`WorkerPool::mean_into`]).
+//! * **the communicator thread** — parks on a job queue of reduction
+//!   closures and owns a persistent [`ReduceScratch`], so the data plane
+//!   of every collective reuses one arena instead of allocating per call.
+//!   Results come back through one persistent reply channel tagged with a
+//!   launch sequence number (an abandoned collective's result is skipped,
+//!   never misdelivered).
+//!
+//! # Safety model
+//!
+//! A `StepView` borrows one worker's state from `Workers` for less than
+//! `'static`, but a persistent thread can only receive `'static` data, so
+//! [`PhaseJob::erase`] (unsafe) transmutes the lifetimes away — the same
+//! lifetime-erasure trick scoped-thread libraries use internally. The
+//! soundness contract, upheld by [`WorkerPool::run_phase`] and
+//! [`WorkerPool::mean_into`]:
+//!
+//! 1. every dispatched job is awaited before the dispatching call returns
+//!    (even on error paths the reply channel is drained first), so the
+//!    erased borrows never outlive the frame that created them;
+//! 2. a worker thread drops the job — and with it every erased reference —
+//!    *before* signaling completion (panics are caught and reported the
+//!    same way, so a panicking kernel cannot leave the coordinator waiting
+//!    or a borrow dangling);
+//! 3. jobs are disjoint by construction: `Workers::step_views` hands out
+//!    non-overlapping `&mut` bundles, and mean chunks split the output
+//!    slice with `chunks_mut`.
+//!
+//! Virtual time still comes exclusively from the simnet cost model, so the
+//! pool changes no observable: the cross-backend golden tests
+//! (`rust/tests/golden_regression.rs`) and the zero-steady-state counters
+//! (`rust/tests/hot_path.rs`) pin both properties.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::{drive_worker, CommJob, CommReplyRx, ReduceHandle, WorkerRound};
+use crate::collective::ReduceScratch;
+use crate::coordinator::engine::{LocalPhase, RoundPlan};
+use crate::coordinator::{StepView, TrainContext};
+use crate::model::vecmath;
+
+/// One worker's share of a round, with the borrows of its `StepView` (and
+/// of the shared `TrainContext`) erased to `'static` so the job can cross
+/// into a persistent thread. See the module-level safety model.
+struct PhaseJob {
+    view: StepView<'static>,
+    ctx: &'static TrainContext<'static>,
+    steps: usize,
+    start_step: usize,
+    phase: LocalPhase,
+    round: WorkerRound,
+}
+
+impl PhaseJob {
+    /// Erase the borrows in `view`/`ctx` to `'static`.
+    ///
+    /// # Safety
+    ///
+    /// The caller must not let the erased job (or any result derived from
+    /// its borrows) outlive the real lifetimes — concretely: dispatch the
+    /// job to a pool thread and block until that thread reports the job
+    /// complete, within the borrow's original scope.
+    unsafe fn erase(
+        view: StepView<'_>,
+        ctx: &TrainContext<'_>,
+        steps: usize,
+        start_step: usize,
+        phase: LocalPhase,
+        round: WorkerRound,
+    ) -> Self {
+        // SAFETY: transmuting only changes lifetime parameters; the types
+        // are otherwise identical, and the caller upholds the blocking
+        // contract above.
+        let view = unsafe { std::mem::transmute::<StepView<'_>, StepView<'static>>(view) };
+        let ctx = unsafe {
+            std::mem::transmute::<&TrainContext<'_>, &'static TrainContext<'static>>(ctx)
+        };
+        PhaseJob { view, ctx, steps, start_step, phase, round }
+    }
+}
+
+/// One contiguous chunk of a pooled parallel mean, lifetime-erased like
+/// [`PhaseJob`] (chunks borrow disjoint `chunks_mut` pieces of the output).
+struct MeanChunk {
+    vs: &'static [&'static [f32]],
+    out: &'static mut [f32],
+    lo: usize,
+    inv: f32,
+    ack: Sender<bool>,
+}
+
+impl MeanChunk {
+    /// Erase the borrows in `vs`/`out` to `'static`.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`PhaseJob::erase`]: the dispatching call must
+    /// block until the chunk's ack arrives before the real borrows end.
+    unsafe fn erase(
+        vs: &[&[f32]],
+        out: &mut [f32],
+        lo: usize,
+        inv: f32,
+        ack: Sender<bool>,
+    ) -> Self {
+        let vs = unsafe { std::mem::transmute::<&[&[f32]], &'static [&'static [f32]]>(vs) };
+        let out = unsafe { std::mem::transmute::<&mut [f32], &'static mut [f32]>(out) };
+        MeanChunk { vs, out, lo, inv, ack }
+    }
+}
+
+enum WorkerMsg {
+    Phase(PhaseJob),
+    Mean(MeanChunk),
+}
+
+/// The persistent pool: one parked OS thread per simulated worker plus the
+/// dedicated communicator thread. Spawns exactly `m + 1` threads at
+/// construction and zero afterwards (`spawns` is the counter surfaced in
+/// `TrainLog::hot`).
+pub(crate) struct WorkerPool {
+    m: usize,
+    job_txs: Vec<Sender<WorkerMsg>>,
+    phase_rx: Receiver<(usize, Result<WorkerRound>)>,
+    ack_tx: Sender<bool>,
+    ack_rx: Receiver<bool>,
+    comm_tx: Option<Sender<(u64, CommJob)>>,
+    reply_rx: CommReplyRx,
+    next_seq: Cell<u64>,
+    spawns: u64,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+fn worker_main(w: usize, rx: Receiver<WorkerMsg>, tx: Sender<(usize, Result<WorkerRound>)>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Phase(job) => {
+                let PhaseJob { mut view, ctx, steps, start_step, phase, mut round } = job;
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    drive_worker(&mut view, ctx, steps, start_step, phase, &mut round)
+                }));
+                // Erased borrows end here, before the coordinator is
+                // signaled (safety contract #2).
+                drop(view);
+                let out = match res {
+                    Ok(Ok(())) => Ok(round),
+                    Ok(Err(e)) => Err(e),
+                    Err(_) => Err(anyhow!("pool worker {w} panicked during the local phase")),
+                };
+                // A send can only fail if the coordinator already bailed;
+                // the round is doomed either way, so the result may drop.
+                let _ = tx.send((w, out));
+            }
+            WorkerMsg::Mean(chunk) => {
+                let MeanChunk { vs, out, lo, inv, ack } = chunk;
+                let ok = catch_unwind(AssertUnwindSafe(|| {
+                    // Identical per-element operation sequence to the
+                    // serial `vecmath::mean_into` (accumulate in input
+                    // order, then scale) — the bit-identity guarantee.
+                    let len = out.len();
+                    out.copy_from_slice(&vs[0][lo..lo + len]);
+                    for v in &vs[1..] {
+                        for (o, &x) in out.iter_mut().zip(&v[lo..lo + len]) {
+                            *o += x;
+                        }
+                    }
+                    for o in out.iter_mut() {
+                        *o *= inv;
+                    }
+                }))
+                .is_ok();
+                let _ = ack.send(ok);
+            }
+        }
+    }
+}
+
+fn communicator_main(rx: Receiver<(u64, CommJob)>, tx: Sender<(u64, Vec<Vec<f32>>)>) {
+    // The persistent per-thread scratch every reduce schedule reuses.
+    let mut scratch = ReduceScratch::default();
+    while let Ok((seq, job)) = rx.recv() {
+        let out = job(&mut scratch);
+        // The receiver outlives every handle (it is pool state); a failed
+        // send means the pool is tearing down and the result may drop.
+        let _ = tx.send((seq, out));
+    }
+}
+
+impl WorkerPool {
+    /// Spawn the pool for `m` simulated workers (`m + 1` OS threads,
+    /// counted once — the steady-state spawn count is zero by
+    /// construction).
+    pub(crate) fn new(m: usize) -> Self {
+        assert!(m > 0, "worker pool needs at least one worker");
+        let (phase_tx, phase_rx) = channel();
+        let (ack_tx, ack_rx) = channel();
+        let mut job_txs = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m + 1);
+        for w in 0..m {
+            let (tx, rx) = channel();
+            job_txs.push(tx);
+            let phase_tx = phase_tx.clone();
+            let h = thread::Builder::new()
+                .name(format!("olsgd-worker-{w}"))
+                .spawn(move || worker_main(w, rx, phase_tx))
+                .expect("spawning a pool worker thread failed");
+            handles.push(h);
+        }
+        let (comm_tx, comm_rx) = channel();
+        let (reply_tx, reply_rx) = channel();
+        let h = thread::Builder::new()
+            .name("olsgd-communicator".into())
+            .spawn(move || communicator_main(comm_rx, reply_tx))
+            .expect("spawning the communicator thread failed");
+        handles.push(h);
+        Self {
+            m,
+            job_txs,
+            phase_rx,
+            ack_tx,
+            ack_rx,
+            comm_tx: Some(comm_tx),
+            reply_rx: Arc::new(Mutex::new(reply_rx)),
+            next_seq: Cell::new(0),
+            spawns: (m + 1) as u64,
+            handles,
+        }
+    }
+
+    /// OS threads this pool has ever spawned (constant after construction).
+    pub(crate) fn spawns(&self) -> u64 {
+        self.spawns
+    }
+
+    /// Run one round's local phase on the parked worker threads: dispatch
+    /// worker w's view to thread w, then block until all dispatched jobs
+    /// report back (the lifetime-erasure soundness contract). `rounds`
+    /// supplies one recycled result buffer per view.
+    pub(crate) fn run_phase(
+        &self,
+        views: Vec<StepView<'_>>,
+        ctx: &TrainContext,
+        plan: &RoundPlan,
+        start_step: usize,
+        phase: LocalPhase,
+        mut rounds: Vec<WorkerRound>,
+    ) -> Result<Vec<WorkerRound>> {
+        let m = views.len();
+        assert_eq!(m, self.m, "local phase has {m} views but the pool serves {}", self.m);
+        assert_eq!(rounds.len(), m, "one recycled round buffer per view");
+        let mut dispatched = 0usize;
+        let mut dispatch_err = None;
+        for (w, view) in views.into_iter().enumerate() {
+            let round = rounds.pop().expect("checked above");
+            // SAFETY: this loop dispatches to parked threads and the drain
+            // below blocks until every dispatched job has reported back;
+            // worker threads drop the job (ending the erased borrows)
+            // before reporting. On a failed send the job comes back inside
+            // the error and is dropped here, un-run.
+            let job =
+                unsafe { PhaseJob::erase(view, ctx, plan.steps[w], start_step, phase, round) };
+            match self.job_txs[w].send(WorkerMsg::Phase(job)) {
+                Ok(()) => dispatched += 1,
+                Err(_dropped_job) => {
+                    dispatch_err = Some(anyhow!("pool worker {w} exited before the round"));
+                    break;
+                }
+            }
+        }
+        // Drain every dispatched job before any early return — the erased
+        // borrows must not outlive this frame even when the round failed.
+        let mut slots: Vec<Option<WorkerRound>> = (0..m).map(|_| None).collect();
+        let mut job_err: Option<anyhow::Error> = None;
+        for _ in 0..dispatched {
+            let (w, out) = self
+                .phase_rx
+                .recv()
+                .expect("pool result channel broken with jobs in flight");
+            match out {
+                Ok(r) => slots[w] = Some(r),
+                Err(e) => job_err = job_err.or(Some(e)),
+            }
+        }
+        if let Some(e) = dispatch_err {
+            return Err(e);
+        }
+        if let Some(e) = job_err {
+            return Err(e);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(w, r)| r.ok_or_else(|| anyhow!("worker {w} reported no round result")))
+            .collect()
+    }
+
+    /// Dispatch a reduction job to the parked communicator thread and
+    /// return immediately. Jobs complete in FIFO order; the handle's
+    /// sequence number keeps an abandoned collective's result from being
+    /// misdelivered to a later `wait`.
+    pub(crate) fn start_reduce(&self, job: CommJob) -> ReduceHandle {
+        let seq = self.next_seq.get();
+        self.next_seq.set(seq + 1);
+        self.comm_tx
+            .as_ref()
+            .expect("communicator sender lives as long as the pool")
+            .send((seq, job))
+            .expect("communicator thread exited with the pool alive");
+        ReduceHandle::Pending { reply: Arc::clone(&self.reply_rx), seq }
+    }
+
+    /// Pooled thread-parallel mean, *bit*-identical to
+    /// [`vecmath::mean_into`]: the same contiguous chunking as
+    /// `vecmath::mean_into_parallel` with one chunk per pool worker, served
+    /// by the parked threads instead of fresh spawns. `out` is
+    /// unconditionally overwritten.
+    pub(crate) fn mean_into(&self, vs: &[&[f32]], out: &mut [f32]) {
+        let count = vs.len();
+        assert!(count > 0, "mean of zero vectors");
+        for v in vs {
+            assert_eq!(v.len(), out.len(), "length mismatch in mean");
+        }
+        let n = out.len();
+        let t = self.m.max(1).min(n.max(1));
+        if t <= 1 {
+            return vecmath::mean_into(vs, out);
+        }
+        let chunk = n.div_ceil(t);
+        let inv = 1.0f32 / count as f32;
+        let mut sent = 0usize;
+        let mut dispatch_failed = false;
+        for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            // SAFETY: chunks are disjoint `chunks_mut` slices; the ack
+            // drain below blocks until every dispatched chunk is done (the
+            // worker drops its erased borrows before acking), so no borrow
+            // escapes this frame. A failed send drops the chunk un-run.
+            let job = unsafe { MeanChunk::erase(vs, out_chunk, lo, inv, self.ack_tx.clone()) };
+            if self.job_txs[ci].send(WorkerMsg::Mean(job)).is_err() {
+                dispatch_failed = true;
+                break;
+            }
+            sent += 1;
+        }
+        let mut ok = true;
+        for _ in 0..sent {
+            ok &= self.ack_rx.recv().expect("pool ack channel broken with chunks in flight");
+        }
+        assert!(!dispatch_failed, "a pool worker exited before the mean");
+        assert!(ok, "a pooled mean chunk panicked");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels parks the threads out of their recv
+        // loops; join so a finished run leaves no threads behind.
+        self.job_txs.clear();
+        self.comm_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

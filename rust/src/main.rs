@@ -69,8 +69,9 @@ fn print_usage() {
          Algorithms: sync local overlap overlap-m overlap-ada overlap-gossip easgd eamsgd\n\
                      cocod powersgd\n\
          Topologies: --set topology=ring|hier|tree|gossip (gossip_degree, hier_groups)\n\
-         Execution:  --execution sim|threads (threads = one OS thread per worker +\n\
-                     background communicator; bit-identical results, real overlap)\n\
+         Execution:  --execution sim|threads (threads = persistent pool: one parked\n\
+                     OS thread per worker + a communicator thread; bit-identical\n\
+                     results, real overlap, zero steady-state spawns/allocs)\n\
          Config keys: algo model workers epochs seed eval_every execution lr tau tau_min\n\
                       tau_hetero ada_patience ada_threshold alpha beta mu wd rank\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\

@@ -11,6 +11,60 @@ use anyhow::{Context, Result};
 
 use crate::util::json::{arr, arr_f64, num, obj, s, Json};
 
+/// Tracked hot-path counters for one run (DESIGN.md §10): OS-thread spawns
+/// and tracked buffer-pool allocations, split into lifetime totals and the
+/// **steady-state** remainder after the warm-up rounds. On a pooled
+/// backend the steady-state numbers must be exactly zero — the property
+/// `rust/tests/hot_path.rs` and the wallclock bench hard-assert. The
+/// counters are reporting-only observables: they never enter
+/// [`TrainLog::digest`], so identical schedules stay digest-identical
+/// across backends regardless of how their memory behaved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HotPathCounters {
+    /// rounds the engine completed
+    pub rounds: u64,
+    /// rounds counted as warm-up (pool priming) before the steady window
+    pub warmup_rounds: u64,
+    /// OS threads spawned by the executor over the whole run
+    pub thread_spawns_total: u64,
+    /// OS threads spawned after warm-up (must be 0: the pool is persistent)
+    pub steady_thread_spawns: u64,
+    /// tracked buffer-pool allocations (free-list misses) over the run
+    pub buffer_allocs_total: u64,
+    /// tracked allocations after warm-up (must be 0: buffers recycle)
+    pub steady_buffer_allocs: u64,
+    /// bytes of tracked allocations over the run
+    pub buffer_alloc_bytes_total: u64,
+    /// bytes of tracked allocations after warm-up
+    pub steady_buffer_alloc_bytes: u64,
+    /// buffer-pool requests served without allocating
+    pub buffer_hits_total: u64,
+}
+
+impl HotPathCounters {
+    /// The run's hot-path counters as a JSON object (rides inside the
+    /// result-file format).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rounds", num(self.rounds as f64)),
+            ("warmup_rounds", num(self.warmup_rounds as f64)),
+            ("thread_spawns_total", num(self.thread_spawns_total as f64)),
+            ("steady_thread_spawns", num(self.steady_thread_spawns as f64)),
+            ("buffer_allocs_total", num(self.buffer_allocs_total as f64)),
+            ("steady_buffer_allocs", num(self.steady_buffer_allocs as f64)),
+            (
+                "buffer_alloc_bytes_total",
+                num(self.buffer_alloc_bytes_total as f64),
+            ),
+            (
+                "steady_buffer_alloc_bytes",
+                num(self.steady_buffer_alloc_bytes as f64),
+            ),
+            ("buffer_hits_total", num(self.buffer_hits_total as f64)),
+        ])
+    }
+}
+
 /// One evaluation point (cadence = config.eval_every epochs).
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
@@ -60,6 +114,10 @@ pub struct TrainLog {
     pub neighbor_bytes: Vec<u64>,
     /// total global steps of the run
     pub steps: usize,
+    /// tracked hot-path counters (spawns, pooled-buffer allocations);
+    /// reporting-only — excluded from [`TrainLog::digest`] so memory
+    /// behavior can never masquerade as an algorithmic observable
+    pub hot: HotPathCounters,
 }
 
 impl TrainLog {
@@ -137,6 +195,7 @@ impl TrainLog {
                 "neighbor_bytes",
                 arr(self.neighbor_bytes.iter().map(|&b| num(b as f64))),
             ),
+            ("hot_path", self.hot.to_json()),
         ])
     }
 
@@ -264,6 +323,7 @@ mod tests {
             total_idle_s: 1.0,
             bytes_sent: 1 << 20,
             steps: 32,
+            hot: HotPathCounters::default(),
         }
     }
 
@@ -303,6 +363,13 @@ mod tests {
         assert_eq!(a.digest(), d.digest(), "inert neighbor accounting must not drift");
         d.neighbor_bytes[2] = 1 << 10;
         assert_ne!(a.digest(), d.digest(), "digest must see neighbor bytes");
+        // Hot-path counters are reporting-only: memory behavior (spawns,
+        // pool misses) must never shift a digest.
+        let mut e = sample_log();
+        e.hot.thread_spawns_total = 17;
+        e.hot.buffer_allocs_total = 99;
+        e.hot.steady_buffer_allocs = 5;
+        assert_eq!(a.digest(), e.digest(), "hot counters must stay out of the digest");
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub fn mean(vs: &[&[f32]]) -> Vec<f32> {
 /// (accumulate `vs[0][i], vs[1][i], ...` then scale), so the result is
 /// **bit-identical** to [`mean_into`] — property-tested below. `out` is
 /// unconditionally overwritten.
+///
+/// This standalone form spawns fresh scoped threads per call; the training
+/// hot path uses the same chunked reduction served by the persistent
+/// worker pool instead (`executor::Executor::mean_into`, DESIGN.md §10),
+/// which is bit-identical to both.
 pub fn mean_into_parallel(vs: &[&[f32]], out: &mut [f32], threads: usize) {
     let m = vs.len();
     assert!(m > 0, "mean of zero vectors");

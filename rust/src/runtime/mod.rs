@@ -148,6 +148,44 @@ impl ModelRuntime {
         }
     }
 
+    /// One local SGD/Nesterov step **in place** with a caller-provided
+    /// gradient scratch buffer: `params`/`mom` are updated directly and the
+    /// mini-batch loss returned. Bit-identical to
+    /// [`ModelRuntime::train_step`] (the native kernels read each element
+    /// before writing it, in the same expression order); on the PJRT
+    /// backend the artifact outputs are copied back into the buffers. This
+    /// is the training hot path: zero allocations per step once `grad` is
+    /// sized (DESIGN.md §10).
+    pub fn train_step_inplace(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        mu: f32,
+        wd: f32,
+        grad: &mut Vec<f32>,
+    ) -> Result<f32> {
+        anyhow::ensure!(params.len() == self.n && mom.len() == self.n, "param len mismatch");
+        self.check_batch(images, labels, self.train_batch)?;
+        match &self.backend {
+            Backend::Native(m) => {
+                grad.resize(self.n, 0.0);
+                let loss = m.grad_step_into(params, images, labels, self.train_batch, grad);
+                m.sgd_update_inplace(params, mom, grad, lr, mu, wd);
+                Ok(loss)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => {
+                let (p, v, loss) = e.train_step(params, mom, images, labels, lr, mu, wd)?;
+                params.copy_from_slice(&p);
+                mom.copy_from_slice(&v);
+                Ok(loss)
+            }
+        }
+    }
+
     /// Loss + raw gradient (for sync-SGD gradient averaging and PowerSGD).
     pub fn grad_step(
         &self,
@@ -161,6 +199,32 @@ impl ModelRuntime {
             Backend::Native(m) => Ok(m.grad_step(params, images, labels, self.train_batch)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.grad_step(params, images, labels),
+        }
+    }
+
+    /// [`ModelRuntime::grad_step`] into a reusable scratch buffer (resized
+    /// to the parameter count; bit-identical contents).
+    pub fn grad_step_into(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        grad: &mut Vec<f32>,
+    ) -> Result<f32> {
+        anyhow::ensure!(params.len() == self.n, "param len mismatch");
+        self.check_batch(images, labels, self.train_batch)?;
+        match &self.backend {
+            Backend::Native(m) => {
+                grad.resize(self.n, 0.0);
+                Ok(m.grad_step_into(params, images, labels, self.train_batch, grad))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => {
+                let (loss, g) = e.grad_step(params, images, labels)?;
+                grad.clear();
+                grad.extend_from_slice(&g);
+                Ok(loss)
+            }
         }
     }
 
@@ -185,6 +249,25 @@ impl ModelRuntime {
         }
     }
 
+    /// Eq. (4) in place: `x ← x - alpha * (x - z)`. Bit-identical to
+    /// [`ModelRuntime::pullback`] (the native kernel *is* the same
+    /// elementwise loop); the PJRT artifact's output is copied back.
+    pub fn pullback_inplace(&self, x: &mut [f32], z: &[f32], alpha: f32) -> Result<()> {
+        anyhow::ensure!(x.len() == self.n && z.len() == self.n, "length mismatch");
+        match &self.backend {
+            Backend::Native(_) => {
+                crate::model::vecmath::pullback_inplace(x, z, alpha);
+                Ok(())
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => {
+                let out = e.pullback(x, z, alpha)?;
+                x.copy_from_slice(&out);
+                Ok(())
+            }
+        }
+    }
+
     /// Eqs. (10)-(11): returns `(z', v')`.
     pub fn anchor_update(
         &self,
@@ -201,6 +284,34 @@ impl ModelRuntime {
             Backend::Native(m) => Ok(m.anchor_update(z, v, avg, beta)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.anchor_update(z, v, avg, beta),
+        }
+    }
+
+    /// Eqs. (10)-(11) in place: `v ← beta·v + (avg - z); z ← z + v`.
+    /// Bit-identical to [`ModelRuntime::anchor_update`].
+    pub fn anchor_update_inplace(
+        &self,
+        z: &mut [f32],
+        v: &mut [f32],
+        avg: &[f32],
+        beta: f32,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            z.len() == self.n && v.len() == self.n && avg.len() == self.n,
+            "length mismatch"
+        );
+        match &self.backend {
+            Backend::Native(_) => {
+                crate::model::vecmath::anchor_update_inplace(z, v, avg, beta);
+                Ok(())
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => {
+                let (zn, vn) = e.anchor_update(z, v, avg, beta)?;
+                z.copy_from_slice(&zn);
+                v.copy_from_slice(&vn);
+                Ok(())
+            }
         }
     }
 
@@ -248,6 +359,41 @@ impl ModelRuntime {
             Backend::Native(m) => Ok(m.adam_update(params, m1, m2, grad, lr, t)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.adam_update(params, m1, m2, grad, lr, t),
+        }
+    }
+
+    /// Fused Adam step in place (paper §6 extension) — bit-identical to
+    /// [`ModelRuntime::adam_update`]; the hot-path form the Adam local
+    /// optimizer uses.
+    pub fn adam_update_inplace(
+        &self,
+        params: &mut [f32],
+        m1: &mut [f32],
+        m2: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        t: f32,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.n
+                && m1.len() == self.n
+                && m2.len() == self.n
+                && grad.len() == self.n,
+            "length mismatch"
+        );
+        match &self.backend {
+            Backend::Native(m) => {
+                m.adam_update_inplace(params, m1, m2, grad, lr, t);
+                Ok(())
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => {
+                let (p, mn, vn) = e.adam_update(params, m1, m2, grad, lr, t)?;
+                params.copy_from_slice(&p);
+                m1.copy_from_slice(&mn);
+                m2.copy_from_slice(&vn);
+                Ok(())
+            }
         }
     }
 
@@ -330,6 +476,49 @@ mod tests {
         assert_eq!(loss1, loss2);
         assert_eq!(p1, p2);
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn inplace_wrappers_match_allocating_wrappers_bitwise() {
+        let rt = ModelRuntime::native("linear").unwrap();
+        let params = crate::model::init_params(&rt.manifest, 5);
+        let mom = vec![0.01f32; rt.n];
+        let gen = crate::data::GenConfig::default();
+        let ds = crate::data::generate(6, 64, "train", &gen);
+        let images = ds.images[..rt.train_batch * PX].to_vec();
+        let labels = ds.labels[..rt.train_batch].to_vec();
+
+        let (p_a, m_a, loss_a) =
+            rt.train_step(&params, &mom, &images, &labels, 0.05, 0.9, 1e-4).unwrap();
+        let mut p_b = params.clone();
+        let mut m_b = mom.clone();
+        let mut scratch = Vec::new();
+        let loss_b = rt
+            .train_step_inplace(&mut p_b, &mut m_b, &images, &labels, 0.05, 0.9, 1e-4, &mut scratch)
+            .unwrap();
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+        assert_eq!(p_a, p_b);
+        assert_eq!(m_a, m_b);
+
+        let (loss_c, g_c) = rt.grad_step(&params, &images, &labels).unwrap();
+        let mut g_d = vec![f32::NAN; 3]; // wrong size + poisoned: must be fixed up
+        let loss_d = rt.grad_step_into(&params, &images, &labels, &mut g_d).unwrap();
+        assert_eq!(loss_c.to_bits(), loss_d.to_bits());
+        assert_eq!(g_c, g_d);
+
+        let z = params.clone();
+        let pulled = rt.pullback(&p_a, &z, 0.6).unwrap();
+        let mut x = p_a.clone();
+        rt.pullback_inplace(&mut x, &z, 0.6).unwrap();
+        assert_eq!(pulled, x);
+
+        let v0 = vec![0.02f32; rt.n];
+        let (z_a, v_a) = rt.anchor_update(&z, &v0, &p_a, 0.7).unwrap();
+        let mut z_b = z.clone();
+        let mut v_b = v0.clone();
+        rt.anchor_update_inplace(&mut z_b, &mut v_b, &p_a, 0.7).unwrap();
+        assert_eq!(z_a, z_b);
+        assert_eq!(v_a, v_b);
     }
 
     #[test]

