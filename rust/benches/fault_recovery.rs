@@ -1,0 +1,121 @@
+//! **E14 — crash recovery** (DESIGN.md §11, EXPERIMENTS.md E14): how much
+//! does a disappearing worker cost each schedule family?
+//!
+//! The paper's anchor model decouples local progress from synchronization,
+//! so Overlap-Local-SGD should shrug off crashes the way it shrugs off
+//! stragglers: survivors keep training, the collective averages over the
+//! alive set (exactly mean-preserving — rust/tests/failure_injection.rs),
+//! and a rejoiner warm-starts from the anchor. Legs:
+//!
+//! * **scheduled faults** — clean run vs crash-only vs crash+rejoin vs
+//!   partition+heal, on overlap-m; plus a partition leg on overlap-gossip,
+//!   whose minority components *keep training* (no quorum needed);
+//! * **final-loss-vs-crash-rate table** — the seeded random fault process
+//!   (`fault_rate`, with `rejoin_rate = 0.25`) swept over per-round
+//!   per-worker crash probabilities.
+//!
+//! Every leg's JSON (including its `fault_trace` — the artifact CI's
+//! fault-matrix job uploads) lands in `results/fault_recovery/`.
+
+use anyhow::Result;
+use olsgd::bench::experiments::BenchCtx;
+use olsgd::config::Algo;
+use olsgd::metrics::TrainLog;
+use olsgd::util::json::{num, obj, s, Json};
+
+fn leg_row(label: &str, log: &TrainLog) -> Json {
+    obj(vec![
+        ("label", s(label)),
+        ("algo", s(&log.algo)),
+        ("final_acc", num(log.final_acc())),
+        ("final_test_loss", num(log.final_loss())),
+        ("total_time_s", num(log.total_sim_time)),
+        ("faults_fired", num(log.fault_trace.len() as f64)),
+        (
+            "min_survivors",
+            num(log
+                .survivors
+                .iter()
+                .map(|&(_, c)| c)
+                .min()
+                .unwrap_or(log.workers) as f64),
+        ),
+    ])
+}
+
+fn print_leg(label: &str, log: &TrainLog) {
+    println!(
+        "{:<34} {:>8.2} {:>11.4} {:>10.1} {:>8} {:>10}",
+        label,
+        100.0 * log.final_acc(),
+        log.final_loss(),
+        log.total_sim_time,
+        log.fault_trace.len(),
+        log.survivors
+            .iter()
+            .map(|&(_, c)| c)
+            .min()
+            .unwrap_or(log.workers)
+    );
+}
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("fault_recovery")?;
+    ctx.base.workers = 8;
+    let mut rows = Vec::new();
+
+    println!("=== E14: crash recovery (m=8, scheduled faults) ===");
+    println!(
+        "{:<34} {:>8} {:>11} {:>10} {:>8} {:>10}",
+        "leg", "acc%", "test_loss", "time(s)", "faults", "min_surv"
+    );
+
+    // Scheduled-fault legs. Events sit at rounds 3/5 so they fire even
+    // under an OLSGD_EPOCHS-shortened smoke run.
+    let legs: [(&str, Algo, &str); 5] = [
+        ("overlap-m clean", Algo::OverlapM, ""),
+        ("overlap-m crash (no rejoin)", Algo::OverlapM, "crash@3:1"),
+        ("overlap-m crash+rejoin", Algo::OverlapM, "crash@3:1;rejoin@5:1"),
+        (
+            "overlap-m partition+heal",
+            Algo::OverlapM,
+            "partition@3:0,1,2|3,4,5,6,7;heal@5",
+        ),
+        (
+            "overlap-gossip partition",
+            Algo::OverlapGossip,
+            "partition@3:0,1,2|3,4,5,6,7",
+        ),
+    ];
+    for (label, algo, fault) in legs {
+        let log = ctx.run_leg(&label.replace([' ', '(', ')', '+'], "_"), |c| {
+            c.algo = algo;
+            if !fault.is_empty() {
+                c.set("fault", fault).expect("static fault spec");
+            }
+        })?;
+        print_leg(label, &log);
+        rows.push(leg_row(label, &log));
+    }
+
+    // Final-loss-vs-crash-rate table (the E14 record): the seeded random
+    // process, crash probability per worker per round.
+    println!("\n=== E14: final loss vs crash rate (overlap-m, rejoin_rate=0.25) ===");
+    println!(
+        "{:<34} {:>8} {:>11} {:>10} {:>8} {:>10}",
+        "leg", "acc%", "test_loss", "time(s)", "faults", "min_surv"
+    );
+    for rate in [0.0f64, 0.02, 0.05, 0.10] {
+        let label = format!("overlap-m fault_rate={rate}");
+        let log = ctx.run_leg(&label.replace([' ', '=', '.'], "_"), |c| {
+            c.algo = Algo::OverlapM;
+            c.fault_rate = rate;
+            c.rejoin_rate = if rate > 0.0 { 0.25 } else { 0.0 };
+        })?;
+        print_leg(&label, &log);
+        rows.push(leg_row(&label, &log));
+    }
+
+    ctx.write_summary("E14_fault_recovery.json", rows)?;
+    Ok(())
+}

@@ -97,6 +97,18 @@ impl Clocks {
         }
     }
 
+    /// Block `w` until absolute time `t` (no-op if already past), counted as
+    /// idle. Used for crash downtime: a dead worker's clock freezes, and on
+    /// rejoin it jumps to the cluster's current time with the gap charged
+    /// here (DESIGN.md §11).
+    pub fn wait_idle_until(&mut self, w: usize, t: f64) {
+        let c = &mut self.workers[w];
+        if t > c.now {
+            c.idle_s += t - c.now;
+            c.now = t;
+        }
+    }
+
     /// Synchronize all workers to the max time; the gap is idle (waiting for
     /// stragglers). Returns the barrier time.
     pub fn barrier(&mut self) -> f64 {
@@ -106,6 +118,19 @@ impl Clocks {
                 c.idle_s += t - c.now;
                 c.now = t;
             }
+        }
+        t
+    }
+
+    /// [`Clocks::barrier`] over a subset of workers (the alive-set barrier
+    /// of the blocking strategies under faults): synchronizes exactly the
+    /// listed workers to their common max time, leaving everyone else —
+    /// crashed or partitioned-away — untouched. With the full worker list
+    /// this is bit-identical to [`Clocks::barrier`].
+    pub fn barrier_among(&mut self, workers: &[usize]) -> f64 {
+        let t = workers.iter().map(|&w| self.workers[w].now).fold(0.0, f64::max);
+        for &w in workers {
+            self.wait_idle_until(w, t);
         }
         t
     }
@@ -178,6 +203,28 @@ mod tests {
         c.wait_comm_until(0, 7.5);
         assert_eq!(c.now(0), 7.5);
         assert_eq!(c.worker(0).comm_blocked_s, 2.5);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn barrier_among_leaves_outsiders_frozen() {
+        let mut c = Clocks::new(4);
+        c.compute(0, 1.0);
+        c.compute(1, 3.0);
+        c.compute(2, 2.0);
+        c.compute(3, 9.0); // crashed-ahead worker: not in the barrier
+        let t = c.barrier_among(&[0, 1, 2]);
+        assert_eq!(t, 3.0);
+        assert_eq!(c.now(0), 3.0);
+        assert_eq!(c.worker(0).idle_s, 2.0);
+        assert_eq!(c.now(3), 9.0, "outsiders must be untouched");
+        assert_eq!(c.worker(3).idle_s, 0.0);
+        // Downtime accounting: idle jump + no-op when already past.
+        c.wait_idle_until(0, 5.0);
+        assert_eq!(c.now(0), 5.0);
+        assert_eq!(c.worker(0).idle_s, 4.0);
+        c.wait_idle_until(3, 5.0);
+        assert_eq!(c.now(3), 9.0);
         c.check_invariants();
     }
 

@@ -30,6 +30,7 @@
 
 use crate::clock::Clocks;
 use crate::executor::{Executor, ReduceHandle};
+use crate::fault::AliveSet;
 use crate::simnet::NetworkModel;
 use crate::topology::Topology;
 use crate::util::pool::BufferPool;
@@ -47,6 +48,11 @@ pub struct ReduceScratch {
     pub(crate) root: Vec<f32>,
     /// the hierarchy's size-scaled leader buffers
     pub(crate) leaders: Vec<Vec<f32>>,
+    /// swap slots the alive-masked in-place reduces compact survivor
+    /// buffers into (DESIGN.md §11; pointer swaps, never copies)
+    pub(crate) active: Vec<Vec<f32>>,
+    /// survivor subgroup bounds of the masked hierarchical schedule
+    pub(crate) bounds: Vec<(usize, usize)>,
 }
 
 /// In-place chunked ring all-reduce (mean) across `m` equal-length buffers.
@@ -245,6 +251,22 @@ impl PendingCollective {
         h.absorb(clocks);
         h.result
     }
+
+    /// [`PendingCollective::absorb`] under faults: only the alive set's
+    /// *stepping* workers wait for the result — a crashed worker's clock
+    /// stays frozen, a partitioned-away worker never hears about the
+    /// quorum's collective. Identical to `absorb` when the alive set is
+    /// full.
+    pub fn absorb_masked(self, clocks: &mut Clocks, alive: &AliveSet) -> Vec<f32> {
+        let h = self.wait();
+        let t = h.ready_at();
+        for w in 0..clocks.len() {
+            if alive.steps(w) {
+                clocks.wait_comm_until(w, t);
+            }
+        }
+        h.result
+    }
 }
 
 /// Launch a non-blocking exact collective through the execution backend:
@@ -270,6 +292,40 @@ pub fn launch_collective(
     let topo = topo.clone();
     let handle = exec.start_reduce(move |scratch| {
         topo.allreduce_mean_with(&mut buffers, scratch);
+        buffers
+    });
+    PendingCollective { handle, pool, start_time, duration }
+}
+
+/// [`launch_collective`] under faults (DESIGN.md §11): only the alive
+/// set's *members* — the quorum side's survivors — contribute. Their
+/// inputs are snapshotted into a compact pooled buffer set, the data plane
+/// runs the topology's real schedule over the survivor sub-graph
+/// (`Topology::allreduce_mean_compact`), and the timing plane charges the
+/// survivor-shaped cost (`Topology::collective_time_alive`). Every compact
+/// buffer holds the exact survivor mean on completion. Delegates to
+/// [`launch_collective`] — bit-identically — when the alive set is full.
+pub fn launch_collective_among(
+    exec: &Executor,
+    topo: &Topology,
+    inputs: &[&[f32]],
+    alive: &AliveSet,
+    net: &NetworkModel,
+    message_bytes: usize,
+    start_time: f64,
+) -> PendingCollective {
+    assert_eq!(inputs.len(), topo.m, "participant count != topology size");
+    if alive.is_full() {
+        return launch_collective(exec, topo, inputs, net, message_bytes, start_time);
+    }
+    let duration = topo.collective_time_alive(net, message_bytes, alive);
+    let pool = exec.buffers().clone();
+    let member_refs: Vec<&[f32]> = alive.members().iter().map(|&w| inputs[w]).collect();
+    let mut buffers = pool.take_set_copy(&member_refs);
+    let members: Vec<usize> = alive.members().to_vec();
+    let topo = topo.clone();
+    let handle = exec.start_reduce(move |scratch| {
+        topo.allreduce_mean_compact(&mut buffers, &members, scratch);
         buffers
     });
     PendingCollective { handle, pool, start_time, duration }

@@ -10,6 +10,7 @@ pub mod toml;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fault::FaultPlan;
 use crate::simnet::{ClusterModel, ComputeModel, NetworkModel, StragglerModel};
 use crate::topology::{Topology, TopologyKind};
 
@@ -203,6 +204,19 @@ pub struct ExperimentConfig {
     pub hier_groups: usize,
     /// per-worker compute-time variability model
     pub straggler: StragglerModel,
+    /// explicit fault schedule (DESIGN.md §11): `;`-separated
+    /// `crash@round:worker` / `rejoin@round:worker` /
+    /// `partition@round:set|set` / `heal@round` events (the `fault` key
+    /// *appends*, so repeated `--fault` flags accumulate; `fault=none`
+    /// clears). Empty by default — and bit-inert when empty.
+    pub fault: FaultPlan,
+    /// random fault process: per-worker per-round crash probability
+    /// (0 disables; drawn from the seeded `"fault"` RNG stream)
+    pub fault_rate: f64,
+    /// random fault process: per-worker per-round rejoin probability for
+    /// downed workers (0 = crashed workers stay down unless an explicit
+    /// `rejoin@` event revives them)
+    pub rejoin_rate: f64,
     /// seconds per local mini-batch step on an unperturbed node
     pub base_step_s: f64,
     /// None -> paper ResNet-18 message size (44.7 MB); Some(0) -> actual
@@ -250,6 +264,9 @@ impl Default for ExperimentConfig {
             gossip_degree: 4,
             hier_groups: 4,
             straggler: StragglerModel::None,
+            fault: FaultPlan::default(),
+            fault_rate: 0.0,
+            rejoin_rate: 0.0,
             base_step_s: 0.188,
             message_bytes: None,
             artifacts_dir: "artifacts".into(),
@@ -328,6 +345,17 @@ impl ExperimentConfig {
                     },
                     other => bail!("unknown straggler model '{other}'"),
                 };
+            }
+            "fault" | "faults" => self.fault.push(v)?,
+            "fault_rate" => {
+                let r = parse_f64()?;
+                anyhow::ensure!((0.0..1.0).contains(&r), "fault_rate must be in [0, 1)");
+                self.fault_rate = r;
+            }
+            "rejoin_rate" => {
+                let r = parse_f64()?;
+                anyhow::ensure!((0.0..1.0).contains(&r), "rejoin_rate must be in [0, 1)");
+                self.rejoin_rate = r;
             }
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "out_dir" => self.out_dir = v.to_string(),
@@ -525,6 +553,31 @@ mod tests {
         for e in [Execution::Sim, Execution::Threads] {
             assert_eq!(Execution::parse(e.name()).unwrap(), e);
         }
+    }
+
+    #[test]
+    fn fault_keys_parse_append_and_validate() {
+        use crate::fault::FaultEvent;
+        let mut c = ExperimentConfig::default();
+        assert!(c.fault.is_empty());
+        assert_eq!(c.fault_rate, 0.0);
+        assert_eq!(c.rejoin_rate, 0.0);
+        // The `fault` key appends, so repeated --fault flags accumulate.
+        c.set("fault", "crash@3:2").unwrap();
+        c.set("fault", "rejoin@6:2;partition@8:0,1|2,3").unwrap();
+        assert_eq!(c.fault.events.len(), 3);
+        assert_eq!(c.fault.events[0], FaultEvent::Crash { round: 3, worker: 2 });
+        c.set("fault", "none").unwrap();
+        assert!(c.fault.is_empty());
+        c.set("fault_rate", "0.05").unwrap();
+        c.set("rejoin_rate", "0.5").unwrap();
+        assert!((c.fault_rate - 0.05).abs() < 1e-12);
+        assert!((c.rejoin_rate - 0.5).abs() < 1e-12);
+        // Garbage and out-of-range values are loud errors.
+        assert!(c.set("fault", "crash@x:1").is_err());
+        assert!(c.set("fault_rate", "1.5").is_err());
+        assert!(c.set("rejoin_rate", "-0.1").is_err());
+        assert!(c.set("fault_rate", "often").is_err());
     }
 
     #[test]

@@ -20,8 +20,8 @@
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::{account_collective, TrainContext};
-use crate::collective::{launch_collective, PendingCollective};
+use super::{account_collective_among, TrainContext};
+use crate::collective::{launch_collective_among, PendingCollective};
 
 /// Delta-on-stale-average mixing with a non-blocking collective.
 #[derive(Default)]
@@ -50,15 +50,24 @@ impl MixingStrategy for CocodStrategy {
         // on the threads backend, where the parked communicator thread
         // reduces (over a pooled snapshot) while the worker threads take
         // their τ local steps. `clone_from` reuses the delta snapshots'
-        // capacity, so this hook allocates nothing once warm.
-        let start = eng.clocks.max_now();
-        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
+        // capacity, so this hook allocates nothing once warm. Fault events
+        // fire before this hook, so the alive set is constant between the
+        // launch here and the absorb at this round's boundary (and a
+        // frozen clock never sets the start time — `Engine::launch_clock`).
+        let start = eng.launch_clock();
+        account_collective_among(
+            &mut eng.rec,
+            &ctx.cluster.topology,
+            ctx.cluster.message_bytes,
+            &eng.fault.alive,
+        );
         self.snapshots.clone_from(&eng.workers.params);
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
-        self.pending = Some(launch_collective(
+        self.pending = Some(launch_collective_among(
             &eng.exec,
             &ctx.cluster.topology,
             &refs,
+            &eng.fault.alive,
             &ctx.cluster.net,
             ctx.cluster.message_bytes,
             start,
@@ -67,10 +76,14 @@ impl MixingStrategy for CocodStrategy {
     }
 
     fn mix(&mut self, eng: &mut Engine, _ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
-        // Absorb: x_i = avg(boundary models) + (x_i - snapshot_i).
+        // Absorb: x_i = avg(boundary models) + (x_i - snapshot_i), on the
+        // stepping workers (the survivor average under faults).
         let h = self.pending.take().expect("cocod launch precedes absorb");
-        let avg = h.absorb(&mut eng.clocks);
+        let avg = h.absorb_masked(&mut eng.clocks, &eng.fault.alive);
         for w in 0..eng.workers.m {
+            if !eng.fault.alive.steps(w) {
+                continue; // parked: frozen replica
+            }
             let p = &mut eng.workers.params[w];
             let snap = &self.snapshots[w];
             for (i, pi) in p.iter_mut().enumerate() {

@@ -22,7 +22,7 @@
 use anyhow::Result;
 
 use super::engine::{self, plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::{account_collective, TrainContext};
+use super::{account_collective_among, charge_blocking_exchange, TrainContext};
 use crate::metrics::TrainLog;
 use crate::model::vecmath;
 
@@ -53,30 +53,56 @@ impl MixingStrategy for ElasticStrategy {
         plan_tau(eng, ctx, ctx.cfg.tau)
     }
 
+    fn on_rejoin(
+        &mut self,
+        eng: &mut Engine,
+        _ctx: &TrainContext,
+        w: usize,
+        _src: usize,
+    ) -> Result<()> {
+        // The elastic family's center variable z is its anchor: the state
+        // every replica is being pulled toward — the natural warm start.
+        eng.workers.warm_start(w, &self.z);
+        Ok(())
+    }
+
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
         let alpha = ctx.cfg.alpha;
-        // Blocking elastic exchange.
-        eng.clocks.barrier();
-        for w in 0..m {
-            eng.clocks.comm_blocked(w, self.comm_t);
-        }
-        // Center average into a pooled buffer, through the executor's mean
-        // (serial on sim; chunked over the parked pool threads on the
-        // threads backend — bit-identical either way, so the digest cannot
-        // see the backend).
+        // Blocking elastic exchange (over the alive members under faults —
+        // parked workers neither barrier nor feed the center).
+        charge_blocking_exchange(eng, ctx, self.comm_t);
+        // Center average (over the members) into a pooled buffer, through
+        // the executor's mean (serial on sim; chunked over the parked pool
+        // threads on the threads backend — bit-identical either way, so
+        // the digest cannot see the backend). With a full alive set the
+        // member list is every worker, so this is the legacy average.
         let mut avg = eng.exec.buffers().take_for_overwrite(ctx.rt.n);
         {
-            let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
+            let refs: Vec<&[f32]> = eng
+                .fault
+                .alive
+                .members()
+                .iter()
+                .map(|&w| eng.workers.params[w].as_slice())
+                .collect();
             eng.exec.mean_into(&refs, &mut avg);
         }
         // Simultaneous symmetric update (pre-update values on both sides).
         for w in 0..m {
+            if !eng.fault.alive.steps(w) {
+                continue; // parked: frozen replica
+            }
             vecmath::pullback_inplace(&mut eng.workers.params[w], &self.z, alpha);
         }
         vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut self.z);
         eng.exec.buffers().put(avg);
-        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
+        account_collective_among(
+            &mut eng.rec,
+            &ctx.cluster.topology,
+            ctx.cluster.message_bytes,
+            &eng.fault.alive,
+        );
         Ok(())
     }
 }

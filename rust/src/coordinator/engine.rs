@@ -36,6 +36,7 @@ use anyhow::{ensure, Result};
 use super::{Recorder, TrainContext, Workers};
 use crate::clock::Clocks;
 use crate::executor::{ExecSnapshot, Executor};
+use crate::fault::FaultState;
 use crate::metrics::{HotPathCounters, TrainLog};
 
 /// Virtual cost of one fused elementwise pass over the paper-size model
@@ -110,6 +111,14 @@ pub struct Engine {
     /// / `Executor::start_reduce`) and recycle absorbed result buffers into
     /// `exec.buffers()`.
     pub exec: Executor,
+    /// Fault-injection replay state (DESIGN.md §11): the configured
+    /// crash/rejoin/partition schedule plus the cluster's current
+    /// [`crate::fault::AliveSet`]. The engine applies due events at every
+    /// round boundary ([`run`]); strategies consult `fault.alive` for their
+    /// masked collective/pullback paths. With no faults configured every
+    /// consumer takes its pre-fault branch, so the empty-schedule digests
+    /// are bit-identical to the pre-fault engine.
+    pub fault: FaultState,
 }
 
 impl Engine {
@@ -127,12 +136,33 @@ impl Engine {
             round: 0,
             steps_done: vec![0; m],
             exec: Executor::new(ctx.cfg.execution, m),
+            fault: FaultState::new(
+                &ctx.cfg.fault,
+                ctx.cfg.fault_rate,
+                ctx.cfg.rejoin_rate,
+                ctx.cfg.seed,
+                m,
+            ),
         }
     }
 
     /// Steps remaining on the nominal schedule.
     pub fn remaining(&self) -> usize {
         self.total - self.k
+    }
+
+    /// Virtual time the next collective effectively starts: the latest
+    /// clock among this round's *stepping* workers — a crashed or parked
+    /// worker's frozen clock never gates a launch (DESIGN.md §11). Equals
+    /// `clocks.max_now()` bit-for-bit when the alive set is full.
+    pub fn launch_clock(&self) -> f64 {
+        (0..self.workers.m).fold(0.0f64, |t, w| {
+            if self.fault.alive.steps(w) {
+                t.max(self.clocks.now(w))
+            } else {
+                t
+            }
+        })
     }
 }
 
@@ -154,6 +184,31 @@ pub trait MixingStrategy {
 
     /// Hook before the local phase (CoCoD launches its collective here).
     fn before_local(&mut self, _eng: &mut Engine, _ctx: &TrainContext) -> Result<()> {
+        Ok(())
+    }
+
+    /// Whether this strategy keeps *every* alive worker training through a
+    /// network partition (the decentralized gossip family) instead of
+    /// parking the non-quorum components like the exact-collective
+    /// strategies do — see [`crate::fault::AliveSet`] (DESIGN.md §11).
+    fn decentralized(&self) -> bool {
+        false
+    }
+
+    /// Re-seed worker `w`'s training state when it rejoins after a crash
+    /// (or returns from a healed partition). `src` is a boundary-accurate
+    /// live replica chosen by the engine; the default copies its full
+    /// replica state. Anchor-bearing strategies override this with the
+    /// paper's warm start — params ← the current anchor, the exact state
+    /// every survivor is being pulled toward.
+    fn on_rejoin(
+        &mut self,
+        eng: &mut Engine,
+        _ctx: &TrainContext,
+        w: usize,
+        src: usize,
+    ) -> Result<()> {
+        eng.workers.reseed_from(w, src);
         Ok(())
     }
 
@@ -210,13 +265,21 @@ pub fn plan_tau(eng: &Engine, ctx: &TrainContext, tau: usize) -> RoundPlan {
 /// ran sequentially or on one OS thread per worker (golden tests).
 pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<TrainLog> {
     let mut eng = Engine::new(ctx);
+    eng.fault.set_decentralized(strategy.decentralized());
+    eng.fault.validate()?;
     strategy.on_run_start(&mut eng, ctx)?;
     // Tracked-counter snapshot at the warm-up boundary: everything after
     // it is the steady-state window that must stay at zero spawns/allocs.
     let mut warm: Option<ExecSnapshot> = None;
     while eng.k < eng.total {
+        // Fault events fire at the round boundary, before anything of the
+        // round runs (DESIGN.md §11): crashes park workers, rejoins
+        // warm-start them from the strategy's anchor, partitions re-shape
+        // the alive set. All of it happens on the coordinator thread, so
+        // the replay is bit-deterministic on either execution backend.
+        apply_round_faults(&mut eng, ctx, strategy)?;
         strategy.before_local(&mut eng, ctx)?;
-        let plan = strategy.plan(&eng, ctx);
+        let mut plan = strategy.plan(&eng, ctx);
         // Plan validation is a *hard* error in every profile: a ragged or
         // over-advancing plan silently corrupts the schedule (and in release
         // builds a debug_assert would wave it through) — see
@@ -227,15 +290,27 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
             plan.steps.len(),
             eng.workers.m
         );
+        // Fault mask: parked workers (crashed, or outside the quorum
+        // component for exact-collective strategies) take zero local steps
+        // this round — the executor skips them entirely, so they consume
+        // no batches and no RNG draws and resume their own streams exactly
+        // where they left off on rejoin.
+        if !eng.fault.alive.is_full() {
+            for w in 0..eng.workers.m {
+                if !eng.fault.alive.steps(w) {
+                    plan.steps[w] = 0;
+                }
+            }
+        }
         ensure!(
             plan.advance >= 1 && plan.advance <= eng.remaining(),
             "malformed RoundPlan: advance {} outside [1, {}]",
             plan.advance,
             eng.remaining()
         );
-        if let Some(w) =
-            (0..eng.workers.m).find(|&w| plan.steps[w] < 1 || plan.steps[w] > plan.advance)
-        {
+        if let Some(w) = (0..eng.workers.m).find(|&w| {
+            eng.fault.alive.steps(w) && (plan.steps[w] < 1 || plan.steps[w] > plan.advance)
+        }) {
             anyhow::bail!(
                 "malformed RoundPlan: worker {w} assigned {} steps outside [1, {}]",
                 plan.steps[w],
@@ -284,7 +359,7 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
         let outcome = RoundOutcome { start_step, steps: plan.steps, grads, mean_loss };
         strategy.mix(&mut eng, ctx, outcome)?;
         eng.rec.push_loss(eng.k - 1, mean_loss);
-        eng.rec.maybe_eval(eng.k, ctx, &eng.workers, &eng.clocks)?;
+        eng.rec.maybe_eval_masked(eng.k, ctx, &eng.workers, &eng.clocks, &eng.fault.alive)?;
     }
     let end = eng.exec.snapshot();
     // Short runs (fewer rounds than the warm-up) have an empty steady
@@ -301,6 +376,44 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
         steady_buffer_alloc_bytes: end.buffer_alloc_bytes - warm.buffer_alloc_bytes,
         buffer_hits_total: end.buffer_hits,
     });
-    eng.rec.force_eval(eng.total, ctx, &eng.workers, &eng.clocks)?;
+    eng.rec.force_eval_masked(eng.total, ctx, &eng.workers, &eng.clocks, &eng.fault.alive)?;
     Ok(eng.rec.finish(ctx, &eng.clocks, eng.total))
+}
+
+/// Apply every fault due at the upcoming round boundary (no-op unless a
+/// fault source is configured): flip the alive set, record the trace and
+/// survivor series, and bring rejoining workers back — their clock jumps
+/// to the cluster's current time (downtime charged as idle), they pay one
+/// full-message anchor fetch on the wire (`NetworkModel::rejoin_fetch_time`),
+/// and the strategy warm-starts their replica (`MixingStrategy::on_rejoin`).
+fn apply_round_faults(
+    eng: &mut Engine,
+    ctx: &TrainContext,
+    strategy: &mut dyn MixingStrategy,
+) -> Result<()> {
+    if !eng.fault.engaged() {
+        return Ok(());
+    }
+    let round = eng.round + 1; // 1-based index of the round about to run
+    let rf = eng.fault.begin_round(round)?;
+    for ev in &rf.applied {
+        eng.rec.note_fault(round, ev.describe());
+    }
+    if !rf.joined.is_empty() {
+        // The cluster time a rejoiner syncs to: the latest clock among the
+        // workers stepping this round (`Engine::launch_clock` — the
+        // joiner's own frozen clock is at or behind it, so including the
+        // joiner in the fold is harmless).
+        let t = eng.launch_clock();
+        let fetch = ctx.cluster.net.rejoin_fetch_time(ctx.cluster.message_bytes);
+        for &w in &rf.joined {
+            eng.clocks.wait_idle_until(w, t);
+            eng.clocks.comm_blocked(w, fetch);
+            strategy.on_rejoin(eng, ctx, w, rf.src)?;
+        }
+    }
+    if rf.changed {
+        eng.rec.note_survivors(round, eng.fault.alive.stepping_count());
+    }
+    Ok(())
 }

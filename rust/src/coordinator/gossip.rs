@@ -33,9 +33,10 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
-use super::{account_collective, TrainContext};
+use super::{account_collective_among, copy_row, TrainContext};
 use crate::config::Algo;
 use crate::executor::ReduceHandle;
+use crate::fault::AliveSet;
 use crate::topology::{Topology, TopologyKind};
 
 /// An in-flight gossip exchange: the per-worker de-biased mixes (possibly
@@ -44,6 +45,11 @@ use crate::topology::{Topology, TopologyKind};
 struct PendingGossip {
     mixed: ReduceHandle,
     ready: Vec<f64>,
+    /// which output rows carry a de-biased mix (the workers alive at
+    /// launch); `None` on the fault-free fast path, where every row is
+    /// valid. A worker that rejoined after the launch has an all-zero row
+    /// here — its warm-started anchor must not be clobbered by it.
+    valid: Option<Vec<bool>>,
 }
 
 /// Pullback-to-neighbor-averaged-anchor mixing on the gossip graph. The
@@ -90,24 +96,82 @@ impl MixingStrategy for GossipStrategy {
         plan_tau(eng, ctx, ctx.cfg.tau)
     }
 
+    fn decentralized(&self) -> bool {
+        // No quorum, no rendezvous: under a partition every component
+        // keeps mixing on its own sub-graph, so every alive worker keeps
+        // stepping (DESIGN.md §11) — the decentralized advantage E14
+        // measures against the quorum-parked exact collectives.
+        true
+    }
+
+    fn on_rejoin(
+        &mut self,
+        eng: &mut Engine,
+        _ctx: &TrainContext,
+        w: usize,
+        _src: usize,
+    ) -> Result<()> {
+        // Warm-start from the nearest *reachable* live anchor: an allowed
+        // graph neighbor's z when one exists (the node it will gossip with
+        // first), else any live worker in the same partition component.
+        // State never crosses an active partition — if no live peer is
+        // reachable at all, the rejoiner restarts from its own frozen
+        // anchor (the only state it could actually hold).
+        let donor = self
+            .topo
+            .neighbors(w)
+            .iter()
+            .copied()
+            .find(|&j| eng.fault.alive.edge_allowed(w, j))
+            .or_else(|| (0..eng.workers.m).find(|&j| j != w && eng.fault.alive.edge_allowed(w, j)))
+            .unwrap_or(w);
+        copy_row(&mut self.z, donor, w); // no-op when the rejoiner is its own donor
+        eng.workers.warm_start(w, &self.z[w]);
+        Ok(())
+    }
+
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
 
         // --- absorb the previous boundary's exchange, per neighborhood ----
         if let Some(p) = self.pending.take() {
             for w in 0..m {
-                eng.clocks.wait_comm_until(w, p.ready[w]);
+                if eng.fault.alive.steps(w) {
+                    eng.clocks.wait_comm_until(w, p.ready[w]);
+                }
             }
             // Join the communicator thread (threads backend) / take the
             // eager result (sim) — bit-identical either way. The displaced
             // anchors return to the buffer pool, balancing the buffers the
             // next launch takes out (zero steady-state allocations).
-            let old = std::mem::replace(&mut self.z, p.mixed.wait());
-            eng.exec.buffers().put_set(old);
+            let PendingGossip { mixed, ready: _, valid } = p;
+            let mut new_z = mixed.wait();
+            match valid {
+                None => {
+                    // Fault-free fast path: every row is a fresh anchor.
+                    let old = std::mem::replace(&mut self.z, new_z);
+                    eng.exec.buffers().put_set(old);
+                }
+                Some(valid) => {
+                    // Dead workers received nothing (their push-sum weight
+                    // is exactly 0): keep their frozen anchors. A worker
+                    // that rejoined after the launch keeps its warm-started
+                    // anchor (its row is all-zero, `valid[w] == false`).
+                    for w in 0..m {
+                        if valid[w] && eng.fault.alive.steps(w) {
+                            std::mem::swap(&mut self.z[w], &mut new_z[w]);
+                        }
+                    }
+                    eng.exec.buffers().put_set(new_z);
+                }
+            }
         }
 
         // --- pullback toward the per-worker anchor (Eq. 4) ----------------
         for w in 0..m {
+            if !eng.fault.alive.steps(w) {
+                continue; // crashed: frozen replica, frozen clock
+            }
             ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z[w], ctx.cfg.alpha)?;
             eng.clocks.compute(w, PULLBACK_S);
         }
@@ -121,7 +185,11 @@ impl MixingStrategy for GossipStrategy {
         // computes the job eagerly at launch (the seed's sequence point),
         // the threads backend runs it on the parked communicator thread
         // under the next round's local compute — same inputs, same code,
-        // bit-identical output.
+        // bit-identical output. Under faults the mix runs over the alive
+        // edges only (`Topology::gossip_mix_alive_into`): dead workers
+        // neither send nor receive, partitions localize the exchange to
+        // each component, and the push-sum weights keep every component's
+        // survivor mean exact.
         let pool = eng.exec.buffers().clone();
         let snapshot = {
             let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
@@ -130,34 +198,70 @@ impl MixingStrategy for GossipStrategy {
         let mut out = pool.take_set_zeroed(m, ctx.rt.n);
         let topo = Arc::clone(&self.topo);
         let ones = Arc::clone(&self.ones);
+        let alive_snap: Option<Arc<AliveSet>> = if eng.fault.alive.is_full() {
+            None
+        } else {
+            Some(Arc::new(eng.fault.alive.clone()))
+        };
+        let alive_job = alive_snap.clone();
         let mixed = eng.exec.start_reduce(move |_scratch| {
             let mut w_out = vec![0.0f64; ones.len()];
-            topo.gossip_mix_into(&snapshot, &ones, &mut out, &mut w_out);
-            // De-bias in place: estimate = value / weight.
+            match &alive_job {
+                Some(alive) => {
+                    topo.gossip_mix_alive_into(&snapshot, &ones, alive, &mut out, &mut w_out)
+                }
+                None => topo.gossip_mix_into(&snapshot, &ones, &mut out, &mut w_out),
+            }
+            // De-bias in place: estimate = value / weight. Rows with zero
+            // weight (dead workers) stay zeroed; the absorb skips them.
             for (v, &wt) in out.iter_mut().zip(w_out.iter()) {
-                let inv = (1.0 / wt) as f32;
-                for x in v.iter_mut() {
-                    *x *= inv;
+                if wt > 0.0 {
+                    let inv = (1.0 / wt) as f32;
+                    for x in v.iter_mut() {
+                        *x *= inv;
+                    }
                 }
             }
             pool.put_set(snapshot);
             out
         });
-        // Timing plane: worker i's exchange completes once its whole
-        // neighborhood has joined and `degree` neighbor messages have moved
-        // — no global handshake, no cluster-wide rendezvous.
+        // Timing plane: worker i's exchange completes once its whole (live)
+        // neighborhood has joined and its live-degree's worth of neighbor
+        // messages have moved — no global handshake, no cluster-wide
+        // rendezvous. Dead workers exchange nothing.
         let g_t = ctx.cluster.net.gossip_time(ctx.cluster.message_bytes, self.topo.degree());
         let ready = (0..m)
             .map(|i| {
-                let mut t = eng.clocks.now(i);
-                for &j in self.topo.neighbors(i) {
-                    t = t.max(eng.clocks.now(j));
+                if let Some(alive) = &alive_snap {
+                    if !alive.steps(i) {
+                        return eng.clocks.now(i);
+                    }
+                    let mut t = eng.clocks.now(i);
+                    let mut live_degree = 0usize;
+                    for &j in self.topo.neighbors(i) {
+                        if alive.edge_allowed(i, j) {
+                            live_degree += 1;
+                            t = t.max(eng.clocks.now(j));
+                        }
+                    }
+                    t + ctx.cluster.net.gossip_time(ctx.cluster.message_bytes, live_degree)
+                } else {
+                    let mut t = eng.clocks.now(i);
+                    for &j in self.topo.neighbors(i) {
+                        t = t.max(eng.clocks.now(j));
+                    }
+                    t + g_t
                 }
-                t + g_t
             })
             .collect();
-        self.pending = Some(PendingGossip { mixed, ready });
-        account_collective(&mut eng.rec, &self.topo, ctx.cluster.message_bytes);
+        let valid = alive_snap.map(|alive| (0..m).map(|w| alive.steps(w)).collect());
+        self.pending = Some(PendingGossip { mixed, ready, valid });
+        account_collective_among(
+            &mut eng.rec,
+            &self.topo,
+            ctx.cluster.message_bytes,
+            &eng.fault.alive,
+        );
         Ok(())
     }
 }

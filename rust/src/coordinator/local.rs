@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::{account_collective, TrainContext};
+use super::{account_collective_among, charge_blocking_exchange, TrainContext};
 
 /// Blocking parameter averaging every τ steps, on the configured exact
 /// topology (ring / hierarchical / tree — see DESIGN.md §8).
@@ -31,18 +31,23 @@ impl MixingStrategy for LocalAvgStrategy {
     }
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
-        let m = eng.workers.m;
         // Blocking param averaging on the topology's real reduce schedule,
         // inline on the coordinator over the executor's reusable scratch
-        // (bit-identical to fresh scratch; DESIGN.md §10).
-        eng.clocks.barrier();
-        for w in 0..m {
-            eng.clocks.comm_blocked(w, self.comm_t);
-        }
-        ctx.cluster
-            .topology
-            .allreduce_mean_with(&mut eng.workers.params, &mut *eng.exec.reduce_scratch());
-        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
+        // (bit-identical to fresh scratch; DESIGN.md §10). Under faults the
+        // barrier, the wire charge, and the reduce all cover only the alive
+        // set's members — parked workers stay frozen (DESIGN.md §11).
+        charge_blocking_exchange(eng, ctx, self.comm_t);
+        ctx.cluster.topology.allreduce_mean_alive_with(
+            &mut eng.workers.params,
+            &eng.fault.alive,
+            &mut eng.exec.reduce_scratch(),
+        );
+        account_collective_among(
+            &mut eng.rec,
+            &ctx.cluster.topology,
+            ctx.cluster.message_bytes,
+            &eng.fault.alive,
+        );
         Ok(())
     }
 }

@@ -47,6 +47,7 @@ use anyhow::{bail, Result};
 use crate::clock::Clocks;
 use crate::config::{Algo, ExperimentConfig};
 use crate::data::{Batcher, Dataset, PX};
+use crate::fault::AliveSet;
 use crate::metrics::{EvalRecord, HotPathCounters, TrainLog};
 use crate::optim::LrSchedule;
 use crate::runtime::ModelRuntime;
@@ -323,6 +324,59 @@ impl Workers {
         let refs: Vec<&[f32]> = self.params.iter().map(|p| p.as_slice()).collect();
         crate::model::vecmath::mean(&refs)
     }
+
+    /// Consensus model over the alive set's *stepping* workers — a crashed
+    /// (or quorum-parked) worker's stale replica must not pollute the
+    /// evaluation (DESIGN.md §11). Bit-identical to
+    /// [`Workers::mean_params`] when the set is full.
+    pub fn mean_params_alive(&self, alive: &AliveSet) -> Vec<f32> {
+        if alive.is_full() {
+            return self.mean_params();
+        }
+        let refs: Vec<&[f32]> = (0..self.m)
+            .filter(|&w| alive.steps(w))
+            .map(|w| self.params[w].as_slice())
+            .collect();
+        crate::model::vecmath::mean(&refs)
+    }
+
+    /// Re-seed worker `w`'s full replica state (params, momenta, Adam step
+    /// counter) from worker `src` — the engine's default rejoin warm start
+    /// for strategies without an anchor. Allocation-free.
+    pub fn reseed_from(&mut self, w: usize, src: usize) {
+        if w == src {
+            return;
+        }
+        copy_row(&mut self.params, src, w);
+        copy_row(&mut self.mom, src, w);
+        copy_row(&mut self.mom2, src, w);
+        self.adam_t[w] = self.adam_t[src];
+    }
+
+    /// Warm-start worker `w` from an anchor vector (the paper's pullback
+    /// target): params ← anchor, momenta zeroed, Adam step reset. Used by
+    /// the anchor-bearing strategies' rejoin hooks. Allocation-free.
+    pub fn warm_start(&mut self, w: usize, anchor: &[f32]) {
+        self.params[w].copy_from_slice(anchor);
+        self.mom[w].fill(0.0);
+        self.mom2[w].fill(0.0);
+        self.adam_t[w] = 0.0;
+    }
+}
+
+/// Copy `rows[src]` into `rows[dst]` without allocating (disjoint split
+/// borrows; no-op when the indices coincide). Rows must be equal length.
+pub(crate) fn copy_row(rows: &mut [Vec<f32>], src: usize, dst: usize) {
+    if src == dst {
+        return;
+    }
+    if src < dst {
+        let (head, tail) = rows.split_at_mut(dst);
+        tail[0].copy_from_slice(&head[src]);
+    } else {
+        let (head, tail) = rows.split_at_mut(src);
+        head[dst].copy_from_slice(&tail[0]);
+    }
 }
 
 /// Loss accumulation + eval cadence + byte accounting.
@@ -339,6 +393,11 @@ pub struct Recorder {
     next_eval_step: usize,
     eval_stride: usize,
     tau_trace: Vec<(usize, usize)>,
+    /// applied fault events as (1-based round, canonical spec) pairs; empty
+    /// — and out of the digest — when no fault fires (DESIGN.md §11)
+    fault_trace: Vec<(usize, String)>,
+    /// (round, stepping-worker count) series, recorded when it changes
+    survivors: Vec<(usize, usize)>,
     /// tracked hot-path counters (set by the engine at run end; all-zero
     /// for the reference loops, and never part of the digest)
     hot: HotPathCounters,
@@ -359,6 +418,8 @@ impl Recorder {
             next_eval_step: stride,
             eval_stride: stride,
             tau_trace: Vec::new(),
+            fault_trace: Vec::new(),
+            survivors: Vec::new(),
             hot: HotPathCounters::default(),
         }
     }
@@ -396,6 +457,27 @@ impl Recorder {
         self.tau_trace.push((step, tau));
     }
 
+    /// Record one applied fault event (`TrainLog::fault_trace`).
+    pub fn note_fault(&mut self, round: usize, event: String) {
+        self.fault_trace.push((round, event));
+    }
+
+    /// Record a (round, stepping-worker count) point of the survivor
+    /// series (`TrainLog::survivors`).
+    pub fn note_survivors(&mut self, round: usize, count: usize) {
+        self.survivors.push((round, count));
+    }
+
+    /// The shared eval-cadence gate: `true` (advancing the cadence) when
+    /// global step `k` is due for an evaluation.
+    fn eval_due(&mut self, k: usize) -> bool {
+        if k < self.next_eval_step {
+            return false;
+        }
+        self.next_eval_step += self.eval_stride;
+        true
+    }
+
     /// Called after every global step; runs the (virtually free) test-set
     /// evaluation at the configured cadence.
     pub fn maybe_eval(
@@ -405,11 +487,27 @@ impl Recorder {
         workers: &Workers,
         clocks: &Clocks,
     ) -> Result<()> {
-        if k < self.next_eval_step {
+        if !self.eval_due(k) {
             return Ok(());
         }
-        self.next_eval_step += self.eval_stride;
         self.force_eval(k, ctx, workers, clocks)
+    }
+
+    /// [`Recorder::maybe_eval`] under faults: the consensus model averages
+    /// only the alive set's stepping workers. Bit-identical to the
+    /// unmasked form when the set is full.
+    pub fn maybe_eval_masked(
+        &mut self,
+        k: usize,
+        ctx: &TrainContext,
+        workers: &Workers,
+        clocks: &Clocks,
+        alive: &AliveSet,
+    ) -> Result<()> {
+        if !self.eval_due(k) {
+            return Ok(());
+        }
+        self.force_eval_masked(k, ctx, workers, clocks, alive)
     }
 
     /// Evaluate the consensus model now, regardless of cadence.
@@ -420,7 +518,29 @@ impl Recorder {
         workers: &Workers,
         clocks: &Clocks,
     ) -> Result<()> {
-        let mean = workers.mean_params();
+        self.eval_model(k, ctx, workers.mean_params(), clocks)
+    }
+
+    /// [`Recorder::force_eval`] under faults (survivor-only consensus).
+    pub fn force_eval_masked(
+        &mut self,
+        k: usize,
+        ctx: &TrainContext,
+        workers: &Workers,
+        clocks: &Clocks,
+        alive: &AliveSet,
+    ) -> Result<()> {
+        self.eval_model(k, ctx, workers.mean_params_alive(alive), clocks)
+    }
+
+    /// Shared eval body: score `mean` on the test split and push a record.
+    fn eval_model(
+        &mut self,
+        k: usize,
+        ctx: &TrainContext,
+        mean: Vec<f32>,
+        clocks: &Clocks,
+    ) -> Result<()> {
         let (test_loss, test_acc) =
             ctx.rt.evaluate_set(&mean, &ctx.test.images, &ctx.test.labels)?;
         let train_loss = if self.loss_count > 0 {
@@ -454,6 +574,8 @@ impl Recorder {
             records: self.records,
             step_losses: self.step_losses,
             tau_trace: self.tau_trace,
+            fault_trace: self.fault_trace,
+            survivors: self.survivors,
             total_sim_time: clocks.max_now(),
             total_compute_s: clocks.total_compute(),
             total_comm_blocked_s: clocks.total_comm_blocked(),
@@ -478,6 +600,58 @@ pub fn account_collective(rec: &mut Recorder, topo: &Topology, message_bytes: us
         let per = topo.neighbor_bytes(message_bytes);
         rec.add_bytes(per.iter().sum());
         rec.add_neighbor_bytes(&per);
+    }
+}
+
+/// [`account_collective`] under faults: dead and quorum-parked workers
+/// transmit nothing. The ring keeps its per-participant convention at the
+/// member count; the other topologies record the survivor sub-graph's true
+/// per-link traffic (`Topology::neighbor_bytes_alive`). Identical to
+/// [`account_collective`] when the alive set is full.
+pub fn account_collective_among(
+    rec: &mut Recorder,
+    topo: &Topology,
+    message_bytes: usize,
+    alive: &AliveSet,
+) {
+    if alive.is_full() {
+        return account_collective(rec, topo, message_bytes);
+    }
+    if topo.kind == TopologyKind::Ring {
+        rec.add_bytes((alive.member_count() * message_bytes) as u64);
+    } else {
+        let per = topo.neighbor_bytes_alive(message_bytes, alive);
+        rec.add_bytes(per.iter().sum());
+        rec.add_neighbor_bytes(&per);
+    }
+}
+
+/// Charge one *blocking* exchange to the virtual clocks: barrier over the
+/// alive members, then the wire time — `full_comm_t` (the strategy's
+/// precomputed full-cluster cost, for bit-identity with the pre-fault
+/// path) when everyone is up, the survivor-shaped
+/// `Topology::collective_time_alive` otherwise. Shared by every blocking
+/// strategy (sync / local / elastic); parked workers are untouched.
+pub(crate) fn charge_blocking_exchange(
+    eng: &mut engine::Engine,
+    ctx: &TrainContext,
+    full_comm_t: f64,
+) {
+    if eng.fault.alive.is_full() {
+        eng.clocks.barrier();
+        for w in 0..eng.workers.m {
+            eng.clocks.comm_blocked(w, full_comm_t);
+        }
+    } else {
+        let comm_t = ctx.cluster.topology.collective_time_alive(
+            &ctx.cluster.net,
+            ctx.cluster.message_bytes,
+            &eng.fault.alive,
+        );
+        eng.clocks.barrier_among(eng.fault.alive.members());
+        for &w in eng.fault.alive.members() {
+            eng.clocks.comm_blocked(w, comm_t);
+        }
     }
 }
 
@@ -507,6 +681,16 @@ pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
             )
         }
         _ => {}
+    }
+    // PowerSGD's compressor keeps per-worker rank-r factor state with no
+    // crash/rejoin protocol — refuse faults loudly instead of averaging a
+    // silently corrupted low-rank basis (DESIGN.md §11).
+    if ctx.cfg.algo == Algo::PowerSgd && (!ctx.cfg.fault.is_empty() || ctx.cfg.fault_rate > 0.0)
+    {
+        bail!(
+            "--algo powersgd does not support fault injection (its per-worker low-rank \
+             compressor state has no rejoin protocol); use sync or the overlap family"
+        );
     }
     match ctx.cfg.algo {
         Algo::Sync => engine::run(ctx, &mut sync::SyncStrategy::new(ctx)),

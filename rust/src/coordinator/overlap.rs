@@ -36,8 +36,8 @@
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, PULLBACK_S, RoundOutcome, RoundPlan};
-use super::{account_collective, TrainContext};
-use crate::collective::{launch_collective, PendingCollective};
+use super::{account_collective_among, TrainContext};
+use crate::collective::{launch_collective_among, PendingCollective};
 
 /// Loss-plateau τ controller (AdaComm-style, shrink-only).
 #[derive(Clone, Debug)]
@@ -123,6 +123,21 @@ impl MixingStrategy for OverlapStrategy {
         plan_tau(eng, ctx, self.tau)
     }
 
+    fn on_rejoin(
+        &mut self,
+        eng: &mut Engine,
+        _ctx: &TrainContext,
+        w: usize,
+        _src: usize,
+    ) -> Result<()> {
+        // The paper's warm start: the anchor z is exactly the state every
+        // survivor's pullback is contracting toward — the right consensus
+        // snapshot for a returning worker (DESIGN.md §11). Local momentum
+        // restarts from zero, as at run start.
+        eng.workers.warm_start(w, &self.z);
+        Ok(())
+    }
+
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
 
@@ -131,17 +146,23 @@ impl MixingStrategy for OverlapStrategy {
             // Join the communicator (threads backend) / take the eager
             // result (sim), then each worker independently waits on the
             // virtual timeline until the anchor is ready; if the wire
-            // finished during the τ steps that wait is a no-op. The anchor
-            // update runs in place (bit-identical to the allocating form)
-            // and the absorbed average goes back into the buffer pool — the
-            // return half of the zero-allocation steady state.
-            let avg = h.absorb(&mut eng.clocks);
+            // finished during the τ steps that wait is a no-op. Under
+            // faults only the stepping workers wait — a crashed worker's
+            // clock stays frozen — and the survivor mean is still the
+            // exact anchor target. The anchor update runs in place
+            // (bit-identical to the allocating form) and the absorbed
+            // average goes back into the buffer pool — the return half of
+            // the zero-allocation steady state.
+            let avg = h.absorb_masked(&mut eng.clocks, &eng.fault.alive);
             ctx.rt.anchor_update_inplace(&mut self.z, &mut self.v, &avg, self.beta)?;
             eng.exec.buffers().put(avg);
         }
 
-        // --- pullback (Eq. 4), local on every node ------------------------
+        // --- pullback (Eq. 4), local on every stepping node ---------------
         for w in 0..m {
+            if !eng.fault.alive.steps(w) {
+                continue; // parked: frozen replica, frozen clock
+            }
             ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z, ctx.cfg.alpha)?;
             eng.clocks.compute(w, PULLBACK_S);
         }
@@ -152,18 +173,27 @@ impl MixingStrategy for OverlapStrategy {
         // — only overlap-gossip drops the global rendezvous). On the threads
         // backend the launch dispatches to the pool's parked communicator
         // thread, which the τ local steps of the NEXT round genuinely
-        // overlap; its snapshot reuses pooled buffers.
-        let start = eng.clocks.max_now();
+        // overlap; its snapshot reuses pooled buffers. Under faults only
+        // the alive set's members contribute (a frozen clock never sets
+        // the start time), the reduce runs the survivor sub-schedule, and
+        // the wire cost is the survivor-shaped formula.
+        let start = eng.launch_clock();
         let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
-        self.pending = Some(launch_collective(
+        self.pending = Some(launch_collective_among(
             &eng.exec,
             &ctx.cluster.topology,
             &refs,
+            &eng.fault.alive,
             &ctx.cluster.net,
             ctx.cluster.message_bytes,
             start,
         ));
-        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
+        account_collective_among(
+            &mut eng.rec,
+            &ctx.cluster.topology,
+            ctx.cluster.message_bytes,
+            &eng.fault.alive,
+        );
 
         // --- adaptive-τ controller ---------------------------------------
         if let Some(ada) = self.adaptive.as_mut() {

@@ -10,7 +10,9 @@
 use anyhow::Result;
 
 use super::engine::{Engine, LocalPhase, MixingStrategy, RoundOutcome, RoundPlan};
-use super::{account_collective, TrainContext};
+use super::{
+    account_collective, account_collective_among, charge_blocking_exchange, TrainContext,
+};
 use crate::compress::PowerSgd;
 
 /// Blocking per-step gradient averaging (mixing matrix = (1/m) 11ᵀ each step).
@@ -25,24 +27,31 @@ impl SyncStrategy {
     }
 }
 
-/// Apply one identical averaged-gradient update to every replica (replicas
-/// are bit-identical in the sync family, so apply once and copy is exact).
+/// Apply one identical averaged-gradient update to every participating
+/// replica (replicas are bit-identical within the sync family's alive
+/// members, so apply once and copy is exact). Under faults the template is
+/// the first member and parked replicas stay frozen — they are re-seeded
+/// from a member on rejoin.
 fn apply_shared_update(
     eng: &mut Engine,
     ctx: &TrainContext,
     avg_grad: &[f32],
     step: usize,
 ) -> Result<()> {
+    let lead = eng.fault.alive.members().first().copied().unwrap_or(0);
     let lr = ctx.schedule.lr_at_step(step);
     let (p, mom) = ctx.rt.sgd_update(
-        &eng.workers.params[0],
-        &eng.workers.mom[0],
+        &eng.workers.params[lead],
+        &eng.workers.mom[lead],
         avg_grad,
         lr,
         ctx.cfg.mu,
         ctx.cfg.wd,
     )?;
     for w in 0..eng.workers.m {
+        if !eng.fault.alive.is_member(w) {
+            continue;
+        }
         eng.workers.params[w].copy_from_slice(&p);
         eng.workers.mom[w].copy_from_slice(&mom);
     }
@@ -59,18 +68,32 @@ impl MixingStrategy for SyncStrategy {
     }
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, mut out: RoundOutcome) -> Result<()> {
-        let m = eng.workers.m;
-        // Blocking collective: stragglers idle everyone, then the wire.
-        eng.clocks.barrier();
-        for w in 0..m {
-            eng.clocks.comm_blocked(w, self.comm_t);
+        // Blocking collective: stragglers idle everyone (alive members
+        // under faults — parked workers neither barrier nor pay the wire),
+        // then the wire.
+        charge_blocking_exchange(eng, ctx, self.comm_t);
+        if eng.fault.alive.is_full() {
+            // Inline reduce on the coordinator, over the executor's
+            // reusable scratch (bit-identical to fresh scratch; §10).
+            ctx.cluster
+                .topology
+                .allreduce_mean_with(&mut out.grads, &mut *eng.exec.reduce_scratch());
+        } else {
+            // Parked workers produced no gradient, so `out.grads` is
+            // already compact in member order: reduce it with the survivor
+            // sub-schedule (exact mean over the members).
+            ctx.cluster.topology.allreduce_mean_compact(
+                &mut out.grads,
+                eng.fault.alive.members(),
+                &mut eng.exec.reduce_scratch(),
+            );
         }
-        // Inline reduce on the coordinator, over the executor's reusable
-        // scratch (bit-identical to fresh scratch; DESIGN.md §10).
-        ctx.cluster
-            .topology
-            .allreduce_mean_with(&mut out.grads, &mut *eng.exec.reduce_scratch());
-        account_collective(&mut eng.rec, &ctx.cluster.topology, ctx.cluster.message_bytes);
+        account_collective_among(
+            &mut eng.rec,
+            &ctx.cluster.topology,
+            ctx.cluster.message_bytes,
+            &eng.fault.alive,
+        );
         apply_shared_update(eng, ctx, &out.grads[0], out.start_step)
     }
 }

@@ -203,10 +203,14 @@ impl Executor {
 
     /// Execute one round's local phase over the per-worker views (worker
     /// order in, worker order out). `plan.steps[w]` fused steps per worker,
-    /// or one gradient each in grad mode. `Sim` drives the views
-    /// sequentially on the calling thread; `Threads` dispatches each view
-    /// to its parked pool thread. Result buffers come from the recycle
-    /// list, so steady-state rounds reuse their capacity.
+    /// or one gradient each in grad mode; a worker planned at **zero**
+    /// steps is parked (the fault subsystem's crashed/partitioned-away
+    /// workers, DESIGN.md §11) — it is skipped entirely, consuming no
+    /// batches, no RNG draws, and (on the pool) no dispatch, and its result
+    /// buffer comes back empty. `Sim` drives the views sequentially on the
+    /// calling thread; `Threads` dispatches each view to its parked pool
+    /// thread. Result buffers come from the recycle list, so steady-state
+    /// rounds reuse their capacity.
     pub fn run_phase(
         &self,
         views: Vec<StepView<'_>>,
@@ -223,6 +227,9 @@ impl Executor {
         match &self.mode {
             Mode::Sim => {
                 for (w, mut view) in views.into_iter().enumerate() {
+                    if plan.steps[w] == 0 {
+                        continue; // parked: the cleared buffer is the result
+                    }
                     drive_worker(&mut view, ctx, plan.steps[w], start_step, phase, &mut bufs[w])?;
                 }
                 Ok(bufs)

@@ -270,10 +270,18 @@ impl WorkerPool {
         let m = views.len();
         assert_eq!(m, self.m, "local phase has {m} views but the pool serves {}", self.m);
         assert_eq!(rounds.len(), m, "one recycled round buffer per view");
+        let mut slots: Vec<Option<WorkerRound>> = (0..m).map(|_| None).collect();
         let mut dispatched = 0usize;
         let mut dispatch_err = None;
         for (w, view) in views.into_iter().enumerate() {
             let round = rounds.pop().expect("checked above");
+            if plan.steps[w] == 0 {
+                // Parked worker (fault subsystem, DESIGN.md §11): no job is
+                // dispatched — its thread stays parked, spawning nothing —
+                // and the recycled (cleared) buffer is its empty result.
+                slots[w] = Some(round);
+                continue;
+            }
             // SAFETY: this loop dispatches to parked threads and the drain
             // below blocks until every dispatched job has reported back;
             // worker threads drop the job (ending the erased borrows)
@@ -291,7 +299,6 @@ impl WorkerPool {
         }
         // Drain every dispatched job before any early return — the erased
         // borrows must not outlive this frame even when the round failed.
-        let mut slots: Vec<Option<WorkerRound>> = (0..m).map(|_| None).collect();
         let mut job_err: Option<anyhow::Error> = None;
         for _ in 0..dispatched {
             let (w, out) = self

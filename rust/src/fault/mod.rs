@@ -1,0 +1,777 @@
+//! Fault-injection subsystem: crashes, rejoins, and network partitions as
+//! first-class, bit-deterministic round-plan events (DESIGN.md §11,
+//! EXPERIMENTS.md E14).
+//!
+//! The paper's anchor model decouples local progress from synchronization,
+//! which should make Overlap-Local-SGD robust not just to *slow* nodes but
+//! to nodes that *disappear* — Stochastic Gradient Push (Assran et al.,
+//! PAPERS.md) shows column-stochastic de-biasing stays exactly
+//! mean-preserving on time-varying participation graphs. This module owns
+//! the failure model; the collective layer owns the alive-set-aware reduce
+//! schedules that consume it.
+//!
+//! Three pieces:
+//!
+//! * [`FaultEvent`] / [`FaultPlan`] — the *configured* schedule, parsed
+//!   from `--fault crash@round:worker`, `rejoin@round:worker`,
+//!   `partition@round:set|set`, `heal@round` specs (rounds are 1-based;
+//!   events apply at the *start* of their round, before any local step of
+//!   that round runs).
+//! * [`AliveSet`] — the cluster's current participation state: which
+//!   workers are up, how the graph is partitioned, which partition
+//!   component holds the quorum. Exact-collective strategies park every
+//!   worker outside the primary (largest) component — no quorum, no
+//!   progress — while the decentralized gossip strategy keeps *every*
+//!   component training on its own sub-graph (`AliveSet::steps` vs
+//!   [`AliveSet::edge_allowed`]).
+//! * [`FaultState`] — the per-run replay machine the engine drives once per
+//!   round: explicit events first, then (when `fault_rate`/`rejoin_rate`
+//!   are set) a seeded random process drawing one decision per worker per
+//!   round from its own derived RNG stream. Everything runs on the
+//!   coordinator thread, so a fixed schedule yields bit-identical
+//!   observables on the `sim` and `threads` backends (asserted by
+//!   rust/tests/failure_injection.rs).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// One scheduled fault event. Rounds are 1-based; an event fires at the
+/// start of its round, before that round's local phase.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Worker `worker` drops out of the cluster at the start of `round`:
+    /// its clock freezes, it takes no local steps, and every collective
+    /// reduces over the survivors only.
+    Crash {
+        /// 1-based round the crash fires at
+        round: usize,
+        /// worker index
+        worker: usize,
+    },
+    /// Worker `worker` comes back at the start of `round`, warm-started
+    /// from the current anchor (the paper's pullback target) and charged
+    /// one full-message state fetch on the wire.
+    Rejoin {
+        /// 1-based round the rejoin fires at
+        round: usize,
+        /// worker index
+        worker: usize,
+    },
+    /// The network splits into the given disjoint components at the start
+    /// of `round` (the groups must cover every worker exactly once). A
+    /// later `Partition` replaces the split; `Heal` removes it.
+    Partition {
+        /// 1-based round the partition fires at
+        round: usize,
+        /// disjoint worker groups covering `0..m`
+        groups: Vec<Vec<usize>>,
+    },
+    /// The partition heals at the start of `round`: full connectivity is
+    /// restored and parked minority workers rejoin from the anchor.
+    Heal {
+        /// 1-based round the heal fires at
+        round: usize,
+    },
+}
+
+impl FaultEvent {
+    /// The 1-based round this event fires at.
+    pub fn round(&self) -> usize {
+        match self {
+            FaultEvent::Crash { round, .. }
+            | FaultEvent::Rejoin { round, .. }
+            | FaultEvent::Partition { round, .. }
+            | FaultEvent::Heal { round } => *round,
+        }
+    }
+
+    /// Parse one spec: `crash@R:W`, `rejoin@R:W`, `partition@R:a,b|c,d`,
+    /// `heal@R`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        let (kind, rest) = spec
+            .split_once('@')
+            .with_context(|| format!("bad fault event '{spec}' (want kind@round[:args])"))?;
+        let parse_round = |s: &str| -> Result<usize> {
+            let r: usize =
+                s.trim().parse().with_context(|| format!("bad round in fault event '{spec}'"))?;
+            ensure!(r >= 1, "fault event '{spec}': rounds are 1-based");
+            Ok(r)
+        };
+        let parse_worker = |s: &str| -> Result<usize> {
+            s.trim().parse().with_context(|| format!("bad worker in fault event '{spec}'"))
+        };
+        Ok(match kind.trim() {
+            "crash" | "rejoin" => {
+                let (r, w) = rest.split_once(':').with_context(|| {
+                    format!("fault event '{spec}' needs a worker (kind@round:worker)")
+                })?;
+                let (round, worker) = (parse_round(r)?, parse_worker(w)?);
+                if kind.trim() == "crash" {
+                    FaultEvent::Crash { round, worker }
+                } else {
+                    FaultEvent::Rejoin { round, worker }
+                }
+            }
+            "partition" => {
+                let (r, sets) = rest.split_once(':').with_context(|| {
+                    format!("fault event '{spec}' needs worker sets (partition@round:a,b|c,d)")
+                })?;
+                let round = parse_round(r)?;
+                let mut groups = Vec::new();
+                for set in sets.split('|') {
+                    let mut group = Vec::new();
+                    for id in set.split(',') {
+                        if !id.trim().is_empty() {
+                            group.push(parse_worker(id)?);
+                        }
+                    }
+                    ensure!(!group.is_empty(), "fault event '{spec}': empty partition set");
+                    groups.push(group);
+                }
+                ensure!(
+                    groups.len() >= 2,
+                    "fault event '{spec}': a partition needs at least two sets"
+                );
+                FaultEvent::Partition { round, groups }
+            }
+            "heal" => FaultEvent::Heal { round: parse_round(rest)? },
+            other => bail!(
+                "unknown fault kind '{other}' in '{spec}' (want crash|rejoin|partition|heal)"
+            ),
+        })
+    }
+
+    /// Canonical spec string (round-trips through [`FaultEvent::parse`]).
+    pub fn describe(&self) -> String {
+        match self {
+            FaultEvent::Crash { round, worker } => format!("crash@{round}:{worker}"),
+            FaultEvent::Rejoin { round, worker } => format!("rejoin@{round}:{worker}"),
+            FaultEvent::Partition { round, groups } => {
+                let sets: Vec<String> = groups
+                    .iter()
+                    .map(|g| {
+                        g.iter().map(|w| w.to_string()).collect::<Vec<_>>().join(",")
+                    })
+                    .collect();
+                format!("partition@{round}:{}", sets.join("|"))
+            }
+            FaultEvent::Heal { round } => format!("heal@{round}"),
+        }
+    }
+}
+
+/// The configured explicit fault schedule (the `fault` config key /
+/// repeated `--fault` flags). The random-process knobs (`fault_rate`,
+/// `rejoin_rate`) live beside it in `ExperimentConfig`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// the scheduled events, in spec order
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a `;`-separated event list (empty or `none` → empty plan).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::default();
+        plan.push(spec)?;
+        Ok(plan)
+    }
+
+    /// Append the events of a `;`-separated spec; `none` clears the plan.
+    pub fn push(&mut self, spec: &str) -> Result<()> {
+        let spec = spec.trim();
+        if spec.eq_ignore_ascii_case("none") {
+            self.events.clear();
+            return Ok(());
+        }
+        for ev in spec.split(';') {
+            if !ev.trim().is_empty() {
+                self.events.push(FaultEvent::parse(ev)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether the plan schedules no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Canonical `;`-separated spec (round-trips through
+    /// [`FaultPlan::parse`]).
+    pub fn describe(&self) -> String {
+        self.events.iter().map(FaultEvent::describe).collect::<Vec<_>>().join(";")
+    }
+}
+
+/// The cluster's current participation state: which workers are alive,
+/// how the communication graph is partitioned, and — derived from both —
+/// who participates in exact collectives and who takes local steps.
+///
+/// Terminology used throughout the crate:
+///
+/// * a worker is **alive** if it has not crashed;
+/// * the **primary** component is the partition component with the most
+///   alive workers (ties break toward the component listed first in the
+///   partition spec) — the quorum side;
+/// * the **members** are the alive workers of the primary component: the
+///   participant set of every *exact* collective (ring/hier/tree);
+/// * a worker is **stepping** if it runs local steps this round: members
+///   for the exact-collective strategies, *every alive worker* for the
+///   decentralized gossip strategy (minority components keep training on
+///   their sub-graph — no quorum needed, the decisive decentralized
+///   advantage E14 measures).
+#[derive(Clone, Debug)]
+pub struct AliveSet {
+    decentralized: bool,
+    alive: Vec<bool>,
+    /// partition component id per worker (all 0 when unpartitioned)
+    component: Vec<usize>,
+    partitioned: bool,
+    primary: usize,
+    members: Vec<usize>,
+    stepping: Vec<bool>,
+    stepping_count: usize,
+}
+
+impl AliveSet {
+    /// Fully-connected, all-alive cluster of `m` workers.
+    pub fn full(m: usize) -> Self {
+        assert!(m >= 1, "alive set needs at least one worker");
+        let mut s = Self {
+            decentralized: false,
+            alive: vec![true; m],
+            component: vec![0; m],
+            partitioned: false,
+            primary: 0,
+            members: Vec::with_capacity(m),
+            stepping: vec![true; m],
+            stepping_count: m,
+        };
+        s.refresh();
+        s
+    }
+
+    /// An unpartitioned set with the given per-worker alive flags (at
+    /// least one must be alive). Intended for tests and property sweeps.
+    pub fn with_alive(alive: Vec<bool>) -> Self {
+        assert!(alive.iter().any(|&a| a), "alive set needs at least one live worker");
+        let m = alive.len();
+        let mut s = Self::full(m);
+        s.alive = alive;
+        s.refresh();
+        s
+    }
+
+    /// A set with the given alive flags *and* partition components
+    /// (`component[w]` = component id of worker `w`). Intended for tests.
+    pub fn with_partition(alive: Vec<bool>, component: Vec<usize>) -> Self {
+        assert_eq!(alive.len(), component.len(), "alive/component length mismatch");
+        let mut s = Self::with_alive(alive);
+        s.component = component;
+        s.partitioned = true;
+        s.refresh();
+        s
+    }
+
+    /// Worker count m (alive or not).
+    pub fn len(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Whether the set covers zero workers (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.alive.is_empty()
+    }
+
+    /// `true` when every worker is alive and the graph is unpartitioned —
+    /// the state in which every fault-aware code path must be bit-identical
+    /// to its pre-fault form.
+    pub fn is_full(&self) -> bool {
+        !self.partitioned && self.alive.iter().all(|&a| a)
+    }
+
+    /// Whether worker `w` is alive (has not crashed).
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.alive[w]
+    }
+
+    /// The exact-collective participants: alive workers of the primary
+    /// component, in ascending worker order.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Number of exact-collective participants.
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Whether worker `w` participates in exact collectives this round.
+    pub fn is_member(&self, w: usize) -> bool {
+        self.alive[w] && self.component[w] == self.primary
+    }
+
+    /// Whether worker `w` runs local steps this round (see the type docs
+    /// for the exact-vs-decentralized distinction).
+    pub fn steps(&self, w: usize) -> bool {
+        self.stepping[w]
+    }
+
+    /// Number of stepping workers — the survivor-count series in
+    /// `TrainLog::survivors`.
+    pub fn stepping_count(&self) -> usize {
+        self.stepping_count
+    }
+
+    /// Whether a message can move between workers `i` and `j`: both alive
+    /// and in the same partition component. The gossip data plane filters
+    /// its edges with exactly this predicate.
+    pub fn edge_allowed(&self, i: usize, j: usize) -> bool {
+        self.alive[i] && self.alive[j] && self.component[i] == self.component[j]
+    }
+
+    /// Install the decentralized stepping rule (gossip: every alive worker
+    /// steps, partitioned or not).
+    pub(crate) fn set_decentralized(&mut self, decentralized: bool) {
+        self.decentralized = decentralized;
+        self.refresh();
+    }
+
+    pub(crate) fn set_alive(&mut self, w: usize, alive: bool) {
+        self.alive[w] = alive;
+    }
+
+    pub(crate) fn set_partition(&mut self, groups: &[Vec<usize>]) {
+        for (id, group) in groups.iter().enumerate() {
+            for &w in group {
+                self.component[w] = id;
+            }
+        }
+        self.partitioned = true;
+    }
+
+    pub(crate) fn clear_partition(&mut self) {
+        self.component.fill(0);
+        self.partitioned = false;
+    }
+
+    /// Recompute the derived state (primary component, members, stepping).
+    pub(crate) fn refresh(&mut self) {
+        let m = self.alive.len();
+        self.primary = if self.partitioned {
+            // Most alive members wins; ties break toward the lowest
+            // component id (the set listed first in the spec).
+            let max_id = self.component.iter().copied().max().unwrap_or(0);
+            let mut best = (0usize, 0usize);
+            for id in 0..=max_id {
+                let count = (0..m).filter(|&w| self.alive[w] && self.component[w] == id).count();
+                if count > best.1 {
+                    best = (id, count);
+                }
+            }
+            best.0
+        } else {
+            0
+        };
+        self.members.clear();
+        self.members.extend(
+            (0..m).filter(|&w| self.alive[w] && self.component[w] == self.primary),
+        );
+        self.stepping_count = 0;
+        for w in 0..m {
+            self.stepping[w] = self.alive[w]
+                && (self.decentralized || self.component[w] == self.primary);
+            self.stepping_count += usize::from(self.stepping[w]);
+        }
+    }
+}
+
+/// What one round's fault application produced, handed back to the engine.
+pub struct RoundFaults {
+    /// events applied this round (explicit + synthesized random), in
+    /// application order — the `TrainLog::fault_trace` entries
+    pub applied: Vec<FaultEvent>,
+    /// workers that transitioned parked → stepping (crash rejoins and
+    /// partition returns): the engine warm-starts these from the anchor
+    pub joined: Vec<usize>,
+    /// re-seed source: the lowest-id worker that was stepping before this
+    /// round's events (preferring one still stepping) — a boundary-accurate
+    /// replica for the default warm-start
+    pub src: usize,
+    /// whether the stepping count changed (drives the survivor series)
+    pub changed: bool,
+}
+
+/// The per-run fault replay machine, owned by the engine. Applies the
+/// explicit schedule and the seeded random process at each round boundary,
+/// entirely on the coordinator thread — bit-deterministic by construction
+/// on either execution backend.
+pub struct FaultState {
+    /// the cluster's current participation state
+    pub alive: AliveSet,
+    /// events sorted stably by round (spec order within a round)
+    events: Vec<FaultEvent>,
+    cursor: usize,
+    rate: f64,
+    rejoin_rate: f64,
+    rng: Rng,
+    engaged: bool,
+}
+
+impl FaultState {
+    /// Build the replay machine for one run of `m` workers. `seed` derives
+    /// the random process stream (`"fault"` — perturbs no other consumer).
+    pub fn new(plan: &FaultPlan, rate: f64, rejoin_rate: f64, seed: u64, m: usize) -> Self {
+        let mut events = plan.events.clone();
+        events.sort_by_key(FaultEvent::round); // stable: spec order within a round
+        let engaged = !events.is_empty() || rate > 0.0;
+        Self {
+            alive: AliveSet::full(m),
+            events,
+            cursor: 0,
+            rate,
+            rejoin_rate,
+            rng: Rng::stream(seed, "fault"),
+            engaged,
+        }
+    }
+
+    /// Whether any fault source is configured. When `false`, the engine
+    /// never calls [`FaultState::begin_round`] and every fault-aware code
+    /// path takes its pre-fault branch — the empty-schedule digest
+    /// guarantee.
+    pub fn engaged(&self) -> bool {
+        self.engaged
+    }
+
+    /// Install the strategy's stepping rule (see [`AliveSet`]).
+    pub fn set_decentralized(&mut self, decentralized: bool) {
+        self.alive.set_decentralized(decentralized);
+    }
+
+    /// Validate the schedule against the cluster size (run start): worker
+    /// indices in range, partitions disjoint and covering, rates sane.
+    pub fn validate(&self) -> Result<()> {
+        let m = self.alive.len();
+        ensure!(
+            (0.0..1.0).contains(&self.rate),
+            "fault_rate must be in [0, 1), got {}",
+            self.rate
+        );
+        ensure!(
+            (0.0..1.0).contains(&self.rejoin_rate),
+            "rejoin_rate must be in [0, 1), got {}",
+            self.rejoin_rate
+        );
+        for ev in &self.events {
+            match ev {
+                FaultEvent::Crash { worker, .. } | FaultEvent::Rejoin { worker, .. } => {
+                    ensure!(
+                        *worker < m,
+                        "fault event '{}' names worker {} but the cluster has {} workers",
+                        ev.describe(),
+                        worker,
+                        m
+                    );
+                }
+                FaultEvent::Partition { groups, .. } => {
+                    let mut seen = vec![false; m];
+                    for g in groups {
+                        for &w in g {
+                            ensure!(
+                                w < m,
+                                "fault event '{}' names worker {w} but the cluster has {m} workers",
+                                ev.describe()
+                            );
+                            ensure!(
+                                !seen[w],
+                                "fault event '{}' lists worker {w} twice",
+                                ev.describe()
+                            );
+                            seen[w] = true;
+                        }
+                    }
+                    ensure!(
+                        seen.iter().all(|&s| s),
+                        "fault event '{}' must cover every worker exactly once",
+                        ev.describe()
+                    );
+                }
+                FaultEvent::Heal { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply every fault due at the start of 1-based `round`: the explicit
+    /// events in spec order, then one random draw per worker when the
+    /// random process is configured. Errors on inconsistent schedules
+    /// (crashing a dead worker, rejoining a live one, healing an
+    /// unpartitioned graph) and on schedules that leave the quorum side
+    /// empty.
+    pub fn begin_round(&mut self, round: usize) -> Result<RoundFaults> {
+        let m = self.alive.len();
+        let prev_stepping: Vec<bool> = self.alive.stepping.clone();
+        let prev_count = self.alive.stepping_count;
+        let mut applied = Vec::new();
+
+        while self.cursor < self.events.len() && self.events[self.cursor].round() == round {
+            let ev = self.events[self.cursor].clone();
+            self.cursor += 1;
+            match &ev {
+                FaultEvent::Crash { worker, .. } => {
+                    ensure!(
+                        self.alive.is_alive(*worker),
+                        "fault event '{}': worker {} is already down",
+                        ev.describe(),
+                        worker
+                    );
+                    self.alive.set_alive(*worker, false);
+                }
+                FaultEvent::Rejoin { worker, .. } => {
+                    ensure!(
+                        !self.alive.is_alive(*worker),
+                        "fault event '{}': worker {} is not down",
+                        ev.describe(),
+                        worker
+                    );
+                    self.alive.set_alive(*worker, true);
+                }
+                FaultEvent::Partition { groups, .. } => {
+                    self.alive.set_partition(groups);
+                }
+                FaultEvent::Heal { .. } => {
+                    ensure!(
+                        self.alive.partitioned,
+                        "fault event '{}': the graph is not partitioned",
+                        ev.describe()
+                    );
+                    self.alive.clear_partition();
+                }
+            }
+            applied.push(ev);
+        }
+        self.alive.refresh();
+
+        // Random process: exactly one draw per worker per round (state-
+        // independent stream consumption), crash with `rate` when alive,
+        // rejoin with `rejoin_rate` when down. A draw that would empty the
+        // quorum side is skipped, never fatal.
+        if self.rate > 0.0 || self.rejoin_rate > 0.0 {
+            for w in 0..m {
+                let u = self.rng.next_f64();
+                if self.alive.is_alive(w) {
+                    if self.rate > 0.0 && u < self.rate {
+                        self.alive.set_alive(w, false);
+                        self.alive.refresh();
+                        if self.alive.member_count() == 0 {
+                            self.alive.set_alive(w, true); // would kill the quorum
+                            self.alive.refresh();
+                        } else {
+                            applied.push(FaultEvent::Crash { round, worker: w });
+                        }
+                    }
+                } else if self.rejoin_rate > 0.0 && u < self.rejoin_rate {
+                    self.alive.set_alive(w, true);
+                    self.alive.refresh();
+                    applied.push(FaultEvent::Rejoin { round, worker: w });
+                }
+            }
+        }
+
+        ensure!(
+            self.alive.member_count() > 0,
+            "fault schedule leaves no live worker in the primary partition at round {round}"
+        );
+
+        let joined: Vec<usize> =
+            (0..m).filter(|&w| !prev_stepping[w] && self.alive.steps(w)).collect();
+        let src = (0..m)
+            .find(|&w| prev_stepping[w] && self.alive.steps(w))
+            .or_else(|| (0..m).find(|&w| prev_stepping[w]))
+            .expect("a non-empty cluster always has a previous stepping worker");
+        Ok(RoundFaults {
+            applied,
+            joined,
+            src,
+            changed: self.alive.stepping_count != prev_count,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_parse_and_round_trip() {
+        let specs = [
+            "crash@3:2",
+            "rejoin@6:2",
+            "partition@4:0,1|2,3",
+            "heal@8",
+        ];
+        for spec in specs {
+            let ev = FaultEvent::parse(spec).unwrap();
+            assert_eq!(ev.describe(), spec);
+            assert_eq!(FaultEvent::parse(&ev.describe()).unwrap(), ev);
+        }
+        let plan = FaultPlan::parse("crash@3:2; rejoin@6:2").unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_events_are_rejected() {
+        for bad in [
+            "crash@3",          // no worker
+            "crash@x:1",        // bad round
+            "crash@0:1",        // rounds are 1-based
+            "rejoin@2:abc",     // bad worker
+            "partition@2:0,1",  // single set
+            "partition@2:|",    // empty sets
+            "reboot@2:1",       // unknown kind
+            "crash",            // no @
+        ] {
+            assert!(FaultEvent::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn alive_set_tracks_members_and_stepping() {
+        let mut s = AliveSet::full(6);
+        assert!(s.is_full());
+        assert_eq!(s.members(), &[0, 1, 2, 3, 4, 5]);
+        assert_eq!(s.stepping_count(), 6);
+
+        s.set_alive(2, false);
+        s.refresh();
+        assert!(!s.is_full());
+        assert_eq!(s.members(), &[0, 1, 3, 4, 5]);
+        assert!(!s.steps(2));
+        assert!(!s.edge_allowed(1, 2));
+
+        // Partition {0,1,2} | {3,4,5} with 2 dead: primary = {3,4,5}.
+        s.set_partition(&[vec![0, 1, 2], vec![3, 4, 5]]);
+        s.refresh();
+        assert_eq!(s.members(), &[3, 4, 5]);
+        assert!(s.steps(4));
+        assert!(!s.steps(0), "exact strategies park the minority");
+        assert!(s.edge_allowed(0, 1), "minority edges stay usable (gossip)");
+        assert!(!s.edge_allowed(1, 3), "cross-partition edges are cut");
+
+        // The decentralized rule keeps every alive worker stepping.
+        s.set_decentralized(true);
+        assert!(s.steps(0));
+        assert!(!s.steps(2), "dead stays dead");
+        assert_eq!(s.stepping_count(), 5);
+        assert_eq!(s.members(), &[3, 4, 5], "members are unchanged");
+
+        s.set_decentralized(false);
+        s.clear_partition();
+        s.refresh();
+        assert_eq!(s.members(), &[0, 1, 3, 4, 5]);
+    }
+
+    #[test]
+    fn alive_set_primary_tie_breaks_to_first_listed_set() {
+        let mut s = AliveSet::full(4);
+        s.set_partition(&[vec![2, 3], vec![0, 1]]);
+        s.refresh();
+        assert_eq!(s.members(), &[2, 3], "equal sizes: the first-listed set wins");
+    }
+
+    #[test]
+    fn replay_applies_events_and_validates_consistency() {
+        let plan = FaultPlan::parse("crash@2:1;rejoin@4:1").unwrap();
+        let mut fs = FaultState::new(&plan, 0.0, 0.0, 7, 4);
+        assert!(fs.engaged());
+        fs.validate().unwrap();
+
+        let r1 = fs.begin_round(1).unwrap();
+        assert!(r1.applied.is_empty() && r1.joined.is_empty() && !r1.changed);
+
+        let r2 = fs.begin_round(2).unwrap();
+        assert_eq!(r2.applied.len(), 1);
+        assert!(r2.changed);
+        assert!(!fs.alive.is_alive(1));
+        assert_eq!(fs.alive.members(), &[0, 2, 3]);
+
+        let r3 = fs.begin_round(3).unwrap();
+        assert!(!r3.changed);
+
+        let r4 = fs.begin_round(4).unwrap();
+        assert_eq!(r4.joined, vec![1]);
+        assert_eq!(r4.src, 0);
+        assert!(fs.alive.is_full());
+    }
+
+    #[test]
+    fn replay_rejects_inconsistent_schedules() {
+        // Crashing a dead worker.
+        let plan = FaultPlan::parse("crash@1:0;crash@2:0").unwrap();
+        let mut fs = FaultState::new(&plan, 0.0, 0.0, 1, 3);
+        fs.begin_round(1).unwrap();
+        assert!(fs.begin_round(2).is_err());
+
+        // Rejoining a live worker.
+        let plan = FaultPlan::parse("rejoin@1:0").unwrap();
+        assert!(FaultState::new(&plan, 0.0, 0.0, 1, 3).begin_round(1).is_err());
+
+        // Healing an unpartitioned graph.
+        let plan = FaultPlan::parse("heal@1").unwrap();
+        assert!(FaultState::new(&plan, 0.0, 0.0, 1, 3).begin_round(1).is_err());
+
+        // Killing every worker.
+        let plan = FaultPlan::parse("crash@1:0;crash@1:1").unwrap();
+        assert!(FaultState::new(&plan, 0.0, 0.0, 1, 2).begin_round(1).is_err());
+
+        // Out-of-range worker / non-covering partition fail validation.
+        let plan = FaultPlan::parse("crash@1:9").unwrap();
+        assert!(FaultState::new(&plan, 0.0, 0.0, 1, 4).validate().is_err());
+        let plan = FaultPlan::parse("partition@1:0,1|2").unwrap();
+        assert!(FaultState::new(&plan, 0.0, 0.0, 1, 4).validate().is_err());
+        let plan = FaultPlan::parse("partition@1:0,1|1,2,3").unwrap();
+        assert!(FaultState::new(&plan, 0.0, 0.0, 1, 4).validate().is_err());
+    }
+
+    #[test]
+    fn random_process_is_deterministic_and_never_empties_the_quorum() {
+        let run = |seed: u64| {
+            let plan = FaultPlan::default();
+            let mut fs = FaultState::new(&plan, 0.4, 0.3, seed, 5);
+            let mut trace = Vec::new();
+            for round in 1..=40 {
+                let rf = fs.begin_round(round).unwrap();
+                assert!(fs.alive.member_count() >= 1, "quorum must survive");
+                for ev in rf.applied {
+                    trace.push(ev.describe());
+                }
+            }
+            trace
+        };
+        let a = run(11);
+        assert_eq!(a, run(11), "same seed must replay identically");
+        assert_ne!(a, run(12), "the process must actually depend on the seed");
+        assert!(!a.is_empty(), "a 40% rate over 40 rounds must fire");
+    }
+
+    #[test]
+    fn partition_then_heal_reports_returning_workers_as_joined() {
+        let plan = FaultPlan::parse("partition@2:0,1|2,3,4;heal@4").unwrap();
+        let mut fs = FaultState::new(&plan, 0.0, 0.0, 3, 5);
+        fs.begin_round(1).unwrap();
+        let r2 = fs.begin_round(2).unwrap();
+        assert!(r2.joined.is_empty());
+        assert_eq!(fs.alive.members(), &[2, 3, 4]);
+        fs.begin_round(3).unwrap();
+        let r4 = fs.begin_round(4).unwrap();
+        assert_eq!(r4.joined, vec![0, 1], "minority workers rejoin on heal");
+        assert_eq!(r4.src, 2, "re-seed source is a quorum-side worker");
+    }
+}

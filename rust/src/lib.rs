@@ -31,6 +31,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod executor;
+pub mod fault;
 pub mod metrics;
 pub mod model;
 pub mod optim;

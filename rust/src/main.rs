@@ -5,7 +5,7 @@
 //! ```text
 //! olsgd info                              runtime + artifact inventory
 //! olsgd train   [--config F] [--set k=v]* [--execution sim|threads]
-//!               [--out DIR] [--quiet]
+//!               [--fault EVENT]* [--out DIR] [--quiet]
 //! olsgd sweep   --algos a,b --taus 1,2,8 [--set k=v]* [--out DIR]
 //! olsgd report  --dir DIR                 summarize result JSONs
 //! ```
@@ -72,10 +72,14 @@ fn print_usage() {
          Execution:  --execution sim|threads (threads = persistent pool: one parked\n\
                      OS thread per worker + a communicator thread; bit-identical\n\
                      results, real overlap, zero steady-state spawns/allocs)\n\
+         Faults:     --fault crash@round:worker | rejoin@round:worker\n\
+                     | partition@round:set|set | heal@round   (repeatable; rounds are\n\
+                     1-based; also --set fault_rate=p / rejoin_rate=p for the seeded\n\
+                     random process; deterministic replay, survivors stay exact)\n\
          Config keys: algo model workers epochs seed eval_every execution lr tau tau_min\n\
                       tau_hetero ada_patience ada_threshold alpha beta mu wd rank\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
-                      topology gossip_degree hier_groups\n\
+                      topology gossip_degree hier_groups fault fault_rate rejoin_rate\n\
                       message_bytes straggler artifacts_dir out_dir"
     );
 }
@@ -113,6 +117,12 @@ fn parse_common(args: &[String]) -> Result<CommonArgs> {
             "--execution" => {
                 let v = next(args, &mut i, "--execution")?;
                 overrides.push(("execution".to_string(), v));
+            }
+            "--fault" => {
+                // The `fault` config key appends, so repeated --fault flags
+                // accumulate into one schedule (DESIGN.md §11).
+                let v = next(args, &mut i, "--fault")?;
+                overrides.push(("fault".to_string(), v));
             }
             "--out" | "-o" => {
                 out = next(args, &mut i, "--out")?;

@@ -98,6 +98,13 @@ pub struct TrainLog {
     /// (step, τ) points recorded by an adaptive-τ controller; empty for
     /// fixed-τ runs
     pub tau_trace: Vec<(usize, usize)>,
+    /// applied fault events as (1-based round, canonical spec) pairs
+    /// (DESIGN.md §11); empty — and out of the digest — when no fault
+    /// fires, so fault-free runs keep their pre-fault digests bit-for-bit
+    pub fault_trace: Vec<(usize, String)>,
+    /// (round, stepping-worker count) survivor series, one point per
+    /// change; empty when the cluster never loses a worker
+    pub survivors: Vec<(usize, usize)>,
     /// final virtual cluster time (max worker clock)
     pub total_sim_time: f64,
     /// total compute seconds across workers
@@ -192,6 +199,19 @@ impl TrainLog {
                     .map(|&(k, t)| arr_f64(&[k as f64, t as f64]))),
             ),
             (
+                "fault_trace",
+                arr(self.fault_trace.iter().map(|(r, ev)| {
+                    obj(vec![("round", num(*r as f64)), ("event", s(ev))])
+                })),
+            ),
+            (
+                "survivors",
+                arr(self
+                    .survivors
+                    .iter()
+                    .map(|&(r, c)| arr_f64(&[r as f64, c as f64]))),
+            ),
+            (
                 "neighbor_bytes",
                 arr(self.neighbor_bytes.iter().map(|&b| num(b as f64))),
             ),
@@ -245,6 +265,21 @@ impl TrainLog {
         for &(k, t) in &self.tau_trace {
             h.u64(k as u64);
             h.u64(t as u64);
+        }
+        // Fault-axis observables. Hashed only when a fault actually fired:
+        // fault-free runs (including runs whose schedule never triggers)
+        // keep every pre-fault digest bit-identical.
+        if !self.fault_trace.is_empty() {
+            for (r, ev) in &self.fault_trace {
+                h.u64(*r as u64);
+                h.bytes(ev.as_bytes());
+            }
+        }
+        if !self.survivors.is_empty() {
+            for &(r, c) in &self.survivors {
+                h.u64(r as u64);
+                h.u64(c as u64);
+            }
         }
         // Topology-axis observable. Hashed only when engaged (any nonzero):
         // the seed's ring runs keep their all-zero vector out of the digest,
@@ -316,6 +351,8 @@ mod tests {
             ],
             step_losses: vec![(0, 2.3), (16, 1.5)],
             tau_trace: Vec::new(),
+            fault_trace: Vec::new(),
+            survivors: Vec::new(),
             neighbor_bytes: vec![0; 8],
             total_sim_time: 7.0,
             total_compute_s: 50.0,
@@ -363,6 +400,14 @@ mod tests {
         assert_eq!(a.digest(), d.digest(), "inert neighbor accounting must not drift");
         d.neighbor_bytes[2] = 1 << 10;
         assert_ne!(a.digest(), d.digest(), "digest must see neighbor bytes");
+        // The fault axis is digest-visible once a fault fires, but empty
+        // traces leave fault-free digests untouched.
+        let mut f = sample_log();
+        f.fault_trace.push((3, "crash@3:2".into()));
+        assert_ne!(a.digest(), f.digest(), "digest must see the fault trace");
+        let mut g = sample_log();
+        g.survivors.push((3, 7));
+        assert_ne!(a.digest(), g.digest(), "digest must see the survivor series");
         // Hot-path counters are reporting-only: memory behavior (spawns,
         // pool misses) must never shift a digest.
         let mut e = sample_log();

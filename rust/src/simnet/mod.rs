@@ -117,6 +117,14 @@ impl NetworkModel {
         degree as f64 * (self.latency_s + bytes as f64 / self.bandwidth_bps)
     }
 
+    /// State fetch for a worker rejoining after a crash (DESIGN.md §11):
+    /// one full anchor message from a live peer, serialized on that peer's
+    /// NIC — a point-to-point transfer, so no collective handshake. Charged
+    /// as blocked-communication time to the rejoiner only.
+    pub fn rejoin_fetch_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
     /// All-gather of per-node `bytes` (PowerSGD's second phase uses this
     /// shape; cost equals a ring all-gather = (m-1) hops).
     pub fn allgather_time(&self, bytes: usize, m: usize) -> f64 {

@@ -33,6 +33,7 @@
 use anyhow::{bail, Result};
 
 use crate::collective::{ring_allreduce_mean_with, ReduceScratch};
+use crate::fault::AliveSet;
 use crate::simnet::NetworkModel;
 use crate::util::rng::Rng;
 
@@ -201,11 +202,70 @@ impl Topology {
         match self.kind {
             TopologyKind::Ring => ring_allreduce_mean_with(buffers, &mut scratch.arena),
             TopologyKind::Tree => tree_allreduce_mean(buffers, &mut scratch.root),
-            TopologyKind::Hier => hier_allreduce_mean(buffers, &self.groups, scratch),
+            TopologyKind::Hier => {
+                hier_allreduce_mean(buffers, &self.groups, &mut scratch.arena, &mut scratch.leaders)
+            }
             TopologyKind::Gossip => {
                 panic!("gossip topology has no exact all-reduce; use gossip_mix")
             }
         }
+    }
+
+    /// Alive-set-aware exact all-reduce (DESIGN.md §11): reduces the
+    /// *members'* buffers (`alive.members()`) in place to their exact
+    /// survivor mean, leaving every other buffer bit-untouched. With a full
+    /// alive set this is exactly [`Topology::allreduce_mean_with`]
+    /// (bit-identical — the empty-fault-schedule digest guarantee);
+    /// otherwise the members' buffers are swapped into compact scratch
+    /// slots (no copies, no allocations once warm) and the topology's real
+    /// schedule runs over the survivor sub-graph via
+    /// [`Topology::allreduce_mean_compact`].
+    pub fn allreduce_mean_alive_with(
+        &self,
+        buffers: &mut [Vec<f32>],
+        alive: &AliveSet,
+        scratch: &mut ReduceScratch,
+    ) {
+        assert_eq!(buffers.len(), self.m, "buffer count != topology size");
+        assert_eq!(alive.len(), self.m, "alive set != topology size");
+        if alive.is_full() {
+            return self.allreduce_mean_with(buffers, scratch);
+        }
+        let members = alive.members();
+        assert!(!members.is_empty(), "alive-set reduce needs at least one member");
+        let a = members.len();
+        if scratch.active.len() < a {
+            scratch.active.resize_with(a, Vec::new);
+        }
+        // Destructure (a reborrow of the scratch fields) so the compact
+        // reduce can use the remaining scratch pieces while `active` holds
+        // the swapped-in survivor buffers.
+        let ReduceScratch { arena, root, leaders, active, bounds } = &mut *scratch;
+        for (slot, &w) in members.iter().enumerate() {
+            std::mem::swap(&mut active[slot], &mut buffers[w]);
+        }
+        reduce_compact(self, &mut active[..a], members, arena, root, leaders, bounds);
+        for (slot, &w) in members.iter().enumerate() {
+            std::mem::swap(&mut active[slot], &mut buffers[w]);
+        }
+    }
+
+    /// Exact all-reduce (mean) over an already-compacted survivor buffer
+    /// set: `buffers[k]` belongs to worker `members[k]` (ascending). Runs
+    /// this topology's real schedule on the survivor sub-graph — the ring
+    /// and tree over the `a` survivors, the hierarchy over the survivor
+    /// intersection of its original groups (size-weighted, so the result is
+    /// the exact survivor mean even for ragged subgroup sizes). This is the
+    /// data plane of `collective::launch_collective_among`.
+    pub fn allreduce_mean_compact(
+        &self,
+        buffers: &mut [Vec<f32>],
+        members: &[usize],
+        scratch: &mut ReduceScratch,
+    ) {
+        assert_eq!(buffers.len(), members.len(), "one buffer per member");
+        let ReduceScratch { arena, root, leaders, active: _, bounds } = &mut *scratch;
+        reduce_compact(self, buffers, members, arena, root, leaders, bounds);
     }
 
     /// One push-sum gossip round over the full neighbor sets: returns the
@@ -253,6 +313,75 @@ impl Topology {
                 w_out[i] += share as f64 * weights[j];
             }
         }
+    }
+
+    /// Alive-set-aware push-sum round into caller-provided storage
+    /// (DESIGN.md §11): dead workers neither send nor receive (their output
+    /// rows are zeroed and their weights land at exactly 0 — the caller
+    /// keeps their old state), and every edge is filtered through
+    /// [`AliveSet::edge_allowed`], so a partition localizes the mix to each
+    /// component. Each live sender spreads uniformly over itself plus its
+    /// *allowed* neighbors — column-stochastic over the survivors, so
+    /// survivor mass (values and weights alike) is conserved per component
+    /// and the de-biased fixed point stays each component's exact survivor
+    /// average. With a full alive set this is bit-identical to
+    /// [`Topology::gossip_mix_into`].
+    pub fn gossip_mix_alive_into(
+        &self,
+        values: &[Vec<f32>],
+        weights: &[f64],
+        alive: &AliveSet,
+        out: &mut [Vec<f32>],
+        w_out: &mut [f64],
+    ) {
+        let m = values.len();
+        assert_eq!(m, self.m, "value count != topology size");
+        assert_eq!(alive.len(), m, "alive set != topology size");
+        assert_eq!(weights.len(), m, "weight count != topology size");
+        assert_eq!(out.len(), m, "output count != topology size");
+        assert_eq!(w_out.len(), m, "output weight count != topology size");
+        let n = values.first().map(|v| v.len()).unwrap_or(0);
+        for o in out.iter_mut() {
+            assert_eq!(o.len(), n, "output length mismatch in gossip mix");
+            o.fill(0.0);
+        }
+        w_out.fill(0.0);
+        for j in 0..m {
+            if !alive.is_alive(j) {
+                continue;
+            }
+            let allowed =
+                self.neighbors(j).iter().filter(|&&i| alive.edge_allowed(j, i)).count();
+            let share = 1.0f32 / (1 + allowed) as f32;
+            for (o, &x) in out[j].iter_mut().zip(values[j].iter()) {
+                *o += share * x;
+            }
+            w_out[j] += share as f64 * weights[j];
+            for &i in self.neighbors(j) {
+                if !alive.edge_allowed(j, i) {
+                    continue;
+                }
+                for (o, &x) in out[i].iter_mut().zip(values[j].iter()) {
+                    *o += share * x;
+                }
+                w_out[i] += share as f64 * weights[j];
+            }
+        }
+    }
+
+    /// Allocating form of [`Topology::gossip_mix_alive_into`] (tests and
+    /// property sweeps).
+    pub fn gossip_mix_alive(
+        &self,
+        values: &[Vec<f32>],
+        weights: &[f64],
+        alive: &AliveSet,
+    ) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let n = values.first().map(|v| v.len()).unwrap_or(0);
+        let mut out = vec![vec![0.0f32; n]; values.len()];
+        let mut w_out = vec![0.0f64; values.len()];
+        self.gossip_mix_alive_into(values, weights, alive, &mut out, &mut w_out);
+        (out, w_out)
     }
 
     /// Push-sum round over per-sender *subsets* of the out-edges (partial
@@ -336,6 +465,51 @@ impl Topology {
         }
     }
 
+    /// Virtual duration of one collective of `bytes` over the alive set's
+    /// *members* (DESIGN.md §11): the same per-topology formulas evaluated
+    /// at the survivor sub-cluster shape — the ring and tree at the member
+    /// count, the hierarchy at its largest surviving subgroup and nonempty
+    /// group count (degenerating to one plain ring when only one group
+    /// survives, mirroring the data plane). Equals
+    /// [`Topology::collective_time`] exactly when the alive set is full.
+    /// Panics for `Gossip`, whose per-neighborhood timing lives in the
+    /// gossip strategy.
+    pub fn collective_time_alive(
+        &self,
+        net: &NetworkModel,
+        bytes: usize,
+        alive: &AliveSet,
+    ) -> f64 {
+        if alive.is_full() {
+            return self.collective_time(net, bytes);
+        }
+        let a = alive.member_count();
+        match self.kind {
+            TopologyKind::Ring => net.allreduce_time(bytes, a),
+            TopologyKind::Tree => net.tree_allreduce_time(bytes, a),
+            TopologyKind::Hier => {
+                let mut largest = 0usize;
+                let mut nonempty = 0usize;
+                for &(lo, hi) in &self.groups {
+                    let size =
+                        alive.members().iter().filter(|&&w| (lo..hi).contains(&w)).count();
+                    if size > 0 {
+                        nonempty += 1;
+                        largest = largest.max(size);
+                    }
+                }
+                if nonempty <= 1 {
+                    net.allreduce_time(bytes, a)
+                } else {
+                    net.hier_allreduce_time(bytes, largest, nonempty)
+                }
+            }
+            TopologyKind::Gossip => {
+                panic!("gossip timing is per-neighborhood; see coordinator::gossip")
+            }
+        }
+    }
+
     /// Per-worker bytes *transmitted* during one collective of
     /// `message_bytes` — the `TrainLog::neighbor_bytes` accounting. The ring
     /// keeps the seed's NCCL convention (one full message per worker); the
@@ -392,6 +566,127 @@ impl Topology {
             }
         }
     }
+
+    /// [`Topology::neighbor_bytes`] over the alive set: dead (and, for the
+    /// exact topologies, partitioned-away) workers transmit nothing, and
+    /// every schedule counts the traffic of its survivor sub-graph — the
+    /// ring keeps its one-message-per-participant convention, hier/tree
+    /// mirror their compact data planes, gossip counts only the edges
+    /// [`AliveSet::edge_allowed`] admits. Equal to
+    /// [`Topology::neighbor_bytes`] when the alive set is full.
+    pub fn neighbor_bytes_alive(&self, message_bytes: usize, alive: &AliveSet) -> Vec<u64> {
+        if alive.is_full() {
+            return self.neighbor_bytes(message_bytes);
+        }
+        let msg = message_bytes as u64;
+        let mut per = vec![0u64; self.m];
+        match self.kind {
+            TopologyKind::Ring => {
+                for &w in alive.members() {
+                    per[w] = msg;
+                }
+            }
+            TopologyKind::Gossip => {
+                for i in 0..self.m {
+                    if alive.is_alive(i) {
+                        let deg = self
+                            .neighbors(i)
+                            .iter()
+                            .filter(|&&j| alive.edge_allowed(i, j))
+                            .count();
+                        per[i] = deg as u64 * msg;
+                    }
+                }
+            }
+            TopologyKind::Tree => {
+                // The compact tree over the a survivors, scattered back to
+                // their original worker ids.
+                let members = alive.members();
+                let a = members.len();
+                let mut gap = 1;
+                while gap < a {
+                    let mut i = 0;
+                    while i + gap < a {
+                        per[members[i + gap]] += msg; // reduce hop up
+                        per[members[i]] += msg; // broadcast hop down
+                        i += 2 * gap;
+                    }
+                    gap *= 2;
+                }
+            }
+            TopologyKind::Hier => {
+                // Survivor intersection of the original groups, mirroring
+                // the masked data plane: one ring message per member of a
+                // non-trivial subgroup, the subgroup leader broadcasts and
+                // rides the inter ring (only when >= 2 subgroups survive).
+                let members = alive.members();
+                let nonempty = self
+                    .groups
+                    .iter()
+                    .filter(|&&(lo, hi)| members.iter().any(|&w| (lo..hi).contains(&w)))
+                    .count();
+                if nonempty <= 1 {
+                    for &w in members {
+                        per[w] = msg; // one plain ring over the survivors
+                    }
+                    return per;
+                }
+                for &(lo, hi) in &self.groups {
+                    let sub: Vec<usize> =
+                        members.iter().copied().filter(|&w| (lo..hi).contains(&w)).collect();
+                    if sub.is_empty() {
+                        continue;
+                    }
+                    let size = sub.len() as u64;
+                    if size > 1 {
+                        for &w in &sub {
+                            per[w] += msg; // intra-group ring
+                        }
+                        per[sub[0]] += (size - 1) * msg; // leader broadcast
+                    }
+                    per[sub[0]] += msg; // inter-group ring
+                }
+            }
+        }
+        per
+    }
+}
+
+/// Run `topo`'s exact reduce schedule over an already-compacted survivor
+/// buffer set (`bufs[k]` ↔ worker `members[k]`), using the caller's
+/// persistent scratch pieces. The hierarchy reduces over the survivor
+/// intersection of its original groups (contiguous in the compact index
+/// space because groups and members are both ascending), computed into the
+/// reusable `bounds` scratch.
+fn reduce_compact(
+    topo: &Topology,
+    bufs: &mut [Vec<f32>],
+    members: &[usize],
+    arena: &mut Vec<f32>,
+    root: &mut Vec<f32>,
+    leaders: &mut Vec<Vec<f32>>,
+    bounds: &mut Vec<(usize, usize)>,
+) {
+    match topo.kind {
+        TopologyKind::Ring => ring_allreduce_mean_with(bufs, arena),
+        TopologyKind::Tree => tree_allreduce_mean(bufs, root),
+        TopologyKind::Hier => {
+            bounds.clear();
+            let mut start = 0usize;
+            for &(lo, hi) in &topo.groups {
+                let size = members.iter().filter(|&&w| (lo..hi).contains(&w)).count();
+                if size > 0 {
+                    bounds.push((start, start + size));
+                    start += size;
+                }
+            }
+            debug_assert_eq!(start, bufs.len(), "subgroup bounds must cover the members");
+            hier_allreduce_mean(bufs, bounds, arena, leaders);
+        }
+        TopologyKind::Gossip => {
+            panic!("gossip topology has no exact all-reduce; use gossip_mix")
+        }
+    }
 }
 
 /// Binary-tree all-reduce (mean): pairwise reduction at doubling gaps, scale
@@ -436,40 +731,42 @@ fn tree_allreduce_mean(buffers: &mut [Vec<f32>], root: &mut Vec<f32>) {
 /// Hierarchical two-level all-reduce (mean): ring within each contiguous
 /// group, size-weighted ring across the group leaders, leader broadcast.
 /// Weighting by group size keeps the result the exact *global* mean even
-/// when `m % groups != 0`. Leader buffers and ring arenas come from
-/// `scratch` (every slot rewritten before read).
+/// when `m % groups != 0` (or when faults leave ragged survivor
+/// subgroups). Leader buffers and ring arenas are caller-provided scratch
+/// (every slot rewritten before read).
 fn hier_allreduce_mean(
     buffers: &mut [Vec<f32>],
     groups: &[(usize, usize)],
-    scratch: &mut ReduceScratch,
+    arena: &mut Vec<f32>,
+    leader_scratch: &mut Vec<Vec<f32>>,
 ) {
     let m = buffers.len();
     assert!(m > 0, "no buffers");
     if m == 1 || groups.len() <= 1 {
-        ring_allreduce_mean_with(buffers, &mut scratch.arena);
+        ring_allreduce_mean_with(buffers, arena);
         return;
     }
     // Intra-group rings: every member of group g ends with the group mean.
     for &(lo, hi) in groups {
-        ring_allreduce_mean_with(&mut buffers[lo..hi], &mut scratch.arena);
+        ring_allreduce_mean_with(&mut buffers[lo..hi], arena);
     }
     // Inter-group ring over size-scaled leader copies:
     // mean_g(size_g * mean_g) = (Σ size_g mean_g) / G, so scaling the ring
     // output by G/m recovers the exact global mean.
     let g = groups.len();
-    scratch.leaders.resize_with(g, Vec::new);
-    for (leader, &(lo, hi)) in scratch.leaders.iter_mut().zip(groups) {
+    leader_scratch.resize_with(g.max(leader_scratch.len()), Vec::new);
+    for (leader, &(lo, hi)) in leader_scratch.iter_mut().zip(groups) {
         let size = (hi - lo) as f32;
         leader.clear();
         leader.extend(buffers[lo].iter().map(|&v| v * size));
     }
-    ring_allreduce_mean_with(&mut scratch.leaders[..g], &mut scratch.arena);
+    ring_allreduce_mean_with(&mut leader_scratch[..g], arena);
     let scale = g as f32 / m as f32;
-    for v in scratch.leaders[0].iter_mut() {
+    for v in leader_scratch[0].iter_mut() {
         *v *= scale;
     }
     // Leader broadcast within each group.
-    let result = &scratch.leaders[0];
+    let result = &leader_scratch[0];
     for &(lo, hi) in groups {
         for b in buffers[lo..hi].iter_mut() {
             b.copy_from_slice(result);

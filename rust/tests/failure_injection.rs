@@ -2,18 +2,28 @@
 //! loudly and helpfully on malformed inputs (corrupted artifacts, shape
 //! mismatches, bad configs), and must *degrade gracefully* on hostile
 //! clusters — slow nodes, τ larger than the run, single-worker clusters —
-//! including the new scenario axes (heterogeneous τ, adaptive τ).
+//! including the new scenario axes (heterogeneous τ, adaptive τ), and the
+//! **E14 fault suite** (DESIGN.md §11): crash-at-round, rejoin-from-anchor,
+//! and partition cases on the m = 16 paper shape with sim↔threads digest
+//! equality under identical fault schedules, plus property tests showing
+//! the alive-set-aware reduces and the de-biased gossip mix are exactly
+//! mean-preserving over survivors.
 //!
 //! Artifact-free by default (native backend); the tests that exercise the
 //! PJRT artifact loader are gated on the `pjrt` feature.
 
-use olsgd::config::{Algo, ExperimentConfig};
+use olsgd::collective::ReduceScratch;
+use olsgd::config::{Algo, Execution, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
+use olsgd::fault::AliveSet;
 use olsgd::metrics::TrainLog;
+use olsgd::model::vecmath;
 use olsgd::runtime::manifest::Manifest;
 use olsgd::runtime::ModelRuntime;
 use olsgd::simnet::StragglerModel;
+use olsgd::topology::Topology;
+use olsgd::util::proptest::{assert_close, property};
 
 #[cfg(feature = "pjrt")]
 #[test]
@@ -175,6 +185,361 @@ fn slow_node_with_hetero_tau_idles_less_than_uniform_tau() {
     // Mitigation also shows up as wall-clock: the hetero run finishes sooner.
     assert!(lh.total_sim_time < lu.total_sim_time);
     assert!(lh.final_loss().is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// E14 — crashes, rejoins, and partitions with bit-deterministic replay
+// ---------------------------------------------------------------------------
+
+/// The m = 16 paper cluster shape, 4 rounds at τ = 2, jitter stragglers so
+/// the per-worker RNG streams are live under true concurrency — the same
+/// shape the hot-path locks use.
+fn paper16(algo: Algo) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
+    cfg.workers = 16;
+    cfg.train_n = 16 * 64; // 64/shard -> 2 steps/epoch
+    cfg.test_n = 100;
+    cfg.epochs = 4.0; // 8 global steps -> 4 rounds at tau = 2
+    cfg.eval_every = 2.0;
+    cfg.tau = 2;
+    cfg.algo = algo;
+    cfg.straggler = StragglerModel::UniformJitter { jitter: 0.2 };
+    cfg
+}
+
+/// Run one config on both execution backends.
+fn run_both(cfg: &ExperimentConfig) -> (TrainLog, TrainLog) {
+    let rt = ModelRuntime::native(&cfg.model).unwrap();
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.execution = Execution::Sim;
+    let sim = run_experiment(&rt, &sim_cfg, &train, &test).unwrap();
+    let mut thr_cfg = cfg.clone();
+    thr_cfg.execution = Execution::Threads;
+    let thr = run_experiment(&rt, &thr_cfg, &train, &test).unwrap();
+    (sim, thr)
+}
+
+/// Crash-at-round on the paper shape for the overlapped family: the fault
+/// must be recorded, the survivor count must drop, both backends must agree
+/// bit-for-bit, and the run must stay healthy.
+#[test]
+fn crash_at_round_is_backend_invariant_for_the_overlap_family() {
+    for algo in [Algo::OverlapM, Algo::Cocod, Algo::OverlapGossip] {
+        let mut cfg = paper16(algo);
+        cfg.set("fault", "crash@3:2;crash@3:7").unwrap();
+        let (sim, thr) = run_both(&cfg);
+        assert_eq!(
+            sim.digest(),
+            thr.digest(),
+            "{algo:?}: threads drifted from sim under a crash schedule"
+        );
+        assert_eq!(
+            sim.fault_trace,
+            vec![(3, "crash@3:2".to_string()), (3, "crash@3:7".to_string())],
+            "{algo:?}"
+        );
+        assert_eq!(sim.survivors, vec![(3, 14)], "{algo:?}");
+        assert!(sim.final_loss().is_finite(), "{algo:?}");
+        // Deterministic replay: a second identical pair reproduces the digest.
+        let (sim2, _) = run_both(&cfg);
+        assert_eq!(sim.digest(), sim2.digest(), "{algo:?}: replay must be pure");
+    }
+}
+
+/// Crash then rejoin: the worker comes back warm-started from the anchor,
+/// the survivor series recovers, and the backends agree.
+#[test]
+fn rejoin_from_anchor_recovers_the_survivor_count() {
+    for algo in [Algo::OverlapM, Algo::OverlapGossip, Algo::Eamsgd, Algo::Local] {
+        let mut cfg = paper16(algo);
+        cfg.set("fault", "crash@2:1;rejoin@4:1").unwrap();
+        let (sim, thr) = run_both(&cfg);
+        assert_eq!(sim.digest(), thr.digest(), "{algo:?}: rejoin schedule drifted");
+        assert_eq!(sim.survivors, vec![(2, 15), (4, 16)], "{algo:?}");
+        assert!(sim.final_loss().is_finite(), "{algo:?}");
+        // The crash-only run is observably different from crash + rejoin.
+        let mut crash_only = paper16(algo);
+        crash_only.set("fault", "crash@2:1").unwrap();
+        let (co, _) = run_both(&crash_only);
+        assert_ne!(sim.digest(), co.digest(), "{algo:?}: rejoin must be digest-visible");
+    }
+}
+
+/// Partitions: the exact-collective strategies park the minority (quorum
+/// semantics) and recover it on heal; the decentralized gossip strategy
+/// keeps every alive worker stepping straight through the partition.
+#[test]
+fn partition_parks_the_minority_for_exact_strategies_and_heals() {
+    for algo in [Algo::OverlapM, Algo::Cocod] {
+        let mut cfg = paper16(algo);
+        cfg.set(
+            "fault",
+            "partition@2:0,1,2,3,4,5,6|7,8,9,10,11,12,13,14,15;heal@4",
+        )
+        .unwrap();
+        let (sim, thr) = run_both(&cfg);
+        assert_eq!(sim.digest(), thr.digest(), "{algo:?}: partition schedule drifted");
+        // The 9-worker side holds the quorum; the 7-worker side parks,
+        // then returns (anchor warm start) on heal.
+        assert_eq!(sim.survivors, vec![(2, 9), (4, 16)], "{algo:?}");
+        assert!(sim.final_loss().is_finite(), "{algo:?}");
+    }
+}
+
+#[test]
+fn gossip_keeps_every_component_training_through_a_partition() {
+    let mut cfg = paper16(Algo::OverlapGossip);
+    cfg.set(
+        "fault",
+        "partition@2:0,1,2,3,4,5,6|7,8,9,10,11,12,13,14,15",
+    )
+    .unwrap();
+    let (sim, thr) = run_both(&cfg);
+    assert_eq!(sim.digest(), thr.digest(), "gossip partition drifted across backends");
+    // Decentralized: the stepping count never changes — no survivor points.
+    assert!(
+        sim.survivors.is_empty(),
+        "gossip must keep every alive worker stepping: {:?}",
+        sim.survivors
+    );
+    assert_eq!(sim.fault_trace.len(), 1, "the partition itself is traced");
+    // The partition still bites (localized mixing, fewer live edges).
+    let (base, _) = run_both(&paper16(Algo::OverlapGossip));
+    assert_ne!(sim.digest(), base.digest(), "the partition must be digest-visible");
+    assert!(sim.final_loss().is_finite());
+}
+
+/// The acceptance-criterion regression: a schedule that never fires (and a
+/// zero-rate random process) must leave the digest bit-identical to the
+/// fault-free run — every fault-aware code path takes its pre-fault branch.
+#[test]
+fn never_firing_schedules_keep_the_fault_free_digest() {
+    for algo in [Algo::OverlapM, Algo::Cocod, Algo::OverlapGossip, Algo::Local, Algo::Sync] {
+        let (base, base_thr) = run_both(&paper16(algo));
+        assert_eq!(base.digest(), base_thr.digest(), "{algo:?}");
+        let mut cfg = paper16(algo);
+        cfg.set("fault", "crash@999:1;rejoin@1000:1").unwrap();
+        let (never, _) = run_both(&cfg);
+        assert_eq!(
+            base.digest(),
+            never.digest(),
+            "{algo:?}: an un-fired schedule must be bit-inert"
+        );
+        assert!(never.fault_trace.is_empty() && never.survivors.is_empty());
+    }
+}
+
+/// The random fault process (`fault_rate` / `rejoin_rate`) is a seeded
+/// coordinator-side draw: reproducible run to run and identical across
+/// backends.
+#[test]
+fn random_fault_process_is_deterministic_and_backend_invariant() {
+    let mut cfg = paper16(Algo::OverlapM);
+    cfg.epochs = 8.0; // 8 rounds: enough draws that the process fires
+    cfg.set("fault_rate", "0.3").unwrap();
+    cfg.set("rejoin_rate", "0.5").unwrap();
+    let (sim, thr) = run_both(&cfg);
+    assert_eq!(sim.digest(), thr.digest(), "random faults drifted across backends");
+    assert!(
+        !sim.fault_trace.is_empty(),
+        "a 30% per-worker rate over 8 rounds must fire"
+    );
+    let (sim2, _) = run_both(&cfg);
+    assert_eq!(sim.digest(), sim2.digest(), "random faults must replay identically");
+    assert_eq!(sim.fault_trace, sim2.fault_trace);
+    assert!(sim.final_loss().is_finite());
+}
+
+/// Impossible or unsupported schedules fail loudly, not silently.
+#[test]
+fn impossible_fault_schedules_fail_loudly() {
+    let rt = ModelRuntime::native("linear").unwrap();
+    let gen = GenConfig::default();
+    let attempt = |cfg: &ExperimentConfig| {
+        let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+        let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+        run_experiment(&rt, cfg, &train, &test)
+    };
+    // Killing every worker.
+    let mut cfg = paper16(Algo::OverlapM);
+    cfg.workers = 2;
+    cfg.train_n = 128;
+    cfg.set("fault", "crash@2:0;crash@2:1").unwrap();
+    let msg = format!("{:#}", attempt(&cfg).unwrap_err());
+    assert!(msg.contains("no live worker"), "unhelpful error: {msg}");
+    // Out-of-range worker.
+    let mut cfg = paper16(Algo::OverlapM);
+    cfg.set("fault", "crash@2:99").unwrap();
+    let msg = format!("{:#}", attempt(&cfg).unwrap_err());
+    assert!(msg.contains("99"), "unhelpful error: {msg}");
+    // PowerSGD has no rejoin protocol for its compressor state.
+    let mut cfg = paper16(Algo::PowerSgd);
+    cfg.set("fault", "crash@2:0").unwrap();
+    let msg = format!("{:#}", attempt(&cfg).unwrap_err());
+    assert!(msg.contains("powersgd"), "unhelpful error: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Property tests — survivor-mean preservation of the masked data planes
+// ---------------------------------------------------------------------------
+
+/// Alive-set-aware ring/tree/hier reduces are exactly mean-preserving over
+/// the survivors, for random alive subsets (including n < m chunking shapes
+/// and the 1-survivor edge), and leave dead buffers bit-untouched.
+#[test]
+fn property_masked_exact_reduces_are_mean_preserving_over_survivors() {
+    property("alive-set reduce == survivor mean", 120, |g| {
+        let m = g.usize_in(1, 10);
+        let n = g.usize_in(1, 2 * m + 3); // n < m shapes included
+        let mut alive: Vec<bool> = (0..m).map(|_| g.bool()).collect();
+        if g.bool() {
+            // Force the 1-survivor edge regularly.
+            alive.iter_mut().for_each(|a| *a = false);
+        }
+        alive[g.usize_in(0, m - 1)] = true;
+        let aset = AliveSet::with_alive(alive.clone());
+        let topos = [
+            Topology::ring(m),
+            Topology::tree(m),
+            Topology::hier(m, g.usize_in(1, m)),
+        ];
+        for topo in topos {
+            let inputs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 5.0)).collect();
+            let refs: Vec<&[f32]> =
+                aset.members().iter().map(|&w| inputs[w].as_slice()).collect();
+            let want = vecmath::mean(&refs);
+            let mut bufs = inputs.clone();
+            let mut scratch = ReduceScratch::default();
+            topo.allreduce_mean_alive_with(&mut bufs, &aset, &mut scratch);
+            for w in 0..m {
+                if aset.is_member(w) {
+                    assert_close(&bufs[w], &want, 1e-4, 1e-5);
+                } else {
+                    for (a, b) in bufs[w].iter().zip(&inputs[w]) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "dead buffer touched ({:?}, m={m})",
+                            topo.kind
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// One scratch across many masked shapes: reuse must never change a bit
+/// relative to fresh scratch (the pooled communicator-thread contract).
+#[test]
+fn property_masked_reduce_scratch_reuse_is_bit_identical() {
+    let reused = std::cell::RefCell::new(ReduceScratch::default());
+    property("masked reduce scratch reuse", 60, |g| {
+        let m = g.usize_in(2, 8);
+        let n = g.usize_in(1, 40);
+        let mut alive: Vec<bool> = (0..m).map(|_| g.bool()).collect();
+        alive[g.usize_in(0, m - 1)] = true;
+        let aset = AliveSet::with_alive(alive);
+        for topo in [Topology::ring(m), Topology::tree(m), Topology::hier(m, 2)] {
+            let inputs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 4.0)).collect();
+            let mut fresh = inputs.clone();
+            topo.allreduce_mean_alive_with(&mut fresh, &aset, &mut ReduceScratch::default());
+            let mut warm = inputs;
+            topo.allreduce_mean_alive_with(&mut warm, &aset, &mut reused.borrow_mut());
+            for (a, b) in fresh.iter().zip(&warm) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{:?} m={m} n={n}", topo.kind);
+                }
+            }
+        }
+    });
+}
+
+/// The masked de-biased gossip mix conserves survivor mass (values and
+/// push-sum weights) per partition component, zeroes dead rows, and keeps
+/// the de-biased consensus fixed point exact.
+#[test]
+fn property_masked_gossip_mix_conserves_survivor_mass() {
+    property("masked push-sum conserves survivor mass", 100, |g| {
+        let m = g.usize_in(2, 12);
+        let k = g.usize_in(1, m - 1);
+        let topo = Topology::gossip(m, k, g.rng().next_u64()).unwrap();
+        let n = g.usize_in(1, 24);
+        let mut alive: Vec<bool> = (0..m).map(|_| g.bool()).collect();
+        alive[g.usize_in(0, m - 1)] = true;
+        let aset = if g.bool() {
+            let comp: Vec<usize> = (0..m).map(|_| g.usize_in(0, 1)).collect();
+            AliveSet::with_partition(alive.clone(), comp)
+        } else {
+            AliveSet::with_alive(alive.clone())
+        };
+        let values: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 3.0)).collect();
+        let weights = vec![1.0f64; m];
+        let (out, w_out) = topo.gossip_mix_alive(&values, &weights, &aset);
+        // Survivor mass (per dimension) and total push-sum weight conserved.
+        for d in 0..n {
+            let before: f64 = (0..m)
+                .filter(|&j| aset.is_alive(j))
+                .map(|j| values[j][d] as f64)
+                .sum();
+            let after: f64 = (0..m).map(|i| out[i][d] as f64).sum();
+            assert!(
+                (before - after).abs() <= 1e-3 * (1.0 + before.abs()),
+                "mass leaked at dim {d}: {before} -> {after} (m={m}, k={k})"
+            );
+        }
+        let alive_n = alive.iter().filter(|&&a| a).count() as f64;
+        let total_w: f64 = w_out.iter().sum();
+        // Shares are f32 (1/(1+deg)), so each sender's outgoing weight sums
+        // to 1 only up to f32 rounding — a few ulps per worker.
+        assert!(
+            (total_w - alive_n).abs() < 1e-5 * alive_n.max(1.0),
+            "push-sum weight leaked: {total_w} vs {alive_n}"
+        );
+        // Dead rows receive exactly nothing.
+        for i in 0..m {
+            if !aset.is_alive(i) {
+                assert_eq!(w_out[i], 0.0, "dead worker {i} got weight");
+                assert!(out[i].iter().all(|&x| x == 0.0), "dead worker {i} got mass");
+            }
+        }
+    });
+}
+
+/// Deterministic edges of the masked gossip mix: the consensus fixed point
+/// survives de-biasing bit-exactly on the 1-survivor edge, and within f32
+/// tolerance on a general masked round.
+#[test]
+fn masked_gossip_debias_fixed_point_and_single_survivor() {
+    let topo = Topology::gossip(6, 2, 3).unwrap();
+    // Consensus: every live worker holds the same vector; the de-biased
+    // estimate must return it (value/weight cancels the shares).
+    let mut alive = vec![true; 6];
+    alive[1] = false;
+    alive[4] = false;
+    let aset = AliveSet::with_alive(alive);
+    let c: Vec<f32> = (0..5).map(|i| i as f32 * 0.7 - 1.0).collect();
+    let values: Vec<Vec<f32>> = (0..6).map(|_| c.clone()).collect();
+    let weights = vec![1.0f64; 6];
+    let (out, w_out) = topo.gossip_mix_alive(&values, &weights, &aset);
+    for i in [0usize, 2, 3, 5] {
+        assert!(w_out[i] > 0.0);
+        let est: Vec<f32> = out[i].iter().map(|&x| x / w_out[i] as f32).collect();
+        assert_close(&est, &c, 1e-5, 1e-6);
+    }
+    // Single survivor: no live edges, share = 1 — bit-exact passthrough.
+    let mut alive = vec![false; 6];
+    alive[2] = true;
+    let aset = AliveSet::with_alive(alive);
+    let (out, w_out) = topo.gossip_mix_alive(&values, &weights, &aset);
+    assert_eq!(w_out[2], 1.0);
+    for (a, b) in out[2].iter().zip(&c) {
+        assert_eq!(a.to_bits(), b.to_bits(), "single survivor must keep its value");
+    }
 }
 
 /// Same axis on the non-blocking family: with a slow node, hetero-τ reduces

@@ -136,6 +136,37 @@ fn steady_state_survives_heterogeneous_plans() {
     assert_eq!(thr.hot.steady_buffer_allocs, 0);
 }
 
+/// Fault rounds ride the same memory discipline (DESIGN.md §11): a crash
+/// parks the worker's pool thread (never respawns it), the masked
+/// collective takes a *smaller* pooled snapshot (pure free-list hits), and
+/// the rejoin warm start copies in place — so crash/rejoin rounds after
+/// warm-up introduce zero steady-state spawns and zero tracked allocs,
+/// while staying digest-identical across backends.
+#[test]
+fn crash_and_rejoin_rounds_stay_spawn_and_alloc_free() {
+    for algo in [Algo::OverlapM, Algo::Cocod, Algo::OverlapGossip] {
+        let mut cfg = paper16_cfg(algo);
+        cfg.epochs = 6.0; // 12 global steps -> 6 rounds: 2 warm-up + 4 steady
+        cfg.set("fault", "crash@4:3;rejoin@5:3").unwrap();
+        let (sim, thr) = run_pair(&cfg);
+        assert_eq!(sim.digest(), thr.digest(), "{algo:?}: faulted run drifted from sim");
+        assert_eq!(thr.hot.rounds, 6, "{algo:?}: shape drifted");
+        assert_eq!(
+            thr.hot.thread_spawns_total, 17,
+            "{algo:?}: the pool must never respawn a crashed worker's thread"
+        );
+        assert_eq!(thr.hot.steady_thread_spawns, 0, "{algo:?}");
+        assert_eq!(
+            thr.hot.steady_buffer_allocs, 0,
+            "{algo:?}: masked collectives must recycle, not allocate"
+        );
+        assert_eq!(thr.hot.steady_buffer_alloc_bytes, 0, "{algo:?}");
+        assert!(thr.hot.buffer_hits_total > 0, "{algo:?}");
+        assert_eq!(thr.survivors, vec![(4, 15), (5, 16)], "{algo:?}");
+        assert_eq!(thr.fault_trace.len(), 2, "{algo:?}");
+    }
+}
+
 /// Counters are pure reporting: two identical runs agree on them, and the
 /// digest ignores them entirely (sim and threads share a digest while
 /// reporting different spawn counts).

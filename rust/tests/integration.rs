@@ -1,153 +1,278 @@
-//! Integration tests over the real AOT artifacts: python-lowered HLO ->
-//! PJRT execution -> Rust coordinator substrates. Requires the `pjrt`
-//! feature and `make artifacts`; compiled out otherwise (the artifact-free
-//! equivalents live in runtime::tests and tests/algorithms.rs).
-#![cfg(feature = "pjrt")]
+//! End-to-end integration tests.
+//!
+//! Two tiers:
+//!
+//! * **CLI smoke** (`cli` module, always built): drives the compiled
+//!   `olsgd` binary end to end on the native backend — config parsing
+//!   (including the `--fault` schedule round-trip, DESIGN.md §11), a real
+//!   training run, and the result-file format. This is the tier-1 path a
+//!   sealed machine exercises on every `cargo test`.
+//! * **PJRT artifacts** (`pjrt_artifacts` module): python-lowered HLO →
+//!   PJRT execution → Rust coordinator substrates. Requires the `pjrt`
+//!   feature and `make artifacts`; compiled out otherwise (the
+//!   artifact-free kernel equivalents live in runtime::tests and
+//!   tests/algorithms.rs).
 
-use std::path::Path;
+/// End-to-end runs of the compiled binary (native backend; no artifacts).
+mod cli {
+    use std::path::PathBuf;
+    use std::process::Command;
 
-use olsgd::data::{self, GenConfig, PX};
-use olsgd::model::{init_params, vecmath};
-use olsgd::runtime::Runtime;
-use olsgd::util::proptest::assert_close;
-use olsgd::util::rng::Rng;
+    use olsgd::util::json::Json;
 
-fn runtime() -> Runtime {
-    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` before cargo test")
+    /// A fresh scratch directory under the system temp dir.
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("olsgd_it_{}_{}", tag, std::process::id()));
+        // Stale leftovers from a crashed prior run are fine to clobber.
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("creating scratch dir");
+        dir
+    }
+
+    fn olsgd() -> Command {
+        Command::new(env!("CARGO_BIN_EXE_olsgd"))
+    }
+
+    /// The headline smoke: `olsgd train` with a `--fault` schedule must
+    /// parse, run on the native backend, and emit a result JSON whose
+    /// fault trace and survivor series reflect the schedule — the full
+    /// CLI → config → engine → metrics round-trip in tier-1.
+    #[test]
+    fn train_round_trips_a_fault_schedule_through_the_cli() {
+        let out = scratch("fault");
+        let status = olsgd()
+            .args([
+                "train",
+                "--quiet",
+                "--set", "model=linear",
+                "--set", "workers=4",
+                "--set", "train_n=256",
+                "--set", "test_n=100",
+                "--set", "epochs=3",
+                "--set", "tau=2",
+                "--set", "algo=overlap-m",
+                "--fault", "crash@2:1",
+                "--fault", "rejoin@3:1",
+                "--out", out.to_str().unwrap(),
+            ])
+            .status()
+            .expect("spawning olsgd");
+        assert!(status.success(), "olsgd train failed");
+
+        let json_path = out.join("overlap-m_tau2.json");
+        let text = std::fs::read_to_string(&json_path)
+            .unwrap_or_else(|e| panic!("missing {json_path:?}: {e}"));
+        let j = Json::parse(&text).expect("result JSON must parse");
+        let trace = j.get("fault_trace").unwrap();
+        let trace = trace.as_arr().unwrap();
+        assert_eq!(trace.len(), 2, "both fault events must be traced");
+        assert_eq!(
+            trace[0].get("event").unwrap().as_str().unwrap(),
+            "crash@2:1"
+        );
+        assert_eq!(
+            trace[1].get("event").unwrap().as_str().unwrap(),
+            "rejoin@3:1"
+        );
+        let survivors = j.get("survivors").unwrap();
+        assert_eq!(survivors.as_arr().unwrap().len(), 2, "3 -> 4 survivor points");
+        let acc = j.get("final_acc").unwrap().as_f64().unwrap();
+        assert!(acc.is_finite());
+        let _ = std::fs::remove_dir_all(&out);
+    }
+
+    /// A malformed fault spec is a pre-run, non-zero-exit error with the
+    /// offending spec named — never a silent default.
+    #[test]
+    fn cli_rejects_a_malformed_fault_spec() {
+        let output = olsgd()
+            .args(["train", "--quiet", "--fault", "crash@two:1"])
+            .output()
+            .expect("spawning olsgd");
+        assert!(!output.status.success(), "malformed --fault must fail");
+        let stderr = String::from_utf8_lossy(&output.stderr);
+        assert!(
+            stderr.contains("crash@two:1"),
+            "error must name the bad spec: {stderr}"
+        );
+    }
+
+    /// Fault-free CLI smoke on the threads backend: the same command the
+    /// README quickstart shows, end to end.
+    #[test]
+    fn train_smoke_runs_on_the_threads_backend() {
+        let out = scratch("threads");
+        let status = olsgd()
+            .args([
+                "train",
+                "--quiet",
+                "--set", "model=linear",
+                "--set", "workers=3",
+                "--set", "train_n=192",
+                "--set", "test_n=100",
+                "--set", "epochs=2",
+                "--execution", "threads",
+                "--out", out.to_str().unwrap(),
+            ])
+            .status()
+            .expect("spawning olsgd");
+        assert!(status.success(), "threads-backend train failed");
+        assert!(out.join("overlap-m_tau2.json").exists());
+        let _ = std::fs::remove_dir_all(&out);
+    }
 }
 
-#[test]
-fn manifest_layouts_are_consistent_for_all_models() {
-    let rt = runtime();
-    assert!(!rt.manifest.models.is_empty());
-    for (name, m) in &rt.manifest.models {
-        m.check_layout().unwrap_or_else(|e| panic!("bad layout for {name}: {e}"));
-        for tag in ["train_step", "grad_step", "eval", "pullback", "anchor", "update"] {
-            assert!(m.modules.contains_key(tag), "{name} missing module {tag}");
+/// Integration tests over the real AOT artifacts: python-lowered HLO ->
+/// PJRT execution -> Rust coordinator substrates. Requires the `pjrt`
+/// feature and `make artifacts`.
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use std::path::Path;
+
+    use olsgd::data::{self, GenConfig, PX};
+    use olsgd::model::{init_params, vecmath};
+    use olsgd::runtime::Runtime;
+    use olsgd::util::proptest::assert_close;
+    use olsgd::util::rng::Rng;
+
+    fn runtime() -> Runtime {
+        Runtime::new(Path::new("artifacts")).expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn manifest_layouts_are_consistent_for_all_models() {
+        let rt = runtime();
+        assert!(!rt.manifest.models.is_empty());
+        for (name, m) in &rt.manifest.models {
+            m.check_layout().unwrap_or_else(|e| panic!("bad layout for {name}: {e}"));
+            for tag in ["train_step", "grad_step", "eval", "pullback", "anchor", "update"] {
+                assert!(m.modules.contains_key(tag), "{name} missing module {tag}");
+            }
         }
     }
-}
 
-#[test]
-fn train_step_equals_grad_step_plus_update() {
-    // The fused train_step artifact must compose exactly from the grad_step
-    // and update artifacts (same kernels, same order).
-    let rt = runtime();
-    let m = rt.load_model("cnn").unwrap();
-    let params = init_params(&m.manifest, 3);
-    let mom = vec![0.01f32; m.n];
-    let gen = GenConfig::default();
-    let ds = data::generate(9, 64, "train", &gen);
-    let images = ds.images[..m.train_batch * PX].to_vec();
-    let labels = ds.labels[..m.train_batch].to_vec();
+    #[test]
+    fn train_step_equals_grad_step_plus_update() {
+        // The fused train_step artifact must compose exactly from the
+        // grad_step and update artifacts (same kernels, same order).
+        let rt = runtime();
+        let m = rt.load_model("cnn").unwrap();
+        let params = init_params(&m.manifest, 3);
+        let mom = vec![0.01f32; m.n];
+        let gen = GenConfig::default();
+        let ds = data::generate(9, 64, "train", &gen);
+        let images = ds.images[..m.train_batch * PX].to_vec();
+        let labels = ds.labels[..m.train_batch].to_vec();
 
-    let (p1, m1, loss1) = m
-        .train_step(&params, &mom, &images, &labels, 0.05, 0.9, 1e-4)
-        .unwrap();
-    let (loss2, g) = m.grad_step(&params, &images, &labels).unwrap();
-    let (p2, m2) = m.sgd_update(&params, &mom, &g, 0.05, 0.9, 1e-4).unwrap();
-
-    assert!((loss1 - loss2).abs() < 1e-5, "{loss1} vs {loss2}");
-    assert_close(&p1, &p2, 1e-4, 1e-6);
-    assert_close(&m1, &m2, 1e-4, 1e-6);
-}
-
-#[test]
-fn pullback_artifact_matches_rust_vecmath() {
-    let rt = runtime();
-    let m = rt.load_model("cnn").unwrap();
-    let mut rng = Rng::seed_from(5);
-    let mut x = vec![0.0f32; m.n];
-    let mut z = vec![0.0f32; m.n];
-    rng.fill_normal(&mut x, 1.0);
-    rng.fill_normal(&mut z, 1.0);
-    for alpha in [0.0f32, 0.5, 0.6, 1.0] {
-        let got = m.pullback(&x, &z, alpha).unwrap();
-        let mut want = x.clone();
-        vecmath::pullback_inplace(&mut want, &z, alpha);
-        assert_close(&got, &want, 1e-5, 1e-6);
-    }
-}
-
-#[test]
-fn anchor_artifact_matches_rust_vecmath() {
-    let rt = runtime();
-    let m = rt.load_model("cnn").unwrap();
-    let mut rng = Rng::seed_from(6);
-    let mut z = vec![0.0f32; m.n];
-    let mut v = vec![0.0f32; m.n];
-    let mut avg = vec![0.0f32; m.n];
-    rng.fill_normal(&mut z, 1.0);
-    rng.fill_normal(&mut v, 0.3);
-    rng.fill_normal(&mut avg, 1.0);
-    for beta in [0.0f32, 0.7] {
-        let (gz, gv) = m.anchor_update(&z, &v, &avg, beta).unwrap();
-        let mut wz = z.clone();
-        let mut wv = v.clone();
-        vecmath::anchor_update_inplace(&mut wz, &mut wv, &avg, beta);
-        assert_close(&gz, &wz, 1e-5, 1e-6);
-        assert_close(&gv, &wv, 1e-5, 1e-6);
-    }
-}
-
-#[test]
-fn evaluate_set_is_a_probability() {
-    let rt = runtime();
-    let m = rt.load_model("cnn").unwrap();
-    let params = init_params(&m.manifest, 1);
-    let gen = GenConfig::default();
-    let test = data::generate(2, 200, "test", &gen);
-    let (loss, acc) = m.evaluate_set(&params, &test.images, &test.labels).unwrap();
-    assert!(loss > 0.0 && loss.is_finite());
-    assert!((0.0..=1.0).contains(&acc));
-    // random-init accuracy should be near chance
-    assert!(acc < 0.5, "untrained model suspiciously good: {acc}");
-}
-
-#[test]
-fn repeated_training_steps_reduce_loss_mlp() {
-    let rt = runtime();
-    let m = rt.load_model("mlp").unwrap();
-    let mut params = init_params(&m.manifest, 7);
-    let mut mom = vec![0.0f32; m.n];
-    let gen = GenConfig::default();
-    let ds = data::generate(11, 64, "train", &gen);
-    let images = ds.images[..m.train_batch * PX].to_vec();
-    let labels = ds.labels[..m.train_batch].to_vec();
-    let mut first = 0.0;
-    let mut last = 0.0;
-    for i in 0..10 {
-        let (p, mo, loss) = m
-            .train_step(&params, &mom, &images, &labels, 0.05, 0.9, 0.0)
+        let (p1, m1, loss1) = m
+            .train_step(&params, &mom, &images, &labels, 0.05, 0.9, 1e-4)
             .unwrap();
-        params = p;
-        mom = mo;
-        if i == 0 {
-            first = loss;
-        }
-        last = loss;
+        let (loss2, g) = m.grad_step(&params, &images, &labels).unwrap();
+        let (p2, m2) = m.sgd_update(&params, &mom, &g, 0.05, 0.9, 1e-4).unwrap();
+
+        assert!((loss1 - loss2).abs() < 1e-5, "{loss1} vs {loss2}");
+        assert_close(&p1, &p2, 1e-4, 1e-6);
+        assert_close(&m1, &m2, 1e-4, 1e-6);
     }
-    assert!(
-        last < first * 0.8,
-        "loss did not drop fitting one batch: {first} -> {last}"
-    );
-}
 
-#[test]
-fn scalar_hyperparams_change_behaviour() {
-    // lr=0 must be a no-op on params; mu=0 must zero momentum influence.
-    let rt = runtime();
-    let m = rt.load_model("cnn").unwrap();
-    let params = init_params(&m.manifest, 3);
-    let mom = vec![0.5f32; m.n];
-    let mut g = vec![0.0f32; m.n];
-    Rng::seed_from(8).fill_normal(&mut g, 0.1);
+    #[test]
+    fn pullback_artifact_matches_rust_vecmath() {
+        let rt = runtime();
+        let m = rt.load_model("cnn").unwrap();
+        let mut rng = Rng::seed_from(5);
+        let mut x = vec![0.0f32; m.n];
+        let mut z = vec![0.0f32; m.n];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut z, 1.0);
+        for alpha in [0.0f32, 0.5, 0.6, 1.0] {
+            let got = m.pullback(&x, &z, alpha).unwrap();
+            let mut want = x.clone();
+            vecmath::pullback_inplace(&mut want, &z, alpha);
+            assert_close(&got, &want, 1e-5, 1e-6);
+        }
+    }
 
-    let (p0, _) = m.sgd_update(&params, &mom, &g, 0.0, 0.9, 0.0).unwrap();
-    assert_close(&p0, &params, 0.0, 0.0);
+    #[test]
+    fn anchor_artifact_matches_rust_vecmath() {
+        let rt = runtime();
+        let m = rt.load_model("cnn").unwrap();
+        let mut rng = Rng::seed_from(6);
+        let mut z = vec![0.0f32; m.n];
+        let mut v = vec![0.0f32; m.n];
+        let mut avg = vec![0.0f32; m.n];
+        rng.fill_normal(&mut z, 1.0);
+        rng.fill_normal(&mut v, 0.3);
+        rng.fill_normal(&mut avg, 1.0);
+        for beta in [0.0f32, 0.7] {
+            let (gz, gv) = m.anchor_update(&z, &v, &avg, beta).unwrap();
+            let mut wz = z.clone();
+            let mut wv = v.clone();
+            vecmath::anchor_update_inplace(&mut wz, &mut wv, &avg, beta);
+            assert_close(&gz, &wz, 1e-5, 1e-6);
+            assert_close(&gv, &wv, 1e-5, 1e-6);
+        }
+    }
 
-    let (p1, v1) = m.sgd_update(&params, &mom, &g, 0.1, 0.0, 0.0).unwrap();
-    assert_close(&v1, &g, 1e-6, 1e-7);
-    let want: Vec<f32> = params.iter().zip(&g).map(|(&p, &gi)| p - 0.1 * gi).collect();
-    assert_close(&p1, &want, 1e-5, 1e-7);
+    #[test]
+    fn evaluate_set_is_a_probability() {
+        let rt = runtime();
+        let m = rt.load_model("cnn").unwrap();
+        let params = init_params(&m.manifest, 1);
+        let gen = GenConfig::default();
+        let test = data::generate(2, 200, "test", &gen);
+        let (loss, acc) = m.evaluate_set(&params, &test.images, &test.labels).unwrap();
+        assert!(loss > 0.0 && loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+        // random-init accuracy should be near chance
+        assert!(acc < 0.5, "untrained model suspiciously good: {acc}");
+    }
+
+    #[test]
+    fn repeated_training_steps_reduce_loss_mlp() {
+        let rt = runtime();
+        let m = rt.load_model("mlp").unwrap();
+        let mut params = init_params(&m.manifest, 7);
+        let mut mom = vec![0.0f32; m.n];
+        let gen = GenConfig::default();
+        let ds = data::generate(11, 64, "train", &gen);
+        let images = ds.images[..m.train_batch * PX].to_vec();
+        let labels = ds.labels[..m.train_batch].to_vec();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for i in 0..10 {
+            let (p, mo, loss) = m
+                .train_step(&params, &mom, &images, &labels, 0.05, 0.9, 0.0)
+                .unwrap();
+            params = p;
+            mom = mo;
+            if i == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(
+            last < first * 0.8,
+            "loss did not drop fitting one batch: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn scalar_hyperparams_change_behaviour() {
+        // lr=0 must be a no-op on params; mu=0 must zero momentum influence.
+        let rt = runtime();
+        let m = rt.load_model("cnn").unwrap();
+        let params = init_params(&m.manifest, 3);
+        let mom = vec![0.5f32; m.n];
+        let mut g = vec![0.0f32; m.n];
+        Rng::seed_from(8).fill_normal(&mut g, 0.1);
+
+        let (p0, _) = m.sgd_update(&params, &mom, &g, 0.0, 0.9, 0.0).unwrap();
+        assert_close(&p0, &params, 0.0, 0.0);
+
+        let (p1, v1) = m.sgd_update(&params, &mom, &g, 0.1, 0.0, 0.0).unwrap();
+        assert_close(&v1, &g, 1e-6, 1e-7);
+        let want: Vec<f32> = params.iter().zip(&g).map(|(&p, &gi)| p - 0.1 * gi).collect();
+        assert_close(&p1, &want, 1e-5, 1e-7);
+    }
 }
