@@ -1,0 +1,118 @@
+//! **E15 — bytes-vs-final-loss Pareto for the compression axis**
+//! (DESIGN.md §12, EXPERIMENTS.md E15): what does each compressor buy on
+//! the wire, and what does it cost in final loss?
+//!
+//! Legs: {none, topk, qsgd, powersgd} × {sync, overlap-m} on the ring, plus
+//! a hierarchical-topology leg (the per-topology cost formulas must see the
+//! scaled payload) and a threads-backend leg (the compressed hot path must
+//! stay spawn- and alloc-free on real cores). Every row records the
+//! compressed `bytes_sent` next to the same leg's *uncompressed* baseline
+//! bytes — the CI `compression-matrix` job gates on
+//! `bytes_sent < uncompressed_bytes` for every real compressor and on
+//! `steady_buffer_allocs == 0` across the board.
+//!
+//! The summary lands in `results/compression/E15_compression.json`.
+
+use anyhow::Result;
+use olsgd::bench::experiments::BenchCtx;
+use olsgd::config::Algo;
+use olsgd::metrics::TrainLog;
+use olsgd::util::json::{num, obj, s, Json};
+
+fn leg_row(label: &str, topology: &str, log: &TrainLog, uncompressed_bytes: u64) -> Json {
+    obj(vec![
+        ("label", s(label)),
+        ("algo", s(&log.algo)),
+        ("compress", s(&log.compress)),
+        ("topology", s(topology)),
+        ("bytes_sent", num(log.bytes_sent as f64)),
+        ("uncompressed_bytes", num(uncompressed_bytes as f64)),
+        ("final_acc", num(log.final_acc())),
+        ("final_test_loss", num(log.final_loss())),
+        ("total_time_s", num(log.total_sim_time)),
+        ("comm_ratio", num(log.comm_ratio())),
+        ("steady_buffer_allocs", num(log.hot.steady_buffer_allocs as f64)),
+    ])
+}
+
+fn print_leg(label: &str, log: &TrainLog, uncompressed_bytes: u64) {
+    println!(
+        "{:<26} {:>9} {:>14} {:>8.2} {:>11.4} {:>10.1} {:>7.1}%",
+        label,
+        log.bytes_sent,
+        uncompressed_bytes,
+        100.0 * log.final_acc(),
+        log.final_loss(),
+        log.total_sim_time,
+        100.0 * (log.bytes_sent as f64 / uncompressed_bytes.max(1) as f64),
+    );
+}
+
+const KINDS: [&str; 3] = ["topk", "qsgd", "powersgd"];
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("compression")?;
+    let mut rows = Vec::new();
+
+    println!("=== E15: bytes vs final loss (per compressor x algorithm, ring) ===");
+    println!(
+        "{:<26} {:>9} {:>14} {:>8} {:>11} {:>10} {:>8}",
+        "leg", "bytes", "uncompressed", "acc%", "test_loss", "time(s)", "wire%"
+    );
+
+    for algo in [Algo::Sync, Algo::OverlapM] {
+        let base = ctx.run_leg(&format!("{}_none", algo.name()), |c| c.algo = algo)?;
+        let unc = base.bytes_sent;
+        print_leg(&format!("{} none", algo.name()), &base, unc);
+        rows.push(leg_row(&format!("{} none", algo.name()), "ring", &base, unc));
+        for kind in KINDS {
+            let label = format!("{}_{kind}", algo.name());
+            let log = ctx.run_leg(&label, |c| {
+                c.algo = algo;
+                c.set("compress", kind).expect("static compressor name");
+            })?;
+            print_leg(&label.replace('_', " "), &log, unc);
+            rows.push(leg_row(&label.replace('_', " "), "ring", &log, unc));
+        }
+    }
+
+    // The per-topology cost formulas must see the scaled payload: the same
+    // sweep point on the hierarchical (intra/inter group) topology.
+    println!("\n=== E15: hierarchical topology leg (sync) ===");
+    let hier_base = ctx.run_leg("sync_hier_none", |c| {
+        c.algo = Algo::Sync;
+        c.set("topology", "hier").expect("static topology");
+    })?;
+    let hier_unc = hier_base.bytes_sent;
+    print_leg("sync hier none", &hier_base, hier_unc);
+    rows.push(leg_row("sync hier none", "hier", &hier_base, hier_unc));
+    let hier_topk = ctx.run_leg("sync_hier_topk", |c| {
+        c.algo = Algo::Sync;
+        c.set("topology", "hier").expect("static topology");
+        c.set("compress", "topk").expect("static compressor name");
+    })?;
+    print_leg("sync hier topk", &hier_topk, hier_unc);
+    rows.push(leg_row("sync hier topk", "hier", &hier_topk, hier_unc));
+
+    // The compressed hot path on real cores: persistent pool, zero
+    // steady-state spawns/allocs, digest identical to sim (locked by
+    // rust/tests/compression.rs).
+    println!("\n=== E15: threads-backend leg (overlap-m + topk) ===");
+    let thr_base = ctx.run_leg("overlap-m_threads_none", |c| {
+        c.algo = Algo::OverlapM;
+        c.set("execution", "threads").expect("static backend");
+    })?;
+    let thr_unc = thr_base.bytes_sent;
+    print_leg("overlap-m threads none", &thr_base, thr_unc);
+    rows.push(leg_row("overlap-m threads none", "ring", &thr_base, thr_unc));
+    let thr_topk = ctx.run_leg("overlap-m_threads_topk", |c| {
+        c.algo = Algo::OverlapM;
+        c.set("execution", "threads").expect("static backend");
+        c.set("compress", "topk").expect("static compressor name");
+    })?;
+    print_leg("overlap-m threads topk", &thr_topk, thr_unc);
+    rows.push(leg_row("overlap-m threads topk", "ring", &thr_topk, thr_unc));
+
+    ctx.write_summary("E15_compression.json", rows)?;
+    Ok(())
+}

@@ -27,6 +27,14 @@
 //! storage: the ring's snapshot arena, the tree's broadcast root, and the
 //! hierarchy's leader set all live in one reusable bundle owned by the
 //! executing thread, so repeated collectives stop allocating once warm.
+//!
+//! The payload size is always *caller-supplied* — collectives reduce
+//! whatever buffers they are handed and charge whatever byte count the
+//! caller quotes. That indifference is what makes the compression axis
+//! (DESIGN.md §12) free to implement here: a compressed strategy hands the
+//! reconstructed contributions to the same launch/absorb machinery with the
+//! `wire_plan`-scaled byte size, and both planes — reduce schedule and cost
+//! formula — follow without a compressed variant of anything.
 
 use crate::clock::Clocks;
 use crate::executor::{Executor, ReduceHandle};

@@ -1,14 +1,25 @@
-//! Small dense row-major linear algebra for PowerSGD.
+//! Small dense row-major linear algebra for the compression seam.
 //!
 //! Shapes are tiny (rows/cols ≤ a few thousand, rank ≤ 8); these simple
 //! ikj-ordered loops auto-vectorize and are nowhere near the profile's top
-//! (see EXPERIMENTS.md §Perf).
+//! (see EXPERIMENTS.md §Perf). The `_into` variants write into caller
+//! scratch so steady-state compression rounds allocate nothing.
+
+use crate::util::rng::Rng;
 
 /// C (m x n) = A (m x k) @ B (k x n), row-major.
 pub fn matmul_nn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_nn_into(a, m, k, b, n, &mut c);
+    c
+}
+
+/// C (m x n) = A (m x k) @ B (k x n) into caller scratch (overwritten).
+pub fn matmul_nn_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * n];
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
     for i in 0..m {
         for kk in 0..k {
             let aik = a[i * k + kk];
@@ -19,14 +30,21 @@ pub fn matmul_nn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32>
             }
         }
     }
-    c
 }
 
 /// C (k x n) = Aᵀ @ B where A is (m x k), B is (m x n), row-major.
 pub fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    matmul_tn_into(a, m, k, b, n, &mut c);
+    c
+}
+
+/// C (k x n) = Aᵀ @ B into caller scratch (overwritten).
+pub fn matmul_tn_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
-    let mut c = vec![0.0f32; k * n];
+    assert_eq!(c.len(), k * n);
+    c.fill(0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let brow = &b[i * n..(i + 1) * n];
@@ -38,14 +56,20 @@ pub fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32>
             }
         }
     }
-    c
 }
 
 /// M̂ (rows x cols) = P (rows x r) @ Qᵀ where Q is (cols x r), row-major.
 pub fn matmul_pqt(p: &[f32], rows: usize, r: usize, q: &[f32], cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    matmul_pqt_into(p, rows, r, q, cols, &mut out);
+    out
+}
+
+/// M̂ (rows x cols) = P @ Qᵀ into caller scratch (overwritten).
+pub fn matmul_pqt_into(p: &[f32], rows: usize, r: usize, q: &[f32], cols: usize, out: &mut [f32]) {
     assert_eq!(p.len(), rows * r);
     assert_eq!(q.len(), cols * r);
-    let mut out = vec![0.0f32; rows * cols];
+    assert_eq!(out.len(), rows * cols);
     for i in 0..rows {
         let prow = &p[i * r..(i + 1) * r];
         let orow = &mut out[i * cols..(i + 1) * cols];
@@ -58,7 +82,6 @@ pub fn matmul_pqt(p: &[f32], rows: usize, r: usize, q: &[f32], cols: usize) -> V
             orow[c] = acc;
         }
     }
-    out
 }
 
 /// acc (rows x r) += (g + e) @ Q, where g/e are (rows x cols), Q (cols x r).
@@ -118,11 +141,24 @@ pub fn matmul_tn_fused_add_acc(
     }
 }
 
-/// Modified Gram–Schmidt on the columns of P (rows x r, row-major), with the
-/// reference implementation's epsilon guard against zero columns.
+/// Modified Gram–Schmidt on the columns of P (rows x r, row-major).
+///
+/// A rank-deficient column (all-zero gradient, crashed-worker round, or a
+/// target whose rank is below r) leaves a residual that is pure f32 noise;
+/// normalizing it would amplify that noise into a junk basis direction, and
+/// the old behavior of zeroing it left a dead direction in the warm-started
+/// basis forever. Instead the column is replaced by a **seeded** random
+/// direction, orthogonalized against the previous columns and normalized —
+/// deterministic in (rows, r, j, attempt), identical on every worker (the
+/// basis stays shared), and harmless for reconstruction: Qᵀ projects the
+/// target onto it, and a direction orthogonal to the target's span picks up
+/// only f32 noise.
 pub fn orthonormalize_columns(p: &mut [f32], rows: usize, r: usize) {
     assert_eq!(p.len(), rows * r);
     const EPS: f32 = 1e-8;
+    /// Fixed stream seed for the rank-deficiency fallback: the column must
+    /// come out identical everywhere, independent of the experiment seed.
+    const FALLBACK_SEED: u64 = 0x6f6c7367645f6773; // "olsgd_gs"
     for j in 0..r {
         // Subtract projections onto previous columns.
         for prev in 0..j {
@@ -138,15 +174,50 @@ pub fn orthonormalize_columns(p: &mut [f32], rows: usize, r: usize) {
         for i in 0..rows {
             norm += p[i * r + j] * p[i * r + j];
         }
-        let norm = norm.sqrt();
+        let mut norm = norm.sqrt();
         if norm < 1e-6 {
-            // Rank-deficient column: the residual is pure f32 noise.
-            // Normalizing it would amplify noise into a junk direction
-            // (breaking exact low-rank reconstruction), so zero it instead.
-            for i in 0..rows {
-                p[i * r + j] = 0.0;
+            if j >= rows {
+                // No orthogonal direction exists (more columns than rows):
+                // zeroing is the only rank-honest option.
+                for i in 0..rows {
+                    p[i * r + j] = 0.0;
+                }
+                continue;
             }
-            continue;
+            // Epsilon fallback: draw a fresh seeded direction and
+            // re-orthogonalize. A retry is astronomically unlikely (a
+            // random Gaussian vector lands in a j-dimensional subspace of
+            // R^rows with probability 0) but keeps the loop total.
+            let mut col = vec![0.0f32; rows];
+            for attempt in 0..4u32 {
+                let mut rng =
+                    Rng::stream(FALLBACK_SEED, &format!("gs-fallback/{rows}/{r}/{j}/{attempt}"));
+                rng.fill_normal(&mut col, 1.0);
+                for prev in 0..j {
+                    let mut dot = 0.0f32;
+                    for i in 0..rows {
+                        dot += col[i] * p[i * r + prev];
+                    }
+                    for i in 0..rows {
+                        col[i] -= dot * p[i * r + prev];
+                    }
+                }
+                let n2: f32 = col.iter().map(|v| v * v).sum();
+                norm = n2.sqrt();
+                if norm >= 1e-6 {
+                    break;
+                }
+            }
+            for i in 0..rows {
+                p[i * r + j] = col[i];
+            }
+            if norm < 1e-6 {
+                // All retries degenerate: give up on the direction.
+                for i in 0..rows {
+                    p[i * r + j] = 0.0;
+                }
+                continue;
+            }
         }
         let inv = 1.0 / (norm + EPS);
         for i in 0..rows {
@@ -258,14 +329,91 @@ mod tests {
     }
 
     #[test]
-    fn gram_schmidt_survives_zero_column() {
+    fn gram_schmidt_replaces_zero_column_with_seeded_orthonormal_direction() {
         let rows = 5;
         let r = 2;
         let mut p = vec![0.0f32; rows * r];
         for i in 0..rows {
             p[i * r] = 1.0; // col 0 constant, col 1 zero
         }
+        let mut p2 = p.clone();
         orthonormalize_columns(&mut p, rows, r);
         assert!(p.iter().all(|v| v.is_finite()));
+        // The rank-deficient column must come back as a *live* unit-norm
+        // direction, orthogonal to column 0 — not the old dead zero column.
+        let mut n1 = 0.0f32;
+        let mut dot = 0.0f32;
+        for i in 0..rows {
+            n1 += p[i * r + 1] * p[i * r + 1];
+            dot += p[i * r] * p[i * r + 1];
+        }
+        assert!((n1.sqrt() - 1.0).abs() < 1e-4, "fallback column norm {}", n1.sqrt());
+        assert!(dot.abs() < 1e-4, "fallback column not orthogonal: {dot}");
+        // Deterministic: a second run reproduces the same fallback bits.
+        orthonormalize_columns(&mut p2, rows, r);
+        assert_eq!(p, p2, "seeded fallback must be bit-deterministic");
+    }
+
+    #[test]
+    fn gram_schmidt_zeroes_columns_beyond_the_row_count() {
+        // More columns than rows: only `rows` orthonormal directions exist;
+        // the surplus column must be zeroed, never NaN.
+        let rows = 2;
+        let r = 3;
+        let mut p = vec![0.0f32; rows * r];
+        p[0] = 1.0; // col 0 = e0
+        p[1 * r + 1] = 1.0; // col 1 = e1; col 2 = zero
+        orthonormalize_columns(&mut p, rows, r);
+        assert!(p.iter().all(|v| v.is_finite()));
+        assert_eq!(p[2], 0.0);
+        assert_eq!(p[1 * r + 2], 0.0);
+    }
+
+    #[test]
+    fn all_zero_input_stays_finite_and_orthonormal() {
+        // The regression the issue names: a crashed-worker round can hand
+        // the compressor an all-zero target; the old code normalized by a
+        // near-zero norm in later columns after projections. Every output
+        // column must now be finite and the live ones pairwise orthonormal.
+        let rows = 8;
+        let r = 3;
+        let mut p = vec![0.0f32; rows * r];
+        orthonormalize_columns(&mut p, rows, r);
+        assert!(p.iter().all(|v| v.is_finite()));
+        for j1 in 0..r {
+            for j2 in 0..=j1 {
+                let mut dot = 0.0f32;
+                for i in 0..rows {
+                    dot += p[i * r + j1] * p[i * r + j2];
+                }
+                let want = if j1 == j2 { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "P'P[{j1},{j2}] = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        property("into == allocating", 30, |g| {
+            let m = g.usize_in(1, 8);
+            let k = g.usize_in(1, 8);
+            let n = g.usize_in(1, 6);
+            let a = g.vec_f32(m * k, 2.0);
+            let b = g.vec_f32(k * n, 2.0);
+            let mut c = vec![7.0f32; m * n]; // dirty scratch must be overwritten
+            matmul_nn_into(&a, m, k, &b, n, &mut c);
+            assert_eq!(c, matmul_nn(&a, m, k, &b, n));
+
+            let bt = g.vec_f32(m * n, 2.0);
+            let mut ct = vec![7.0f32; k * n];
+            matmul_tn_into(&a, m, k, &bt, n, &mut ct);
+            assert_eq!(ct, matmul_tn(&a, m, k, &bt, n));
+
+            let p = g.vec_f32(m * k, 2.0);
+            let q = g.vec_f32(n * k, 2.0);
+            let mut out = vec![7.0f32; m * n];
+            matmul_pqt_into(&p, m, k, &q, n, &mut out);
+            assert_eq!(out, matmul_pqt(&p, m, k, &q, n));
+        });
     }
 }

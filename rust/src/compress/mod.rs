@@ -1,8 +1,18 @@
-//! PowerSGD baseline (Vogels et al., NeurIPS 2019 [5]) — the gradient-
-//! compression comparator in Fig. 4/5.
+//! Collective-payload compression: the composable `--compress` axis.
 //!
-//! Rank-r compression with the three ingredients of the reference
-//! implementation:
+//! Three compressors plug into the collective layer behind one seam
+//! ([`CompressState`], DESIGN.md §12): **PowerSGD** low-rank factorization
+//! (Vogels et al., NeurIPS 2019 [5] — the gradient-compression comparator
+//! in Fig. 4/5), **top-k** sparsification, and **QSGD**-style scalar
+//! quantization. All three carry per-worker error-feedback residuals as
+//! first-class engine state, so they compose with every mixing strategy,
+//! every topology, and the fault model: a crash freezes the worker's
+//! residual with its replica, a rejoin zeroes it, and masked rounds
+//! average compressed contributions exactly mean-preservingly over the
+//! survivor set ([`PowerSgd::round_among`], `CompressState::encode_*`).
+//!
+//! PowerSGD keeps rank-r compression with the three ingredients of the
+//! reference implementation:
 //! * **warm start** — Q persists across rounds (single power iteration per
 //!   round converges because gradients change slowly);
 //! * **error feedback** — each worker re-injects last round's compression
@@ -28,8 +38,13 @@ use crate::runtime::manifest::ModelManifest;
 use crate::util::rng::Rng;
 
 mod linalg;
+mod state;
 
 pub use linalg::{matmul_nn, matmul_pqt, matmul_tn, orthonormalize_columns};
+pub use state::{
+    ideal_message_bytes, resolve_topk_k, wire_plan, CompressKind, CompressState, WirePlan,
+    GEMM_FLOPS,
+};
 
 /// Persistent PowerSGD state for one model + worker group.
 pub struct PowerSgd {
@@ -45,6 +60,14 @@ pub struct PowerSgd {
     qs: Vec<Vec<f32>>,
     /// per-worker error-feedback buffer (full flat length)
     errors: Vec<Vec<f32>>,
+    /// reusable P scratch (largest rows x r), zeroed before each use
+    p_buf: Vec<f32>,
+    /// reusable Q scratch (largest cols x r), zeroed before each use
+    q_buf: Vec<f32>,
+    /// reusable decode scratch (largest rows x cols)
+    approx_buf: Vec<f32>,
+    /// full member list, so `round` can delegate without reallocating
+    all: Vec<usize>,
 }
 
 /// Result of one compression round.
@@ -64,6 +87,9 @@ impl PowerSgd {
         let mut mats = Vec::new();
         let mut raws = Vec::new();
         let mut qs = Vec::new();
+        let mut p_max = 0;
+        let mut q_max = 0;
+        let mut a_max = 0;
         for t in &manifest.tensors {
             if t.compress && t.rows > 1 {
                 let r = rank.min(t.rows).min(t.cols);
@@ -74,6 +100,9 @@ impl PowerSgd {
                 rng.fill_normal(&mut q, 1.0);
                 mats.push((t.offset, t.rows, t.cols));
                 qs.push(q);
+                p_max = p_max.max(t.rows * r);
+                q_max = q_max.max(t.cols * r);
+                a_max = a_max.max(t.rows * t.cols);
             } else {
                 raws.push((t.offset, t.size));
             }
@@ -86,6 +115,10 @@ impl PowerSgd {
             raws,
             qs,
             errors: vec![vec![0.0f32; manifest.param_count]; workers],
+            p_buf: vec![0.0f32; p_max],
+            q_buf: vec![0.0f32; q_max],
+            approx_buf: vec![0.0f32; a_max],
+            all: (0..workers).collect(),
         }
     }
 
@@ -109,67 +142,100 @@ impl PowerSgd {
         compressed + raw
     }
 
-    /// One compression round over the workers' gradients. `grads[w]` is
+    /// One compression round over the full worker group. `grads[w]` is
     /// worker w's raw gradient (len = param_count); it is not mutated.
     pub fn round(&mut self, grads: &[&[f32]]) -> RoundOutput {
         assert_eq!(grads.len(), self.workers, "worker count changed");
+        let members = std::mem::take(&mut self.all);
+        let mut avg = vec![0.0f32; self.n];
+        let flops = self.round_among(grads, &members, &mut avg);
+        self.all = members;
+        RoundOutput { avg_grad: avg, bytes_per_worker: self.bytes_per_round(), encode_flops: flops }
+    }
+
+    /// One compression round over a **member subset** (the fault model's
+    /// survivor set). `grads[j]` is member `members[j]`'s gradient in
+    /// ascending member order; only member residuals are read or updated
+    /// (a parked worker's error buffer stays frozen with its replica), and
+    /// the decompressed mean in `avg` is the exact survivor mean — the
+    /// masked, mean-preserving redistribution that lets PowerSGD run under
+    /// crash/rejoin. With the full member list this is bit-identical to
+    /// the legacy full-group round. Returns the per-worker encode/decode
+    /// FLOPs.
+    pub fn round_among(&mut self, grads: &[&[f32]], members: &[usize], avg: &mut [f32]) -> f64 {
+        assert_eq!(grads.len(), members.len(), "one gradient per member");
         for g in grads {
             assert_eq!(g.len(), self.n, "gradient length mismatch");
         }
-        let m = self.workers as f32;
-        let mut avg = vec![0.0f32; self.n];
+        assert_eq!(avg.len(), self.n);
+        let m = members.len() as f32;
         let mut flops = 0.0f64;
 
         // Feedback: M_w = grad_w + error_w (materialized lazily per matrix).
-        for (mi, &(off, rows, cols)) in self.mats.iter().enumerate() {
+        for mi in 0..self.mats.len() {
+            let (off, rows, cols) = self.mats[mi];
             let r = self.eff_rank(rows, cols);
             let size = rows * cols;
-            let q = &mut self.qs[mi];
 
             // P = mean_w((g_w + e_w) Q)
-            let mut p = vec![0.0f32; rows * r];
-            for w in 0..self.workers {
-                let gw = &grads[w][off..off + size];
-                let ew = &self.errors[w][off..off + size];
-                // fused (g+e) @ Q accumulation
-                linalg::matmul_fused_add_acc(gw, ew, rows, cols, q, r, &mut p);
+            {
+                let p = &mut self.p_buf[..rows * r];
+                p.fill(0.0);
+                let q = &self.qs[mi];
+                for (j, &w) in members.iter().enumerate() {
+                    let gw = &grads[j][off..off + size];
+                    let ew = &self.errors[w][off..off + size];
+                    // fused (g+e) @ Q accumulation
+                    linalg::matmul_fused_add_acc(gw, ew, rows, cols, q, r, p);
+                }
+                for v in p.iter_mut() {
+                    *v /= m;
+                }
+                orthonormalize_columns(p, rows, r);
             }
-            for v in p.iter_mut() {
-                *v /= m;
-            }
-            orthonormalize_columns(&mut p, rows, r);
 
             // Q = mean_w(M_wᵀ P)
-            let mut q_new = vec![0.0f32; cols * r];
-            for w in 0..self.workers {
-                let gw = &grads[w][off..off + size];
-                let ew = &self.errors[w][off..off + size];
-                linalg::matmul_tn_fused_add_acc(gw, ew, rows, cols, &p, r, &mut q_new);
-            }
-            for v in q_new.iter_mut() {
-                *v /= m;
-            }
-
-            // decompress: M̂ = P Qᵀ
-            let approx = matmul_pqt(&p, rows, r, &q_new, cols);
-            avg[off..off + size].copy_from_slice(&approx);
-
-            // error_w = (g_w + e_w) - M̂
-            for w in 0..self.workers {
-                let gw = &grads[w][off..off + size];
-                let e = &mut self.errors[w][off..off + size];
-                for i in 0..size {
-                    e[i] = gw[i] + e[i] - approx[i];
+            {
+                let q_new = &mut self.q_buf[..cols * r];
+                q_new.fill(0.0);
+                let p = &self.p_buf[..rows * r];
+                for (j, &w) in members.iter().enumerate() {
+                    let gw = &grads[j][off..off + size];
+                    let ew = &self.errors[w][off..off + size];
+                    linalg::matmul_tn_fused_add_acc(gw, ew, rows, cols, p, r, q_new);
+                }
+                for v in q_new.iter_mut() {
+                    *v /= m;
                 }
             }
 
-            *q = q_new;
+            // decompress: M̂ = P Qᵀ
+            linalg::matmul_pqt_into(
+                &self.p_buf[..rows * r],
+                rows,
+                r,
+                &self.q_buf[..cols * r],
+                cols,
+                &mut self.approx_buf[..size],
+            );
+            avg[off..off + size].copy_from_slice(&self.approx_buf[..size]);
+
+            // error_w = (g_w + e_w) - M̂, members only
+            for (j, &w) in members.iter().enumerate() {
+                let gw = &grads[j][off..off + size];
+                let e = &mut self.errors[w][off..off + size];
+                for i in 0..size {
+                    e[i] = gw[i] + e[i] - self.approx_buf[i];
+                }
+            }
+
+            self.qs[mi].copy_from_slice(&self.q_buf[..cols * r]);
             // GEMM flops per worker: P (2*rows*cols*r), Q (2*rows*cols*r),
             // decode (2*rows*cols*r).
             flops += 6.0 * rows as f64 * cols as f64 * r as f64;
         }
 
-        // Raw tensors: plain mean, no error.
+        // Raw tensors: plain mean over the members, no error.
         for &(off, len) in &self.raws {
             for i in off..off + len {
                 let mut sum = 0.0f32;
@@ -180,7 +246,14 @@ impl PowerSgd {
             }
         }
 
-        RoundOutput { avg_grad: avg, bytes_per_worker: self.bytes_per_round(), encode_flops: flops }
+        flops
+    }
+
+    /// Zero a worker's error-feedback residual — the rejoin protocol: a
+    /// returning worker warm-starts its replica from the anchor (PR 5
+    /// semantics) and has no residual history to re-inject.
+    pub fn reset_worker(&mut self, worker: usize) {
+        self.errors[worker].fill(0.0);
     }
 
     /// L2 norm of a worker's error-feedback buffer (diagnostics/tests).

@@ -1,0 +1,794 @@
+//! The compression seam (DESIGN.md §12): [`CompressKind`] selects a
+//! compressor, [`CompressState`] owns the per-worker error-feedback
+//! residuals and scratch as first-class engine state, and [`wire_plan`]
+//! maps the compressor's ideal payload onto the run's scaled message size
+//! so every topology cost formula and byte counter sees compressed bytes.
+//!
+//! All compressors share one error-feedback algebra. For a value `x_w`
+//! transmitted against a reference `ref` every receiver already holds
+//! (zero for the sync family's gradients, the anchor/center/last-average
+//! for the parameter-averaging strategies):
+//!
+//! ```text
+//!   target_w  = (x_w - ref) + e_w         (re-inject last residual)
+//!   approx_w  = C(target_w)               (the lossy wire payload)
+//!   e_w       = target_w - approx_w       (carry the loss forward)
+//!   contrib_w = ref + approx_w            (what enters the collective)
+//! ```
+//!
+//! The survivor mean of the contributions is `ref + mean_w(approx_w)`
+//! over exactly the member set — masked redistribution is mean-preserving
+//! by construction, which is what lets every compressor (PowerSGD
+//! included) run under the PR 5 fault model: a crash freezes `e_w` with
+//! the replica, a rejoin zeroes it ([`CompressState::reset_worker`]).
+
+use anyhow::{bail, Result};
+
+use super::{linalg, PowerSgd};
+use crate::config::ExperimentConfig;
+use crate::model::vecmath;
+use crate::runtime::manifest::ModelManifest;
+use crate::util::rng::Rng;
+
+/// Effective GEMM throughput assumed for encode/decode cost (Titan X era,
+/// f32): 5 TFLOP/s — the constant the legacy PowerSGD strategy used, now
+/// shared by every compressor's latency model.
+pub const GEMM_FLOPS: f64 = 5.0e12;
+
+/// Which collective-payload compressor a run uses (`--compress ...`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompressKind {
+    /// No compression — the bit-exact legacy paths, digest-identical to
+    /// every pre-compression golden.
+    #[default]
+    None,
+    /// Rank-r PowerSGD low-rank factorization with warm-started Q
+    /// (`--set compress_rank=`; shares the `rank` config key).
+    PowerSgd,
+    /// Top-k magnitude sparsification (`--set compress_k=`; 0 = auto, 1%
+    /// of the message). Lossless to the bit at k = d.
+    TopK,
+    /// QSGD-style scalar quantization (`--set compress_bits=`, 2..=32).
+    /// Bits = 32 is a bit-exact passthrough (the lossless limit).
+    Qsgd,
+}
+
+impl CompressKind {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => CompressKind::None,
+            "powersgd" => CompressKind::PowerSgd,
+            "topk" | "top-k" | "top_k" => CompressKind::TopK,
+            "qsgd" => CompressKind::Qsgd,
+            _ => bail!("unknown compressor '{s}' (want none|powersgd|topk|qsgd)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`CompressKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressKind::None => "none",
+            CompressKind::PowerSgd => "powersgd",
+            CompressKind::TopK => "topk",
+            CompressKind::Qsgd => "qsgd",
+        }
+    }
+
+    /// Every compressor, in sweep order.
+    pub fn all() -> &'static [CompressKind] {
+        &[CompressKind::None, CompressKind::PowerSgd, CompressKind::TopK, CompressKind::Qsgd]
+    }
+}
+
+/// Resolve the top-k budget: `0` means auto — 1% of the message, at least
+/// one entry; explicit values clamp to the message length.
+pub fn resolve_topk_k(k: usize, n: usize) -> usize {
+    if k == 0 {
+        (n / 100).max(1).min(n)
+    } else {
+        k.min(n)
+    }
+}
+
+/// Ideal (unscaled) wire bytes of one compressed message for a model.
+/// Top-k pays 8 bytes per kept entry (index + value), QSGD packs `bits`
+/// per entry plus a 4-byte scale, PowerSGD sends its P/Q factors plus raw
+/// (uncompressible) tensors — the same formula as
+/// [`PowerSgd::bytes_per_round`].
+pub fn ideal_message_bytes(
+    kind: CompressKind,
+    k: usize,
+    bits: u32,
+    rank: usize,
+    manifest: &ModelManifest,
+) -> usize {
+    let n = manifest.param_count;
+    match kind {
+        CompressKind::None => n * 4,
+        CompressKind::TopK => resolve_topk_k(k, n) * 8,
+        CompressKind::Qsgd => {
+            if bits >= 32 {
+                n * 4
+            } else {
+                (n * bits as usize).div_ceil(8) + 4
+            }
+        }
+        CompressKind::PowerSgd => manifest
+            .tensors
+            .iter()
+            .map(|t| {
+                if t.compress && t.rows > 1 {
+                    let r = rank.min(t.rows).min(t.cols);
+                    (t.rows + t.cols) * r * 4
+                } else {
+                    t.size * 4
+                }
+            })
+            .sum(),
+    }
+}
+
+/// How a compressed message maps onto the run's timing model.
+#[derive(Clone, Copy, Debug)]
+pub struct WirePlan {
+    /// bytes of one compressed message at the configured (paper-scale)
+    /// message size — what every `NetworkModel` formula and byte counter
+    /// is charged with
+    pub scaled_bytes: usize,
+    /// paper-size FLOP scaling for encode/decode latency (1.0 when the
+    /// message models the actual parameter count)
+    pub flops_scale: f64,
+}
+
+/// Compute the wire plan for a config; `None` when compression is off.
+/// The compressed *fraction* of the real model's bytes scales the
+/// configured message size, exactly as the legacy PowerSGD strategy did,
+/// so paper-scale runs charge paper-scale compressed messages.
+pub fn wire_plan(
+    cfg: &ExperimentConfig,
+    manifest: &ModelManifest,
+    cluster_message_bytes: usize,
+) -> Option<WirePlan> {
+    if cfg.compress == CompressKind::None {
+        return None;
+    }
+    let full_bytes = manifest.message_bytes();
+    let ideal =
+        ideal_message_bytes(cfg.compress, cfg.compress_k, cfg.compress_bits, cfg.rank, manifest);
+    let frac = ideal as f64 / full_bytes as f64;
+    let scaled_bytes = (cluster_message_bytes as f64 * frac) as usize;
+    let flops_scale = (full_bytes as f64 / (manifest.param_count * 4) as f64).max(1.0);
+    Some(WirePlan { scaled_bytes, flops_scale })
+}
+
+/// Top-k sparsification: keep the k largest-|v| entries of `target`
+/// bit-exactly, zero the rest. The kept set is a total order
+/// (|v| descending, index ascending), so it is deterministic across
+/// platforms; at k = n the output is the input to the bit.
+fn topk_encode(target: &[f32], k: usize, idx: &mut Vec<u32>, approx: &mut [f32]) {
+    let n = target.len();
+    let k = k.min(n);
+    if k == n {
+        approx.copy_from_slice(target);
+        return;
+    }
+    approx.fill(0.0);
+    if k == 0 {
+        return;
+    }
+    idx.clear();
+    idx.extend(0..n as u32);
+    idx.select_nth_unstable_by(k - 1, |a, b| {
+        target[*b as usize]
+            .abs()
+            .total_cmp(&target[*a as usize].abs())
+            .then(a.cmp(b))
+    });
+    for &i in &idx[..k] {
+        approx[i as usize] = target[i as usize];
+    }
+}
+
+/// QSGD-style deterministic scalar quantization: round-to-nearest onto
+/// `2^(bits-1) - 1` levels of |v| / max|v|, sign preserved. Bits >= 32 is
+/// an exact passthrough (the lossless limit).
+fn qsgd_encode(target: &[f32], bits: u32, approx: &mut [f32]) {
+    if bits >= 32 {
+        approx.copy_from_slice(target);
+        return;
+    }
+    let mut scale = 0.0f32;
+    for &v in target {
+        scale = scale.max(v.abs());
+    }
+    if scale == 0.0 {
+        approx.fill(0.0);
+        return;
+    }
+    let s = ((1u64 << (bits - 1)) - 1) as f32;
+    for (a, &v) in approx.iter_mut().zip(target) {
+        let q = (v.abs() / scale * s).round();
+        *a = v.signum() * q * scale / s;
+    }
+}
+
+/// Per-worker low-rank state for the **parameter-delta** path (overlap,
+/// gossip, local, elastic, cocod under `--compress powersgd`): each worker
+/// compresses its own delta against the reference with its own
+/// warm-started Q, all seeded identically at start and re-seeded from the
+/// shared init on rejoin.
+struct LowRank {
+    /// (offset, rows, cols, effective rank) of each compressed matrix
+    mats: Vec<(usize, usize, usize, usize)>,
+    /// (offset, len) of each raw (uncompressed) tensor
+    raws: Vec<(usize, usize)>,
+    /// the shared seeded warm-start basis (rejoin restore point)
+    q_init: Vec<Vec<f32>>,
+    /// per-worker warm-started Q, `[worker][mat]`
+    qs: Vec<Vec<Vec<f32>>>,
+    p_buf: Vec<f32>,
+    q_buf: Vec<f32>,
+}
+
+impl LowRank {
+    fn new(manifest: &ModelManifest, rank: usize, workers: usize, seed: u64) -> Self {
+        let mut mats = Vec::new();
+        let mut raws = Vec::new();
+        let mut q_init = Vec::new();
+        let mut p_max = 0;
+        let mut q_max = 0;
+        for t in &manifest.tensors {
+            if t.compress && t.rows > 1 {
+                let r = rank.min(t.rows).min(t.cols);
+                let mut q = vec![0.0f32; t.cols * r];
+                let mut rng = Rng::stream(seed, &format!("powersgd/q/{}", t.name));
+                rng.fill_normal(&mut q, 1.0);
+                mats.push((t.offset, t.rows, t.cols, r));
+                q_init.push(q);
+                p_max = p_max.max(t.rows * r);
+                q_max = q_max.max(t.cols * r);
+            } else {
+                raws.push((t.offset, t.size));
+            }
+        }
+        let qs = vec![q_init.clone(); workers];
+        Self { mats, raws, q_init, qs, p_buf: vec![0.0; p_max], q_buf: vec![0.0; q_max] }
+    }
+
+    /// Rank-r approximate `target` into `out` (full flat length) with
+    /// worker w's warm-started basis; returns the encode/decode FLOPs.
+    fn encode(&mut self, w: usize, target: &[f32], out: &mut [f32]) -> f64 {
+        let mut flops = 0.0f64;
+        for mi in 0..self.mats.len() {
+            let (off, rows, cols, r) = self.mats[mi];
+            let size = rows * cols;
+            let tmat = &target[off..off + size];
+            {
+                let p = &mut self.p_buf[..rows * r];
+                linalg::matmul_nn_into(tmat, rows, cols, &self.qs[w][mi], r, p);
+                linalg::orthonormalize_columns(p, rows, r);
+            }
+            {
+                let q_new = &mut self.q_buf[..cols * r];
+                linalg::matmul_tn_into(tmat, rows, cols, &self.p_buf[..rows * r], r, q_new);
+            }
+            linalg::matmul_pqt_into(
+                &self.p_buf[..rows * r],
+                rows,
+                r,
+                &self.q_buf[..cols * r],
+                cols,
+                &mut out[off..off + size],
+            );
+            self.qs[w][mi].copy_from_slice(&self.q_buf[..cols * r]);
+            flops += 6.0 * rows as f64 * cols as f64 * r as f64;
+        }
+        for &(off, len) in &self.raws {
+            out[off..off + len].copy_from_slice(&target[off..off + len]);
+        }
+        flops
+    }
+
+    /// Restore worker w's basis to the shared seeded init (rejoin).
+    fn reset_worker(&mut self, w: usize) {
+        for (q, init) in self.qs[w].iter_mut().zip(&self.q_init) {
+            q.copy_from_slice(init);
+        }
+    }
+}
+
+/// First-class engine state for a compressed run: per-worker residuals,
+/// persistent contribution buffers for parameter-path collectives, launch
+/// snapshots for the delay-corrected pullback, and the compressor itself.
+/// Built once by the engine (`Engine::compress`); `--compress none` runs
+/// carry no state at all, so every uncompressed path stays bit-identical.
+pub struct CompressState {
+    /// which compressor the run uses (never [`CompressKind::None`])
+    pub kind: CompressKind,
+    n: usize,
+    k: usize,
+    bits: u32,
+    /// wire bytes of one compressed message in the run's scaled model
+    pub scaled_bytes: usize,
+    /// paper-size FLOP scaling for encode/decode latency
+    pub flops_scale: f64,
+    /// per-worker error-feedback residuals (the engine state the tentpole
+    /// names; frozen on crash, zeroed on rejoin)
+    errors: Vec<Vec<f32>>,
+    /// per-worker encoded contributions — what parameter-path collectives
+    /// reduce instead of the raw replicas
+    pub contrib: Vec<Vec<f32>>,
+    /// per-worker post-pullback snapshot at each collective launch: the
+    /// model that fed the in-flight (compressed, hence sparser/staler)
+    /// average, used by [`CompressState::pullback`]
+    snap: Vec<Vec<f32>>,
+    snap_valid: Vec<bool>,
+    target: Vec<f32>,
+    approx: Vec<f32>,
+    avg: Vec<f32>,
+    idx: Vec<u32>,
+    /// joint full-group PowerSGD for the sync-family gradient path —
+    /// the exact legacy `--algo powersgd` arithmetic
+    joint: Option<PowerSgd>,
+    /// per-worker low-rank state for the parameter-delta path
+    lowrank: Option<LowRank>,
+}
+
+impl CompressState {
+    /// Build the state for a config; `None` when compression is off.
+    pub fn build(
+        cfg: &ExperimentConfig,
+        manifest: &ModelManifest,
+        cluster_message_bytes: usize,
+    ) -> Option<Self> {
+        let plan = wire_plan(cfg, manifest, cluster_message_bytes)?;
+        let n = manifest.param_count;
+        let m = cfg.workers;
+        let is_psgd = cfg.compress == CompressKind::PowerSgd;
+        Some(Self {
+            kind: cfg.compress,
+            n,
+            k: resolve_topk_k(cfg.compress_k, n),
+            bits: cfg.compress_bits,
+            scaled_bytes: plan.scaled_bytes,
+            flops_scale: plan.flops_scale,
+            errors: vec![vec![0.0f32; n]; m],
+            contrib: vec![vec![0.0f32; n]; m],
+            snap: vec![vec![0.0f32; n]; m],
+            snap_valid: vec![false; m],
+            target: vec![0.0f32; n],
+            approx: vec![0.0f32; n],
+            avg: vec![0.0f32; n],
+            idx: Vec::with_capacity(n),
+            joint: is_psgd.then(|| PowerSgd::new(manifest, cfg.rank, m, cfg.seed)),
+            lowrank: is_psgd.then(|| LowRank::new(manifest, cfg.rank, m, cfg.seed)),
+        })
+    }
+
+    /// Encode/decode latency (seconds) for a per-worker FLOP count.
+    pub fn encode_time(&self, flops: f64) -> f64 {
+        flops * self.flops_scale / GEMM_FLOPS
+    }
+
+    /// Joint gradient round for the sync family: compress each member's
+    /// gradient (with its residual) and decode the survivor mean into the
+    /// internal average buffer ([`CompressState::avg`]). `grads[j]` is
+    /// member `members[j]`'s gradient in ascending member order. Returns
+    /// the per-worker encode/decode FLOPs. For PowerSGD this is the exact
+    /// legacy joint round ([`PowerSgd::round_among`]).
+    pub fn encode_grads_mean(&mut self, grads: &[&[f32]], members: &[usize]) -> f64 {
+        debug_assert_eq!(grads.len(), members.len());
+        if self.kind == CompressKind::PowerSgd {
+            let joint = self.joint.as_mut().expect("powersgd state present");
+            return joint.round_among(grads, members, &mut self.avg);
+        }
+        self.avg.fill(0.0);
+        for (j, &w) in members.iter().enumerate() {
+            let g = grads[j];
+            let e = &self.errors[w];
+            for i in 0..self.n {
+                self.target[i] = g[i] + e[i];
+            }
+            match self.kind {
+                CompressKind::TopK => {
+                    topk_encode(&self.target, self.k, &mut self.idx, &mut self.approx)
+                }
+                CompressKind::Qsgd => qsgd_encode(&self.target, self.bits, &mut self.approx),
+                _ => unreachable!("gradient path: powersgd handled above, none never builds"),
+            }
+            let e = &mut self.errors[w];
+            for i in 0..self.n {
+                e[i] = self.target[i] - self.approx[i];
+                self.avg[i] += self.approx[i];
+            }
+        }
+        let m = members.len() as f32;
+        for v in self.avg.iter_mut() {
+            *v /= m;
+        }
+        // one fused scan per entry to select/quantize, one to decode
+        2.0 * self.n as f64
+    }
+
+    /// The decoded mean of the last [`CompressState::encode_grads_mean`].
+    pub fn avg(&self) -> &[f32] {
+        &self.avg
+    }
+
+    /// Parameter-path encode for one worker: compress `value - reference`
+    /// (plus the worker's residual) and write the reconstructed
+    /// contribution `reference + approx` into [`CompressState::contrib`].
+    /// Returns the per-worker encode/decode FLOPs.
+    pub fn encode_param(&mut self, w: usize, value: &[f32], reference: &[f32]) -> f64 {
+        debug_assert_eq!(value.len(), self.n);
+        debug_assert_eq!(reference.len(), self.n);
+        {
+            let e = &self.errors[w];
+            for i in 0..self.n {
+                self.target[i] = value[i] - reference[i] + e[i];
+            }
+        }
+        let flops = match self.kind {
+            CompressKind::TopK => {
+                topk_encode(&self.target, self.k, &mut self.idx, &mut self.approx);
+                2.0 * self.n as f64
+            }
+            CompressKind::Qsgd => {
+                qsgd_encode(&self.target, self.bits, &mut self.approx);
+                2.0 * self.n as f64
+            }
+            CompressKind::PowerSgd => self
+                .lowrank
+                .as_mut()
+                .expect("powersgd state present")
+                .encode(w, &self.target, &mut self.approx),
+            CompressKind::None => unreachable!("none never builds a CompressState"),
+        };
+        let e = &mut self.errors[w];
+        let c = &mut self.contrib[w];
+        for i in 0..self.n {
+            e[i] = self.target[i] - self.approx[i];
+            c[i] = reference[i] + self.approx[i];
+        }
+        flops
+    }
+
+    /// Copy a replica verbatim into its contribution row (parked workers
+    /// on the gossip path: they exchange nothing, but the launch snapshots
+    /// every row — their residuals must stay frozen).
+    pub fn passthrough(&mut self, w: usize, value: &[f32]) {
+        self.contrib[w].copy_from_slice(value);
+    }
+
+    /// Record worker w's post-pullback model at a collective launch — the
+    /// state whose (compressed) average the *next* boundary will absorb.
+    pub fn note_launch(&mut self, w: usize, params: &[f32]) {
+        self.snap[w].copy_from_slice(params);
+        self.snap_valid[w] = true;
+    }
+
+    /// Delay-corrected pullback (LOSCAR-style, PAPERS.md) for the
+    /// overlap/gossip paths: contract toward the anchor using the gap the
+    /// absorbed average actually measured — `x -= α(x_launch - z)` with
+    /// the launch-time snapshot — so the staleness a sparse mask
+    /// introduces is corrected at pullback instead of eating the τ local
+    /// steps' progress. Falls back to the plain Eq. 4 pullback when no
+    /// snapshot exists yet (first round, fresh rejoiner).
+    pub fn pullback(&mut self, w: usize, params: &mut [f32], z: &[f32], alpha: f32) {
+        if self.snap_valid[w] {
+            vecmath::pullback_stale_inplace(params, &self.snap[w], z, alpha);
+        } else {
+            vecmath::pullback_inplace(params, z, alpha);
+        }
+    }
+
+    /// Rejoin protocol: zero the worker's residual, restore its warm-start
+    /// basis, and invalidate its launch snapshot — the replica itself is
+    /// warm-started from the anchor by the strategy (PR 5 semantics).
+    pub fn reset_worker(&mut self, w: usize) {
+        self.errors[w].fill(0.0);
+        if let Some(joint) = self.joint.as_mut() {
+            joint.reset_worker(w);
+        }
+        if let Some(lr) = self.lowrank.as_mut() {
+            lr.reset_worker(w);
+        }
+        self.snap_valid[w] = false;
+    }
+
+    /// L2 norm of a worker's residual (diagnostics/tests).
+    pub fn residual_norm(&self, w: usize) -> f64 {
+        vecmath::l2_norm(&self.errors[w])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorManifest;
+
+    fn manifest_flat(n: usize) -> ModelManifest {
+        ModelManifest {
+            param_count: n,
+            tensors: vec![TensorManifest {
+                name: "w".into(),
+                offset: 0,
+                size: n,
+                shape: vec![n],
+                init: "zeros".into(),
+                std: 0.0,
+                rows: 1,
+                cols: n,
+                compress: false,
+            }],
+            modules: Default::default(),
+        }
+    }
+
+    fn manifest_matrix(rows: usize, cols: usize) -> ModelManifest {
+        ModelManifest {
+            param_count: rows * cols,
+            tensors: vec![TensorManifest {
+                name: "w".into(),
+                offset: 0,
+                size: rows * cols,
+                shape: vec![rows, cols],
+                init: "he_normal".into(),
+                std: 0.1,
+                rows,
+                cols,
+                compress: true,
+            }],
+            modules: Default::default(),
+        }
+    }
+
+    fn cfg_with(kind: CompressKind, workers: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = workers;
+        cfg.compress = kind;
+        cfg
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn kind_round_trips_and_rejects_garbage() {
+        for k in CompressKind::all() {
+            assert_eq!(CompressKind::parse(k.name()).unwrap(), *k);
+        }
+        assert!(CompressKind::parse("zip").is_err());
+        assert_eq!(CompressKind::all().len(), 4);
+    }
+
+    #[test]
+    fn topk_auto_budget_and_clamping() {
+        assert_eq!(resolve_topk_k(0, 1000), 10);
+        assert_eq!(resolve_topk_k(0, 50), 1);
+        assert_eq!(resolve_topk_k(7, 1000), 7);
+        assert_eq!(resolve_topk_k(5000, 1000), 1000);
+    }
+
+    #[test]
+    fn ideal_bytes_per_kind() {
+        let mm = manifest_flat(1000);
+        assert_eq!(ideal_message_bytes(CompressKind::None, 0, 8, 4, &mm), 4000);
+        assert_eq!(ideal_message_bytes(CompressKind::TopK, 10, 8, 4, &mm), 80);
+        assert_eq!(ideal_message_bytes(CompressKind::Qsgd, 0, 8, 4, &mm), 1004);
+        assert_eq!(ideal_message_bytes(CompressKind::Qsgd, 0, 32, 4, &mm), 4000);
+        // PowerSGD on an uncompressible (flat) manifest is all raw bytes;
+        // on a matrix manifest it matches PowerSgd::bytes_per_round.
+        assert_eq!(ideal_message_bytes(CompressKind::PowerSgd, 0, 8, 4, &mm), 4000);
+        let mx = manifest_matrix(10, 7);
+        let ps = PowerSgd::new(&mx, 3, 2, 1);
+        assert_eq!(
+            ideal_message_bytes(CompressKind::PowerSgd, 0, 8, 3, &mx),
+            ps.bytes_per_round()
+        );
+    }
+
+    #[test]
+    fn wire_plan_scales_the_paper_message() {
+        let mm = manifest_flat(1000);
+        let mut cfg = cfg_with(CompressKind::TopK, 4);
+        cfg.compress_k = 10; // 80 ideal bytes of 4000 -> 2%
+        let plan = wire_plan(&cfg, &mm, 1_000_000).unwrap();
+        assert_eq!(plan.scaled_bytes, 20_000);
+        assert_eq!(plan.flops_scale, 1.0);
+        cfg.compress = CompressKind::None;
+        assert!(wire_plan(&cfg, &mm, 1_000_000).is_none());
+    }
+
+    #[test]
+    fn topk_is_bitwise_lossless_at_full_k_and_residual_conserves() {
+        let n = 64;
+        let t = randv(n, 3);
+        let mut idx = Vec::new();
+        let mut approx = vec![0.0f32; n];
+        topk_encode(&t, n, &mut idx, &mut approx);
+        assert_eq!(approx, t, "k = d must reproduce the input to the bit");
+        // k < n: kept entries are bit-exact copies, so approx + residual
+        // reassembles the target exactly.
+        topk_encode(&t, 5, &mut idx, &mut approx);
+        let kept = approx.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(kept, 5);
+        for i in 0..n {
+            let e = t[i] - approx[i];
+            assert_eq!(approx[i] + e, t[i], "top-k residual must conserve bitwise");
+            assert!(approx[i] == 0.0 || approx[i] == t[i]);
+        }
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_magnitudes_deterministically() {
+        let t = vec![0.1f32, -5.0, 3.0, 3.0, -0.2, 0.0];
+        let mut idx = Vec::new();
+        let mut approx = vec![0.0f32; t.len()];
+        topk_encode(&t, 3, &mut idx, &mut approx);
+        // |−5| > |3| == |3| (tie broken by index) > the rest.
+        assert_eq!(approx, vec![0.0, -5.0, 3.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn qsgd_full_bits_is_bitwise_passthrough() {
+        let t = randv(100, 9);
+        let mut approx = vec![0.0f32; t.len()];
+        qsgd_encode(&t, 32, &mut approx);
+        assert_eq!(approx, t, "bits = 32 must be the exact passthrough");
+    }
+
+    #[test]
+    fn qsgd_quantizes_within_half_a_level() {
+        let t = randv(256, 11);
+        let scale = t.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for bits in [2u32, 4, 8, 16] {
+            let mut approx = vec![0.0f32; t.len()];
+            qsgd_encode(&t, bits, &mut approx);
+            let s = ((1u64 << (bits - 1)) - 1) as f32;
+            let half_level = 0.5 * scale / s;
+            for (a, &v) in approx.iter().zip(&t) {
+                assert!(
+                    (a - v).abs() <= half_level * 1.001,
+                    "bits={bits}: |{a} - {v}| > {half_level}"
+                );
+            }
+        }
+        // All-zero input stays exactly zero (no 0/0).
+        let mut approx = vec![1.0f32; 8];
+        qsgd_encode(&[0.0; 8], 8, &mut approx);
+        assert_eq!(approx, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn masked_grad_mean_is_survivor_mean_for_every_compressor() {
+        // Survivor-set mean preservation: for each compressor, the decoded
+        // mean over the member subset equals the mean of the members'
+        // (compressed + residual-corrected) contributions, and each
+        // member's approx + residual reassembles its target within fp
+        // tolerance. Non-members' residuals stay frozen.
+        let rows = 8;
+        let cols = 6;
+        let n = rows * cols;
+        let mm = manifest_matrix(rows, cols);
+        let members = vec![0usize, 2, 3];
+        for &kind in &[CompressKind::TopK, CompressKind::Qsgd, CompressKind::PowerSgd] {
+            let mut cfg = cfg_with(kind, 4);
+            cfg.compress_k = 9;
+            cfg.compress_bits = 8;
+            cfg.rank = 2;
+            let mut cs = CompressState::build(&cfg, &mm, n * 4).unwrap();
+            cs.errors[1] = vec![42.0; n]; // a parked worker's frozen residual
+            let grads: Vec<Vec<f32>> = (0..4).map(|w| randv(n, 20 + w as u64)).collect();
+            let grefs: Vec<&[f32]> = members.iter().map(|&w| grads[w].as_slice()).collect();
+            cs.encode_grads_mean(&grefs, &members);
+
+            // approx_w + e_w == grad_w (old e_w = 0) per member, so the
+            // decoded mean plus the mean post-encode residual reconstructs
+            // the survivor mean exactly: avg = mean(g) - mean(e).
+            let mut want = vec![0.0f64; n];
+            for &w in &members {
+                for i in 0..n {
+                    want[i] += grads[w][i] as f64;
+                }
+            }
+            let scale: f64 =
+                want.iter().map(|v| v.abs()).fold(0.0, f64::max) / members.len() as f64;
+            for i in 0..n {
+                let got = cs.avg()[i] as f64;
+                let exact = want[i] / members.len() as f64 - mean_residual(&cs, &members, i);
+                assert!(
+                    (got - exact).abs() <= 1e-4 * scale.max(1.0),
+                    "{kind:?}: avg[{i}] = {got}, want {exact}"
+                );
+            }
+            assert_eq!(cs.errors[1], vec![42.0; n], "{kind:?}: non-member residual moved");
+        }
+    }
+
+    /// Mean post-encode residual over the members, from wherever the
+    /// compressor keeps it (the joint PowerSGD state owns its own buffers).
+    fn mean_residual(cs: &CompressState, members: &[usize], i: usize) -> f64 {
+        let res = |w: usize| match cs.joint.as_ref() {
+            Some(j) => j.errors[w][i] as f64,
+            None => cs.errors[w][i] as f64,
+        };
+        members.iter().map(|&w| res(w)).sum::<f64>() / members.len() as f64
+    }
+
+    #[test]
+    fn param_path_contribution_is_ref_plus_approx_and_conserves() {
+        let rows = 6;
+        let cols = 5;
+        let n = rows * cols;
+        let mm = manifest_matrix(rows, cols);
+        for &kind in &[CompressKind::TopK, CompressKind::Qsgd, CompressKind::PowerSgd] {
+            let mut cfg = cfg_with(kind, 2);
+            cfg.compress_k = 4;
+            cfg.compress_bits = 6;
+            cfg.rank = 2;
+            let mut cs = CompressState::build(&cfg, &mm, n * 4).unwrap();
+            let value = randv(n, 31);
+            let reference = randv(n, 32);
+            cs.encode_param(0, &value, &reference);
+            // contrib - ref == approx and approx + e == value - ref: the
+            // compressed-plus-residual decomposition of the delta.
+            for i in 0..n {
+                let approx = cs.contrib[0][i] - reference[i];
+                let delta = value[i] - reference[i];
+                assert!(
+                    (approx + cs.errors[0][i] - delta).abs() <= 1e-4 * delta.abs().max(1.0),
+                    "{kind:?}: conservation broke at {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reset_worker_zeroes_residual_and_restores_basis() {
+        let rows = 6;
+        let cols = 5;
+        let n = rows * cols;
+        let mm = manifest_matrix(rows, cols);
+        let mut cfg = cfg_with(CompressKind::PowerSgd, 2);
+        cfg.rank = 2;
+        let mut cs = CompressState::build(&cfg, &mm, n * 4).unwrap();
+        let value = randv(n, 41);
+        let reference = vec![0.0f32; n];
+        cs.encode_param(0, &value, &reference);
+        cs.note_launch(0, &value);
+        assert!(cs.residual_norm(0) > 0.0);
+        assert!(cs.snap_valid[0]);
+        let basis_before = cs.lowrank.as_ref().unwrap().qs[0].clone();
+        let init = cs.lowrank.as_ref().unwrap().q_init.clone();
+        assert_ne!(basis_before, init, "encode must have warm-started the basis");
+        cs.reset_worker(0);
+        assert_eq!(cs.residual_norm(0), 0.0);
+        assert!(!cs.snap_valid[0]);
+        assert_eq!(cs.lowrank.as_ref().unwrap().qs[0], init);
+    }
+
+    #[test]
+    fn delay_corrected_pullback_uses_the_launch_snapshot() {
+        let n = 4;
+        let mm = manifest_flat(n);
+        let cfg = cfg_with(CompressKind::TopK, 1);
+        let mut cs = CompressState::build(&cfg, &mm, n * 4).unwrap();
+        let z = vec![0.0f32; n];
+        let snap = vec![1.0f32; n];
+        let mut x = vec![2.0f32; n];
+        // No snapshot yet: plain Eq. 4 pullback, x -= α(x - z).
+        cs.pullback(0, &mut x, &z, 0.5);
+        assert_eq!(x, vec![1.0; n]);
+        // With a snapshot: x -= α(snap - z) — local progress survives.
+        cs.note_launch(0, &snap);
+        let mut y = vec![2.0f32; n];
+        cs.pullback(0, &mut y, &z, 0.5);
+        assert_eq!(y, vec![1.5; n]);
+    }
+}

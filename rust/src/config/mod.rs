@@ -10,6 +10,7 @@ pub mod toml;
 
 use anyhow::{bail, Context, Result};
 
+use crate::compress::CompressKind;
 use crate::fault::FaultPlan;
 use crate::simnet::{ClusterModel, ComputeModel, NetworkModel, StragglerModel};
 use crate::topology::{Topology, TopologyKind};
@@ -175,8 +176,17 @@ pub struct ExperimentConfig {
     pub mu: f32,
     /// weight decay
     pub wd: f32,
-    /// PowerSGD rank
+    /// PowerSGD rank (`compress_rank` is an alias for this key)
     pub rank: usize,
+    /// collective-payload compressor (`--compress`, DESIGN.md §12);
+    /// orthogonal to the algorithm and topology axes
+    pub compress: CompressKind,
+    /// top-k kept entries per message (`--set compress_k=`); 0 = auto
+    /// (1% of the message, at least one entry)
+    pub compress_k: usize,
+    /// QSGD quantization bits per entry (`--set compress_bits=`, 2..=32;
+    /// 32 is the bit-exact lossless limit)
+    pub compress_bits: u32,
     /// local optimizer: "nesterov" (paper recipe) or "adam" (§6 extension,
     /// Overlap-Local-Adam — local steps use fused Adam)
     pub local_opt: String,
@@ -253,6 +263,9 @@ impl Default for ExperimentConfig {
             mu: 0.9,
             wd: 1e-4,
             rank: 4,
+            compress: CompressKind::None,
+            compress_k: 0,
+            compress_bits: 8,
             local_opt: "nesterov".into(),
             train_n: 4096,
             test_n: 1000,
@@ -307,7 +320,18 @@ impl ExperimentConfig {
             "beta" => self.beta = parse_f64()? as f32,
             "mu" | "momentum" => self.mu = parse_f64()? as f32,
             "wd" | "weight_decay" => self.wd = parse_f64()? as f32,
-            "rank" => self.rank = parse_usize()?,
+            "rank" | "compress_rank" => self.rank = parse_usize()?,
+            "compress" => self.compress = CompressKind::parse(v)?,
+            "compress_k" => self.compress_k = parse_usize()?,
+            "compress_bits" => {
+                let bits = v.parse::<u32>()
+                    .with_context(|| format!("bad integer for {key}: '{v}'"))?;
+                anyhow::ensure!(
+                    (2..=32).contains(&bits),
+                    "compress_bits must be in 2..=32, got {bits}"
+                );
+                self.compress_bits = bits;
+            }
             "local_opt" | "optimizer" => {
                 anyhow::ensure!(
                     v == "nesterov" || v == "adam",
@@ -539,6 +563,31 @@ mod tests {
         assert_eq!(d.tau_min, 1);
         assert!(!d.tau_hetero);
         assert!(c.set("ada_threshold", "much").is_err());
+    }
+
+    #[test]
+    fn compress_keys_parse_validate_and_default_off() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.compress, CompressKind::None);
+        assert_eq!(d.compress_k, 0);
+        assert_eq!(d.compress_bits, 8);
+        let mut c = ExperimentConfig::default();
+        c.set("compress", "topk").unwrap();
+        c.set("compress_k", "500").unwrap();
+        assert_eq!(c.compress, CompressKind::TopK);
+        assert_eq!(c.compress_k, 500);
+        c.set("compress", "qsgd").unwrap();
+        c.set("compress_bits", "4").unwrap();
+        assert_eq!(c.compress_bits, 4);
+        c.set("compress", "powersgd").unwrap();
+        c.set("compress_rank", "2").unwrap(); // alias for rank
+        assert_eq!(c.rank, 2);
+        c.set("compress", "none").unwrap();
+        assert_eq!(c.compress, CompressKind::None);
+        assert!(c.set("compress", "gzip").is_err());
+        assert!(c.set("compress_bits", "1").is_err());
+        assert!(c.set("compress_bits", "33").is_err());
+        assert!(c.set("compress_k", "few").is_err());
     }
 
     #[test]

@@ -23,13 +23,20 @@ use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
 use super::{account_collective_among, TrainContext};
 use crate::collective::{launch_collective_among, PendingCollective};
 
-/// Delta-on-stale-average mixing with a non-blocking collective.
+/// Delta-on-stale-average mixing with a non-blocking collective. Under
+/// `--compress` (DESIGN.md §12) the launched collective carries each
+/// member's compressed delta against the last absorbed average (with error
+/// feedback), at the compressed wire size; the local delta is still
+/// applied on top of the absorbed mean unchanged.
 #[derive(Default)]
 pub struct CocodStrategy {
     /// each worker's model snapshot at the launch boundary (for the delta
     /// the round accumulates on top of the stale average)
     snapshots: Vec<Vec<f32>>,
     pending: Option<PendingCollective>,
+    /// the last absorbed average — the compression reference (empty when
+    /// compression is off)
+    ref_model: Vec<f32>,
 }
 
 impl CocodStrategy {
@@ -40,11 +47,53 @@ impl CocodStrategy {
 }
 
 impl MixingStrategy for CocodStrategy {
+    fn on_run_start(&mut self, eng: &mut Engine, _ctx: &TrainContext) -> Result<()> {
+        if eng.compress.is_some() {
+            // All replicas are identical at init: worker 0's is the shared
+            // reference every receiver can reconstruct against.
+            self.ref_model = eng.workers.params[0].clone();
+        }
+        Ok(())
+    }
+
     fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan {
         plan_tau(eng, ctx, ctx.cfg.tau)
     }
 
     fn before_local(&mut self, eng: &mut Engine, ctx: &TrainContext) -> Result<()> {
+        if eng.compress.is_some() {
+            // Compressed launch: members encode their delta vs the last
+            // absorbed average before the collective goes on the wire; the
+            // reduce runs over the reconstructed contributions at the
+            // compressed size. Snapshots still record the *raw* replicas —
+            // the round's delta semantics are untouched by compression.
+            let mut cs = eng.compress.take().expect("checked is_some");
+            let members: Vec<usize> = eng.fault.alive.members().to_vec();
+            for &w in &members {
+                let flops = cs.encode_param(w, &eng.workers.params[w], &self.ref_model);
+                eng.clocks.compute(w, cs.encode_time(flops));
+            }
+            let start = eng.launch_clock();
+            account_collective_among(
+                &mut eng.rec,
+                &ctx.cluster.topology,
+                cs.scaled_bytes,
+                &eng.fault.alive,
+            );
+            self.snapshots.clone_from(&eng.workers.params);
+            let refs: Vec<&[f32]> = cs.contrib.iter().map(|p| p.as_slice()).collect();
+            self.pending = Some(launch_collective_among(
+                &eng.exec,
+                &ctx.cluster.topology,
+                &refs,
+                &eng.fault.alive,
+                &ctx.cluster.net,
+                cs.scaled_bytes,
+                start,
+            ));
+            eng.compress = Some(cs);
+            return Ok(());
+        }
         // Launch the collective of the boundary models on the configured
         // exact topology; it runs under the round's compute — genuinely so
         // on the threads backend, where the parked communicator thread
@@ -80,6 +129,11 @@ impl MixingStrategy for CocodStrategy {
         // stepping workers (the survivor average under faults).
         let h = self.pending.take().expect("cocod launch precedes absorb");
         let avg = h.absorb_masked(&mut eng.clocks, &eng.fault.alive);
+        if eng.compress.is_some() {
+            // The absorbed mean of reconstructed contributions is the next
+            // round's compression reference.
+            self.ref_model.copy_from_slice(&avg);
+        }
         for w in 0..eng.workers.m {
             if !eng.fault.alive.steps(w) {
                 continue; // parked: frozen replica

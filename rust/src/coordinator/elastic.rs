@@ -22,15 +22,24 @@
 use anyhow::Result;
 
 use super::engine::{self, plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::{account_collective_among, charge_blocking_exchange, TrainContext};
+use super::{
+    account_collective_among, charge_blocking_exchange, charge_blocking_exchange_bytes,
+    TrainContext,
+};
+use crate::compress::{wire_plan, WirePlan};
 use crate::metrics::TrainLog;
 use crate::model::vecmath;
 
 /// Blocking symmetric elastic exchange every τ steps. The exchange cost
 /// follows the configured exact topology; the center average itself is the
-/// exact mean (which every exact topology produces).
+/// exact mean (which every exact topology produces). Under `--compress`
+/// each member transmits its compressed delta against the center z (with
+/// error feedback) and the center pulls toward the mean of the
+/// reconstructed contributions, at the compressed wire size.
 pub struct ElasticStrategy {
     comm_t: f64,
+    /// compressed wire size + FLOP scaling; `None` for `--compress none`
+    wire: Option<WirePlan>,
     /// center variable, same init as the replicas
     z: Vec<f32>,
 }
@@ -39,7 +48,12 @@ impl ElasticStrategy {
     /// Strategy with the per-round exchange cost precomputed; the center
     /// variable initializes at `on_run_start`.
     pub fn new(ctx: &TrainContext) -> Self {
-        Self { comm_t: ctx.cluster.collective_time(), z: Vec::new() }
+        let wire = wire_plan(ctx.cfg, &ctx.rt.manifest, ctx.cluster.message_bytes);
+        let comm_t = match &wire {
+            Some(w) => ctx.cluster.topology.collective_time(&ctx.cluster.net, w.scaled_bytes),
+            None => ctx.cluster.collective_time(),
+        };
+        Self { comm_t, wire, z: Vec::new() }
     }
 }
 
@@ -69,6 +83,42 @@ impl MixingStrategy for ElasticStrategy {
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
         let alpha = ctx.cfg.alpha;
+        if self.wire.is_some() {
+            // Compressed round: members encode their delta vs the center z
+            // (error feedback in `cs`); the center pulls toward the mean
+            // of the reconstructed contributions. The symmetric local pull
+            // stays the plain Eq. 4 toward the *current* z — the exchange
+            // is blocking, so there is no staleness to correct.
+            let mut cs = eng.compress.take().expect("wire plan implies compress state");
+            let members: Vec<usize> = eng.fault.alive.members().to_vec();
+            for &w in &members {
+                let flops = cs.encode_param(w, &eng.workers.params[w], &self.z);
+                eng.clocks.compute(w, cs.encode_time(flops));
+            }
+            charge_blocking_exchange_bytes(eng, ctx, self.comm_t, cs.scaled_bytes);
+            let mut avg = eng.exec.buffers().take_for_overwrite(ctx.rt.n);
+            {
+                let refs: Vec<&[f32]> =
+                    members.iter().map(|&w| cs.contrib[w].as_slice()).collect();
+                eng.exec.mean_into(&refs, &mut avg);
+            }
+            for w in 0..m {
+                if !eng.fault.alive.steps(w) {
+                    continue;
+                }
+                vecmath::pullback_inplace(&mut eng.workers.params[w], &self.z, alpha);
+            }
+            vecmath::axpby(alpha, &avg, 1.0 - alpha, &mut self.z);
+            eng.exec.buffers().put(avg);
+            account_collective_among(
+                &mut eng.rec,
+                &ctx.cluster.topology,
+                cs.scaled_bytes,
+                &eng.fault.alive,
+            );
+            eng.compress = Some(cs);
+            return Ok(());
+        }
         // Blocking elastic exchange (over the alive members under faults —
         // parked workers neither barrier nor feed the center).
         charge_blocking_exchange(eng, ctx, self.comm_t);

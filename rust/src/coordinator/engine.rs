@@ -35,6 +35,7 @@ use anyhow::{ensure, Result};
 
 use super::{Recorder, TrainContext, Workers};
 use crate::clock::Clocks;
+use crate::compress::CompressState;
 use crate::executor::{ExecSnapshot, Executor};
 use crate::fault::FaultState;
 use crate::metrics::{HotPathCounters, TrainLog};
@@ -119,6 +120,13 @@ pub struct Engine {
     /// consumer takes its pre-fault branch, so the empty-schedule digests
     /// are bit-identical to the pre-fault engine.
     pub fault: FaultState,
+    /// Compression seam state (DESIGN.md §12): per-worker error-feedback
+    /// residuals, contribution buffers, launch snapshots, and the
+    /// compressor itself — `None` for `--compress none`, so every
+    /// uncompressed strategy path stays bit-identical to the pre-seam
+    /// engine. Rejoiners are reset here (residual zeroed, warm-start basis
+    /// restored) before the strategy's own `on_rejoin` runs.
+    pub compress: Option<CompressState>,
 }
 
 impl Engine {
@@ -142,6 +150,11 @@ impl Engine {
                 ctx.cfg.rejoin_rate,
                 ctx.cfg.seed,
                 m,
+            ),
+            compress: CompressState::build(
+                ctx.cfg,
+                &ctx.rt.manifest,
+                ctx.cluster.message_bytes,
             ),
         }
     }
@@ -409,6 +422,12 @@ fn apply_round_faults(
         for &w in &rf.joined {
             eng.clocks.wait_idle_until(w, t);
             eng.clocks.comm_blocked(w, fetch);
+            // Compressor rejoin protocol first: zero the residual and
+            // restore the warm-start basis, so the strategy's warm start
+            // sees a clean slate (DESIGN.md §12).
+            if let Some(cs) = eng.compress.as_mut() {
+                cs.reset_worker(w);
+            }
             strategy.on_rejoin(eng, ctx, w, rf.src)?;
         }
     }

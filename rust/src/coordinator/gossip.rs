@@ -132,6 +132,9 @@ impl MixingStrategy for GossipStrategy {
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
+        // Split the compression seam off the engine for the duration of the
+        // mixing decision (disjoint borrows); restored before returning.
+        let mut cs_opt = eng.compress.take();
 
         // --- absorb the previous boundary's exchange, per neighborhood ----
         if let Some(p) = self.pending.take() {
@@ -168,11 +171,18 @@ impl MixingStrategy for GossipStrategy {
         }
 
         // --- pullback toward the per-worker anchor (Eq. 4) ----------------
+        // Compressed runs use the delay-corrected form (DESIGN.md §12):
+        // contract by the launch-time gap, so the staleness the compressed
+        // mask introduces is corrected without discarding local progress.
         for w in 0..m {
             if !eng.fault.alive.steps(w) {
                 continue; // crashed: frozen replica, frozen clock
             }
-            ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z[w], ctx.cfg.alpha)?;
+            if let Some(cs) = cs_opt.as_mut() {
+                cs.pullback(w, &mut eng.workers.params[w], &self.z[w], ctx.cfg.alpha);
+            } else {
+                ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z[w], ctx.cfg.alpha)?;
+            }
             eng.clocks.compute(w, PULLBACK_S);
         }
 
@@ -190,9 +200,32 @@ impl MixingStrategy for GossipStrategy {
         // neither send nor receive, partitions localize the exchange to
         // each component, and the push-sum weights keep every component's
         // survivor mean exact.
+        // Under `--compress` each stepping worker first encodes its
+        // post-pullback model against its own anchor (error feedback in
+        // `cs`) and the exchange mixes the reconstructed contributions at
+        // the compressed wire size; a parked worker's row passes through
+        // verbatim (it exchanges nothing and its residual stays frozen).
+        if let Some(cs) = cs_opt.as_mut() {
+            for w in 0..m {
+                if eng.fault.alive.steps(w) {
+                    let flops = cs.encode_param(w, &eng.workers.params[w], &self.z[w]);
+                    eng.clocks.compute(w, cs.encode_time(flops));
+                    cs.note_launch(w, &eng.workers.params[w]);
+                } else {
+                    cs.passthrough(w, &eng.workers.params[w]);
+                }
+            }
+        }
+        let wire_bytes = match cs_opt.as_ref() {
+            Some(cs) => cs.scaled_bytes,
+            None => ctx.cluster.message_bytes,
+        };
         let pool = eng.exec.buffers().clone();
         let snapshot = {
-            let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
+            let refs: Vec<&[f32]> = match cs_opt.as_ref() {
+                Some(cs) => cs.contrib.iter().map(|p| p.as_slice()).collect(),
+                None => eng.workers.params.iter().map(|p| p.as_slice()).collect(),
+            };
             pool.take_set_copy(&refs)
         };
         let mut out = pool.take_set_zeroed(m, ctx.rt.n);
@@ -229,7 +262,7 @@ impl MixingStrategy for GossipStrategy {
         // neighborhood has joined and its live-degree's worth of neighbor
         // messages have moved — no global handshake, no cluster-wide
         // rendezvous. Dead workers exchange nothing.
-        let g_t = ctx.cluster.net.gossip_time(ctx.cluster.message_bytes, self.topo.degree());
+        let g_t = ctx.cluster.net.gossip_time(wire_bytes, self.topo.degree());
         let ready = (0..m)
             .map(|i| {
                 if let Some(alive) = &alive_snap {
@@ -244,7 +277,7 @@ impl MixingStrategy for GossipStrategy {
                             t = t.max(eng.clocks.now(j));
                         }
                     }
-                    t + ctx.cluster.net.gossip_time(ctx.cluster.message_bytes, live_degree)
+                    t + ctx.cluster.net.gossip_time(wire_bytes, live_degree)
                 } else {
                     let mut t = eng.clocks.now(i);
                     for &j in self.topo.neighbors(i) {
@@ -256,12 +289,8 @@ impl MixingStrategy for GossipStrategy {
             .collect();
         let valid = alive_snap.map(|alive| (0..m).map(|w| alive.steps(w)).collect());
         self.pending = Some(PendingGossip { mixed, ready, valid });
-        account_collective_among(
-            &mut eng.rec,
-            &self.topo,
-            ctx.cluster.message_bytes,
-            &eng.fault.alive,
-        );
+        account_collective_among(&mut eng.rec, &self.topo, wire_bytes, &eng.fault.alive);
+        eng.compress = cs_opt;
         Ok(())
     }
 }

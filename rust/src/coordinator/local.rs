@@ -6,31 +6,92 @@
 //! standard recipe). Communication cost is amortized by τ but still sits
 //! on the critical path — exactly the trade-off Fig. 1 plots. Under
 //! `tau_hetero` a straggler runs fewer local steps per round (E9).
+//!
+//! Under `--compress` (DESIGN.md §12) each member transmits its compressed
+//! *delta* against the last shared average (the reference every receiver
+//! already holds) with error feedback; the reduced mean of the
+//! reconstructed contributions replaces the member replicas, and the wire
+//! is charged at the compressed payload size.
 
 use anyhow::Result;
 
 use super::engine::{plan_tau, Engine, MixingStrategy, RoundOutcome, RoundPlan};
-use super::{account_collective_among, charge_blocking_exchange, TrainContext};
+use super::{
+    account_collective_among, charge_blocking_exchange, charge_blocking_exchange_bytes,
+    TrainContext,
+};
+use crate::compress::{wire_plan, WirePlan};
 
 /// Blocking parameter averaging every τ steps, on the configured exact
 /// topology (ring / hierarchical / tree — see DESIGN.md §8).
 pub struct LocalAvgStrategy {
     comm_t: f64,
+    /// compressed wire size + FLOP scaling; `None` for `--compress none`
+    wire: Option<WirePlan>,
+    /// the last shared average — the compression reference (empty when
+    /// compression is off)
+    ref_model: Vec<f32>,
 }
 
 impl LocalAvgStrategy {
-    /// Strategy with the per-round blocking collective cost precomputed.
+    /// Strategy with the per-round blocking collective cost precomputed —
+    /// at the compressed payload size when a compressor is configured.
     pub fn new(ctx: &TrainContext) -> Self {
-        Self { comm_t: ctx.cluster.collective_time() }
+        let wire = wire_plan(ctx.cfg, &ctx.rt.manifest, ctx.cluster.message_bytes);
+        let comm_t = match &wire {
+            Some(w) => ctx.cluster.topology.collective_time(&ctx.cluster.net, w.scaled_bytes),
+            None => ctx.cluster.collective_time(),
+        };
+        Self { comm_t, wire, ref_model: Vec::new() }
     }
 }
 
 impl MixingStrategy for LocalAvgStrategy {
+    fn on_run_start(&mut self, eng: &mut Engine, _ctx: &TrainContext) -> Result<()> {
+        if self.wire.is_some() {
+            // All replicas are identical at init: worker 0's is the shared
+            // reference every receiver can reconstruct against.
+            self.ref_model = eng.workers.params[0].clone();
+        }
+        Ok(())
+    }
+
     fn plan(&mut self, eng: &Engine, ctx: &TrainContext) -> RoundPlan {
         plan_tau(eng, ctx, ctx.cfg.tau)
     }
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, _out: RoundOutcome) -> Result<()> {
+        if self.wire.is_some() {
+            // Compressed round: members encode their delta vs the shared
+            // reference (error feedback in `cs`), the blocking collective
+            // reduces the reconstructed contributions at the compressed
+            // size, and the mean becomes the next reference.
+            let mut cs = eng.compress.take().expect("wire plan implies compress state");
+            let members: Vec<usize> = eng.fault.alive.members().to_vec();
+            for &w in &members {
+                let flops = cs.encode_param(w, &eng.workers.params[w], &self.ref_model);
+                eng.clocks.compute(w, cs.encode_time(flops));
+            }
+            charge_blocking_exchange_bytes(eng, ctx, self.comm_t, cs.scaled_bytes);
+            ctx.cluster.topology.allreduce_mean_alive_with(
+                &mut cs.contrib,
+                &eng.fault.alive,
+                &mut eng.exec.reduce_scratch(),
+            );
+            let lead = members.first().copied().unwrap_or(0);
+            self.ref_model.copy_from_slice(&cs.contrib[lead]);
+            for &w in &members {
+                eng.workers.params[w].copy_from_slice(&self.ref_model);
+            }
+            account_collective_among(
+                &mut eng.rec,
+                &ctx.cluster.topology,
+                cs.scaled_bytes,
+                &eng.fault.alive,
+            );
+            eng.compress = Some(cs);
+            return Ok(());
+        }
         // Blocking param averaging on the topology's real reduce schedule,
         // inline on the coordinator over the executor's reusable scratch
         // (bit-identical to fresh scratch; DESIGN.md §10). Under faults the

@@ -14,7 +14,7 @@
 //! | strategy    | schedule                                                  |
 //! |-------------|-----------------------------------------------------------|
 //! | sync        | all-reduce grads every step, blocking                     |
-//! | powersgd    | sync with rank-r compressed grads + error feedback        |
+//! | powersgd    | alias: sync under `--compress powersgd` (DESIGN.md §12)   |
 //! | local       | all-reduce params every τ steps, blocking                 |
 //! | overlap     | pullback to stale anchor, NON-blocking all-reduce (Eq. 3-5)|
 //! | overlap-m   | + anchor momentum (Eq. 10-11) — the headline algorithm    |
@@ -33,6 +33,10 @@
 //! (`--execution sim|threads`, DESIGN.md §9): the engine's executor decides
 //! whether the local phase and the collectives run sequentially or on real
 //! OS threads, with bit-identical observables either way.
+//! Compression (`--compress none|powersgd|topk|qsgd`, DESIGN.md §12) is a
+//! fourth orthogonal axis: every strategy above runs compressed over any
+//! topology and under the fault model, with per-worker error-feedback
+//! residuals held as engine state (`engine::Engine::compress`).
 
 pub mod cocod;
 pub mod elastic;
@@ -45,6 +49,7 @@ pub mod sync;
 use anyhow::{bail, Result};
 
 use crate::clock::Clocks;
+use crate::compress::CompressKind;
 use crate::config::{Algo, ExperimentConfig};
 use crate::data::{Batcher, Dataset, PX};
 use crate::fault::AliveSet;
@@ -569,6 +574,7 @@ impl Recorder {
         clocks.check_invariants();
         TrainLog {
             algo: ctx.cfg.algo.name().to_string(),
+            compress: ctx.cfg.compress.name().to_string(),
             tau: ctx.cfg.tau,
             workers: ctx.cfg.workers,
             records: self.records,
@@ -637,6 +643,18 @@ pub(crate) fn charge_blocking_exchange(
     ctx: &TrainContext,
     full_comm_t: f64,
 ) {
+    charge_blocking_exchange_bytes(eng, ctx, full_comm_t, ctx.cluster.message_bytes);
+}
+
+/// [`charge_blocking_exchange`] at an explicit wire size — the compressed
+/// strategy paths pass their scaled payload so the survivor-shaped cost
+/// formulas see compressed bytes (DESIGN.md §12).
+pub(crate) fn charge_blocking_exchange_bytes(
+    eng: &mut engine::Engine,
+    ctx: &TrainContext,
+    full_comm_t: f64,
+    message_bytes: usize,
+) {
     if eng.fault.alive.is_full() {
         eng.clocks.barrier();
         for w in 0..eng.workers.m {
@@ -645,7 +663,7 @@ pub(crate) fn charge_blocking_exchange(
     } else {
         let comm_t = ctx.cluster.topology.collective_time_alive(
             &ctx.cluster.net,
-            ctx.cluster.message_bytes,
+            message_bytes,
             &eng.fault.alive,
         );
         eng.clocks.barrier_among(eng.fault.alive.members());
@@ -682,19 +700,44 @@ pub fn run(ctx: &TrainContext) -> Result<TrainLog> {
         }
         _ => {}
     }
-    // PowerSGD's compressor keeps per-worker rank-r factor state with no
-    // crash/rejoin protocol — refuse faults loudly instead of averaging a
-    // silently corrupted low-rank basis (DESIGN.md §11).
-    if ctx.cfg.algo == Algo::PowerSgd && (!ctx.cfg.fault.is_empty() || ctx.cfg.fault_rate > 0.0)
+    // `--algo powersgd` is the compression axis spelled as an algorithm:
+    // it is exactly `--algo sync --compress powersgd` (bit-identical
+    // schedule, DESIGN.md §12), so an explicit conflicting --compress is a
+    // contradiction worth refusing loudly.
+    if ctx.cfg.algo == Algo::PowerSgd
+        && !matches!(ctx.cfg.compress, CompressKind::None | CompressKind::PowerSgd)
     {
         bail!(
-            "--algo powersgd does not support fault injection (its per-worker low-rank \
-             compressor state has no rejoin protocol); use sync or the overlap family"
+            "--algo powersgd already selects --compress powersgd; it cannot run under \
+             --compress {} (use --algo sync to combine sync with that compressor)",
+            ctx.cfg.compress.name()
         );
+    }
+    if ctx.cfg.compress == CompressKind::PowerSgd || ctx.cfg.algo == Algo::PowerSgd {
+        anyhow::ensure!(ctx.cfg.rank >= 1, "powersgd compression needs rank >= 1");
     }
     match ctx.cfg.algo {
         Algo::Sync => engine::run(ctx, &mut sync::SyncStrategy::new(ctx)),
-        Algo::PowerSgd => engine::run(ctx, &mut sync::PowerSgdStrategy::new(ctx)),
+        Algo::PowerSgd => {
+            // Re-express the legacy spelling on the compression seam: the
+            // per-worker error-feedback residuals are engine state with a
+            // rejoin protocol (zero residual, warm-start from the shared
+            // basis), so faults compose instead of being refused.
+            let mut cfg = ctx.cfg.clone();
+            cfg.compress = CompressKind::PowerSgd;
+            let scoped = TrainContext {
+                rt: ctx.rt,
+                cfg: &cfg,
+                cluster: ctx.cluster.clone(),
+                schedule: ctx.schedule.clone(),
+                train: ctx.train,
+                test: ctx.test,
+                shards: ctx.shards.clone(),
+            };
+            // The log still reports algo "powersgd": only `compress`
+            // changed, and the recorder names the algo from the config.
+            engine::run(&scoped, &mut sync::SyncStrategy::new(&scoped))
+        }
         Algo::Local => engine::run(ctx, &mut local::LocalAvgStrategy::new(ctx)),
         Algo::Overlap => engine::run(ctx, &mut overlap::OverlapStrategy::new(ctx, 0.0, false)),
         Algo::OverlapM => {

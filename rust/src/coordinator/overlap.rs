@@ -140,6 +140,9 @@ impl MixingStrategy for OverlapStrategy {
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, out: RoundOutcome) -> Result<()> {
         let m = eng.workers.m;
+        // Split the compression seam off the engine for the duration of the
+        // mixing decision (disjoint borrows); restored before returning.
+        let mut cs_opt = eng.compress.take();
 
         // --- absorb the previous round's collective (Eq. 5 / 10-11) ------
         if let Some(h) = self.pending.take() {
@@ -159,11 +162,20 @@ impl MixingStrategy for OverlapStrategy {
         }
 
         // --- pullback (Eq. 4), local on every stepping node ---------------
+        // Compressed runs use the delay-corrected form (LOSCAR-style,
+        // DESIGN.md §12): contract by the gap the absorbed average actually
+        // measured — α(x_launch − z) with the launch-time snapshot — so the
+        // staleness the sparse/quantized mask introduces is corrected at
+        // pullback without discarding the τ local steps since launch.
         for w in 0..m {
             if !eng.fault.alive.steps(w) {
                 continue; // parked: frozen replica, frozen clock
             }
-            ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z, ctx.cfg.alpha)?;
+            if let Some(cs) = cs_opt.as_mut() {
+                cs.pullback(w, &mut eng.workers.params[w], &self.z, ctx.cfg.alpha);
+            } else {
+                ctx.rt.pullback_inplace(&mut eng.workers.params[w], &self.z, ctx.cfg.alpha)?;
+            }
             eng.clocks.compute(w, PULLBACK_S);
         }
 
@@ -177,23 +189,55 @@ impl MixingStrategy for OverlapStrategy {
         // the alive set's members contribute (a frozen clock never sets
         // the start time), the reduce runs the survivor sub-schedule, and
         // the wire cost is the survivor-shaped formula.
-        let start = eng.launch_clock();
-        let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
-        self.pending = Some(launch_collective_among(
-            &eng.exec,
-            &ctx.cluster.topology,
-            &refs,
-            &eng.fault.alive,
-            &ctx.cluster.net,
-            ctx.cluster.message_bytes,
-            start,
-        ));
-        account_collective_among(
-            &mut eng.rec,
-            &ctx.cluster.topology,
-            ctx.cluster.message_bytes,
-            &eng.fault.alive,
-        );
+        if let Some(cs) = cs_opt.as_mut() {
+            // Compressed launch: each member encodes its post-pullback
+            // model against the anchor (the reference every receiver
+            // holds), records its launch snapshot for the next boundary's
+            // delay-corrected pullback, and the collective reduces the
+            // reconstructed contributions at the compressed wire size.
+            let members: Vec<usize> = eng.fault.alive.members().to_vec();
+            for &w in &members {
+                let flops = cs.encode_param(w, &eng.workers.params[w], &self.z);
+                eng.clocks.compute(w, cs.encode_time(flops));
+                cs.note_launch(w, &eng.workers.params[w]);
+            }
+            let start = eng.launch_clock();
+            let refs: Vec<&[f32]> = cs.contrib.iter().map(|p| p.as_slice()).collect();
+            self.pending = Some(launch_collective_among(
+                &eng.exec,
+                &ctx.cluster.topology,
+                &refs,
+                &eng.fault.alive,
+                &ctx.cluster.net,
+                cs.scaled_bytes,
+                start,
+            ));
+            account_collective_among(
+                &mut eng.rec,
+                &ctx.cluster.topology,
+                cs.scaled_bytes,
+                &eng.fault.alive,
+            );
+        } else {
+            let start = eng.launch_clock();
+            let refs: Vec<&[f32]> = eng.workers.params.iter().map(|p| p.as_slice()).collect();
+            self.pending = Some(launch_collective_among(
+                &eng.exec,
+                &ctx.cluster.topology,
+                &refs,
+                &eng.fault.alive,
+                &ctx.cluster.net,
+                ctx.cluster.message_bytes,
+                start,
+            ));
+            account_collective_among(
+                &mut eng.rec,
+                &ctx.cluster.topology,
+                ctx.cluster.message_bytes,
+                &eng.fault.alive,
+            );
+        }
+        eng.compress = cs_opt;
 
         // --- adaptive-τ controller ---------------------------------------
         if let Some(ada) = self.adaptive.as_mut() {

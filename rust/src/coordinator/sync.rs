@@ -1,29 +1,49 @@
-//! Fully synchronous SGD (the paper's baseline) and its PowerSGD variant,
-//! as engine strategies.
+//! Fully synchronous SGD (the paper's baseline) as an engine strategy.
 //!
 //! Every round is one step: all workers compute a gradient on their own
 //! shard (the engine's `GradOnly` phase), then the mixing decision runs a
 //! *blocking* all-reduce (everyone waits for the slowest worker, then for
 //! the wire) and applies the identical averaged update everywhere through
 //! the fused `update` kernel.
+//!
+//! Under `--compress` (DESIGN.md §12) the same schedule runs on compressed
+//! gradients: each member re-injects its error-feedback residual, the
+//! collective carries the compressed payload (the wire and the byte
+//! accounting are charged at the scaled compressed size), and the decoded
+//! survivor mean feeds the shared update. `--algo powersgd` is exactly
+//! this strategy under `--compress powersgd` — bit-identical to the
+//! retired dedicated strategy, with a crash/rejoin protocol the old one
+//! refused to have.
 
 use anyhow::Result;
 
 use super::engine::{Engine, LocalPhase, MixingStrategy, RoundOutcome, RoundPlan};
 use super::{
-    account_collective, account_collective_among, charge_blocking_exchange, TrainContext,
+    account_collective_among, charge_blocking_exchange, charge_blocking_exchange_bytes,
+    TrainContext,
 };
-use crate::compress::PowerSgd;
+use crate::compress::{wire_plan, WirePlan};
 
-/// Blocking per-step gradient averaging (mixing matrix = (1/m) 11ᵀ each step).
+/// Blocking per-step gradient averaging (mixing matrix = (1/m) 11ᵀ each
+/// step), optionally over compressed gradients.
 pub struct SyncStrategy {
     comm_t: f64,
+    /// compressed wire size + FLOP scaling; `None` for `--compress none`
+    wire: Option<WirePlan>,
 }
 
 impl SyncStrategy {
-    /// Strategy with the per-step blocking collective cost precomputed.
+    /// Strategy with the per-step blocking collective cost precomputed —
+    /// at the compressed payload size when a compressor is configured.
     pub fn new(ctx: &TrainContext) -> Self {
-        Self { comm_t: ctx.cluster.collective_time() }
+        let wire = wire_plan(ctx.cfg, &ctx.rt.manifest, ctx.cluster.message_bytes);
+        let comm_t = match &wire {
+            // The compressed message replaces the full one; its wire cost
+            // follows the configured exact topology at the scaled size.
+            Some(w) => ctx.cluster.topology.collective_time(&ctx.cluster.net, w.scaled_bytes),
+            None => ctx.cluster.collective_time(),
+        };
+        Self { comm_t, wire }
     }
 }
 
@@ -32,7 +52,7 @@ impl SyncStrategy {
 /// members, so apply once and copy is exact). Under faults the template is
 /// the first member and parked replicas stay frozen — they are re-seeded
 /// from a member on rejoin.
-fn apply_shared_update(
+pub(crate) fn apply_shared_update(
     eng: &mut Engine,
     ctx: &TrainContext,
     avg_grad: &[f32],
@@ -68,6 +88,30 @@ impl MixingStrategy for SyncStrategy {
     }
 
     fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, mut out: RoundOutcome) -> Result<()> {
+        if self.wire.is_some() {
+            // Compressed round: encode each member's gradient (with its
+            // residual), charge the modeled encode/decode GEMM time, then
+            // the blocking collective at the compressed payload size.
+            let mut cs = eng.compress.take().expect("wire plan implies compress state");
+            let members: Vec<usize> = eng.fault.alive.members().to_vec();
+            let grad_refs: Vec<&[f32]> = out.grads.iter().map(|g| g.as_slice()).collect();
+            debug_assert_eq!(grad_refs.len(), members.len());
+            let flops = cs.encode_grads_mean(&grad_refs, &members);
+            let enc_t = cs.encode_time(flops);
+            for &w in &members {
+                eng.clocks.compute(w, enc_t);
+            }
+            charge_blocking_exchange_bytes(eng, ctx, self.comm_t, cs.scaled_bytes);
+            account_collective_among(
+                &mut eng.rec,
+                &ctx.cluster.topology,
+                cs.scaled_bytes,
+                &eng.fault.alive,
+            );
+            let res = apply_shared_update(eng, ctx, cs.avg(), out.start_step);
+            eng.compress = Some(cs);
+            return res;
+        }
         // Blocking collective: stragglers idle everyone (alive members
         // under faults — parked workers neither barrier nor pay the wire),
         // then the wire.
@@ -95,69 +139,5 @@ impl MixingStrategy for SyncStrategy {
             &eng.fault.alive,
         );
         apply_shared_update(eng, ctx, &out.grads[0], out.start_step)
-    }
-}
-
-/// PowerSGD: sync SGD with rank-r compressed gradients. Two collectives per
-/// step (P then Q+raw) — two handshakes, the latency floor the paper points
-/// at — plus modeled encode/decode GEMM time on the accelerator.
-pub struct PowerSgdStrategy {
-    psgd: PowerSgd,
-    comm_t: f64,
-    scaled_bytes: usize,
-    flops_scale: f64,
-}
-
-impl PowerSgdStrategy {
-    /// Effective GEMM throughput assumed for encode/decode cost (Titan X
-    /// era, f32): 5 TFLOP/s.
-    const GEMM_FLOPS: f64 = 5.0e12;
-
-    /// Strategy with the compressed wire cost and FLOP scaling precomputed.
-    pub fn new(ctx: &TrainContext) -> Self {
-        let m = ctx.cfg.workers;
-        let psgd = PowerSgd::new(&ctx.rt.manifest, ctx.cfg.rank, m, ctx.cfg.seed);
-        // Wire cost: the compressed message replaces the full one, but the
-        // *fraction* of compressed bytes in our scaled model equals the
-        // paper's fraction, so scale the paper-size message by it.
-        let full_bytes = ctx.rt.manifest.message_bytes();
-        let frac = psgd.bytes_per_round() as f64 / full_bytes as f64;
-        let scaled_bytes = (ctx.cluster.message_bytes as f64 * frac) as usize;
-        // The reference implementation flattens all P factors into ONE
-        // buffer (single all-reduce), then all Q factors + raw tensors into
-        // another, launched back-to-back in one comm group: one handshake,
-        // two wire passes' worth of bytes. The wire cost follows the
-        // configured exact topology at the compressed size.
-        let comm_t = ctx.cluster.topology.collective_time(&ctx.cluster.net, scaled_bytes);
-        let flops_scale = (full_bytes as f64 / (ctx.rt.n * 4) as f64).max(1.0);
-        Self { psgd, comm_t, scaled_bytes, flops_scale }
-    }
-}
-
-impl MixingStrategy for PowerSgdStrategy {
-    fn phase(&self) -> LocalPhase {
-        LocalPhase::GradOnly
-    }
-
-    fn plan(&mut self, eng: &Engine, _ctx: &TrainContext) -> RoundPlan {
-        RoundPlan { steps: vec![1; eng.workers.m], advance: 1 }
-    }
-
-    fn mix(&mut self, eng: &mut Engine, ctx: &TrainContext, out: RoundOutcome) -> Result<()> {
-        let m = eng.workers.m;
-        let grad_refs: Vec<&[f32]> = out.grads.iter().map(|g| g.as_slice()).collect();
-        let round = self.psgd.round(&grad_refs);
-
-        // encode/decode compute, scaled to paper-model FLOPs.
-        let enc_t = round.encode_flops * self.flops_scale / Self::GEMM_FLOPS;
-        for w in 0..m {
-            eng.clocks.compute(w, enc_t);
-        }
-        eng.clocks.barrier();
-        for w in 0..m {
-            eng.clocks.comm_blocked(w, self.comm_t);
-        }
-        account_collective(&mut eng.rec, &ctx.cluster.topology, self.scaled_bytes);
-        apply_shared_update(eng, ctx, &round.avg_grad, out.start_step)
     }
 }

@@ -31,6 +31,14 @@
 //!   coordinator thread, so a fixed schedule yields bit-identical
 //!   observables on the `sim` and `threads` backends (asserted by
 //!   rust/tests/failure_injection.rs).
+//!
+//! Per-worker *compressor* state (error-feedback residuals, PowerSGD
+//! bases — DESIGN.md §12) obeys the same park/freeze discipline as the
+//! replica it belongs to: a parked worker's residual is frozen bit-for-bit
+//! and never averaged in, and a rejoiner's compressor state is reset
+//! (residual zeroed, bases re-seeded) *before* the strategy's anchor warm
+//! start. That protocol is what deleted the old "powersgd does not support
+//! fault injection" refusal.
 
 use anyhow::{bail, ensure, Context, Result};
 

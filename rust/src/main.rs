@@ -76,8 +76,13 @@ fn print_usage() {
                      | partition@round:set|set | heal@round   (repeatable; rounds are\n\
                      1-based; also --set fault_rate=p / rejoin_rate=p for the seeded\n\
                      random process; deterministic replay, survivors stay exact)\n\
+         Compression: --compress none|powersgd|topk|qsgd (per-collective axis, composes\n\
+                     with every algorithm, topology, and fault schedule; knobs:\n\
+                     --set compress_k=N compress_rank=R compress_bits=B; error-feedback\n\
+                     residuals are per-worker engine state, DESIGN.md §12)\n\
          Config keys: algo model workers epochs seed eval_every execution lr tau tau_min\n\
                       tau_hetero ada_patience ada_threshold alpha beta mu wd rank\n\
+                      compress compress_k compress_rank compress_bits\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
                       topology gossip_degree hier_groups fault fault_rate rejoin_rate\n\
                       message_bytes straggler artifacts_dir out_dir"
@@ -123,6 +128,10 @@ fn parse_common(args: &[String]) -> Result<CommonArgs> {
                 // accumulate into one schedule (DESIGN.md §11).
                 let v = next(args, &mut i, "--fault")?;
                 overrides.push(("fault".to_string(), v));
+            }
+            "--compress" => {
+                let v = next(args, &mut i, "--compress")?;
+                overrides.push(("compress".to_string(), v));
             }
             "--out" | "-o" => {
                 out = next(args, &mut i, "--out")?;

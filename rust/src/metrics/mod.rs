@@ -87,6 +87,11 @@ pub struct EvalRecord {
 pub struct TrainLog {
     /// algorithm name (`Algo::name`)
     pub algo: String,
+    /// compressor name (`CompressKind::name`; "none" when off). Reported
+    /// in the JSON/CSV outputs but deliberately outside the digest: the
+    /// observables the digest hashes (losses, times, bytes) already see
+    /// compression wherever it acts.
+    pub compress: String,
     /// configured τ
     pub tau: usize,
     /// cluster size m
@@ -161,6 +166,7 @@ impl TrainLog {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("algo", s(&self.algo)),
+            ("compress", s(&self.compress)),
             ("tau", num(self.tau as f64)),
             ("workers", num(self.workers as f64)),
             ("steps", num(self.steps as f64)),
@@ -329,6 +335,7 @@ mod tests {
     fn sample_log() -> TrainLog {
         TrainLog {
             algo: "overlap-m".into(),
+            compress: "none".into(),
             tau: 2,
             workers: 8,
             records: vec![
@@ -415,6 +422,12 @@ mod tests {
         e.hot.buffer_allocs_total = 99;
         e.hot.steady_buffer_allocs = 5;
         assert_eq!(a.digest(), e.digest(), "hot counters must stay out of the digest");
+        // The compress label is reporting-only: the digest sees compression
+        // through the observables it changes (losses, times, bytes), never
+        // through the label itself.
+        let mut h = sample_log();
+        h.compress = "topk".into();
+        assert_eq!(a.digest(), h.digest(), "compress label must stay out of the digest");
     }
 
     #[test]

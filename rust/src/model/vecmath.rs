@@ -101,6 +101,20 @@ pub fn pullback_inplace(x: &mut [f32], z: &[f32], alpha: f32) {
     }
 }
 
+/// Delay-corrected Eq. (4) for compressed overlap rounds (LOSCAR-style):
+/// x <- x - alpha * (x_stale - z), where `x_stale` is the snapshot of `x`
+/// taken when the (now absorbed) collective was launched. Contracting by
+/// the *measured* gap instead of the current one keeps the pullback
+/// consistent with the staleness a sparse/quantized mask introduces,
+/// without discarding the local steps taken since launch.
+pub fn pullback_stale_inplace(x: &mut [f32], x_stale: &[f32], z: &[f32], alpha: f32) {
+    assert_eq!(x.len(), x_stale.len());
+    assert_eq!(x.len(), z.len());
+    for i in 0..x.len() {
+        x[i] -= alpha * (x_stale[i] - z[i]);
+    }
+}
+
 /// Eqs. (10)-(11) in place: v <- beta*v + (avg - z); z <- z + v.
 pub fn anchor_update_inplace(z: &mut [f32], v: &mut [f32], avg: &[f32], beta: f32) {
     assert_eq!(z.len(), v.len());
@@ -228,6 +242,23 @@ mod tests {
                 assert!(x[i] >= lo && x[i] <= hi, "not convex at {i}");
             }
         });
+    }
+
+    #[test]
+    fn stale_pullback_reduces_to_plain_when_snapshot_is_current() {
+        // With x_stale == x the delay-corrected form is exactly Eq. (4).
+        let z = vec![5.0f32; 4];
+        let mut a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut b = a.clone();
+        let snap = a.clone();
+        pullback_inplace(&mut a, &z, 0.3);
+        pullback_stale_inplace(&mut b, &snap, &z, 0.3);
+        assert_eq!(a, b);
+        // With a stale snapshot, local progress since launch survives:
+        // x - x' is invariant under the correction.
+        let mut x = vec![2.0f32; 3];
+        pullback_stale_inplace(&mut x, &[1.0; 3], &[0.0; 3], 0.5);
+        assert_close(&x, &[1.5; 3], 1e-6, 0.0);
     }
 
     #[test]

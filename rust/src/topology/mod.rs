@@ -29,6 +29,13 @@
 //! rounds of [`Topology::gossip_mix_with`] (the foundation for the planned
 //! partial-participation scenarios), property-tested in
 //! rust/tests/topology.rs (E10).
+//!
+//! Both planes take the message size as an argument, so the compression
+//! axis (DESIGN.md §12) composes with every graph for free: a compressed
+//! strategy quotes its `wire_plan`-scaled byte count and the per-topology
+//! cost formulas, `collective_time`, and the `neighbor_bytes` per-link
+//! accounting all evaluate at the compressed payload — no per-topology
+//! compression code exists anywhere in this module.
 
 use anyhow::{bail, Result};
 

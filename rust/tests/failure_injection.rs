@@ -376,9 +376,13 @@ fn impossible_fault_schedules_fail_loudly() {
     cfg.set("fault", "crash@2:99").unwrap();
     let msg = format!("{:#}", attempt(&cfg).unwrap_err());
     assert!(msg.contains("99"), "unhelpful error: {msg}");
-    // PowerSGD has no rejoin protocol for its compressor state.
+    // `--algo powersgd` *is* sync under `--compress powersgd`, so pairing it
+    // with a different compressor is contradictory and fails loudly. (The old
+    // "powersgd cannot run under fault injection" refusal is gone: per-worker
+    // error-feedback state crashes and rejoins cleanly — see
+    // tests/compression.rs::powersgd_survives_crash_and_rejoin.)
     let mut cfg = paper16(Algo::PowerSgd);
-    cfg.set("fault", "crash@2:0").unwrap();
+    cfg.set("compress", "topk").unwrap();
     let msg = format!("{:#}", attempt(&cfg).unwrap_err());
     assert!(msg.contains("powersgd"), "unhelpful error: {msg}");
 }
