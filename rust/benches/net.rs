@@ -1,0 +1,183 @@
+//! **E16 — the net service plane, measured** (EXPERIMENTS.md): every leg
+//! runs the same fixed-seed config under `sim` and under `--execution net`
+//! (4 real worker processes over localhost TCP serving the paper's m=16
+//! cluster), hard-asserts the two `TrainLog` digests are identical, and
+//! records the net backend's wall time plus the steady-state hot counters
+//! (which must stay zero: the coordinator spawns processes at startup and
+//! *threads* never, and the round loop reuses all of its buffers).
+//!
+//! A kill leg rides along: a worker process is killed after serving round
+//! 2 (`net_kill=1:2`) and the run must land on exactly the digest of the
+//! explicit `--fault crash@3:1` schedule — process death is a scheduled
+//! fault, byte for byte.
+//!
+//! Results land in `results/net/E16_net.json`; CI's `net-matrix` job gates
+//! on every leg's `digest_match` and on zero steady-state spawns/allocs.
+//! `OLSGD_SMOKE=1` shrinks the workload for CI.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+use olsgd::config::{Algo, Execution, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::metrics::{write_json, TrainLog};
+use olsgd::runtime::ModelRuntime;
+use olsgd::util::json::{arr, num, obj, s, Json};
+
+struct Leg {
+    label: String,
+    algo: Algo,
+    digest_sim: u64,
+    digest_net: u64,
+    wall_s: f64,
+    log: TrainLog,
+}
+
+/// Run `cfg` on sim, then on net (timed), and return both digests plus the
+/// net run's log. `sim_cfg` lets the kill leg pin the sim side to an
+/// explicit fault schedule instead of a killed process.
+fn run_pair(
+    sim_cfg: &ExperimentConfig,
+    net_cfg: &ExperimentConfig,
+    rt: &ModelRuntime,
+) -> Result<(u64, u64, f64, TrainLog)> {
+    let gen = GenConfig::default();
+    let train = data::generate(sim_cfg.seed, sim_cfg.train_n, "train", &gen);
+    let test = data::generate(sim_cfg.seed, sim_cfg.test_n, "test", &gen);
+    let mut c = sim_cfg.clone();
+    c.execution = Execution::Sim;
+    let sim = run_experiment(rt, &c, &train, &test)?;
+    let mut n = net_cfg.clone();
+    n.execution = Execution::Net;
+    let t0 = Instant::now();
+    let net = run_experiment(rt, &n, &train, &test)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok((sim.digest(), net.digest(), wall_s, net))
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::var("OLSGD_SMOKE").map(|v| v == "1").unwrap_or(false);
+
+    let mut base = ExperimentConfig::default();
+    base.model = "linear".into();
+    base.workers = 16;
+    base.train_n = base.workers * 64;
+    base.test_n = 100;
+    base.epochs = if smoke { 2.0 } else { 6.0 };
+    base.eval_every = base.epochs;
+    base.tau = 2;
+    base.set("net_worker_bin", env!("CARGO_BIN_EXE_olsgd"))?;
+    base.set("net_procs", "4")?;
+    base.set("net_timeout_s", "120")?;
+
+    let rt = ModelRuntime::native(&base.model)?;
+    println!(
+        "=== E16 net service plane (m={}, {} worker processes, localhost TCP) ===",
+        base.workers, 4
+    );
+    println!(
+        "{:<24} {:>10} {:>18} {:>18} {:>8} {:>8}",
+        "leg", "wall (s)", "digest sim", "digest net", "spawns", "allocs"
+    );
+
+    let specs: [(&str, Algo, usize); 4] = [
+        ("sync", Algo::Sync, 1),
+        ("local", Algo::Local, 2),
+        ("overlap-m", Algo::OverlapM, 2),
+        ("cocod", Algo::Cocod, 2),
+    ];
+    let mut legs: Vec<Leg> = Vec::new();
+    for (label, algo, tau) in specs {
+        let mut cfg = base.clone();
+        cfg.algo = algo;
+        cfg.tau = tau;
+        let (digest_sim, digest_net, wall_s, log) = run_pair(&cfg, &cfg, &rt)?;
+        legs.push(Leg { label: label.to_string(), algo, digest_sim, digest_net, wall_s, log });
+    }
+
+    // The kill leg: net run loses worker process 1 after it serves round 2;
+    // sim run schedules the equivalent crash explicitly. Same digest or bust.
+    {
+        let mut net_cfg = base.clone();
+        net_cfg.workers = 4;
+        net_cfg.train_n = net_cfg.workers * 64;
+        net_cfg.algo = Algo::OverlapM;
+        net_cfg.epochs = 4.0;
+        net_cfg.eval_every = net_cfg.epochs;
+        net_cfg.set("net_kill", "1:2")?;
+        let mut sim_cfg = net_cfg.clone();
+        sim_cfg.set("net_kill", "")?;
+        sim_cfg.set("fault", "crash@3:1")?;
+        let (digest_sim, digest_net, wall_s, log) = run_pair(&sim_cfg, &net_cfg, &rt)?;
+        legs.push(Leg {
+            label: "kill-proc1@round2".to_string(),
+            algo: Algo::OverlapM,
+            digest_sim,
+            digest_net,
+            wall_s,
+            log,
+        });
+    }
+
+    for leg in &legs {
+        println!(
+            "{:<24} {:>10.4} {:>18} {:>18} {:>8} {:>8}",
+            leg.label,
+            leg.wall_s,
+            format!("{:016x}", leg.digest_sim),
+            format!("{:016x}", leg.digest_net),
+            leg.log.hot.steady_thread_spawns,
+            leg.log.hot.steady_buffer_allocs,
+        );
+        ensure!(
+            leg.digest_sim == leg.digest_net,
+            "{}: net backend drifted from sim ({:016x} vs {:016x})",
+            leg.label,
+            leg.digest_sim,
+            leg.digest_net
+        );
+        ensure!(
+            leg.log.hot.steady_thread_spawns == 0,
+            "{}: {} thread spawns after warm-up (want 0: net spawns processes, not threads)",
+            leg.label,
+            leg.log.hot.steady_thread_spawns
+        );
+    }
+    println!("E16: all digests match sim and steady-state spawns = 0 — PASS");
+
+    let summary = obj(vec![
+        ("bench", s("net")),
+        ("experiment", s("E16")),
+        ("workers", num(base.workers as f64)),
+        ("net_procs", num(4.0)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "legs",
+            arr(legs.iter().map(|l| {
+                obj(vec![
+                    ("label", s(&l.label)),
+                    ("algo", s(l.algo.name())),
+                    ("execution", s("net")),
+                    ("wall_s", num(l.wall_s)),
+                    ("digest_sim", s(&format!("{:016x}", l.digest_sim))),
+                    ("digest_net", s(&format!("{:016x}", l.digest_net))),
+                    ("digest_match", Json::Bool(l.digest_sim == l.digest_net)),
+                    ("rounds", num(l.log.hot.rounds as f64)),
+                    (
+                        "steady_thread_spawns",
+                        num(l.log.hot.steady_thread_spawns as f64),
+                    ),
+                    (
+                        "steady_buffer_allocs",
+                        num(l.log.hot.steady_buffer_allocs as f64),
+                    ),
+                ])
+            })),
+        ),
+    ]);
+    write_json(Path::new("results/net"), "E16_net.json", &summary)?;
+    println!("wrote results/net/E16_net.json");
+    Ok(())
+}

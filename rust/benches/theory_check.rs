@@ -145,7 +145,9 @@ fn main() {
         logk.push((k as f64).ln());
         logg.push(g.ln());
     }
-    let (_, slope, r2) = linear_fit(&logk, &logg);
+    let fit = linear_fit(&logk, &logg).expect("five K points always fit");
+    assert!(!fit.degenerate, "distinct K values cannot be constant-x");
+    let (slope, r2) = (fit.slope, fit.r2);
     println!("log-log slope = {slope:.3} (theory: -0.5 in the 1/sqrt(mK) regime), r2 = {r2:.3}");
     assert!(
         slope < -0.25 && slope > -0.85,

@@ -68,13 +68,15 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f:
         samples.push(dt);
         summary.add(dt);
     }
+    // `percentile` returns None only on empty samples; a smoke-skipped leg
+    // (OLSGD_SMOKE=1) reporting NaN beats a panic mid-bench-suite.
     let result = BenchResult {
         name: name.to_string(),
         iters: samples.len(),
         mean_s: summary.mean(),
         std_s: summary.std(),
-        p50_s: percentile(&samples, 50.0),
-        p99_s: percentile(&samples, 99.0),
+        p50_s: percentile(&samples, 50.0).unwrap_or(f64::NAN),
+        p99_s: percentile(&samples, 99.0).unwrap_or(f64::NAN),
     };
     println!("{}", result.report());
     result

@@ -15,11 +15,12 @@ use crate::fault::FaultPlan;
 use crate::simnet::{ClusterModel, ComputeModel, NetworkModel, StragglerModel};
 use crate::topology::{Topology, TopologyKind};
 
-/// Which execution backend drives the round loop (DESIGN.md §9).
+/// Which execution backend drives the round loop (DESIGN.md §9, §13).
 ///
-/// Both backends produce bit-identical `TrainLog`s (the cross-backend
-/// golden tests in `rust/tests/golden_regression.rs` assert digest
-/// equality); they differ only in what runs on real OS threads.
+/// All backends produce bit-identical `TrainLog`s (the cross-backend
+/// golden tests in `rust/tests/golden_regression.rs` and
+/// `rust/tests/net_backend.rs` assert digest equality); they differ only
+/// in what runs on real OS threads or processes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Execution {
     /// Single-threaded discrete-event simulation — the default. All
@@ -31,15 +32,22 @@ pub enum Execution {
     /// so overlapped schedules genuinely hide the reduction behind local
     /// compute (measured by `rust/benches/wallclock.rs`, E12).
     Threads,
+    /// Real service plane: the coordinator runs the engine and worker
+    /// *processes* run the local phases, connected over TCP with the
+    /// hand-rolled wire protocol of DESIGN.md §13. Dropped or timed-out
+    /// connections map to `crash@round` events in the fault subsystem;
+    /// fresh connections claim dead slots as `rejoin@round` events.
+    Net,
 }
 
 impl Execution {
-    /// Parse a CLI/config spelling (`sim` | `threads`).
+    /// Parse a CLI/config spelling (`sim` | `threads` | `net`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "sim" => Execution::Sim,
             "threads" | "thread" => Execution::Threads,
-            _ => bail!("unknown execution backend '{s}' (want sim|threads)"),
+            "net" | "tcp" => Execution::Net,
+            _ => bail!("unknown execution backend '{s}' (want sim|threads|net)"),
         })
     }
 
@@ -48,6 +56,7 @@ impl Execution {
         match self {
             Execution::Sim => "sim",
             Execution::Threads => "threads",
+            Execution::Net => "net",
         }
     }
 }
@@ -233,6 +242,27 @@ pub struct ExperimentConfig {
     /// model size; Some(b) -> explicit bytes
     pub message_bytes: Option<usize>,
 
+    // net execution backend (`--execution net`, DESIGN.md §13)
+    /// coordinator listen address (`host:port`; port 0 = OS-assigned)
+    pub net_listen: String,
+    /// worker processes the self-hosting coordinator forks (slots are
+    /// split as evenly as possible across them)
+    pub net_procs: usize,
+    /// fork local worker processes (`olsgd train --execution net`); the
+    /// `olsgd coordinator` subcommand sets this false and waits for
+    /// external `olsgd worker` clients instead
+    pub net_spawn: bool,
+    /// per-connection read/write timeout in seconds; a worker that stays
+    /// silent longer is declared dead and crashed into the fault model
+    pub net_timeout_s: f64,
+    /// worker binary for self-hosted spawning (empty = this executable);
+    /// integration tests point it at the `olsgd` binary explicitly
+    pub net_worker_bin: String,
+    /// chaos hook `proc:rounds`: the self-hosted worker process `proc`
+    /// exits after serving `rounds` rounds — the deterministic
+    /// kill-a-worker leg of the E16 suite (empty = off)
+    pub net_kill: String,
+
     /// directory holding the AOT PJRT artifacts (feature `pjrt`)
     pub artifacts_dir: String,
     /// default output directory for result JSON/CSV
@@ -282,6 +312,12 @@ impl Default for ExperimentConfig {
             rejoin_rate: 0.0,
             base_step_s: 0.188,
             message_bytes: None,
+            net_listen: "127.0.0.1:0".into(),
+            net_procs: 2,
+            net_spawn: true,
+            net_timeout_s: 30.0,
+            net_worker_bin: String::new(),
+            net_kill: String::new(),
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
         }
@@ -381,11 +417,99 @@ impl ExperimentConfig {
                 anyhow::ensure!((0.0..1.0).contains(&r), "rejoin_rate must be in [0, 1)");
                 self.rejoin_rate = r;
             }
+            "net_listen" => self.net_listen = v.to_string(),
+            "net_procs" => {
+                let p = parse_usize()?;
+                anyhow::ensure!(p >= 1, "net_procs must be >= 1");
+                self.net_procs = p;
+            }
+            "net_spawn" => self.net_spawn = parse_bool()?,
+            "net_timeout_s" => {
+                let t = parse_f64()?;
+                anyhow::ensure!(t > 0.0, "net_timeout_s must be positive");
+                self.net_timeout_s = t;
+            }
+            "net_worker_bin" => self.net_worker_bin = v.to_string(),
+            "net_kill" => {
+                if !v.is_empty() {
+                    let (p, r) = v
+                        .split_once(':')
+                        .with_context(|| format!("net_kill wants proc:rounds, got '{v}'"))?;
+                    p.parse::<usize>().with_context(|| format!("bad proc in net_kill '{v}'"))?;
+                    r.parse::<u64>().with_context(|| format!("bad rounds in net_kill '{v}'"))?;
+                }
+                self.net_kill = v.to_string();
+            }
             "artifacts_dir" => self.artifacts_dir = v.to_string(),
             "out_dir" => self.out_dir = v.to_string(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
+    }
+
+    /// Serialize the full config as canonical `(key, value)` pairs: applying
+    /// them to a default config via [`ExperimentConfig::set`] reconstructs
+    /// this config exactly (the net backend's handshake ships these to every
+    /// worker process, which must rebuild bit-identical data, shards, and
+    /// schedules — DESIGN.md §13). `message_bytes = None` is expressed by
+    /// omitting the key.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let kv = |k: &str, v: String| (k.to_string(), v);
+        let mut out = vec![
+            kv("name", self.name.clone()),
+            kv("algo", self.algo.name().to_string()),
+            kv("model", self.model.clone()),
+            kv("workers", self.workers.to_string()),
+            kv("epochs", self.epochs.to_string()),
+            kv("seed", self.seed.to_string()),
+            kv("eval_every", self.eval_every.to_string()),
+            kv("execution", self.execution.name().to_string()),
+            kv("base_lr", self.base_lr.to_string()),
+            kv("tau", self.tau.to_string()),
+            kv("tau_min", self.tau_min.to_string()),
+            kv("tau_hetero", self.tau_hetero.to_string()),
+            kv("ada_patience", self.ada_patience.to_string()),
+            kv("ada_threshold", self.ada_threshold.to_string()),
+            kv("alpha", self.alpha.to_string()),
+            kv("beta", self.beta.to_string()),
+            kv("mu", self.mu.to_string()),
+            kv("wd", self.wd.to_string()),
+            kv("rank", self.rank.to_string()),
+            kv("compress", self.compress.name().to_string()),
+            kv("compress_k", self.compress_k.to_string()),
+            kv("compress_bits", self.compress_bits.to_string()),
+            kv("local_opt", self.local_opt.clone()),
+            kv("train_n", self.train_n.to_string()),
+            kv("test_n", self.test_n.to_string()),
+            kv("noniid", self.noniid.to_string()),
+            kv("dominant_frac", self.dominant_frac.to_string()),
+            kv("reshuffle", self.reshuffle.to_string()),
+            kv("net", self.net_preset.clone()),
+            kv("topology", self.topology.clone()),
+            kv("gossip_degree", self.gossip_degree.to_string()),
+            kv("hier_groups", self.hier_groups.to_string()),
+            kv("straggler", self.straggler.spec()),
+            // `fault` appends; "none" clears, so an empty plan round-trips.
+            kv(
+                "fault",
+                if self.fault.is_empty() { "none".to_string() } else { self.fault.describe() },
+            ),
+            kv("fault_rate", self.fault_rate.to_string()),
+            kv("rejoin_rate", self.rejoin_rate.to_string()),
+            kv("base_step_s", self.base_step_s.to_string()),
+            kv("net_listen", self.net_listen.clone()),
+            kv("net_procs", self.net_procs.to_string()),
+            kv("net_spawn", self.net_spawn.to_string()),
+            kv("net_timeout_s", self.net_timeout_s.to_string()),
+            kv("net_worker_bin", self.net_worker_bin.clone()),
+            kv("net_kill", self.net_kill.clone()),
+            kv("artifacts_dir", self.artifacts_dir.clone()),
+            kv("out_dir", self.out_dir.clone()),
+        ];
+        if let Some(b) = self.message_bytes {
+            out.push(kv("message_bytes", b.to_string()));
+        }
+        out
     }
 
     /// Load a TOML-subset file, then apply `overrides` in order.
@@ -596,12 +720,94 @@ mod tests {
         assert_eq!(c.execution, Execution::Sim);
         c.set("execution", "threads").unwrap();
         assert_eq!(c.execution, Execution::Threads);
+        c.set("execution", "net").unwrap();
+        assert_eq!(c.execution, Execution::Net);
         c.set("exec", "sim").unwrap();
         assert_eq!(c.execution, Execution::Sim);
         assert!(c.set("execution", "fibers").is_err());
-        for e in [Execution::Sim, Execution::Threads] {
+        for e in [Execution::Sim, Execution::Threads, Execution::Net] {
             assert_eq!(Execution::parse(e.name()).unwrap(), e);
         }
+    }
+
+    #[test]
+    fn net_keys_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.net_listen, "127.0.0.1:0");
+        assert!(d.net_spawn);
+        assert!(d.net_kill.is_empty());
+        let mut c = ExperimentConfig::default();
+        c.set("net_listen", "0.0.0.0:7070").unwrap();
+        c.set("net_procs", "4").unwrap();
+        c.set("net_spawn", "false").unwrap();
+        c.set("net_timeout_s", "2.5").unwrap();
+        c.set("net_worker_bin", "/bin/olsgd").unwrap();
+        c.set("net_kill", "1:3").unwrap();
+        assert_eq!(c.net_listen, "0.0.0.0:7070");
+        assert_eq!(c.net_procs, 4);
+        assert!(!c.net_spawn);
+        assert!((c.net_timeout_s - 2.5).abs() < 1e-12);
+        assert_eq!(c.net_worker_bin, "/bin/olsgd");
+        assert_eq!(c.net_kill, "1:3");
+        // `net` (the preset key) must not collide with the new net_* keys.
+        c.set("net", "slow10g").unwrap();
+        assert_eq!(c.net_preset, "slow10g");
+        assert_eq!(c.net_listen, "0.0.0.0:7070");
+        assert!(c.set("net_procs", "0").is_err());
+        assert!(c.set("net_timeout_s", "0").is_err());
+        assert!(c.set("net_kill", "3").is_err());
+        assert!(c.set("net_kill", "a:b").is_err());
+    }
+
+    #[test]
+    fn to_kv_round_trips_through_set() {
+        let replay = |cfg: &ExperimentConfig| {
+            let mut c = ExperimentConfig::default();
+            for (k, v) in cfg.to_kv() {
+                c.set(&k, &v).unwrap_or_else(|e| panic!("set({k}, {v}): {e}"));
+            }
+            c
+        };
+        // Default config round-trips.
+        let d = ExperimentConfig::default();
+        assert_eq!(replay(&d).to_kv(), d.to_kv());
+        // A config exercising every group — including fractional floats,
+        // a straggler model, a multi-event fault plan, and the net keys —
+        // round-trips exactly (the handshake-correctness requirement).
+        let mut c = ExperimentConfig::default();
+        for (k, v) in [
+            ("algo", "easgd"),
+            ("model", "linear"),
+            ("workers", "16"),
+            ("epochs", "2.5"),
+            ("seed", "99"),
+            ("execution", "net"),
+            ("base_lr", "0.037"),
+            ("tau", "8"),
+            ("tau_hetero", "true"),
+            ("alpha", "0.55"),
+            ("mu", "0.93"),
+            ("compress", "topk"),
+            ("compress_k", "17"),
+            ("local_opt", "adam"),
+            ("noniid", "true"),
+            ("dominant_frac", "0.61"),
+            ("straggler", "slow:3:2.5"),
+            ("fault", "crash@3:2;rejoin@6:2"),
+            ("fault_rate", "0.01"),
+            ("topology", "tree"),
+            ("message_bytes", "4096"),
+            ("net_procs", "3"),
+            ("net_timeout_s", "1.25"),
+            ("net_kill", "0:5"),
+        ] {
+            c.set(k, v).unwrap();
+        }
+        let r = replay(&c);
+        assert_eq!(r.to_kv(), c.to_kv());
+        assert_eq!(r.fault.describe(), "crash@3:2;rejoin@6:2");
+        assert_eq!(r.straggler.spec(), "slow:3:2.5");
+        assert_eq!(r.message_bytes, Some(4096));
     }
 
     #[test]

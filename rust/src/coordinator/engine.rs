@@ -131,11 +131,12 @@ pub struct Engine {
 
 impl Engine {
     /// Fresh engine state for one run; the execution backend comes from
-    /// the config's `execution` mode.
-    pub fn new(ctx: &TrainContext) -> Self {
+    /// the config's `execution` mode. Fallible because the `net` backend
+    /// binds its socket and waits for the worker fleet here.
+    pub fn new(ctx: &TrainContext) -> Result<Self> {
         let workers = Workers::new(ctx);
         let m = workers.m;
-        Self {
+        Ok(Self {
             workers,
             clocks: Clocks::new(m),
             rec: Recorder::new(ctx),
@@ -143,7 +144,7 @@ impl Engine {
             total: ctx.total_steps(),
             round: 0,
             steps_done: vec![0; m],
-            exec: Executor::new(ctx.cfg.execution, m),
+            exec: Executor::from_config(ctx.cfg)?,
             fault: FaultState::new(
                 &ctx.cfg.fault,
                 ctx.cfg.fault_rate,
@@ -156,7 +157,7 @@ impl Engine {
                 &ctx.rt.manifest,
                 ctx.cluster.message_bytes,
             ),
-        }
+        })
     }
 
     /// Steps remaining on the nominal schedule.
@@ -277,7 +278,7 @@ pub fn plan_tau(eng: &Engine, ctx: &TrainContext, tau: usize) -> RoundPlan {
 /// stream, so the observables are bit-identical whether the local phase
 /// ran sequentially or on one OS thread per worker (golden tests).
 pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<TrainLog> {
-    let mut eng = Engine::new(ctx);
+    let mut eng = Engine::new(ctx)?;
     eng.fault.set_decentralized(strategy.decentralized());
     eng.fault.validate()?;
     strategy.on_run_start(&mut eng, ctx)?;
@@ -285,6 +286,16 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
     // it is the steady-state window that must stay at zero spawns/allocs.
     let mut warm: Option<ExecSnapshot> = None;
     while eng.k < eng.total {
+        // On the net backend, the service plane reports its round-boundary
+        // weather first: worker processes that died since the last round
+        // become injected `crash` events, reconnections become `rejoin`s —
+        // and then they replay through exactly the same fault machinery an
+        // explicit `--fault` schedule uses (which is what makes the kill
+        // test's digest-equality assertion possible).
+        let injected = eng.exec.poll_net_events(eng.round + 1, &eng.fault.alive)?;
+        for ev in injected {
+            eng.fault.inject(ev)?;
+        }
         // Fault events fire at the round boundary, before anything of the
         // round runs (DESIGN.md §11): crashes park workers, rejoins
         // warm-start them from the strategy's anchor, partitions re-shape

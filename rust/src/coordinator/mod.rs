@@ -195,6 +195,40 @@ impl StepView<'_> {
         let dt = ctx.cluster.compute.step_time(self.w, self.rng);
         Ok((loss as f64, dt, g))
     }
+
+    /// This view's worker index (the `net` backend's wire slot id).
+    pub(crate) fn worker(&self) -> usize {
+        self.w
+    }
+
+    /// Read-only replica state for the wire: `(params, mom, mom2, adam_t)`.
+    /// The `net` coordinator ships these to the worker process each round.
+    pub(crate) fn state_ref(&self) -> (&[f32], &[f32], &[f32], f32) {
+        (self.params, self.mom, self.mom2, *self.adam_t)
+    }
+
+    /// Mutable replica state for the wire: `(params, mom, mom2, adam_t)`.
+    /// Both wire endpoints write decoded state through this — the worker
+    /// before stepping, the coordinator when absorbing the result.
+    pub(crate) fn state_mut(&mut self) -> (&mut [f32], &mut [f32], &mut [f32], &mut f32) {
+        (self.params, self.mom, self.mom2, self.adam_t)
+    }
+
+    /// Consume exactly one local step's worth of stochastic draws — the
+    /// batch draw and the straggler-model draw — without touching the
+    /// replica, returning the step's virtual compute seconds.
+    ///
+    /// Two `net`-backend uses (DESIGN.md §13): the coordinator replays the
+    /// draws of every step a *remote* worker executed, keeping its canonical
+    /// batcher/RNG streams bit-identical to the `sim` backend (and making
+    /// the drop-to-local fallback seamless); a rejoining worker process
+    /// fast-forwards a claimed slot's streams by the slot's consumed-step
+    /// count from the `Welcome` handshake.
+    pub(crate) fn replay_draws(&mut self, ctx: &TrainContext) -> f64 {
+        let b = ctx.rt.train_batch;
+        self.batcher.next_batch(ctx.train, b, self.img_buf, self.label_buf);
+        ctx.cluster.compute.step_time(self.w, self.rng)
+    }
 }
 
 impl Workers {
@@ -281,8 +315,9 @@ impl Workers {
         views
     }
 
-    /// Single-worker view (the sequential entrypoints below build on it).
-    fn view_at(&mut self, w: usize) -> StepView<'_> {
+    /// Single-worker view (the sequential entrypoints below build on it;
+    /// the `net` worker process uses it to fast-forward claimed slots).
+    pub(crate) fn view_at(&mut self, w: usize) -> StepView<'_> {
         StepView {
             w,
             use_adam: self.use_adam,

@@ -20,6 +20,12 @@
 //!   (DESIGN.md §10; previously every round paid ~m scoped spawns plus a
 //!   detached thread per collective). This is the backend
 //!   `rust/benches/wallclock.rs` measures (E12/E13).
+//! * `net` — a real coordinator/worker split over TCP (`net.rs` here, the
+//!   worker side and wire codecs in `crate::net`, DESIGN.md §13): worker
+//!   *processes* run the local phases, the coordinator keeps the canonical
+//!   state and replays each slot's stochastic draws, and a dead connection
+//!   becomes an injected `crash@round` fault. Collectives run inline on
+//!   the coordinator with sim semantics.
 //!
 //! Either way the `Executor` owns the run's hot-path memory: the
 //! [`BufferPool`] that recycles collective snapshot storage, a free list
@@ -44,6 +50,7 @@
 //!    virtual completion time comes from the simnet cost model, never
 //!    from wall clock.
 
+mod net;
 mod pool;
 
 use std::cell::RefCell;
@@ -53,12 +60,14 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::collective::ReduceScratch;
-use crate::config::Execution;
+use crate::config::{Execution, ExperimentConfig};
 use crate::coordinator::engine::{LocalPhase, RoundPlan};
 use crate::coordinator::{StepView, TrainContext};
+use crate::fault::{AliveSet, FaultEvent};
 use crate::model::vecmath;
 use crate::util::pool::BufferPool;
 
+use net::NetCoordinator;
 use pool::WorkerPool;
 
 /// A reduction job: the data plane of a collective or gossip exchange over
@@ -121,6 +130,10 @@ pub(crate) fn drive_worker(
 enum Mode {
     Sim,
     Pool(WorkerPool),
+    /// The TCP service plane (`--execution net`, DESIGN.md §13). In a
+    /// `RefCell` because phase dispatch and the round-boundary poll mutate
+    /// the connection ledger while the `Executor` API takes `&self`.
+    Net(RefCell<NetCoordinator>),
 }
 
 /// Tracked hot-path counters at one instant (monotone totals since the
@@ -152,11 +165,16 @@ pub struct Executor {
 impl Executor {
     /// Build the backend for one run of `m` workers. `Execution::Threads`
     /// spawns the persistent pool (m + 1 threads) here — the run's one and
-    /// only spawn site.
+    /// only spawn site. `Execution::Net` needs the full config (listen
+    /// address, fleet size, timeouts) and must be built through
+    /// [`Executor::from_config`].
     pub fn new(mode: Execution, m: usize) -> Self {
         let mode = match mode {
             Execution::Sim => Mode::Sim,
             Execution::Threads => Mode::Pool(WorkerPool::new(m)),
+            Execution::Net => {
+                panic!("the net backend carries run config; build it via Executor::from_config")
+            }
         };
         Self {
             mode,
@@ -166,11 +184,28 @@ impl Executor {
         }
     }
 
+    /// Build the backend a run's config asks for. This is the engine's
+    /// constructor path; it is fallible because `Execution::Net` binds a
+    /// socket, spawns the worker fleet, and waits for every slot to be
+    /// claimed before the first round.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        if cfg.execution != Execution::Net {
+            return Ok(Self::new(cfg.execution, cfg.workers));
+        }
+        Ok(Self {
+            mode: Mode::Net(RefCell::new(NetCoordinator::new(cfg)?)),
+            buffers: BufferPool::new(),
+            scratch: RefCell::new(ReduceScratch::default()),
+            rounds: RefCell::new(Vec::new()),
+        })
+    }
+
     /// The config axis this executor realizes.
     pub fn execution(&self) -> Execution {
         match self.mode {
             Mode::Sim => Execution::Sim,
             Mode::Pool(_) => Execution::Threads,
+            Mode::Net(_) => Execution::Net,
         }
     }
 
@@ -192,7 +227,9 @@ impl Executor {
         let stats = self.buffers.stats();
         ExecSnapshot {
             thread_spawns: match &self.mode {
-                Mode::Sim => 0,
+                // net runs collectives inline and phases in *other*
+                // processes: this process spawns no threads at all.
+                Mode::Sim | Mode::Net(_) => 0,
                 Mode::Pool(p) => p.spawns(),
             },
             buffer_allocs: stats.allocs,
@@ -235,6 +272,23 @@ impl Executor {
                 Ok(bufs)
             }
             Mode::Pool(p) => p.run_phase(views, ctx, plan, start_step, phase, bufs),
+            Mode::Net(nc) => {
+                let mut views = views;
+                nc.borrow_mut().run_phase(&mut views, ctx, plan, start_step, phase, &mut bufs)?;
+                Ok(bufs)
+            }
+        }
+    }
+
+    /// Round-boundary service sweep of the `net` backend: detect worker
+    /// processes that died since the last round (as `Crash` events) and
+    /// admit reconnecting ones (as `Rejoin` events), for the engine to
+    /// feed into `FaultState::inject` before it applies round `round`'s
+    /// faults. A no-op returning no events on `sim`/`threads`.
+    pub fn poll_net_events(&self, round: usize, alive: &AliveSet) -> Result<Vec<FaultEvent>> {
+        match &self.mode {
+            Mode::Net(nc) => nc.borrow_mut().poll(round, alive),
+            _ => Ok(Vec::new()),
         }
     }
 
@@ -266,7 +320,10 @@ impl Executor {
         job: impl FnOnce(&mut ReduceScratch) -> Vec<Vec<f32>> + Send + 'static,
     ) -> ReduceHandle {
         match &self.mode {
-            Mode::Sim => ReduceHandle::Ready(job(&mut *self.scratch.borrow_mut())),
+            // net keeps collectives on the coordinator: the engine already
+            // holds every worker's canonical state, so reductions run
+            // inline with sim semantics (and bits).
+            Mode::Sim | Mode::Net(_) => ReduceHandle::Ready(job(&mut *self.scratch.borrow_mut())),
             Mode::Pool(p) => p.start_reduce(Box::new(job)),
         }
     }
@@ -278,7 +335,7 @@ impl Executor {
     /// spawns).
     pub fn mean_into(&self, vs: &[&[f32]], out: &mut [f32]) {
         match &self.mode {
-            Mode::Sim => vecmath::mean_into(vs, out),
+            Mode::Sim | Mode::Net(_) => vecmath::mean_into(vs, out),
             Mode::Pool(p) => p.mean_into(vs, out),
         }
     }

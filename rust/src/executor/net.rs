@@ -1,0 +1,489 @@
+//! Coordinator side of the `net` execution backend (DESIGN.md §13).
+//!
+//! [`NetCoordinator`] is the `--execution net` realization of the
+//! `Executor` seam: it owns the listening socket, the worker-process fleet
+//! (spawned children or externally launched `olsgd worker` processes), and
+//! the slot ledger mapping each engine worker index to the TCP connection
+//! serving it. Per round it sends **one** batched `PhaseReq` frame per
+//! process (every slot's planned steps + full replica state), reads one
+//! `PhaseResp` back, and replays each executed step's stochastic draws on
+//! the coordinator's canonical streams (`StepView::replay_draws`) — which
+//! is what keeps the observables bit-identical to the `sim` backend and
+//! makes the failure path trivial: a dead connection's slots simply run
+//! locally on the canonical replicas, same bits, and the death is reported
+//! to the engine as an injected `crash@round` fault event
+//! ([`NetCoordinator::poll`] → `FaultState::inject`).
+//!
+//! Determinism of the ledger itself: fleet children are spawned with a
+//! stable `--proc-index`, and the handshake grants each index the same
+//! contiguous slot range on every run — so the `net_kill` chaos hook
+//! ("process p dies after serving r rounds") always maps to the same
+//! worker slots, and the kill test can assert digest equality against the
+//! explicit `--fault crash@round:worker` schedule.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::{LocalPhase, RoundPlan};
+use crate::coordinator::{StepView, TrainContext};
+use crate::fault::{AliveSet, FaultEvent};
+use crate::net::{self, wire};
+
+use super::{drive_worker, WorkerRound};
+
+/// One live worker-process connection and its per-round scratch.
+struct Conn {
+    stream: TcpStream,
+    /// slots this process serves (engine worker indices)
+    slots: Vec<usize>,
+    /// slots requested from this process in the round in flight
+    round_slots: Vec<usize>,
+    /// reusable frame read buffer
+    rbuf: Vec<u8>,
+    /// reusable request payload buffer
+    wbuf: Vec<u8>,
+}
+
+/// What reading one process's `PhaseResp` concluded.
+enum RespOutcome {
+    /// the response was decoded and applied to the canonical replicas
+    Applied,
+    /// the transport failed before anything was applied — the slots fall
+    /// back to local execution and the process is declared dead
+    Dead,
+}
+
+/// The `--execution net` backend object (see the module docs).
+pub(crate) struct NetCoordinator {
+    listener: TcpListener,
+    /// connections by stable index; a dead process leaves a `None` hole so
+    /// indices in `slot_proc` never dangle
+    conns: Vec<Option<Conn>>,
+    /// slot → index into `conns` of the process serving it
+    slot_proc: Vec<Option<usize>>,
+    /// per-slot executed local steps (== batch/straggler draws consumed) —
+    /// shipped in `Welcome` so a rejoining process can fast-forward
+    consumed: Vec<u64>,
+    /// deterministic slot ranges per spawned process index
+    planned: Vec<Vec<usize>>,
+    /// the run config as ordered pairs, shipped verbatim in every `Welcome`
+    cfg_kv: Vec<(String, String)>,
+    timeout: Duration,
+    children: Vec<Child>,
+    /// slots whose process died mid-phase, awaiting their `crash@round`
+    /// injection at the next [`NetCoordinator::poll`]
+    pending_dead: Vec<usize>,
+    /// round scratch: slots executing locally this round
+    pending_local: Vec<usize>,
+    m: usize,
+}
+
+impl NetCoordinator {
+    /// Bind the service socket, optionally spawn the worker fleet, and
+    /// block until every slot is claimed (or the timeout passes).
+    pub(crate) fn new(cfg: &ExperimentConfig) -> Result<Self> {
+        let m = cfg.workers;
+        let listener = TcpListener::bind(&cfg.net_listen)
+            .with_context(|| format!("binding net coordinator to {}", cfg.net_listen))?;
+        listener.set_nonblocking(true).context("making the listener non-blocking")?;
+        let addr = listener.local_addr().context("resolving the bound address")?;
+        let timeout = Duration::from_secs_f64(cfg.net_timeout_s);
+
+        let procs = cfg.net_procs.min(m);
+        let (base, extra) = (m / procs, m % procs);
+        let mut planned = Vec::with_capacity(procs);
+        let mut next_slot = 0usize;
+        for p in 0..procs {
+            let lanes = base + usize::from(p < extra);
+            planned.push((next_slot..next_slot + lanes).collect::<Vec<_>>());
+            next_slot += lanes;
+        }
+
+        let kill = parse_net_kill(&cfg.net_kill)?;
+        let mut children = Vec::new();
+        if cfg.net_spawn {
+            let bin: PathBuf = if cfg.net_worker_bin.is_empty() {
+                std::env::current_exe().context("resolving the worker binary (net_worker_bin)")?
+            } else {
+                PathBuf::from(&cfg.net_worker_bin)
+            };
+            for (p, slots) in planned.iter().enumerate() {
+                let mut cmd = Command::new(&bin);
+                cmd.arg("worker")
+                    .arg("--connect")
+                    .arg(addr.to_string())
+                    .arg("--lanes")
+                    .arg(slots.len().to_string())
+                    .arg("--proc-index")
+                    .arg(p.to_string())
+                    .stdout(Stdio::null());
+                if let Some((kp, kr)) = kill {
+                    if kp == p {
+                        cmd.arg("--die-after").arg(kr.to_string());
+                    }
+                }
+                children
+                    .push(cmd.spawn().with_context(|| format!("spawning worker process {p}"))?);
+            }
+        }
+
+        let mut nc = Self {
+            listener,
+            conns: Vec::new(),
+            slot_proc: vec![None; m],
+            consumed: vec![0; m],
+            planned,
+            cfg_kv: cfg.to_kv(),
+            timeout,
+            children,
+            pending_dead: Vec::new(),
+            pending_local: Vec::new(),
+            m,
+        };
+
+        // Round 0 rendezvous: every slot must have a serving process before
+        // the engine's first round. Workers that fail the handshake are
+        // dropped, not fatal — the fleet has until the deadline to cover m.
+        let deadline = Instant::now() + timeout;
+        while nc.slot_proc.iter().any(Option::is_none) {
+            match nc.listener.accept() {
+                Ok((stream, _)) => {
+                    if let Err(e) = nc.admit(stream) {
+                        eprintln!("net: rejected connection during startup: {e:#}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    for (p, child) in nc.children.iter_mut().enumerate() {
+                        if let Ok(Some(status)) = child.try_wait() {
+                            bail!("worker process {p} exited during startup ({status})");
+                        }
+                    }
+                    let unclaimed = nc.slot_proc.iter().filter(|s| s.is_none()).count();
+                    ensure!(
+                        Instant::now() < deadline,
+                        "net coordinator: {unclaimed} of {m} worker slots still unclaimed \
+                         after {:.1}s (listening on {addr}; raise net_timeout_s or start \
+                         more `olsgd worker --connect {addr}` processes)",
+                        timeout.as_secs_f64()
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("accepting worker connections"),
+            }
+        }
+        Ok(nc)
+    }
+
+    /// Handshake one inbound connection: read `Hello`, grant slots (the
+    /// spawner-pinned range for a fleet child, else the first unclaimed
+    /// slots), send `Welcome` with the config and consumed-step counts.
+    /// Returns the granted slots.
+    fn admit(&mut self, stream: TcpStream) -> Result<Vec<usize>> {
+        let mut stream = stream;
+        stream.set_nonblocking(false).context("handshake: clearing non-blocking")?;
+        stream.set_nodelay(true).context("handshake: TCP_NODELAY")?;
+        stream.set_read_timeout(Some(self.timeout)).context("handshake: read timeout")?;
+        stream.set_write_timeout(Some(self.timeout)).context("handshake: write timeout")?;
+        let mut rbuf = Vec::new();
+        let kind = wire::read_frame(&mut stream, &mut rbuf)?;
+        ensure!(kind == wire::KIND_HELLO, "expected Hello, got frame kind {kind}");
+        let hello = net::decode_hello(&rbuf)?;
+        let claimed: Vec<usize> = match hello.proc {
+            // A fleet child (or a restart of one) gets its pinned range —
+            // deterministic slot ownership is what keeps the `net_kill`
+            // chaos hook replayable.
+            Some(p)
+                if p < self.planned.len()
+                    && self.planned[p].iter().all(|&w| self.slot_proc[w].is_none()) =>
+            {
+                self.planned[p].clone()
+            }
+            _ => (0..self.m)
+                .filter(|&w| self.slot_proc[w].is_none())
+                .take(hello.lanes)
+                .collect(),
+        };
+        let consumed: Vec<u64> = claimed.iter().map(|&w| self.consumed[w]).collect();
+        wire::write_frame(
+            &mut stream,
+            wire::KIND_WELCOME,
+            net::encode_welcome(&claimed, &consumed, &self.cfg_kv).as_bytes(),
+        )?;
+        let idx = self.conns.len();
+        for &w in &claimed {
+            self.slot_proc[w] = Some(idx);
+        }
+        self.conns.push(Some(Conn {
+            stream,
+            slots: claimed.clone(),
+            round_slots: Vec::new(),
+            rbuf,
+            wbuf: Vec::new(),
+        }));
+        Ok(claimed)
+    }
+
+    /// Declare process `p` dead: free its slots (queueing their
+    /// `crash@round` injection) and reroute any work it still owed this
+    /// round to local execution.
+    fn fail_conn(&mut self, p: usize) {
+        if let Some(conn) = self.conns[p].take() {
+            for &w in &conn.slots {
+                self.slot_proc[w] = None;
+                self.pending_dead.push(w);
+            }
+            for &w in &conn.round_slots {
+                self.pending_local.push(w);
+            }
+        }
+    }
+
+    /// Run one round's local phase across the fleet (see the module docs
+    /// for the wire pattern and the determinism argument). `views` and
+    /// `bufs` are indexed by worker slot; parked slots
+    /// (`plan.steps[w] == 0`) are skipped entirely, exactly as on `sim`.
+    pub(crate) fn run_phase(
+        &mut self,
+        views: &mut [StepView<'_>],
+        ctx: &TrainContext,
+        plan: &RoundPlan,
+        start_step: usize,
+        phase: LocalPhase,
+        bufs: &mut [WorkerRound],
+    ) -> Result<()> {
+        debug_assert_eq!(views.len(), self.m);
+        self.pending_local.clear();
+        for conn in self.conns.iter_mut().flatten() {
+            conn.round_slots.clear();
+        }
+        for w in 0..self.m {
+            if plan.steps[w] == 0 {
+                continue;
+            }
+            match self.slot_proc[w].filter(|&p| self.conns[p].is_some()) {
+                Some(p) => {
+                    self.conns[p].as_mut().expect("filtered Some").round_slots.push(w)
+                }
+                None => self.pending_local.push(w),
+            }
+        }
+
+        // Send every process its batched request first, then read the
+        // responses in the same order: each side fully reads before it
+        // writes, and per-process sockets are drained every round, so the
+        // exchange cannot deadlock.
+        for p in 0..self.conns.len() {
+            let sent = match self.conns[p].as_mut() {
+                Some(conn) if !conn.round_slots.is_empty() => {
+                    net::encode_phase_req(
+                        &mut conn.wbuf,
+                        phase,
+                        start_step,
+                        &conn.round_slots,
+                        &plan.steps,
+                        views,
+                    );
+                    wire::write_frame(&mut conn.stream, wire::KIND_PHASE_REQ, &conn.wbuf)
+                }
+                _ => continue,
+            };
+            if sent.is_err() {
+                self.fail_conn(p);
+            }
+        }
+        for p in 0..self.conns.len() {
+            let outcome = match (&mut self.conns[p], &mut self.consumed) {
+                (Some(conn), consumed) if !conn.round_slots.is_empty() => {
+                    apply_resp(conn, plan, phase, views, bufs, ctx, consumed)?
+                }
+                _ => continue,
+            };
+            if matches!(outcome, RespOutcome::Dead) {
+                self.fail_conn(p);
+            }
+        }
+
+        // Fallback lane: slots with no live process run on the canonical
+        // replicas — the exact same per-worker streams, so the bits match
+        // what the remote would have produced.
+        for &w in &self.pending_local {
+            drive_worker(&mut views[w], ctx, plan.steps[w], start_step, phase, &mut bufs[w])?;
+            self.consumed[w] += bufs[w].losses.len() as u64;
+        }
+        Ok(())
+    }
+
+    /// Round-boundary service sweep, called by the engine *before* fault
+    /// application: report mid-phase deaths and failed liveness probes as
+    /// `Crash` events, admit reconnecting processes and report their
+    /// claimed dead slots as `Rejoin` events — all stamped with the
+    /// upcoming `round`, feeding `FaultState::inject` so the service plane
+    /// replays through exactly the `--fault` machinery.
+    pub(crate) fn poll(&mut self, round: usize, alive: &AliveSet) -> Result<Vec<FaultEvent>> {
+        let mut events = Vec::new();
+        let mut crashed_now: Vec<usize> = Vec::new();
+        let mut crash = |w: usize, events: &mut Vec<FaultEvent>, crashed: &mut Vec<usize>| {
+            // A slot the explicit schedule already crashed needs no event;
+            // a slot can die at most once per boundary.
+            if alive.is_alive(w) && !crashed.contains(&w) {
+                events.push(FaultEvent::Crash { round, worker: w });
+                crashed.push(w);
+            }
+        };
+        for w in std::mem::take(&mut self.pending_dead) {
+            crash(w, &mut events, &mut crashed_now);
+        }
+        for conn_opt in &mut self.conns {
+            let ok = match conn_opt.as_mut() {
+                Some(conn) => ping(conn).is_ok(),
+                None => continue,
+            };
+            if ok {
+                continue;
+            }
+            if let Some(conn) = conn_opt.take() {
+                for &w in &conn.slots {
+                    self.slot_proc[w] = None;
+                    crash(w, &mut events, &mut crashed_now);
+                }
+            }
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => match self.admit(stream) {
+                    Ok(claimed) => {
+                        for w in claimed {
+                            if !alive.is_alive(w) || crashed_now.contains(&w) {
+                                events.push(FaultEvent::Rejoin { round, worker: w });
+                            }
+                        }
+                    }
+                    Err(e) => eprintln!("net: rejected reconnection: {e:#}"),
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("accepting reconnections"),
+            }
+        }
+        Ok(events)
+    }
+}
+
+impl Drop for NetCoordinator {
+    fn drop(&mut self) {
+        for conn in self.conns.iter_mut().flatten() {
+            let _ = wire::write_frame(&mut conn.stream, wire::KIND_SHUTDOWN, &[]);
+        }
+        self.conns.clear(); // closing the sockets also unblocks any reader
+        for child in &mut self.children {
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parse the validated `net_kill` config key ("proc:rounds", empty = off).
+fn parse_net_kill(spec: &str) -> Result<Option<(usize, u64)>> {
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    let (p, r) = spec
+        .split_once(':')
+        .with_context(|| format!("net_kill wants proc:rounds, got '{spec}'"))?;
+    Ok(Some((
+        p.parse().with_context(|| format!("bad proc in net_kill '{spec}'"))?,
+        r.parse().with_context(|| format!("bad rounds in net_kill '{spec}'"))?,
+    )))
+}
+
+/// One liveness round-trip on an idle connection (the socket's read
+/// timeout bounds the wait).
+fn ping(conn: &mut Conn) -> Result<()> {
+    wire::write_frame(&mut conn.stream, wire::KIND_PING, &[])?;
+    let kind = wire::read_frame(&mut conn.stream, &mut conn.rbuf)?;
+    ensure!(kind == wire::KIND_PONG, "expected Pong, got frame kind {kind}");
+    Ok(())
+}
+
+/// Read and apply one process's `PhaseResp`: write the stepped state back
+/// into the canonical views, collect losses/gradients into `bufs`, and
+/// replay each executed step's draws so the coordinator's streams advance
+/// exactly as if it had run the steps itself. A *transport* failure before
+/// the frame arrives returns [`RespOutcome::Dead`] (nothing was applied —
+/// the fallback lane recomputes from canonical state); a *decode* failure
+/// after partial application is a fatal protocol error, never a fault.
+fn apply_resp(
+    conn: &mut Conn,
+    plan: &RoundPlan,
+    phase: LocalPhase,
+    views: &mut [StepView<'_>],
+    bufs: &mut [WorkerRound],
+    ctx: &TrainContext,
+    consumed: &mut [u64],
+) -> Result<RespOutcome> {
+    let kind = match wire::read_frame(&mut conn.stream, &mut conn.rbuf) {
+        Ok(k) => k,
+        Err(_) => return Ok(RespOutcome::Dead),
+    };
+    ensure!(kind == wire::KIND_PHASE_RESP, "expected PhaseResp, got frame kind {kind}");
+    let mut c = wire::Cursor::new(&conn.rbuf);
+    let nslots = c.get_u32()? as usize;
+    ensure!(
+        nslots == conn.round_slots.len(),
+        "PhaseResp covers {nslots} slots, requested {}",
+        conn.round_slots.len()
+    );
+    for &w in &conn.round_slots {
+        let ww = c.get_u32()? as usize;
+        ensure!(ww == w, "PhaseResp slot order mismatch: got {ww}, expected {w}");
+        let buf = &mut bufs[w];
+        buf.losses.clear();
+        c.get_f64s_into(&mut buf.losses)?;
+        let expected = match phase {
+            LocalPhase::FusedSteps => plan.steps[w],
+            LocalPhase::GradOnly => 1,
+        };
+        ensure!(
+            buf.losses.len() == expected,
+            "slot {w} returned {} losses for {expected} planned steps",
+            buf.losses.len()
+        );
+        let view = &mut views[w];
+        {
+            let (params, mom, mom2, adam_t) = view.state_mut();
+            c.get_f32s_into(params)?;
+            c.get_f32s_into(mom)?;
+            c.get_f32s_into(mom2)?;
+            *adam_t = c.get_f32()?;
+        }
+        buf.grad = match c.get_u8()? {
+            0 => None,
+            1 => Some(c.get_f32s_vec()?),
+            other => bail!("bad grad marker {other} in PhaseResp"),
+        };
+        buf.dts.clear();
+        for _ in 0..buf.losses.len() {
+            let dt = view.replay_draws(ctx);
+            buf.dts.push(dt);
+        }
+        consumed[w] += buf.losses.len() as u64;
+    }
+    c.finish()?;
+    Ok(RespOutcome::Applied)
+}

@@ -423,6 +423,10 @@ pub struct FaultState {
     /// events sorted stably by round (spec order within a round)
     events: Vec<FaultEvent>,
     cursor: usize,
+    /// events synthesized at run time (the net backend's dropped-connection
+    /// crashes and reconnect rejoins, [`FaultState::inject`]) — applied
+    /// after the explicit schedule of their round
+    injected: Vec<FaultEvent>,
     rate: f64,
     rejoin_rate: f64,
     rng: Rng,
@@ -440,11 +444,36 @@ impl FaultState {
             alive: AliveSet::full(m),
             events,
             cursor: 0,
+            injected: Vec::new(),
             rate,
             rejoin_rate,
             rng: Rng::stream(seed, "fault"),
             engaged,
         }
+    }
+
+    /// Queue an event synthesized by the service plane for the *upcoming*
+    /// round — the net backend maps a dead TCP connection to a `Crash` and
+    /// a reconnect claiming dead slots to a `Rejoin` (DESIGN.md §13).
+    /// Injected events run through exactly the same application, trace, and
+    /// warm-start machinery as a `--fault` schedule, which is why killing a
+    /// worker process replays bit-identically to the equivalent explicit
+    /// `crash@round:worker` spec. Injection engages the fault machinery if
+    /// it wasn't already.
+    pub fn inject(&mut self, ev: FaultEvent) -> Result<()> {
+        let m = self.alive.len();
+        if let FaultEvent::Crash { worker, .. } | FaultEvent::Rejoin { worker, .. } = &ev {
+            ensure!(
+                *worker < m,
+                "injected fault event '{}' names worker {} but the cluster has {} workers",
+                ev.describe(),
+                worker,
+                m
+            );
+        }
+        self.injected.push(ev);
+        self.engaged = true;
+        Ok(())
     }
 
     /// Whether any fault source is configured. When `false`, the engine
@@ -514,8 +543,47 @@ impl FaultState {
         Ok(())
     }
 
+    /// Apply one event's alive-set transition (shared by the explicit
+    /// schedule and the injected service-plane events). The caller
+    /// refreshes the derived state afterwards.
+    fn apply_event(&mut self, ev: &FaultEvent) -> Result<()> {
+        match ev {
+            FaultEvent::Crash { worker, .. } => {
+                ensure!(
+                    self.alive.is_alive(*worker),
+                    "fault event '{}': worker {} is already down",
+                    ev.describe(),
+                    worker
+                );
+                self.alive.set_alive(*worker, false);
+            }
+            FaultEvent::Rejoin { worker, .. } => {
+                ensure!(
+                    !self.alive.is_alive(*worker),
+                    "fault event '{}': worker {} is not down",
+                    ev.describe(),
+                    worker
+                );
+                self.alive.set_alive(*worker, true);
+            }
+            FaultEvent::Partition { groups, .. } => {
+                self.alive.set_partition(groups);
+            }
+            FaultEvent::Heal { .. } => {
+                ensure!(
+                    self.alive.partitioned,
+                    "fault event '{}': the graph is not partitioned",
+                    ev.describe()
+                );
+                self.alive.clear_partition();
+            }
+        }
+        Ok(())
+    }
+
     /// Apply every fault due at the start of 1-based `round`: the explicit
-    /// events in spec order, then one random draw per worker when the
+    /// events in spec order, then the injected service-plane events
+    /// ([`FaultState::inject`]), then one random draw per worker when the
     /// random process is configured. Errors on inconsistent schedules
     /// (crashing a dead worker, rejoining a live one, healing an
     /// unpartitioned graph) and on schedules that leave the quorum side
@@ -529,39 +597,28 @@ impl FaultState {
         while self.cursor < self.events.len() && self.events[self.cursor].round() == round {
             let ev = self.events[self.cursor].clone();
             self.cursor += 1;
-            match &ev {
-                FaultEvent::Crash { worker, .. } => {
-                    ensure!(
-                        self.alive.is_alive(*worker),
-                        "fault event '{}': worker {} is already down",
-                        ev.describe(),
-                        worker
-                    );
-                    self.alive.set_alive(*worker, false);
-                }
-                FaultEvent::Rejoin { worker, .. } => {
-                    ensure!(
-                        !self.alive.is_alive(*worker),
-                        "fault event '{}': worker {} is not down",
-                        ev.describe(),
-                        worker
-                    );
-                    self.alive.set_alive(*worker, true);
-                }
-                FaultEvent::Partition { groups, .. } => {
-                    self.alive.set_partition(groups);
-                }
-                FaultEvent::Heal { .. } => {
-                    ensure!(
-                        self.alive.partitioned,
-                        "fault event '{}': the graph is not partitioned",
-                        ev.describe()
-                    );
-                    self.alive.clear_partition();
-                }
-            }
+            self.apply_event(&ev)?;
             applied.push(ev);
         }
+        // Service-plane events injected for this round run after the
+        // explicit schedule; future injections stay queued, and a stale one
+        // is a caller bug, not a silently dropped event.
+        let mut future = Vec::new();
+        for ev in std::mem::take(&mut self.injected) {
+            ensure!(
+                ev.round() >= round,
+                "injected fault event '{}' is due at round {}, but round {round} already started",
+                ev.describe(),
+                ev.round()
+            );
+            if ev.round() == round {
+                self.apply_event(&ev)?;
+                applied.push(ev);
+            } else {
+                future.push(ev);
+            }
+        }
+        self.injected = future;
         self.alive.refresh();
 
         // Random process: exactly one draw per worker per round (state-
@@ -767,6 +824,41 @@ mod tests {
         assert_eq!(a, run(11), "same seed must replay identically");
         assert_ne!(a, run(12), "the process must actually depend on the seed");
         assert!(!a.is_empty(), "a 40% rate over 40 rounds must fire");
+    }
+
+    #[test]
+    fn injected_events_replay_like_the_explicit_schedule() {
+        // The net backend's dropped-connection mapping: injecting crash@3:1
+        // must produce the same per-round transitions as --fault crash@3:1.
+        let mut explicit = FaultState::new(&FaultPlan::parse("crash@3:1").unwrap(), 0.0, 0.0, 5, 4);
+        let mut injected = FaultState::new(&FaultPlan::default(), 0.0, 0.0, 5, 4);
+        assert!(!injected.engaged(), "no schedule, no engagement — until injection");
+        injected.inject(FaultEvent::Crash { round: 3, worker: 1 }).unwrap();
+        assert!(injected.engaged());
+        for round in 1..=4 {
+            let a = explicit.begin_round(round).unwrap();
+            let b = injected.begin_round(round).unwrap();
+            assert_eq!(
+                a.applied.iter().map(FaultEvent::describe).collect::<Vec<_>>(),
+                b.applied.iter().map(FaultEvent::describe).collect::<Vec<_>>(),
+                "round {round} traces diverge"
+            );
+            assert_eq!(explicit.alive.members(), injected.alive.members());
+        }
+        // Crash + same-round rejoin (a reconnect claiming the slot within
+        // one boundary) applies in order and nets out to a live worker.
+        let mut fs = FaultState::new(&FaultPlan::default(), 0.0, 0.0, 5, 4);
+        fs.inject(FaultEvent::Crash { round: 2, worker: 0 }).unwrap();
+        fs.inject(FaultEvent::Rejoin { round: 2, worker: 0 }).unwrap();
+        fs.begin_round(1).unwrap();
+        let r2 = fs.begin_round(2).unwrap();
+        assert_eq!(r2.applied.len(), 2);
+        assert!(fs.alive.is_alive(0));
+        // Stale injections and out-of-range workers are loud errors.
+        let mut fs = FaultState::new(&FaultPlan::default(), 0.0, 0.0, 5, 4);
+        assert!(fs.inject(FaultEvent::Crash { round: 1, worker: 9 }).is_err());
+        fs.inject(FaultEvent::Crash { round: 1, worker: 2 }).unwrap();
+        assert!(fs.begin_round(2).is_err(), "round-1 injection applied at round 2");
     }
 
     #[test]

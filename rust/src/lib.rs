@@ -34,6 +34,7 @@ pub mod executor;
 pub mod fault;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod optim;
 pub mod runtime;
 pub mod simnet;

@@ -4,17 +4,22 @@
 //!
 //! ```text
 //! olsgd info                              runtime + artifact inventory
-//! olsgd train   [--config F] [--set k=v]* [--execution sim|threads]
+//! olsgd train   [--config F] [--set k=v]* [--execution sim|threads|net]
 //!               [--fault EVENT]* [--out DIR] [--quiet]
 //! olsgd sweep   --algos a,b --taus 1,2,8 [--set k=v]* [--out DIR]
 //! olsgd report  --dir DIR                 summarize result JSONs
+//! olsgd coordinator [--listen H:P] [train flags]   serve a run to workers
+//! olsgd worker  --connect H:P [--lanes N]          serve local phases
 //! ```
 //!
 //! Every `--set` key is a dotted config key (see config/mod.rs), e.g.
 //! `--set algo=overlap-m --set tau=2 --set data.noniid=true`.
 //! `--execution threads` runs the real-thread backend (one OS thread per
 //! worker + background communicator threads, DESIGN.md §9) — identical
-//! results, real wall-clock overlap.
+//! results, real wall-clock overlap. `--execution net` runs the TCP
+//! service plane (DESIGN.md §13): the coordinator spawns (or waits for)
+//! worker *processes* that execute the local phases, with the same bits;
+//! `olsgd coordinator` / `olsgd worker` are its standalone halves.
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -49,6 +54,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "train" => cmd_train(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
         "report" => cmd_report(&args[1..]),
+        "coordinator" => cmd_coordinator(&args[1..]),
+        "worker" => cmd_worker(&args[1..]),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -61,17 +68,23 @@ fn print_usage() {
     println!(
         "olsgd — Overlap-Local-SGD (Wang, Liang, Joshi 2020) reproduction\n\
          \n\
-         USAGE:\n  olsgd info\n  olsgd train  [--config FILE] [--set key=value]... [--execution sim|threads]\n               \
+         USAGE:\n  olsgd info\n  olsgd train  [--config FILE] [--set key=value]... [--execution sim|threads|net]\n               \
          [--out DIR] [--quiet]\n  \
          olsgd sweep  --algos sync,local,overlap-m --taus 1,2,8,24 [--set key=value]... [--out DIR]\n  \
-         olsgd report --dir DIR\n\
+         olsgd report --dir DIR\n  \
+         olsgd coordinator [--listen HOST:PORT] [train flags]   (net plane, external workers)\n  \
+         olsgd worker --connect HOST:PORT [--lanes N] [--proc-index P] [--die-after R]\n\
          \n\
          Algorithms: sync local overlap overlap-m overlap-ada overlap-gossip easgd eamsgd\n\
                      cocod powersgd\n\
          Topologies: --set topology=ring|hier|tree|gossip (gossip_degree, hier_groups)\n\
-         Execution:  --execution sim|threads (threads = persistent pool: one parked\n\
+         Execution:  --execution sim|threads|net (threads = persistent pool: one parked\n\
                      OS thread per worker + a communicator thread; bit-identical\n\
-                     results, real overlap, zero steady-state spawns/allocs)\n\
+                     results, real overlap, zero steady-state spawns/allocs.\n\
+                     net = TCP service plane, DESIGN.md §13: worker processes run the\n\
+                     local phases — self-hosting by default (net_procs spawned children),\n\
+                     or serve external `olsgd worker`s via `olsgd coordinator`; dropped\n\
+                     connections replay through the fault machinery as crash@round)\n\
          Faults:     --fault crash@round:worker | rejoin@round:worker\n\
                      | partition@round:set|set | heal@round   (repeatable; rounds are\n\
                      1-based; also --set fault_rate=p / rejoin_rate=p for the seeded\n\
@@ -85,7 +98,8 @@ fn print_usage() {
                       compress compress_k compress_rank compress_bits\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
                       topology gossip_degree hier_groups fault fault_rate rejoin_rate\n\
-                      message_bytes straggler artifacts_dir out_dir"
+                      message_bytes straggler artifacts_dir out_dir\n\
+                      net_listen net_procs net_spawn net_timeout_s net_worker_bin net_kill"
     );
 }
 
@@ -296,6 +310,77 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     }
     write_text(out, "sweep_summary.txt", &summary_rows.join("\n"))?;
     Ok(())
+}
+
+/// `olsgd coordinator`: a `train` run on the net service plane that serves
+/// externally launched `olsgd worker` processes instead of spawning its
+/// own fleet (DESIGN.md §13).
+fn cmd_coordinator(args: &[String]) -> Result<()> {
+    let mut listen: Option<String> = None;
+    let mut rest: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--listen" {
+            listen = Some(next(args, &mut i, "--listen")?);
+        } else {
+            rest.push(args[i].clone());
+        }
+        i += 1;
+    }
+    let mut common = parse_common(&rest)?;
+    // Default to a fixed port: external workers need a knowable address
+    // (the self-hosting `train --execution net` path keeps port 0, since it
+    // tells its spawned children the bound port itself).
+    let addr = listen.unwrap_or_else(|| "127.0.0.1:7700".to_string());
+    common.cfg.set("execution", "net")?;
+    common.cfg.set("net_spawn", "false")?;
+    common.cfg.set("net_listen", &addr)?;
+    if !common.quiet {
+        println!(
+            "coordinator: listening on {addr}; waiting up to {}s for workers covering {} slots\n\
+             (start them with: olsgd worker --connect {addr} --lanes N)",
+            common.cfg.net_timeout_s, common.cfg.workers
+        );
+    }
+    let mut cache = None;
+    let log = run_one(&common.cfg, &mut cache, common.quiet)?;
+    let out = Path::new(&common.out);
+    let tag = format!("{}_tau{}_net", common.cfg.algo.name(), common.cfg.tau);
+    write_json(out, &format!("{tag}.json"), &log.to_json())?;
+    write_text(out, &format!("{tag}.csv"), &log.to_csv())?;
+    println!("wrote {}/{tag}.{{json,csv}}", common.out);
+    Ok(())
+}
+
+/// `olsgd worker`: one worker process of the net service plane. Connects,
+/// receives its slot grant and the full run config in the `Welcome`, and
+/// serves batched phase requests until the coordinator shuts it down.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let mut connect: Option<String> = None;
+    let mut lanes = 1usize;
+    let mut proc_index: Option<usize> = None;
+    let mut die_after: Option<u64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--connect" => connect = Some(next(args, &mut i, "--connect")?),
+            "--lanes" => {
+                lanes = next(args, &mut i, "--lanes")?.parse().context("bad --lanes")?;
+            }
+            "--proc-index" => {
+                proc_index =
+                    Some(next(args, &mut i, "--proc-index")?.parse().context("bad --proc-index")?);
+            }
+            "--die-after" => {
+                die_after =
+                    Some(next(args, &mut i, "--die-after")?.parse().context("bad --die-after")?);
+            }
+            other => bail!("unknown flag '{other}'"),
+        }
+        i += 1;
+    }
+    let addr = connect.context("worker requires --connect HOST:PORT")?;
+    olsgd::net::run_worker(&addr, lanes, proc_index, die_after)
 }
 
 fn cmd_report(args: &[String]) -> Result<()> {

@@ -1,0 +1,356 @@
+//! The `net` service plane: a real coordinator/worker split over TCP
+//! (DESIGN.md §13, `--execution net`).
+//!
+//! The other two execution backends schedule one process's threads; this
+//! one schedules *processes*. The coordinator (the engine process, see
+//! `executor::net`) listens on a socket, worker processes connect, and each
+//! round's local phase travels the wire:
+//!
+//! ```text
+//!   worker  → Hello   {lanes, proc}                      (JSON)
+//!   coord   → Welcome {slots, consumed, config}          (JSON)
+//!   coord   → PhaseReq  [phase start_step | per slot: w steps params mom mom2 adam_t]
+//!   worker  → PhaseResp [per slot: w losses params mom mom2 adam_t grad?]
+//!   coord   → Ping / worker → Pong                       (liveness, each round)
+//!   coord   → Shutdown                                   (end of run)
+//! ```
+//!
+//! framed as in [`wire`]. The coordinator keeps the *canonical* replicas:
+//! it ships each stepping slot's state out, receives the stepped state
+//! back, and **replays the slot's stochastic draws locally**
+//! (`StepView::replay_draws`) so its batcher and straggler-RNG streams stay
+//! bit-identical to the `sim` backend. That is the whole determinism
+//! argument: the worker computes the same kernels on the same bits, the
+//! coordinator's streams never diverge, and a dead connection degrades to
+//! running the slot locally — same bits again — plus a `crash@round` event
+//! injected into the PR-5 fault machinery.
+//!
+//! This module owns the worker side ([`run_worker`], the `olsgd worker`
+//! subcommand) and the handshake/phase codecs both sides share; the
+//! coordinator side lives in `executor::net` behind the `Executor` seam, so
+//! every mixing strategy, topology, compressor, and fault schedule composes
+//! with the service plane unchanged.
+
+pub mod wire;
+
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::LocalPhase;
+use crate::coordinator::{self, StepView, TrainContext, Workers};
+use crate::data::{self, GenConfig};
+use crate::executor::{drive_worker, WorkerRound};
+use crate::optim::LrSchedule;
+use crate::runtime;
+use crate::util::json::{self, Json};
+
+/// A worker's `Hello`: how many slots it can serve, and (for fleet children
+/// spawned by the coordinator) its stable process index, which pins its
+/// slot assignment deterministically.
+pub(crate) struct Hello {
+    /// number of worker slots this process offers to serve
+    pub lanes: usize,
+    /// spawner-assigned process index (`None` for external workers)
+    pub proc: Option<usize>,
+}
+
+pub(crate) fn encode_hello(h: &Hello) -> String {
+    json::obj(vec![
+        ("lanes", json::num(h.lanes as f64)),
+        ("proc", json::num(h.proc.map_or(-1.0, |p| p as f64))),
+    ])
+    .to_string_compact()
+}
+
+pub(crate) fn decode_hello(payload: &[u8]) -> Result<Hello> {
+    let j = Json::parse(std::str::from_utf8(payload).context("Hello is not UTF-8")?)?;
+    let lanes = j.get("lanes")?.as_usize()?;
+    ensure!(lanes >= 1, "Hello offers zero lanes");
+    let proc = j.get("proc")?.as_f64()?;
+    Ok(Hello { lanes, proc: if proc < 0.0 { None } else { Some(proc as usize) } })
+}
+
+pub(crate) fn encode_welcome(
+    slots: &[usize],
+    consumed: &[u64],
+    kv: &[(String, String)],
+) -> String {
+    json::obj(vec![
+        ("slots", json::arr(slots.iter().map(|&s| json::num(s as f64)))),
+        ("consumed", json::arr(consumed.iter().map(|&c| json::num(c as f64)))),
+        (
+            "config",
+            json::arr(
+                kv.iter().map(|(k, v)| json::arr([json::s(k), json::s(v)])),
+            ),
+        ),
+    ])
+    .to_string_compact()
+}
+
+pub(crate) fn decode_welcome(payload: &[u8]) -> Result<(Vec<usize>, Vec<u64>, ExperimentConfig)> {
+    let j = Json::parse(std::str::from_utf8(payload).context("Welcome is not UTF-8")?)?;
+    let slots: Vec<usize> =
+        j.get("slots")?.as_arr()?.iter().map(|s| s.as_usize()).collect::<Result<_>>()?;
+    let consumed: Vec<u64> = j
+        .get("consumed")?
+        .as_arr()?
+        .iter()
+        .map(|c| Ok(c.as_f64()? as u64))
+        .collect::<Result<_>>()?;
+    ensure!(
+        slots.len() == consumed.len(),
+        "Welcome slot/consumed length mismatch ({} vs {})",
+        slots.len(),
+        consumed.len()
+    );
+    // The config rides the handshake as ordered (key, value) pairs and is
+    // replayed through `ExperimentConfig::set` — the exact round-trip
+    // config::tests::to_kv_round_trips_through_set pins.
+    let mut cfg = ExperimentConfig::default();
+    for pair in j.get("config")?.as_arr()? {
+        let kv = pair.as_arr()?;
+        ensure!(kv.len() == 2, "Welcome config entry is not a (key, value) pair");
+        cfg.set(kv[0].as_str()?, kv[1].as_str()?)?;
+    }
+    Ok((slots, consumed, cfg))
+}
+
+/// Encode one batched `PhaseReq` payload for the slots of one worker
+/// process: frame-level phase/step header, then each slot's planned step
+/// count and full replica state. `views` is indexed by worker id.
+pub(crate) fn encode_phase_req(
+    out: &mut Vec<u8>,
+    phase: LocalPhase,
+    start_step: usize,
+    slots: &[usize],
+    steps: &[usize],
+    views: &[StepView<'_>],
+) {
+    out.clear();
+    wire::put_u8(out, match phase {
+        LocalPhase::FusedSteps => 0,
+        LocalPhase::GradOnly => 1,
+    });
+    wire::put_u64(out, start_step as u64);
+    wire::put_u32(out, slots.len() as u32);
+    for &w in slots {
+        let (params, mom, mom2, adam_t) = views[w].state_ref();
+        wire::put_u32(out, w as u32);
+        wire::put_u32(out, steps[w] as u32);
+        wire::put_f32s(out, params);
+        wire::put_f32s(out, mom);
+        wire::put_f32s(out, mom2);
+        wire::put_f32(out, adam_t);
+    }
+}
+
+/// Worker side of one `PhaseReq`: decode each slot's state into this
+/// process's own replica, run exactly the backend-shared
+/// [`drive_worker`] loop, and encode the stepped state (plus losses and
+/// the optional gradient) into `resp`.
+pub(crate) fn serve_phase_req(
+    payload: &[u8],
+    ctx: &TrainContext,
+    workers: &mut Workers,
+    scratch: &mut WorkerRound,
+    resp: &mut Vec<u8>,
+) -> Result<()> {
+    let mut c = wire::Cursor::new(payload);
+    let phase = match c.get_u8()? {
+        0 => LocalPhase::FusedSteps,
+        1 => LocalPhase::GradOnly,
+        other => bail!("unknown phase code {other} in PhaseReq"),
+    };
+    let start_step = c.get_u64()? as usize;
+    let nslots = c.get_u32()? as usize;
+    resp.clear();
+    wire::put_u32(resp, nslots as u32);
+    for _ in 0..nslots {
+        let w = c.get_u32()? as usize;
+        ensure!(w < workers.m, "PhaseReq names slot {w} of a {}-worker cluster", workers.m);
+        let steps = c.get_u32()? as usize;
+        let mut view = workers.view_at(w);
+        {
+            let (params, mom, mom2, adam_t) = view.state_mut();
+            c.get_f32s_into(params)?;
+            c.get_f32s_into(mom)?;
+            c.get_f32s_into(mom2)?;
+            *adam_t = c.get_f32()?;
+        }
+        drive_worker(&mut view, ctx, steps, start_step, phase, scratch)?;
+        wire::put_u32(resp, w as u32);
+        wire::put_f64s(resp, &scratch.losses);
+        let (params, mom, mom2, adam_t) = view.state_ref();
+        wire::put_f32s(resp, params);
+        wire::put_f32s(resp, mom);
+        wire::put_f32s(resp, mom2);
+        wire::put_f32(resp, adam_t);
+        match &scratch.grad {
+            Some(g) => {
+                wire::put_u8(resp, 1);
+                wire::put_f32s(resp, g);
+            }
+            None => wire::put_u8(resp, 0),
+        }
+    }
+    c.finish()
+}
+
+/// Connect with retry until `deadline` — the coordinator may still be
+/// binding (or a previous run may still own the port) when a worker starts.
+fn connect_retry(addr: &str, deadline: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if t0.elapsed() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to coordinator {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Whether an error is the peer going away (EOF / reset / broken pipe) as
+/// opposed to a protocol violation. A vanished coordinator ends the worker
+/// cleanly; a corrupt frame does not.
+fn is_disconnect(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+            )
+        })
+    })
+}
+
+/// Run one worker process to completion: connect to the coordinator at
+/// `addr`, offer `lanes` slots, rebuild the experiment from the `Welcome`
+/// config, fast-forward each claimed slot's stochastic streams by its
+/// consumed-step count, then serve phase requests until shutdown.
+///
+/// `die_after` is the chaos hook behind the `net_kill` config key: the
+/// process exits cleanly after serving that many phase requests, simulating
+/// a mid-run worker loss — which the coordinator must (and does, see
+/// rust/tests/net_backend.rs) replay bit-identically to the equivalent
+/// explicit `--fault crash@round:worker` schedule.
+pub fn run_worker(
+    addr: &str,
+    lanes: usize,
+    proc_index: Option<usize>,
+    die_after: Option<u64>,
+) -> Result<()> {
+    ensure!(lanes >= 1, "a worker needs at least one lane");
+    let mut stream = connect_retry(addr, Duration::from_secs(10))?;
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    wire::write_frame(
+        &mut stream,
+        wire::KIND_HELLO,
+        encode_hello(&Hello { lanes, proc: proc_index }).as_bytes(),
+    )?;
+    let mut buf = Vec::new();
+    let kind = wire::read_frame(&mut stream, &mut buf)?;
+    ensure!(kind == wire::KIND_WELCOME, "expected Welcome, got frame kind {kind}");
+    let (slots, consumed, cfg) = decode_welcome(&buf)?;
+
+    // Rebuild the run exactly as `coordinator::run_experiment` assembles it
+    // on the coordinator: same model runtime, same generated data, same
+    // shards, schedule, and cluster model — all derived from the shipped
+    // config, so every per-worker stream matches the canonical ones.
+    let rt = runtime::load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    let shards = coordinator::make_shards(&cfg, &train);
+    let steps_per_epoch = (shards[0].len() / rt.train_batch).max(1);
+    let cluster = cfg.cluster(rt.n * 4)?;
+    let schedule = LrSchedule::paper_scaled(cfg.base_lr, cfg.epochs, steps_per_epoch);
+    let ctx = TrainContext {
+        rt: &rt,
+        cfg: &cfg,
+        cluster,
+        schedule,
+        train: &train,
+        test: &test,
+        shards,
+    };
+    let mut workers = Workers::new(&ctx);
+    // A rejoiner claims slots that already consumed draws; replay them so
+    // the slot's batcher/RNG streams resume exactly where they left off.
+    for (&w, &n) in slots.iter().zip(&consumed) {
+        let mut view = workers.view_at(w);
+        for _ in 0..n {
+            view.replay_draws(&ctx);
+        }
+    }
+
+    let mut scratch = WorkerRound::default();
+    let mut resp = Vec::new();
+    let mut served = 0u64;
+    loop {
+        let kind = match wire::read_frame(&mut stream, &mut buf) {
+            Ok(k) => k,
+            Err(e) if is_disconnect(&e) => return Ok(()), // coordinator gone: run over
+            Err(e) => return Err(e),
+        };
+        match kind {
+            wire::KIND_PING => wire::write_frame(&mut stream, wire::KIND_PONG, &[])?,
+            wire::KIND_SHUTDOWN => return Ok(()),
+            wire::KIND_PHASE_REQ => {
+                serve_phase_req(&buf, &ctx, &mut workers, &mut scratch, &mut resp)?;
+                wire::write_frame(&mut stream, wire::KIND_PHASE_RESP, &resp)?;
+                served += 1;
+                if die_after.is_some_and(|k| served >= k) {
+                    return Ok(()); // chaos hook: simulate a worker loss
+                }
+            }
+            other => bail!("unexpected frame kind {other} from coordinator"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_payloads_round_trip() {
+        let h = Hello { lanes: 3, proc: Some(1) };
+        let back = decode_hello(encode_hello(&h).as_bytes()).unwrap();
+        assert_eq!(back.lanes, 3);
+        assert_eq!(back.proc, Some(1));
+        let ext = decode_hello(encode_hello(&Hello { lanes: 1, proc: None }).as_bytes()).unwrap();
+        assert_eq!(ext.proc, None);
+        assert!(decode_hello(br#"{"lanes":0,"proc":-1}"#).is_err(), "zero lanes rejected");
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("algo", "overlap-m").unwrap();
+        cfg.set("workers", "16").unwrap();
+        cfg.set("execution", "net").unwrap();
+        cfg.set("fault", "crash@3:2").unwrap();
+        let kv = cfg.to_kv();
+        let enc = encode_welcome(&[2, 5], &[7, 0], &kv);
+        let (slots, consumed, cfg2) = decode_welcome(enc.as_bytes()).unwrap();
+        assert_eq!(slots, vec![2, 5]);
+        assert_eq!(consumed, vec![7, 0]);
+        assert_eq!(cfg2.to_kv(), kv, "config survives the handshake bit-for-bit");
+    }
+
+    #[test]
+    fn welcome_rejects_ragged_slot_lists() {
+        let kv = ExperimentConfig::default().to_kv();
+        let enc = encode_welcome(&[1, 2], &[0], &kv);
+        assert!(decode_welcome(enc.as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! Length-prefixed binary frames for the `net` execution backend
+//! (DESIGN.md §13).
+//!
+//! Every message on a coordinator↔worker TCP connection is one frame:
+//!
+//! ```text
+//!   [u32 magic "OLSG"][u16 version][u16 kind][u32 payload_len][payload]
+//! ```
+//!
+//! all integers little-endian. The handshake payloads (`Hello`/`Welcome`)
+//! are JSON (`util::json`) because they carry config metadata; the per-round
+//! phase payloads are hand-rolled binary — a few megabytes of `f32` state
+//! per frame has no business being stringified. The codec helpers below
+//! (`put_*` / [`Cursor`]) are the only way payload bytes are produced or
+//! consumed, so the layout lives in exactly one place per message kind.
+
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Context, Result};
+
+/// Frame magic: `"OLSG"` as a big-endian u32 literal, written little-endian.
+pub const MAGIC: u32 = 0x4F4C_5347;
+/// Wire protocol version; bumped on any layout change. A mismatch is a hard
+/// handshake error, never a silent reinterpretation.
+pub const VERSION: u16 = 1;
+
+/// Worker → coordinator greeting (JSON payload: `lanes`, `proc`).
+pub const KIND_HELLO: u16 = 1;
+/// Coordinator → worker slot grant (JSON payload: `slots`, `consumed`,
+/// `config`).
+pub const KIND_WELCOME: u16 = 2;
+/// Coordinator → worker batched round-phase request (binary payload).
+pub const KIND_PHASE_REQ: u16 = 3;
+/// Worker → coordinator batched round-phase result (binary payload).
+pub const KIND_PHASE_RESP: u16 = 4;
+/// Coordinator → worker liveness probe (empty payload).
+pub const KIND_PING: u16 = 5;
+/// Worker → coordinator liveness reply (empty payload).
+pub const KIND_PONG: u16 = 6;
+/// Coordinator → worker clean end-of-run (empty payload).
+pub const KIND_SHUTDOWN: u16 = 7;
+
+/// Upper bound on a single frame's payload, as a defense against a corrupt
+/// or hostile length prefix allocating unbounded memory.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Write one frame (header + payload) and flush it onto the wire.
+pub fn write_frame(w: &mut impl Write, kind: u16, payload: &[u8]) -> Result<()> {
+    ensure!(payload.len() <= MAX_FRAME_BYTES, "frame payload of {} bytes", payload.len());
+    let mut head = [0u8; 12];
+    head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    head[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    head[6..8].copy_from_slice(&kind.to_le_bytes());
+    head[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head).context("writing frame header")?;
+    w.write_all(payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one complete frame into `buf` (cleared and reused across calls) and
+/// return its kind. The whole payload is read before returning, so a caller
+/// never observes — or acts on — a partially received message.
+pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<u16> {
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head).context("reading frame header")?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    ensure!(magic == MAGIC, "bad frame magic {magic:#010x} (want {MAGIC:#010x})");
+    let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
+    ensure!(
+        version == VERSION,
+        "wire protocol version mismatch: peer speaks v{version}, this build speaks v{VERSION}"
+    );
+    let kind = u16::from_le_bytes(head[6..8].try_into().unwrap());
+    let len = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "frame payload of {len} bytes exceeds the cap");
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf).context("reading frame payload")?;
+    Ok(kind)
+}
+
+/// Append one `u8`.
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+/// Append one little-endian `u32`.
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append one little-endian `u64`.
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append one little-endian `f32`.
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed `f32` slice (`u32` count + raw LE words).
+pub fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(buf, xs.len() as u32);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append a length-prefixed `f64` slice (`u32` count + raw LE words).
+pub fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(buf, xs.len() as u32);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Sequential payload reader over one received frame. Every accessor is
+/// bounds-checked — a short or corrupt payload is a loud decode error, not
+/// an out-of-bounds read or a zero-filled value.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Start reading `buf` from the beginning.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated frame payload: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one `u8`.
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read one little-endian `u32`.
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read one little-endian `u64`.
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read one little-endian `f32`.
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a length-prefixed `f32` slice into `out`, requiring the wire
+    /// count to match `out.len()` exactly — a state-size mismatch between
+    /// the two processes is a protocol error, never a silent resize.
+    pub fn get_f32s_into(&mut self, out: &mut [f32]) -> Result<()> {
+        let n = self.get_u32()? as usize;
+        ensure!(
+            n == out.len(),
+            "f32 slice length mismatch: wire has {n}, receiver expects {}",
+            out.len()
+        );
+        let bytes = self.take(n * 4)?;
+        for (o, w) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *o = f32::from_le_bytes(w.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Read a length-prefixed `f32` slice into an owned vector (gradient
+    /// payloads, whose receiver has no preallocated destination).
+    pub fn get_f32s_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|w| f32::from_le_bytes(w.try_into().unwrap())).collect())
+    }
+
+    /// Read a length-prefixed `f64` slice, appending onto `out`.
+    pub fn get_f64s_into(&mut self, out: &mut Vec<f64>) -> Result<()> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n * 8)?;
+        out.extend(bytes.chunks_exact(8).map(|w| f64::from_le_bytes(w.try_into().unwrap())));
+        Ok(())
+    }
+
+    /// Require the payload to be fully consumed — trailing bytes mean the
+    /// two sides disagree about the layout.
+    pub fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "frame payload has {} undecoded trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_over_a_byte_pipe() {
+        let mut pipe: Vec<u8> = Vec::new();
+        let payload: Vec<u8> = (0..=255).collect();
+        write_frame(&mut pipe, KIND_PHASE_REQ, &payload).unwrap();
+        write_frame(&mut pipe, KIND_PING, &[]).unwrap();
+        let mut r = pipe.as_slice();
+        let mut buf = Vec::new();
+        assert_eq!(read_frame(&mut r, &mut buf).unwrap(), KIND_PHASE_REQ);
+        assert_eq!(buf, payload);
+        assert_eq!(read_frame(&mut r, &mut buf).unwrap(), KIND_PING);
+        assert!(buf.is_empty());
+        assert!(r.is_empty(), "pipe fully drained");
+    }
+
+    #[test]
+    fn corrupt_headers_are_loud() {
+        let mut good: Vec<u8> = Vec::new();
+        write_frame(&mut good, KIND_PONG, b"xy").unwrap();
+        let mut buf = Vec::new();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(read_frame(&mut bad_magic.as_slice(), &mut buf).is_err());
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        assert!(read_frame(&mut bad_version.as_slice(), &mut buf).is_err());
+
+        let truncated = &good[..good.len() - 1];
+        assert!(read_frame(&mut &truncated[..], &mut buf).is_err());
+    }
+
+    #[test]
+    fn codec_round_trips_bit_exactly() {
+        let mut p = Vec::new();
+        put_u8(&mut p, 7);
+        put_u32(&mut p, 0xDEAD_BEEF);
+        put_u64(&mut p, u64::MAX - 1);
+        put_f32(&mut p, -0.0);
+        put_f32s(&mut p, &[1.5, f32::MIN_POSITIVE, -3.25]);
+        put_f64s(&mut p, &[std::f64::consts::PI]);
+        let mut c = Cursor::new(&p);
+        assert_eq!(c.get_u8().unwrap(), 7);
+        assert_eq!(c.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(c.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        let mut xs = [0.0f32; 3];
+        c.get_f32s_into(&mut xs).unwrap();
+        assert_eq!(xs[1].to_bits(), f32::MIN_POSITIVE.to_bits());
+        let mut ys = Vec::new();
+        c.get_f64s_into(&mut ys).unwrap();
+        assert_eq!(ys[0].to_bits(), std::f64::consts::PI.to_bits());
+        c.finish().unwrap();
+    }
+
+    #[test]
+    fn decode_errors_are_loud_not_silent() {
+        let mut p = Vec::new();
+        put_f32s(&mut p, &[1.0, 2.0]);
+        // Length mismatch against the receiver's buffer.
+        let mut c = Cursor::new(&p);
+        let mut three = [0.0f32; 3];
+        assert!(c.get_f32s_into(&mut three).is_err());
+        // Truncated payload.
+        let mut c = Cursor::new(&p[..p.len() - 2]);
+        let mut two = [0.0f32; 2];
+        assert!(c.get_f32s_into(&mut two).is_err());
+        // Trailing bytes.
+        let mut c = Cursor::new(&p);
+        let mut ok = [0.0f32; 2];
+        c.get_f32s_into(&mut ok).unwrap();
+        assert!(Cursor::new(&p[..0]).finish().is_ok());
+        let mut extra = p.clone();
+        put_u8(&mut extra, 0);
+        let mut c2 = Cursor::new(&extra);
+        c2.get_f32s_into(&mut ok).unwrap();
+        assert!(c2.finish().is_err());
+        let _ = c;
+    }
+}

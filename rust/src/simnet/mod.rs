@@ -151,6 +151,17 @@ pub enum StragglerModel {
 }
 
 impl StragglerModel {
+    /// Canonical config spelling (round-trips through the `straggler`
+    /// config key): `none` | `exp:scale` | `slow:node:factor` | `jitter:j`.
+    pub fn spec(&self) -> String {
+        match self {
+            StragglerModel::None => "none".to_string(),
+            StragglerModel::ShiftedExp { scale } => format!("exp:{scale}"),
+            StragglerModel::SlowNode { node, factor } => format!("slow:{node}:{factor}"),
+            StragglerModel::UniformJitter { jitter } => format!("jitter:{jitter}"),
+        }
+    }
+
     /// Multiplier applied to the base step time for `worker` at this draw.
     pub fn factor(&self, worker: usize, rng: &mut Rng) -> f64 {
         match self {

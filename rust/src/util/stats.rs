@@ -1,13 +1,24 @@
 //! Small statistics helpers used by metrics, benches, and the simnet.
 
 /// Online mean/variance (Welford) plus min/max.
-#[derive(Clone, Debug, Default)]
+///
+/// `Default` is implemented manually as [`Summary::new`]: a derived
+/// `Default` would zero the min/max accumulators, and a `Summary` whose
+/// data never contains 0.0 would then silently report `min() = 0.0` /
+/// `max() = 0.0` (the regression pinned by `default_is_new`).
+#[derive(Clone, Debug)]
 pub struct Summary {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Summary {
@@ -57,18 +68,48 @@ impl Summary {
     }
 }
 
-/// Percentile over a copy of the data (nearest-rank).
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+/// Percentile over a copy of the data (nearest-rank). Returns `None` on an
+/// empty slice — benches skip legs under `OLSGD_SMOKE=1`, so empty sample
+/// vectors are a real input, not a programming error. NaN samples are
+/// handled by the IEEE total order (`f64::total_cmp`): they sort after
+/// every real value instead of aborting the run.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    Some(v[rank.min(v.len() - 1)])
 }
 
-/// Ordinary least squares fit y = a + b*x; returns (a, b, r2).
-pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+/// An ordinary-least-squares line `y = intercept + slope * x`, with the
+/// coefficient of determination and an explicit degeneracy flag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearFit {
+    /// the fitted intercept a
+    pub intercept: f64,
+    /// the fitted slope b
+    pub slope: f64,
+    /// coefficient of determination (0 when the slope is undefined)
+    pub r2: f64,
+    /// `true` when the data cannot pin a slope (n = 1, or constant x):
+    /// `slope` is 0 and `intercept` is the mean of y by convention, and
+    /// `r2` is 0 — *not* the bogus "perfect fit" the pre-fix code claimed
+    /// for vertical data
+    pub degenerate: bool,
+}
+
+/// Ordinary least squares fit of `y = a + b*x`. Returns `None` on empty
+/// input (the pre-fix code divided by `n = 0`). Constant-x data yields a
+/// `degenerate` fit (slope undefined ⇒ reported as 0 with `r2 = 0`);
+/// constant-y data over varying x is a genuine perfect horizontal fit
+/// (`r2 = 1`).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Option<LinearFit> {
     assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return None;
+    }
     let n = xs.len() as f64;
     let mx = xs.iter().sum::<f64>() / n;
     let my = ys.iter().sum::<f64>() / n;
@@ -80,10 +121,15 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
         sxx += (x - mx) * (x - mx);
         syy += (y - my) * (y - my);
     }
-    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    if sxx == 0.0 {
+        // n = 1 or constant x: no slope is identifiable.
+        return Some(LinearFit { intercept: my, slope: 0.0, r2: 0.0, degenerate: true });
+    }
+    let b = sxy / sxx;
     let a = my - b * mx;
-    let r2 = if sxx == 0.0 || syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
-    (a, b, r2)
+    // Constant y over varying x: zero residuals, a true perfect fit.
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    Some(LinearFit { intercept: a, slope: b, r2, degenerate: false })
 }
 
 #[cfg(test)]
@@ -105,20 +151,83 @@ mod tests {
     }
 
     #[test]
+    fn default_is_new() {
+        // Regression: a derived Default once initialized min/max to 0.0,
+        // so all-positive data reported min() = 0.0 and all-negative data
+        // reported max() = 0.0.
+        let mut pos = Summary::default();
+        for x in [3.0, 5.0, 9.0] {
+            pos.add(x);
+        }
+        assert_eq!(pos.min(), 3.0, "min must come from the data, not a zeroed sentinel");
+        assert_eq!(pos.max(), 9.0);
+        let mut neg = Summary::default();
+        for x in [-7.0, -2.0, -4.0] {
+            neg.add(x);
+        }
+        assert_eq!(neg.min(), -7.0);
+        assert_eq!(neg.max(), -2.0, "max must come from the data, not a zeroed sentinel");
+        // And the empty default keeps the ±INFINITY sentinels of new().
+        let empty = Summary::default();
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.min(), f64::INFINITY);
+        assert_eq!(empty.max(), f64::NEG_INFINITY);
+    }
+
+    #[test]
     fn percentile_nearest_rank() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 100.0);
-        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(100.0));
+        assert!((percentile(&xs, 50.0).unwrap() - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn percentile_handles_empty_and_nan() {
+        // Regression: the pre-fix code assert!ed on empty slices and
+        // panicked in the sort comparator on NaN.
+        assert_eq!(percentile(&[], 50.0), None);
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        // total_cmp sorts NaN after every real value, so low percentiles
+        // still see the real data.
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert!(percentile(&xs, 100.0).unwrap().is_nan());
+        assert_eq!(percentile(&[42.0], 99.0), Some(42.0));
     }
 
     #[test]
     fn linear_fit_exact_line() {
         let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
         let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
-        let (a, b, r2) = linear_fit(&xs, &ys);
-        assert!((a - 3.0).abs() < 1e-12);
-        assert!((b - 2.0).abs() < 1e-12);
-        assert!((r2 - 1.0).abs() < 1e-12);
+        let f = linear_fit(&xs, &ys).unwrap();
+        assert!((f.intercept - 3.0).abs() < 1e-12);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+        assert!(!f.degenerate);
+    }
+
+    #[test]
+    fn linear_fit_edges_are_explicit_not_bogus() {
+        // n = 0: no fit at all (the pre-fix code divided by zero).
+        assert_eq!(linear_fit(&[], &[]), None);
+        // n = 1: degenerate — slope unidentifiable, not a perfect fit.
+        let f1 = linear_fit(&[2.0], &[5.0]).unwrap();
+        assert!(f1.degenerate);
+        assert_eq!(f1.slope, 0.0);
+        assert_eq!(f1.intercept, 5.0);
+        assert_eq!(f1.r2, 0.0);
+        // Constant x, varying y (vertical data): the pre-fix code claimed
+        // r2 = 1.0; the slope is undefined, so this is degenerate with
+        // r2 = 0.
+        let fx = linear_fit(&[4.0, 4.0, 4.0], &[1.0, 2.0, 9.0]).unwrap();
+        assert!(fx.degenerate);
+        assert_eq!(fx.r2, 0.0);
+        assert!((fx.intercept - 4.0).abs() < 1e-12);
+        // Constant y over varying x: a genuine perfect horizontal fit.
+        let fy = linear_fit(&[1.0, 2.0, 3.0], &[7.0, 7.0, 7.0]).unwrap();
+        assert!(!fy.degenerate);
+        assert_eq!(fy.slope, 0.0);
+        assert!((fy.intercept - 7.0).abs() < 1e-12);
+        assert_eq!(fy.r2, 1.0);
     }
 }

@@ -240,7 +240,7 @@ fn property_hetero_plan_invariants_under_slow_node_and_shifted_exp_rates() {
     let f = Fixture::new(small_cfg()); // m = 4 replicas back the engine
     let ctx = f.ctx();
     {
-        let eng = RefCell::new(Engine::new(&ctx));
+        let eng = RefCell::new(Engine::new(&ctx).expect("sim engine construction is infallible"));
         eng.borrow_mut().total = 1_000_000; // remaining never caps the plan
         let m = eng.borrow().workers.m;
         property("hetero_plan invariants", 300, |g| {

@@ -1,0 +1,118 @@
+//! Cross-backend golden lock for the `net` service plane (ISSUE 7,
+//! DESIGN.md §13): real coordinator/worker *processes* over TCP must
+//! produce bit-identical `TrainLog` digests to the `sim` and `threads`
+//! backends — same losses, same virtual timeline, same byte accounting —
+//! for the exact-collective algorithms on the paper's m=16 shape, across
+//! topologies and the compression axis.
+//!
+//! The fault leg is the tentpole's acceptance test: killing a worker
+//! process mid-run (the `net_kill` chaos hook makes the child exit after
+//! serving N phase requests) must complete the run *and* land on exactly
+//! the digest of the equivalent explicit `--fault crash@round:worker`
+//! schedule — i.e. a real process death is indistinguishable from a
+//! scheduled fault, byte for byte.
+//!
+//! Every net run here spawns its fleet from `CARGO_BIN_EXE_olsgd` (the
+//! test binary is *not* the CLI, so `current_exe()` would be wrong) and
+//! binds port 0, so parallel test threads never collide on an address.
+
+use olsgd::config::{Algo, Execution, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::runtime::ModelRuntime;
+use olsgd::simnet::StragglerModel;
+
+/// The golden fixed-seed shape: jitter stragglers on (so the per-worker
+/// RNG replay is actually exercised), 64 samples per shard, 2 epochs of
+/// 2 steps each → 4 global steps.
+fn base_cfg(m: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
+    cfg.workers = m;
+    cfg.epochs = 2.0;
+    cfg.train_n = m * 64;
+    cfg.test_n = 100;
+    cfg.eval_every = 1.0;
+    cfg.tau = 2;
+    cfg.straggler = StragglerModel::UniformJitter { jitter: 0.2 };
+    cfg.set("net_worker_bin", env!("CARGO_BIN_EXE_olsgd")).unwrap();
+    cfg.set("net_procs", "4").unwrap();
+    // Generous rendezvous budget: CI machines can be slow to exec 4
+    // children while other test threads hammer the disk.
+    cfg.set("net_timeout_s", "120").unwrap();
+    cfg
+}
+
+fn digest(cfg: &ExperimentConfig) -> u64 {
+    let rt = ModelRuntime::native(&cfg.model).unwrap();
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    run_experiment(&rt, cfg, &train, &test).unwrap().digest()
+}
+
+#[test]
+fn net_execution_is_digest_identical_to_sim_and_threads() {
+    // The exact-collective algorithms on the paper's 16-worker ring,
+    // served by 4 worker processes of 4 lanes each.
+    for algo in [Algo::Sync, Algo::Local, Algo::OverlapM, Algo::Cocod, Algo::Easgd] {
+        let mut cfg = base_cfg(16);
+        cfg.algo = algo;
+        assert_eq!(cfg.execution, Execution::Sim);
+        let sim = digest(&cfg);
+        cfg.execution = Execution::Threads;
+        let thr = digest(&cfg);
+        cfg.execution = Execution::Net;
+        let net = digest(&cfg);
+        assert_eq!(sim, thr, "{algo:?}: threads backend drifted from sim");
+        assert_eq!(sim, net, "{algo:?}: net backend drifted from sim");
+    }
+}
+
+#[test]
+fn net_execution_composes_with_topology_and_compression() {
+    // The service plane sits on the Executor seam, so the topology and
+    // compression axes must pass through untouched.
+    let mut tree = base_cfg(16);
+    tree.algo = Algo::OverlapM;
+    tree.topology = "tree".into();
+    let sim = digest(&tree);
+    tree.execution = Execution::Net;
+    assert_eq!(sim, digest(&tree), "overlap-m on tree: net drifted from sim");
+
+    let mut topk = base_cfg(16);
+    topk.algo = Algo::OverlapM;
+    topk.set("compress", "topk").unwrap();
+    topk.set("compress_k", "64").unwrap();
+    let sim = digest(&topk);
+    topk.execution = Execution::Net;
+    assert_eq!(sim, digest(&topk), "overlap-m + topk: net drifted from sim");
+}
+
+#[test]
+fn killed_worker_process_replays_as_the_equivalent_crash_fault() {
+    // 4 slots on 4 single-lane processes: proc 1 serves exactly worker 1.
+    // `net_kill=1:2` makes it exit after serving round 2's phase request,
+    // so the boundary poll before round 3 reports crash@3:1 — which must
+    // replay bit-identically to scheduling that crash explicitly on sim.
+    // 4 epochs → 8 global steps → 4 rounds of τ=2, so the death lands
+    // mid-run with two full rounds left for the survivors.
+    let mut dead = base_cfg(4);
+    dead.algo = Algo::OverlapM;
+    dead.epochs = 4.0;
+    dead.set("net_kill", "1:2").unwrap();
+    dead.execution = Execution::Net;
+    let net = digest(&dead);
+
+    let mut explicit = base_cfg(4);
+    explicit.algo = Algo::OverlapM;
+    explicit.epochs = 4.0;
+    explicit.set("fault", "crash@3:1").unwrap();
+    let sim = digest(&explicit);
+
+    assert_eq!(
+        net, sim,
+        "a worker process dying after round 2 must be byte-identical to \
+         an explicit --fault crash@3:1 schedule"
+    );
+}
