@@ -1,0 +1,142 @@
+//! **E17 — population-scale partial participation** (DESIGN.md §14,
+//! EXPERIMENTS.md E17): the engine trains a sampled cohort of k = 16
+//! machines over registered populations of N ∈ {16, 10³, 10⁵, 10⁶}
+//! workers, and the O(k) worker-state store must make N free — resident
+//! state bounded by `sample_k + sample_reserve` at every N, round
+//! throughput flat in N, and the LRU/spill machinery invisible in the
+//! trajectory.
+//!
+//! Every leg runs twice: once with the default reserve (evictions spill
+//! through the disk codec) and once with a reserve large enough that
+//! nothing ever spills. `digest_match_dense` records that the two agree
+//! bit-for-bit — i.e. the store is pure mechanism — and on the N == k leg
+//! additionally that the run equals the truly-dense engine
+//! (`population = 0`), the strict-generalization acceptance criterion.
+//! The CI `population-matrix` job gates on `digest_match_dense == true`
+//! and `resident_workers_max <= sample_k + reserve` for every row.
+//!
+//! The summary lands in `results/population/E17_population.json`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use olsgd::bench::experiments::BenchCtx;
+use olsgd::config::Algo;
+use olsgd::metrics::PopulationCounters;
+use olsgd::util::json::{num, obj, Json};
+
+const K: usize = 16;
+const POPULATIONS: [u64; 4] = [16, 1_000, 100_000, 1_000_000];
+
+/// Per-worker persistent state footprint (bytes): params + momentum (the
+/// default nesterov optimizer carries no second moment and no residual at
+/// `--compress none`) + the shard index + codec overhead.
+fn state_bytes(n: usize, shard_len: usize) -> u64 {
+    (2 * n * 4 + shard_len * 4 + 128) as u64
+}
+
+fn leg_row(
+    n_pop: u64,
+    wall_s: f64,
+    rounds: u64,
+    c: &PopulationCounters,
+    digest_match_dense: bool,
+    resident_bytes: u64,
+) -> Json {
+    let binds = c.store_hits + c.spill_reads + c.fresh_materializations;
+    obj(vec![
+        ("population", num(n_pop as f64)),
+        ("sample_k", num(c.sample_k as f64)),
+        ("reserve", num(c.reserve as f64)),
+        ("rounds", num(rounds as f64)),
+        ("rounds_per_sec", num(rounds as f64 / wall_s.max(1e-9))),
+        ("wall_s", num(wall_s)),
+        ("resident_workers_max", num(c.resident_workers_max as f64)),
+        ("resident_bytes_est", num(resident_bytes as f64)),
+        ("store_hits", num(c.store_hits as f64)),
+        ("spill_reads", num(c.spill_reads as f64)),
+        ("fresh_materializations", num(c.fresh_materializations as f64)),
+        ("evictions", num(c.evictions as f64)),
+        ("spilled_bytes", num(c.spilled_bytes as f64)),
+        (
+            "cache_hit_rate",
+            num(if binds > 0 { c.store_hits as f64 / binds as f64 } else { 1.0 }),
+        ),
+        ("digest_match_dense", Json::Bool(digest_match_dense)),
+    ])
+}
+
+fn main() -> Result<()> {
+    let mut ctx = BenchCtx::new("population")?;
+    let model_n = ctx.rt.n;
+    let shard_len = ctx.base.train_n / K;
+
+    // The truly-dense reference: the same shape with the axis off.
+    let dense = ctx.run_leg("dense_k16", |c| {
+        c.algo = Algo::OverlapM;
+        c.workers = K;
+    })?;
+    let dense_digest = dense.digest();
+
+    println!("=== E17: population scale at fixed k = 16 (overlap-m, ring) ===");
+    println!(
+        "{:>10} {:>8} {:>10} {:>9} {:>13} {:>9} {:>9} {:>7}",
+        "N", "rounds", "rounds/s", "resident", "bytes(est)", "hit%", "spilled", "dense?"
+    );
+
+    let mut rows = Vec::new();
+    for n_pop in POPULATIONS {
+        let t0 = Instant::now();
+        let log = ctx.run_leg(&format!("pop_{n_pop}"), |c| {
+            c.algo = Algo::OverlapM;
+            c.workers = K;
+            c.set("population", &n_pop.to_string()).expect("static key");
+            c.set("sample_k", &K.to_string()).expect("static key");
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        let c = log.population.expect("engaged run must report population counters");
+
+        // Control: a reserve no run can overflow — the store never evicts,
+        // so a digest match proves the spill codec and LRU are pure
+        // mechanism. Total distinct workers touched is at most k × rounds,
+        // so this stays O(touched), far below N.
+        let control = ctx.run_leg(&format!("pop_{n_pop}_nospill"), |c| {
+            c.algo = Algo::OverlapM;
+            c.workers = K;
+            c.set("population", &n_pop.to_string()).expect("static key");
+            c.set("sample_k", &K.to_string()).expect("static key");
+            c.set("sample_reserve", "1000000000").expect("static key");
+        })?;
+        let mut matched = log.digest() == control.digest();
+        if n_pop == K as u64 {
+            // Strict generalization: N == k must BE the dense engine.
+            matched = matched && log.digest() == dense_digest;
+        }
+
+        let resident_bytes = c.resident_workers_max * state_bytes(model_n, shard_len);
+        let binds = c.store_hits + c.spill_reads + c.fresh_materializations;
+        println!(
+            "{:>10} {:>8} {:>10.2} {:>9} {:>13} {:>8.1}% {:>9} {:>7}",
+            n_pop,
+            c.rounds_sampled,
+            c.rounds_sampled as f64 / wall.max(1e-9),
+            c.resident_workers_max,
+            resident_bytes,
+            100.0 * c.store_hits as f64 / binds.max(1) as f64,
+            c.spilled_bytes,
+            matched,
+        );
+        rows.push(leg_row(n_pop, wall, c.rounds_sampled, &c, matched, resident_bytes));
+
+        assert!(
+            c.resident_workers_max <= c.sample_k + c.reserve,
+            "N = {n_pop}: resident peak {} exceeds k + reserve = {}",
+            c.resident_workers_max,
+            c.sample_k + c.reserve
+        );
+        assert!(matched, "N = {n_pop}: the store changed the trajectory");
+    }
+
+    ctx.write_summary("E17_population.json", rows)?;
+    Ok(())
+}

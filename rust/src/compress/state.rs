@@ -501,6 +501,19 @@ impl CompressState {
     pub fn residual_norm(&self, w: usize) -> f64 {
         vecmath::l2_norm(&self.errors[w])
     }
+
+    /// Population slot re-bind (DESIGN.md §14): swap slot `w`'s
+    /// error-feedback residual with the incoming worker's persisted one —
+    /// the residual travels with the *worker*, not the slot — and
+    /// invalidate the slot's launch snapshot, which described the outgoing
+    /// worker's model ([`CompressState::pullback`] then takes its
+    /// fresh-rejoiner fallback). Alloc-free: a plain `mem::swap` of the
+    /// vectors. Never called while the cohort is stable, so dense (N == k)
+    /// runs keep their digests bit-for-bit.
+    pub fn swap_residual(&mut self, w: usize, residual: &mut Vec<f32>) {
+        std::mem::swap(&mut self.errors[w], residual);
+        self.snap_valid[w] = false;
+    }
 }
 
 #[cfg(test)]

@@ -236,6 +236,24 @@ pub struct ExperimentConfig {
     /// downed workers (0 = crashed workers stay down unless an explicit
     /// `rejoin@` event revives them)
     pub rejoin_rate: f64,
+    // population-scale partial participation (DESIGN.md §14, E17)
+    /// registered population size N (0 = axis off: every worker
+    /// participates every round, the dense pre-population behavior). When
+    /// set, each round trains a deterministically sampled cohort of
+    /// `sample_k` workers; per-worker state is materialized lazily and
+    /// evicted LRU, so resident memory is O(k), not O(N)
+    pub population: u64,
+    /// sampled cohort size k (0 = use `workers`); [`ExperimentConfig::resolved`]
+    /// normalizes `workers` to this value, since the engine's slot count
+    /// *is* the cohort size
+    pub sample_k: usize,
+    /// seed of the per-round cohort sampler streams (0 = derive from `seed`)
+    pub sample_seed: u64,
+    /// LRU reserve: unbound worker states kept resident beyond the k bound
+    /// ones before eviction to the disk spill (0 = evict immediately —
+    /// every cohort change round-trips through the spill codec)
+    pub sample_reserve: usize,
+
     /// seconds per local mini-batch step on an unperturbed node
     pub base_step_s: f64,
     /// None -> paper ResNet-18 message size (44.7 MB); Some(0) -> actual
@@ -310,6 +328,10 @@ impl Default for ExperimentConfig {
             fault: FaultPlan::default(),
             fault_rate: 0.0,
             rejoin_rate: 0.0,
+            population: 0,
+            sample_k: 0,
+            sample_seed: 0,
+            sample_reserve: 8,
             base_step_s: 0.188,
             message_bytes: None,
             net_listen: "127.0.0.1:0".into(),
@@ -417,6 +439,18 @@ impl ExperimentConfig {
                 anyhow::ensure!((0.0..1.0).contains(&r), "rejoin_rate must be in [0, 1)");
                 self.rejoin_rate = r;
             }
+            "population" | "n_pop" => {
+                self.population = v
+                    .parse()
+                    .with_context(|| format!("bad integer for {key}: '{v}'"))?
+            }
+            "sample_k" => self.sample_k = parse_usize()?,
+            "sample_seed" => {
+                self.sample_seed = v
+                    .parse()
+                    .with_context(|| format!("bad integer for {key}: '{v}'"))?
+            }
+            "sample_reserve" => self.sample_reserve = parse_usize()?,
             "net_listen" => self.net_listen = v.to_string(),
             "net_procs" => {
                 let p = parse_usize()?;
@@ -496,6 +530,10 @@ impl ExperimentConfig {
             ),
             kv("fault_rate", self.fault_rate.to_string()),
             kv("rejoin_rate", self.rejoin_rate.to_string()),
+            kv("population", self.population.to_string()),
+            kv("sample_k", self.sample_k.to_string()),
+            kv("sample_seed", self.sample_seed.to_string()),
+            kv("sample_reserve", self.sample_reserve.to_string()),
             kv("base_step_s", self.base_step_s.to_string()),
             kv("net_listen", self.net_listen.clone()),
             kv("net_procs", self.net_procs.to_string()),
@@ -523,6 +561,60 @@ impl ExperimentConfig {
             cfg.set(k, v)?;
         }
         Ok(cfg)
+    }
+
+    /// Resolve the population axis into an executable config (DESIGN.md
+    /// §14) and validate its compositions. With `population == 0` this is
+    /// an identity clone. With `population > 0` the engine's slot count
+    /// *is* the cohort size, so `workers` is normalized to `sample_k`
+    /// (which itself defaults to `workers`), and the combinations that
+    /// cannot keep the bit-determinism contract are refused loudly:
+    ///
+    /// * the `net` backend (worker processes key their replay streams by
+    ///   slot, not by stable population id);
+    /// * the random fault process (O(N) per-round draws);
+    /// * PowerSGD (its per-worker warm bases are not part of the swapped
+    ///   worker state — use `topk`/`qsgd`, whose error-feedback residuals
+    ///   travel with the worker).
+    ///
+    /// `run_experiment` calls this; tests that assemble a `TrainContext`
+    /// by hand must call it themselves before engaging the axis.
+    pub fn resolved(&self) -> Result<ExperimentConfig> {
+        let mut out = self.clone();
+        if self.population == 0 {
+            anyhow::ensure!(
+                self.sample_k == 0,
+                "sample_k = {} needs population > 0 (the axis engages together)",
+                self.sample_k
+            );
+            return Ok(out);
+        }
+        let k = if self.sample_k == 0 { self.workers } else { self.sample_k };
+        anyhow::ensure!(k >= 1, "sample_k must be >= 1");
+        anyhow::ensure!(
+            self.population >= k as u64,
+            "population {} is smaller than the cohort size sample_k = {k}",
+            self.population
+        );
+        anyhow::ensure!(
+            self.execution != Execution::Net,
+            "population sampling runs on sim|threads: the net backend's worker \
+             processes key their replay streams by slot, not by population id"
+        );
+        anyhow::ensure!(
+            self.fault_rate == 0.0 && self.rejoin_rate == 0.0,
+            "population mode composes with explicit crash/rejoin events only; the \
+             random fault process would draw O(N) per-worker decisions per round"
+        );
+        anyhow::ensure!(
+            self.compress != CompressKind::PowerSgd && self.algo != Algo::PowerSgd,
+            "powersgd's per-worker warm bases are not part of the swapped population \
+             state; use --compress topk or qsgd, whose residuals travel with the worker"
+        );
+        crate::fault::validate_population_plan(&self.fault, self.population)?;
+        out.workers = k;
+        out.sample_k = k;
+        Ok(out)
     }
 
     /// The wire cost model selected by `net_preset`.
@@ -833,6 +925,77 @@ mod tests {
         assert!(c.set("fault_rate", "1.5").is_err());
         assert!(c.set("rejoin_rate", "-0.1").is_err());
         assert!(c.set("fault_rate", "often").is_err());
+    }
+
+    #[test]
+    fn population_keys_parse_resolve_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.population, 0);
+        assert_eq!(d.sample_k, 0);
+        assert_eq!(d.sample_seed, 0);
+        assert_eq!(d.sample_reserve, 8);
+        // Off axis: resolved() is the identity.
+        assert_eq!(d.resolved().unwrap().workers, d.workers);
+        // sample_k without a population is a contradiction.
+        let mut c = ExperimentConfig::default();
+        c.set("sample_k", "4").unwrap();
+        assert!(c.resolved().is_err());
+        // Engaged: workers normalizes to the cohort size.
+        let mut c = ExperimentConfig::default();
+        c.set("population", "1000000").unwrap();
+        c.set("sample_k", "16").unwrap();
+        c.set("sample_seed", "7").unwrap();
+        c.set("sample_reserve", "0").unwrap();
+        let r = c.resolved().unwrap();
+        assert_eq!(r.workers, 16);
+        assert_eq!(r.sample_k, 16);
+        assert_eq!(r.sample_reserve, 0);
+        // sample_k defaults to workers.
+        let mut c = ExperimentConfig::default();
+        c.set("population", "64").unwrap();
+        assert_eq!(c.resolved().unwrap().sample_k, c.workers);
+        // Refused compositions fail loudly.
+        let mut c = ExperimentConfig::default();
+        c.set("population", "4").unwrap(); // < default workers = 8
+        assert!(c.resolved().is_err());
+        c.set("population", "100").unwrap();
+        c.set("execution", "net").unwrap();
+        assert!(c.resolved().is_err());
+        c.set("execution", "sim").unwrap();
+        c.set("fault_rate", "0.1").unwrap();
+        assert!(c.resolved().is_err());
+        c.set("fault_rate", "0").unwrap();
+        c.set("compress", "powersgd").unwrap();
+        assert!(c.resolved().is_err());
+        c.set("compress", "topk").unwrap();
+        c.set("fault", "partition@3:0,1|2,3").unwrap();
+        assert!(c.resolved().is_err());
+        c.set("fault", "none").unwrap();
+        c.set("fault", "crash@3:200").unwrap(); // id outside N = 100
+        assert!(c.resolved().is_err());
+        c.set("fault", "none").unwrap();
+        c.set("fault", "crash@3:42;rejoin@5:42").unwrap();
+        assert!(c.resolved().is_ok());
+        assert!(c.set("population", "many").is_err());
+        assert!(c.set("sample_reserve", "-1").is_err());
+    }
+
+    #[test]
+    fn population_keys_round_trip_through_kv() {
+        let mut c = ExperimentConfig::default();
+        c.set("population", "100000").unwrap();
+        c.set("sample_k", "16").unwrap();
+        c.set("sample_seed", "99").unwrap();
+        c.set("sample_reserve", "32").unwrap();
+        let mut r = ExperimentConfig::default();
+        for (k, v) in c.to_kv() {
+            r.set(&k, &v).unwrap_or_else(|e| panic!("set({k}, {v}): {e}"));
+        }
+        assert_eq!(r.to_kv(), c.to_kv());
+        assert_eq!(r.population, 100_000);
+        assert_eq!(r.sample_k, 16);
+        assert_eq!(r.sample_seed, 99);
+        assert_eq!(r.sample_reserve, 32);
     }
 
     #[test]

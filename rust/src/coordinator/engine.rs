@@ -37,7 +37,7 @@ use super::{Recorder, TrainContext, Workers};
 use crate::clock::Clocks;
 use crate::compress::CompressState;
 use crate::executor::{ExecSnapshot, Executor};
-use crate::fault::FaultState;
+use crate::fault::{FaultPlan, FaultState};
 use crate::metrics::{HotPathCounters, TrainLog};
 
 /// Virtual cost of one fused elementwise pass over the paper-size model
@@ -127,6 +127,15 @@ pub struct Engine {
     /// engine. Rejoiners are reset here (residual zeroed, warm-start basis
     /// restored) before the strategy's own `on_rejoin` runs.
     pub compress: Option<CompressState>,
+    /// Population axis (DESIGN.md §14): when `cfg.population > 0` the m
+    /// slots are *machines*, each bound per round to one of N registered
+    /// workers by the deterministic cohort sampler; unbound worker state
+    /// lives in the O(k) LRU store. `None` (axis off) leaves every path
+    /// above bit-identical to the dense engine. Fault events then replay
+    /// over population ids ([`crate::fault::PopulationFaults`]) — a
+    /// crashed id just leaves the sampling pool, the slot-level alive set
+    /// stays full — so [`Engine::fault`] is built with an empty plan.
+    pub population: Option<crate::population::PopulationState>,
 }
 
 impl Engine {
@@ -136,6 +145,15 @@ impl Engine {
     pub fn new(ctx: &TrainContext) -> Result<Self> {
         let workers = Workers::new(ctx);
         let m = workers.m;
+        let population = crate::population::PopulationState::build(ctx)?;
+        // In population mode the configured fault plan replays over
+        // population ids inside `PopulationState`; the slot-level fault
+        // machinery must stay disengaged (empty plan, full alive set).
+        let slot_plan = if population.is_some() {
+            FaultPlan { events: Vec::new() }
+        } else {
+            ctx.cfg.fault.clone()
+        };
         Ok(Self {
             workers,
             clocks: Clocks::new(m),
@@ -146,7 +164,7 @@ impl Engine {
             steps_done: vec![0; m],
             exec: Executor::from_config(ctx.cfg)?,
             fault: FaultState::new(
-                &ctx.cfg.fault,
+                &slot_plan,
                 ctx.cfg.fault_rate,
                 ctx.cfg.rejoin_rate,
                 ctx.cfg.seed,
@@ -157,6 +175,7 @@ impl Engine {
                 &ctx.rt.manifest,
                 ctx.cluster.message_bytes,
             ),
+            population,
         })
     }
 
@@ -302,6 +321,11 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
         // the alive set. All of it happens on the coordinator thread, so
         // the replay is bit-deterministic on either execution backend.
         apply_round_faults(&mut eng, ctx, strategy)?;
+        // Population binding happens at the same boundary: replay id-level
+        // faults, sample the round's cohort, and swap each sampled
+        // worker's persistent state into its slot (no-op when the axis is
+        // off, and provably a no-op after round 1 when N == k).
+        bind_population_round(&mut eng, ctx, strategy)?;
         strategy.before_local(&mut eng, ctx)?;
         let mut plan = strategy.plan(&eng, ctx);
         // Plan validation is a *hard* error in every profile: a ragged or
@@ -400,6 +424,9 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
         steady_buffer_alloc_bytes: end.buffer_alloc_bytes - warm.buffer_alloc_bytes,
         buffer_hits_total: end.buffer_hits,
     });
+    if let Some(pop) = &eng.population {
+        eng.rec.set_population(pop.counters());
+    }
     eng.rec.force_eval_masked(eng.total, ctx, &eng.workers, &eng.clocks, &eng.fault.alive)?;
     Ok(eng.rec.finish(ctx, &eng.clocks, eng.total))
 }
@@ -445,5 +472,129 @@ fn apply_round_faults(
     if rf.changed {
         eng.rec.note_survivors(round, eng.fault.alive.stepping_count());
     }
+    Ok(())
+}
+
+/// Bind the upcoming round's sampled cohort to the engine's slots (no-op
+/// unless the population axis is engaged). Order within the boundary:
+///
+/// 1. replay id-level fault events (a crashed id leaves the sampling pool;
+///    the trace and eligible-count series land in the same recorder fields
+///    the slot-level machinery uses);
+/// 2. sample k distinct eligible ids, ascending (slot order);
+/// 3. unbind every slot whose worker changed — its full state (including
+///    the compressor's error-feedback residual) swaps out into the LRU
+///    store;
+/// 4. bind the incoming worker: resident hit, bit-exact spill
+///    rematerialization, or fresh materialization from init. A *rebinding*
+///    slot models the new participant syncing up: its virtual clock jumps
+///    to the cluster's launch clock (the off-round gap was idle time —
+///    non-participants advance through virtual time without ever being
+///    materialized) and it pays one full-message model fetch on the wire,
+///    exactly the rejoin protocol. Round-1 binds are initial placement and
+///    charge nothing.
+/// 5. never-before-seen workers joining mid-run are warm-started through
+///    the strategy's `on_rejoin` (anchor-bearing strategies pull them to
+///    the anchor); rematerialized workers resume their own trajectory and
+///    are *not* warm-started;
+/// 6. evict the store down to its reserve cap (the O(k) guarantee).
+///
+/// When `N == k` the sampler returns `0..k` every round, so after round 1
+/// nothing ever changes binding — steps 3–5 never execute and every
+/// observable is bit-identical to the dense engine (golden-locked by
+/// rust/tests/population.rs).
+fn bind_population_round(
+    eng: &mut Engine,
+    ctx: &TrainContext,
+    strategy: &mut dyn MixingStrategy,
+) -> Result<()> {
+    let Some(mut pop) = eng.population.take() else {
+        return Ok(());
+    };
+    let res = bind_cohort(eng, ctx, strategy, &mut pop);
+    eng.population = Some(pop);
+    res
+}
+
+fn bind_cohort(
+    eng: &mut Engine,
+    ctx: &TrainContext,
+    strategy: &mut dyn MixingStrategy,
+    pop: &mut crate::population::PopulationState,
+) -> Result<()> {
+    let round = eng.round + 1; // 1-based index of the round about to run
+    let applied = pop.faults.begin_round(round)?;
+    for ev in &applied {
+        eng.rec.note_fault(round, ev.describe());
+    }
+    if !applied.is_empty() {
+        eng.rec.note_survivors(round, pop.faults.eligible() as usize);
+    }
+    let cohort = pop.sample(round)?;
+    // Cluster time the incoming workers sync to — computed before any of
+    // this round's clock jumps, like the rejoin path above.
+    let t = eng.launch_clock();
+    let fetch = ctx.cluster.net.rejoin_fetch_time(ctx.cluster.message_bytes);
+    // Unbind every outgoing worker first so its state is parked (and
+    // takeable) before any incoming bind — cohorts are sets, so the same
+    // id may move between slots within one boundary.
+    let mut incoming: Vec<(usize, u64, bool)> = Vec::new(); // (slot, id, rebind)
+    for (slot, &id) in cohort.iter().enumerate() {
+        let prev = pop.bound[slot];
+        if prev == Some(id) {
+            continue;
+        }
+        if let Some(old) = prev {
+            let mut shell = pop.store.blank();
+            eng.workers.swap_state(slot, &mut shell);
+            if let Some(cs) = eng.compress.as_mut() {
+                let mut r = shell.residual.take().unwrap_or_default();
+                cs.swap_residual(slot, &mut r);
+                shell.residual = Some(r);
+            }
+            pop.store.park(old, shell);
+        }
+        incoming.push((slot, id, prev.is_some()));
+    }
+    let mut fresh_slots: Vec<usize> = Vec::new();
+    for &(slot, id, rebind) in &incoming {
+        let (mut st, seen) = pop.store.take_or_materialize(id, &ctx.shards)?;
+        eng.workers.swap_state(slot, &mut st);
+        if let Some(cs) = eng.compress.as_mut() {
+            if let Some(r) = st.residual.as_mut() {
+                cs.swap_residual(slot, r);
+            }
+        }
+        pop.store.recycle(st);
+        pop.bound[slot] = Some(id);
+        if rebind {
+            eng.clocks.wait_idle_until(slot, t);
+            eng.clocks.comm_blocked(slot, fetch);
+            if !seen {
+                fresh_slots.push(slot);
+            }
+        }
+    }
+    // Warm-start protocol for workers that have never trained: compressor
+    // reset first, then the strategy's rejoin hook. `src` prefers a slot
+    // with real training history; if the whole cohort is fresh any other
+    // slot works — anchor-bearing strategies ignore `src` and pull the
+    // newcomer to the anchor, which is the semantics that matter.
+    if !fresh_slots.is_empty() {
+        let src = (0..eng.workers.m).find(|s| !fresh_slots.contains(s));
+        for &slot in &fresh_slots {
+            let src = match src {
+                Some(s) => s,
+                None if eng.workers.m > 1 => (slot + 1) % eng.workers.m,
+                None => continue, // a lone fresh slot has no one to start from
+            };
+            if let Some(cs) = eng.compress.as_mut() {
+                cs.reset_worker(slot);
+            }
+            strategy.on_rejoin(eng, ctx, slot, src)?;
+        }
+    }
+    pop.store.enforce_cap()?;
+    pop.note_round();
     Ok(())
 }

@@ -53,7 +53,7 @@ use crate::compress::CompressKind;
 use crate::config::{Algo, ExperimentConfig};
 use crate::data::{Batcher, Dataset, PX};
 use crate::fault::AliveSet;
-use crate::metrics::{EvalRecord, HotPathCounters, TrainLog};
+use crate::metrics::{EvalRecord, HotPathCounters, PopulationCounters, TrainLog};
 use crate::optim::LrSchedule;
 use crate::runtime::ModelRuntime;
 use crate::simnet::ClusterModel;
@@ -402,6 +402,22 @@ impl Workers {
         self.mom2[w].fill(0.0);
         self.adam_t[w] = 0.0;
     }
+
+    /// Population slot bind/unbind (DESIGN.md §14): exchange slot `w`'s
+    /// complete per-worker training state — replica, momenta, Adam
+    /// counter, batch sampler, straggler stream — with a
+    /// [`crate::population::WorkerState`]. Pure `mem::swap`s of the owned
+    /// buffers, so a steady cohort (or an LRU hit) binds without a single
+    /// allocation; the per-slot batch *staging* buffers (`img_bufs`,
+    /// `grad_bufs`, ...) are contentless scratch and stay with the slot.
+    pub(crate) fn swap_state(&mut self, w: usize, st: &mut crate::population::WorkerState) {
+        std::mem::swap(&mut self.params[w], &mut st.params);
+        std::mem::swap(&mut self.mom[w], &mut st.mom);
+        std::mem::swap(&mut self.mom2[w], &mut st.mom2);
+        std::mem::swap(&mut self.adam_t[w], &mut st.adam_t);
+        std::mem::swap(&mut self.batchers[w], &mut st.batcher);
+        std::mem::swap(&mut self.straggler_rngs[w], &mut st.rng);
+    }
 }
 
 /// Copy `rows[src]` into `rows[dst]` without allocating (disjoint split
@@ -441,6 +457,9 @@ pub struct Recorder {
     /// tracked hot-path counters (set by the engine at run end; all-zero
     /// for the reference loops, and never part of the digest)
     hot: HotPathCounters,
+    /// population-store counters (set by the engine when the
+    /// partial-participation axis is on; never part of the digest)
+    population: Option<PopulationCounters>,
 }
 
 impl Recorder {
@@ -461,6 +480,7 @@ impl Recorder {
             fault_trace: Vec::new(),
             survivors: Vec::new(),
             hot: HotPathCounters::default(),
+            population: None,
         }
     }
 
@@ -469,6 +489,12 @@ impl Recorder {
     /// from the digest by construction.
     pub fn set_hot(&mut self, hot: HotPathCounters) {
         self.hot = hot;
+    }
+
+    /// Install the run's population-store counters (engine only; see
+    /// `TrainLog::population`). Reporting-only, never part of the digest.
+    pub fn set_population(&mut self, counters: PopulationCounters) {
+        self.population = Some(counters);
     }
 
     /// Record the mean training loss of one sync round at global step `k`.
@@ -625,6 +651,7 @@ impl Recorder {
             neighbor_bytes: self.neighbor_bytes,
             steps,
             hot: self.hot,
+            population: self.population,
         }
     }
 }
@@ -808,6 +835,10 @@ pub fn run_experiment(
     train: &Dataset,
     test: &Dataset,
 ) -> Result<TrainLog> {
+    // Resolve the population axis first (`workers` normalizes to the
+    // cohort size; invalid compositions are refused before any state
+    // exists). With `population = 0` this clone is bit-inert.
+    let cfg = &cfg.resolved()?;
     let shards = make_shards(cfg, train);
     let steps_per_epoch = (shards[0].len() / rt.train_batch).max(1);
     let cluster = cfg.cluster(rt.n * 4)?;

@@ -241,6 +241,28 @@ impl Batcher {
         self.shard.len() / b
     }
 
+    /// The sampler's complete state for the population spill codec
+    /// (DESIGN.md §14): `(shard order, cursor, rng)`. The shard *order*
+    /// must be persisted — it carries the initial shuffle and every epoch
+    /// reshuffle — so a rematerialized worker draws exactly the batches the
+    /// evicted one would have.
+    pub fn spill_parts(&self) -> (&[u32], usize, &Rng) {
+        (&self.shard, self.pos, &self.rng)
+    }
+
+    /// Rebuild a sampler from [`Batcher::spill_parts`] plus the public
+    /// `epochs_completed`/`reshuffle` fields, continuing the evicted
+    /// stream bit-for-bit (no re-shuffle on restore).
+    pub fn from_spill_parts(
+        shard: Vec<u32>,
+        pos: usize,
+        rng: Rng,
+        epochs_completed: usize,
+        reshuffle: bool,
+    ) -> Self {
+        Self { shard, pos, rng, epochs_completed, reshuffle }
+    }
+
     /// Fill `images`/`labels` with the next batch of `b` samples.
     pub fn next_batch(&mut self, ds: &Dataset, b: usize, images: &mut [f32], labels: &mut [i32]) {
         assert_eq!(images.len(), b * PX);

@@ -667,6 +667,103 @@ impl FaultState {
     }
 }
 
+/// Validate a fault plan against population mode (DESIGN.md §14): only
+/// `crash@R:W` / `rejoin@R:W` compose with a sampled cohort — a crashed id
+/// simply leaves the sampling pool — and every worker id must name a
+/// member of the registered population. Partitions (and `heal`) are
+/// slot-graph concepts with no meaning over a per-round cohort, so they
+/// are refused loudly rather than silently reinterpreted.
+pub fn validate_population_plan(plan: &FaultPlan, population: u64) -> Result<()> {
+    for ev in &plan.events {
+        match ev {
+            FaultEvent::Crash { worker, .. } | FaultEvent::Rejoin { worker, .. } => {
+                ensure!(
+                    (*worker as u64) < population,
+                    "fault event '{}' names worker {} outside the population (N = {})",
+                    ev.describe(),
+                    worker,
+                    population
+                );
+            }
+            other => bail!(
+                "population mode supports crash/rejoin fault events only \
+                 (a partition over a per-round sampled cohort is ill-defined); got '{}'",
+                other.describe()
+            ),
+        }
+    }
+    Ok(())
+}
+
+/// Population-mode fault replay (DESIGN.md §14): the same 1-based
+/// round-boundary event semantics as [`FaultState`], applied to an
+/// *eligibility pool* over stable population ids instead of the dense
+/// per-slot [`AliveSet`]. A crashed id stays out of every cohort the
+/// sampler draws until its `rejoin@` event fires; state is O(downed), not
+/// O(N). Built only from plans that passed
+/// [`validate_population_plan`].
+#[derive(Debug)]
+pub struct PopulationFaults {
+    /// events sorted stably by round (spec order breaks ties, matching
+    /// [`FaultState`])
+    events: Vec<FaultEvent>,
+    cursor: usize,
+    /// currently-downed population ids (sorted; deterministic iteration)
+    down: std::collections::BTreeSet<u64>,
+    n_pop: u64,
+}
+
+impl PopulationFaults {
+    /// Replay machine for `plan` over a population of `n_pop` ids.
+    pub fn new(plan: &FaultPlan, n_pop: u64) -> Result<Self> {
+        validate_population_plan(plan, n_pop)?;
+        let mut events = plan.events.clone();
+        events.sort_by_key(FaultEvent::round);
+        Ok(Self { events, cursor: 0, down: std::collections::BTreeSet::new(), n_pop })
+    }
+
+    /// Apply every event due at the start of 1-based `round`, returning
+    /// them in applied order. Inconsistent schedules (crash a downed id,
+    /// rejoin an up id) are hard errors, mirroring [`FaultState`].
+    pub fn begin_round(&mut self, round: usize) -> Result<Vec<FaultEvent>> {
+        let mut applied = Vec::new();
+        while self.cursor < self.events.len() && self.events[self.cursor].round() <= round {
+            let ev = self.events[self.cursor].clone();
+            self.cursor += 1;
+            match &ev {
+                FaultEvent::Crash { worker, .. } => ensure!(
+                    self.down.insert(*worker as u64),
+                    "fault event '{}' crashes a worker that is already down",
+                    ev.describe()
+                ),
+                FaultEvent::Rejoin { worker, .. } => ensure!(
+                    self.down.remove(&(*worker as u64)),
+                    "fault event '{}' rejoins a worker that is not down",
+                    ev.describe()
+                ),
+                _ => unreachable!("validated at construction"),
+            }
+            applied.push(ev);
+        }
+        Ok(applied)
+    }
+
+    /// The currently-downed ids (ascending) — the sampler's rejection set.
+    pub fn down(&self) -> &std::collections::BTreeSet<u64> {
+        &self.down
+    }
+
+    /// Population ids currently eligible for sampling.
+    pub fn eligible(&self) -> u64 {
+        self.n_pop - self.down.len() as u64
+    }
+
+    /// Whether any event is scheduled (an empty plan is bit-inert).
+    pub fn engaged(&self) -> bool {
+        !self.events.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

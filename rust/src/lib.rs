@@ -36,6 +36,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod optim;
+pub mod population;
 pub mod runtime;
 pub mod simnet;
 pub mod topology;

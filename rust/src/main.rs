@@ -93,9 +93,16 @@ fn print_usage() {
                      with every algorithm, topology, and fault schedule; knobs:\n\
                      --set compress_k=N compress_rank=R compress_bits=B; error-feedback\n\
                      residuals are per-worker engine state, DESIGN.md §12)\n\
+         Population: --set population=N sample_k=k (register N workers, each round\n\
+                     deterministically samples k participants; per-worker state is\n\
+                     materialized lazily and evicted LRU so resident memory is O(k),\n\
+                     not O(N) — N up to 10^6, DESIGN.md §14; sample_seed reseeds the\n\
+                     cohort streams, sample_reserve sizes the resident cache;\n\
+                     --fault crash/rejoin compose at the population-id level)\n\
          Config keys: algo model workers epochs seed eval_every execution lr tau tau_min\n\
                       tau_hetero ada_patience ada_threshold alpha beta mu wd rank\n\
                       compress compress_k compress_rank compress_bits\n\
+                      population sample_k sample_seed sample_reserve\n\
                       train_n test_n noniid dominant_frac reshuffle net base_step_s\n\
                       topology gossip_degree hier_groups fault fault_rate rejoin_rate\n\
                       message_bytes straggler artifacts_dir out_dir\n\

@@ -65,6 +65,58 @@ impl HotPathCounters {
     }
 }
 
+/// Population-store counters for one partial-participation run
+/// (DESIGN.md §14, E17): sampler activity plus the LRU/spill behavior of
+/// the per-worker state store. Reporting-only, exactly like
+/// [`HotPathCounters`]: present in the JSON but never hashed into
+/// [`TrainLog::digest`], so a sampled run's digest depends only on what the
+/// cohort actually computed — not on how its state was cached.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PopulationCounters {
+    /// registered population size N
+    pub population: u64,
+    /// sampled cohort size k (= the engine's slot count)
+    pub sample_k: u64,
+    /// LRU reserve: unbound worker states kept resident beyond the k bound
+    pub reserve: u64,
+    /// rounds the cohort sampler ran
+    pub rounds_sampled: u64,
+    /// slot binds served from the resident LRU store (no decode)
+    pub store_hits: u64,
+    /// slot binds rematerialized bit-exactly from the disk spill
+    pub spill_reads: u64,
+    /// slot binds that materialized a never-seen worker from init
+    pub fresh_materializations: u64,
+    /// resident states evicted (encoded and appended) to the spill
+    pub evictions: u64,
+    /// total bytes appended to the spill file
+    pub spilled_bytes: u64,
+    /// peak materialized worker states (bound + resident); the O(k) claim
+    /// is `resident_workers_max <= sample_k + reserve`, gated in CI (E17)
+    pub resident_workers_max: u64,
+}
+
+impl PopulationCounters {
+    /// The counters as a JSON object (rides inside the result-file format).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("population", num(self.population as f64)),
+            ("sample_k", num(self.sample_k as f64)),
+            ("reserve", num(self.reserve as f64)),
+            ("rounds_sampled", num(self.rounds_sampled as f64)),
+            ("store_hits", num(self.store_hits as f64)),
+            ("spill_reads", num(self.spill_reads as f64)),
+            (
+                "fresh_materializations",
+                num(self.fresh_materializations as f64),
+            ),
+            ("evictions", num(self.evictions as f64)),
+            ("spilled_bytes", num(self.spilled_bytes as f64)),
+            ("resident_workers_max", num(self.resident_workers_max as f64)),
+        ])
+    }
+}
+
 /// One evaluation point (cadence = config.eval_every epochs).
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
@@ -130,6 +182,10 @@ pub struct TrainLog {
     /// reporting-only — excluded from [`TrainLog::digest`] so memory
     /// behavior can never masquerade as an algorithmic observable
     pub hot: HotPathCounters,
+    /// population-store counters (DESIGN.md §14); `None` when the
+    /// partial-participation axis is off, and — like `hot` — excluded from
+    /// [`TrainLog::digest`] even when present
+    pub population: Option<PopulationCounters>,
 }
 
 impl TrainLog {
@@ -164,7 +220,7 @@ impl TrainLog {
 
     /// The run as a JSON object (the result-file format).
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("algo", s(&self.algo)),
             ("compress", s(&self.compress)),
             ("tau", num(self.tau as f64)),
@@ -222,7 +278,11 @@ impl TrainLog {
                 arr(self.neighbor_bytes.iter().map(|&b| num(b as f64))),
             ),
             ("hot_path", self.hot.to_json()),
-        ])
+        ];
+        if let Some(p) = &self.population {
+            fields.push(("population", p.to_json()));
+        }
+        obj(fields)
     }
 
     /// Order-sensitive FNV-1a fingerprint over every observable of the run
@@ -368,6 +428,7 @@ mod tests {
             bytes_sent: 1 << 20,
             steps: 32,
             hot: HotPathCounters::default(),
+            population: None,
         }
     }
 
@@ -428,6 +489,24 @@ mod tests {
         let mut h = sample_log();
         h.compress = "topk".into();
         assert_eq!(a.digest(), h.digest(), "compress label must stay out of the digest");
+        // Population-store counters are reporting-only for the same reason:
+        // cache behavior (hits, spills, evictions) must never shift a
+        // digest — only what the cohort computed may.
+        let mut p = sample_log();
+        p.population = Some(PopulationCounters {
+            population: 1_000_000,
+            sample_k: 16,
+            reserve: 8,
+            rounds_sampled: 40,
+            store_hits: 3,
+            spill_reads: 21,
+            fresh_materializations: 612,
+            evictions: 620,
+            spilled_bytes: 9 << 20,
+            resident_workers_max: 24,
+        });
+        assert_eq!(a.digest(), p.digest(), "population counters must stay out of the digest");
+        assert!(p.to_json().to_string_pretty().contains("resident_workers_max"));
     }
 
     #[test]

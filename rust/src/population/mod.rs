@@ -1,0 +1,731 @@
+//! Population-scale partial participation (DESIGN.md §14, E17).
+//!
+//! The paper's anchor model is exactly what makes training over a huge,
+//! partially-participating population viable: an overlap round touches the
+//! anchor, not every peer, so the cluster the engine simulates no longer
+//! has to *be* the population. This module makes the split first-class:
+//!
+//! * a **registered population** of N workers (`population`, N up to 10^6
+//!   and beyond) identified by stable ids `0..N`;
+//! * a **deterministic cohort sampler** ([`sample_cohort`]): each round
+//!   draws k distinct eligible ids from its own seeded stream
+//!   (`sample/{round}`), so any round's cohort is replayable from
+//!   `(sample_seed, round)` alone and independent of every other stream
+//!   in the run;
+//! * a **lazily-materialized worker store** ([`PopulationStore`]): the
+//!   engine keeps k dense slots (the machines); sampled workers bind to
+//!   slots by swapping their persistent state in — params, momenta, Adam
+//!   counter, batch-sampler position, straggler RNG stream, and the
+//!   error-feedback residual, all keyed by stable worker id. Unbound
+//!   states are held in an LRU of configurable `sample_reserve` depth and
+//!   evicted to a disk **spill file** through a bit-exact codec, so
+//!   resident memory is O(k + reserve), never O(N);
+//! * **fault composition** over ids, not slots: a crashed id leaves the
+//!   sampling pool until its rejoin (`fault::PopulationFaults`) — the
+//!   slot-level alive-set machinery stays disengaged.
+//!
+//! The correctness spine is strict generalization: with `population == k
+//! == workers` the sampler selects every id each round, ids coincide with
+//! slots, every derived stream label (`batcher/{id}`, `straggler/{id}`)
+//! matches the dense path's slot-keyed label, and no slot ever re-binds —
+//! so every observable is bit-identical to the dense engine
+//! (rust/tests/population.rs locks digests against `population = 0`).
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::fs::File;
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::compress::CompressKind;
+use crate::coordinator::TrainContext;
+use crate::data::Batcher;
+use crate::fault::PopulationFaults;
+use crate::metrics::PopulationCounters;
+use crate::util::rng::Rng;
+
+/// One population worker's complete persistent training state — everything
+/// that must travel with the worker across bind/evict/rematerialize cycles
+/// for its training trajectory to be independent of *when* it was sampled.
+pub struct WorkerState {
+    /// stable population id
+    pub id: u64,
+    /// model replica
+    pub params: Vec<f32>,
+    /// first-moment buffer
+    pub mom: Vec<f32>,
+    /// second-moment buffer (Adam local optimizer only; empty otherwise)
+    pub mom2: Vec<f32>,
+    /// 1-based Adam step counter (bias correction)
+    pub adam_t: f32,
+    /// batch sampler — shard order *and* cursor, so consumed draws persist
+    pub batcher: Batcher,
+    /// straggler-draw stream, keyed `straggler/{id}`
+    pub rng: Rng,
+    /// error-feedback residual (compression on only)
+    pub residual: Option<Vec<f32>>,
+}
+
+/// Everything needed to materialize a never-seen worker from scratch —
+/// the same construction [`crate::coordinator::Workers::new`] performs
+/// per slot, keyed by stable id instead.
+struct Materializer {
+    n: usize,
+    use_adam: bool,
+    seed: u64,
+    reshuffle: bool,
+    init: Vec<f32>,
+    /// residual length (model size when compression is on, else 0 → None)
+    residual_len: usize,
+}
+
+impl Materializer {
+    /// Fresh state for id: init params, zero momenta, shard
+    /// `shards[id % k]`, streams keyed by the stable id. When `id` equals
+    /// the slot index (the N == k case) every field is bit-identical to
+    /// the dense `Workers::new` slot state.
+    fn fresh(&self, id: u64, shards: &[Vec<u32>]) -> WorkerState {
+        let shard = shards[(id % shards.len() as u64) as usize].clone();
+        WorkerState {
+            id,
+            params: self.init.clone(),
+            mom: vec![0.0; self.n],
+            mom2: vec![0.0; if self.use_adam { self.n } else { 0 }],
+            adam_t: 0.0,
+            batcher: Batcher::new(shard, self.seed, id as usize, self.reshuffle),
+            rng: Rng::stream(self.seed, &format!("straggler/{id}")),
+            residual: if self.residual_len > 0 {
+                Some(vec![0.0; self.residual_len])
+            } else {
+                None
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spill codec — hand-rolled little-endian record, bit-exact both ways
+// ---------------------------------------------------------------------------
+
+const SPILL_VERSION: u8 = 1;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_rng(out: &mut Vec<u8>, rng: &Rng) {
+    let (s, spare) = rng.state();
+    for w in s {
+        put_u64(out, w);
+    }
+    match spare {
+        Some(z) => {
+            out.push(1);
+            put_u64(out, z.to_bits());
+        }
+        None => out.push(0),
+    }
+}
+
+/// Byte-cursor reader over one spill record.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated spill record");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn rng(&mut self) -> Result<Rng> {
+        let s = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
+        let spare = match self.u8()? {
+            0 => None,
+            1 => Some(f64::from_bits(self.u64()?)),
+            other => bail!("bad spare-normal flag {other} in spill record"),
+        };
+        Ok(Rng::from_state(s, spare))
+    }
+}
+
+/// Serialize a worker's state into `out` (cleared first). Everything is
+/// exact bits: f32/f64 via `to_le_bytes`/`to_bits`, so
+/// [`decode_state`] ∘ [`encode_state`] is the identity.
+pub fn encode_state(st: &WorkerState, out: &mut Vec<u8>) {
+    out.clear();
+    out.push(SPILL_VERSION);
+    put_u64(out, st.id);
+    put_f32s(out, &st.params);
+    put_f32s(out, &st.mom);
+    put_f32s(out, &st.mom2);
+    out.extend_from_slice(&st.adam_t.to_le_bytes());
+    let (shard, pos, brng) = st.batcher.spill_parts();
+    put_u64(out, shard.len() as u64);
+    for &s in shard {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    put_u64(out, pos as u64);
+    put_u64(out, st.batcher.epochs_completed as u64);
+    out.push(st.batcher.reshuffle as u8);
+    put_rng(out, brng);
+    put_rng(out, &st.rng);
+    match &st.residual {
+        Some(r) => {
+            out.push(1);
+            put_f32s(out, r);
+        }
+        None => out.push(0),
+    }
+}
+
+/// Rebuild a worker's state from an [`encode_state`] record, bit-for-bit.
+pub fn decode_state(buf: &[u8]) -> Result<WorkerState> {
+    let mut r = Reader { buf, pos: 0 };
+    let version = r.u8()?;
+    ensure!(version == SPILL_VERSION, "unknown spill record version {version}");
+    let id = r.u64()?;
+    let params = r.f32s()?;
+    let mom = r.f32s()?;
+    let mom2 = r.f32s()?;
+    let adam_t = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+    let shard_len = r.u64()? as usize;
+    let raw = r.take(shard_len * 4)?;
+    let shard: Vec<u32> =
+        raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+    let pos = r.u64()? as usize;
+    let epochs = r.u64()? as usize;
+    let reshuffle = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => bail!("bad reshuffle flag {other} in spill record"),
+    };
+    let brng = r.rng()?;
+    let rng = r.rng()?;
+    let residual = match r.u8()? {
+        0 => None,
+        1 => Some(r.f32s()?),
+        other => bail!("bad residual flag {other} in spill record"),
+    };
+    ensure!(r.pos == buf.len(), "trailing bytes in spill record");
+    Ok(WorkerState {
+        id,
+        params,
+        mom,
+        mom2,
+        adam_t,
+        batcher: Batcher::from_spill_parts(shard, pos, brng, epochs, reshuffle),
+        rng,
+        residual,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Disk spill — append-only record file with an in-memory directory
+// ---------------------------------------------------------------------------
+
+static SPILL_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Append-only spill file holding evicted worker records. A re-evicted
+/// worker appends a fresh record and the directory forgets the old offset
+/// (dead bytes are never compacted — bounded by touched workers × state
+/// size, and the file dies with the run). Created lazily: a run whose
+/// reserve never overflows touches no disk.
+struct Spill {
+    file: Option<File>,
+    path: PathBuf,
+    /// id → (offset, record length) of the *live* record
+    index: HashMap<u64, (u64, u32)>,
+    end: u64,
+}
+
+impl Spill {
+    fn new() -> Self {
+        let tag = SPILL_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("olsgd-popspill-{}-{tag}.bin", std::process::id()));
+        Self { file: None, path, index: HashMap::new(), end: 0 }
+    }
+
+    fn append(&mut self, id: u64, bytes: &[u8]) -> Result<()> {
+        if self.file.is_none() {
+            let f = File::options()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&self.path)
+                .with_context(|| format!("creating spill file {}", self.path.display()))?;
+            self.file = Some(f);
+        }
+        let f = self.file.as_mut().unwrap();
+        f.seek(SeekFrom::Start(self.end))?;
+        f.write_all(bytes)?;
+        self.index.insert(id, (self.end, bytes.len() as u32));
+        self.end += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Read id's live record into `out`; `false` when never spilled.
+    fn read(&mut self, id: u64, out: &mut Vec<u8>) -> Result<bool> {
+        let Some(&(off, len)) = self.index.get(&id) else {
+            return Ok(false);
+        };
+        let f = self.file.as_mut().context("spill directory entry without a file")?;
+        out.resize(len as usize, 0);
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(out)?;
+        Ok(true)
+    }
+}
+
+impl Drop for Spill {
+    fn drop(&mut self) {
+        if self.file.take().is_some() {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LRU store
+// ---------------------------------------------------------------------------
+
+/// The O(k) worker-state store: up to `reserve` unbound states stay
+/// resident (LRU over bind recency); overflow is encoded to the disk
+/// spill and rematerialized bit-exactly on the next bind. Ids never seen
+/// anywhere are materialized fresh from init.
+pub struct PopulationStore {
+    mat: Materializer,
+    resident: HashMap<u64, WorkerState>,
+    /// bind-recency order over `resident` keys; front = coldest
+    lru: VecDeque<u64>,
+    reserve: usize,
+    spill: Spill,
+    /// recycled state shells (empty buffers) for alloc-free unbind swaps
+    spares: Vec<WorkerState>,
+    scratch: Vec<u8>,
+    /// store-side counters (hits/reads/fresh/evictions/bytes); the
+    /// remaining fields are owned by [`PopulationState`]
+    pub counters: PopulationCounters,
+}
+
+impl PopulationStore {
+    /// A contentless state shell to swap an outgoing worker into.
+    pub fn blank(&mut self) -> WorkerState {
+        self.spares.pop().unwrap_or_else(|| WorkerState {
+            id: u64::MAX,
+            params: Vec::new(),
+            mom: Vec::new(),
+            mom2: Vec::new(),
+            adam_t: 0.0,
+            batcher: Batcher::from_spill_parts(Vec::new(), 0, Rng::seed_from(0), 0, false),
+            rng: Rng::seed_from(0),
+            residual: None,
+        })
+    }
+
+    /// Return a drained shell (post-bind leftovers) to the spare pool.
+    pub fn recycle(&mut self, st: WorkerState) {
+        if self.spares.len() < 8 {
+            self.spares.push(st);
+        }
+    }
+
+    /// Park an unbound worker's state in the resident LRU (cap enforced
+    /// separately by [`PopulationStore::enforce_cap`], so a whole round's
+    /// unbinds land before anything is evicted).
+    pub fn park(&mut self, id: u64, mut st: WorkerState) {
+        st.id = id;
+        self.resident.insert(id, st);
+        self.lru.push_back(id);
+    }
+
+    /// Produce id's state: resident hit (alloc-free), bit-exact spill
+    /// rematerialization, or fresh materialization from init. The flag is
+    /// `true` when the worker has trained before (resident or spilled).
+    pub fn take_or_materialize(
+        &mut self,
+        id: u64,
+        shards: &[Vec<u32>],
+    ) -> Result<(WorkerState, bool)> {
+        if let Some(st) = self.resident.remove(&id) {
+            self.lru.retain(|&x| x != id);
+            self.counters.store_hits += 1;
+            return Ok((st, true));
+        }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let found = self.spill.read(id, &mut scratch)?;
+        let out = if found {
+            let st = decode_state(&scratch)?;
+            ensure!(st.id == id, "spill record id {} under directory key {id}", st.id);
+            self.counters.spill_reads += 1;
+            (st, true)
+        } else {
+            self.counters.fresh_materializations += 1;
+            (self.mat.fresh(id, shards), false)
+        };
+        self.scratch = scratch;
+        Ok(out)
+    }
+
+    /// Evict coldest resident states to the spill until the reserve cap
+    /// holds — the store invariant `resident_len() <= reserve` that keeps
+    /// memory O(k), hard-asserted by rust/tests/population.rs.
+    pub fn enforce_cap(&mut self) -> Result<()> {
+        while self.resident.len() > self.reserve {
+            let id = self.lru.pop_front().context("LRU queue out of sync with resident map")?;
+            let st = self
+                .resident
+                .remove(&id)
+                .context("LRU queue names a non-resident worker")?;
+            let mut scratch = std::mem::take(&mut self.scratch);
+            encode_state(&st, &mut scratch);
+            self.spill.append(id, &scratch)?;
+            self.counters.evictions += 1;
+            self.counters.spilled_bytes += scratch.len() as u64;
+            self.scratch = scratch;
+            self.recycle(st);
+        }
+        Ok(())
+    }
+
+    /// Unbound states currently resident.
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Whether this id has ever been evicted to disk (tests).
+    pub fn spilled(&self, id: u64) -> bool {
+        self.spill.contains(id)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sampler
+// ---------------------------------------------------------------------------
+
+/// Deterministically sample the 1-based `round`'s cohort: k distinct ids
+/// from `0..n_pop`, skipping `down` ids, returned ascending (slot order).
+/// Each round draws from its own stream (`sample/{round}` keyed by
+/// `sample_seed`), so cohorts replay from the seed alone, differ across
+/// rounds, and never perturb any other stream in the run.
+pub fn sample_cohort(
+    n_pop: u64,
+    k: usize,
+    sample_seed: u64,
+    round: usize,
+    down: &BTreeSet<u64>,
+) -> Result<Vec<u64>> {
+    let eligible = n_pop - down.len() as u64;
+    ensure!(
+        eligible >= k as u64,
+        "sample_k = {k} exceeds the eligible population ({eligible} of {n_pop} up)"
+    );
+    let mut rng = Rng::stream(sample_seed, &format!("sample/{round}"));
+    let mut picked = BTreeSet::new();
+    while picked.len() < k {
+        let id = rng.next_below(n_pop);
+        if !down.contains(&id) {
+            picked.insert(id);
+        }
+    }
+    Ok(picked.into_iter().collect())
+}
+
+// ---------------------------------------------------------------------------
+// Per-run state
+// ---------------------------------------------------------------------------
+
+/// The engine's population-axis state: sampler parameters, the fault
+/// eligibility pool, the LRU store, and the current slot → id binding.
+/// `None` (axis off) costs nothing and changes nothing.
+pub struct PopulationState {
+    /// registered population size N
+    pub n_pop: u64,
+    /// cohort size k (= the engine's slot count)
+    pub k: usize,
+    /// resolved sampler seed
+    pub sample_seed: u64,
+    /// population-id fault replay (crash ⇒ out of the pool until rejoin)
+    pub faults: PopulationFaults,
+    /// the O(k) worker-state store
+    pub store: PopulationStore,
+    /// population id bound to each slot (`None` before round 1)
+    pub bound: Vec<Option<u64>>,
+    rounds_sampled: u64,
+    resident_max: u64,
+}
+
+impl PopulationState {
+    /// Build the axis state from a *resolved* config (`None` when
+    /// `population == 0`). Engaging with an unresolved config — where the
+    /// slot count and cohort size disagree — is a hard error, not a guess.
+    pub fn build(ctx: &TrainContext) -> Result<Option<Self>> {
+        let cfg = ctx.cfg;
+        if cfg.population == 0 {
+            return Ok(None);
+        }
+        ensure!(
+            cfg.sample_k == cfg.workers,
+            "population mode needs a resolved config (sample_k {} != workers {}); \
+             call ExperimentConfig::resolved() first",
+            cfg.sample_k,
+            cfg.workers
+        );
+        let k = cfg.workers;
+        let sample_seed = if cfg.sample_seed != 0 { cfg.sample_seed } else { cfg.seed };
+        let mat = Materializer {
+            n: ctx.rt.n,
+            use_adam: cfg.local_opt == "adam",
+            seed: cfg.seed,
+            reshuffle: cfg.reshuffle,
+            init: crate::model::init_params(&ctx.rt.manifest, cfg.seed),
+            residual_len: if cfg.compress != CompressKind::None { ctx.rt.n } else { 0 },
+        };
+        let counters = PopulationCounters {
+            population: cfg.population,
+            sample_k: k as u64,
+            reserve: cfg.sample_reserve as u64,
+            ..PopulationCounters::default()
+        };
+        Ok(Some(Self {
+            n_pop: cfg.population,
+            k,
+            sample_seed,
+            faults: PopulationFaults::new(&cfg.fault, cfg.population)?,
+            store: PopulationStore {
+                mat,
+                resident: HashMap::new(),
+                lru: VecDeque::new(),
+                reserve: cfg.sample_reserve,
+                spill: Spill::new(),
+                spares: Vec::new(),
+                scratch: Vec::new(),
+                counters,
+            },
+            bound: vec![None; k],
+            rounds_sampled: 0,
+            resident_max: 0,
+        }))
+    }
+
+    /// This round's cohort (ascending ids, one per slot).
+    pub fn sample(&self, round: usize) -> Result<Vec<u64>> {
+        sample_cohort(self.n_pop, self.k, self.sample_seed, round, self.faults.down())
+    }
+
+    /// Close one bound round: bump the round counter and fold the
+    /// materialized-state peak (k bound + resident reserve).
+    pub fn note_round(&mut self) {
+        self.rounds_sampled += 1;
+        let total = (self.k + self.store.resident_len()) as u64;
+        self.resident_max = self.resident_max.max(total);
+    }
+
+    /// The run's population counters (`TrainLog::population`).
+    pub fn counters(&self) -> PopulationCounters {
+        PopulationCounters {
+            rounds_sampled: self.rounds_sampled,
+            resident_workers_max: self.resident_max,
+            ..self.store.counters
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    fn toy_state(id: u64, n: usize, draws: usize) -> WorkerState {
+        // A batcher mid-epoch (nonzero cursor, one epoch behind it) so the
+        // codec must carry stream positions, not just fresh construction.
+        let fresh = Batcher::new((0..24u32).collect(), 7, id as usize, true);
+        let (shard, _, brng) = fresh.spill_parts();
+        let (s, spare) = brng.state();
+        let batcher = Batcher::from_spill_parts(
+            shard.to_vec(),
+            draws % 24,
+            Rng::from_state(s, spare),
+            1,
+            true,
+        );
+        let mut rng = Rng::stream(7, &format!("straggler/{id}"));
+        for _ in 0..draws {
+            rng.next_normal();
+        }
+        WorkerState {
+            id,
+            params: (0..n).map(|i| (i as f32).sin()).collect(),
+            mom: (0..n).map(|i| (i as f32) * 0.25 - 1.0).collect(),
+            mom2: Vec::new(),
+            adam_t: 3.0,
+            batcher,
+            rng,
+            residual: Some((0..n).map(|i| 1.0 / (1.0 + i as f32)).collect()),
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_bit_for_bit() {
+        let st = toy_state(42, 33, 5);
+        let mut buf = Vec::new();
+        encode_state(&st, &mut buf);
+        let back = decode_state(&buf).unwrap();
+        assert_eq!(back.id, 42);
+        for (a, b) in st.params.iter().zip(&back.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in st.mom.iter().zip(&back.mom) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(st.adam_t.to_bits(), back.adam_t.to_bits());
+        let (sa, pa, ra) = st.batcher.spill_parts();
+        let (sb, pb, rb) = back.batcher.spill_parts();
+        assert_eq!(sa, sb);
+        assert_eq!(pa, pb);
+        assert_eq!(ra.state(), rb.state());
+        assert_eq!(st.rng.state(), back.rng.state());
+        let (x, y) = (st.residual.unwrap(), back.residual.unwrap());
+        for (a, b) in x.iter().zip(&y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // The restored stream continues exactly where the original would.
+        let mut orig = st.rng;
+        let mut restored = back.rng;
+        for _ in 0..4 {
+            assert_eq!(orig.next_u64(), restored.next_u64());
+        }
+    }
+
+    #[test]
+    fn codec_rejects_corruption() {
+        let st = toy_state(1, 8, 0);
+        let mut buf = Vec::new();
+        encode_state(&st, &mut buf);
+        assert!(decode_state(&buf[..buf.len() - 1]).is_err(), "truncation");
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(decode_state(&long).is_err(), "trailing bytes");
+        let mut bad = buf;
+        bad[0] = 99;
+        assert!(decode_state(&bad).is_err(), "unknown version");
+    }
+
+    #[test]
+    fn property_sampler_is_deterministic_distinct_and_round_varying() {
+        property("cohort sampler", 60, |g| {
+            let k = g.usize_in(1, 12);
+            let n_pop = g.usize_in(k, 4 * k + 100) as u64;
+            let seed = g.rng().next_u64();
+            let round = g.usize_in(1, 50);
+            let none = BTreeSet::new();
+            let a = sample_cohort(n_pop, k, seed, round, &none).unwrap();
+            let b = sample_cohort(n_pop, k, seed, round, &none).unwrap();
+            assert_eq!(a, b, "replay must reproduce the cohort");
+            assert_eq!(a.len(), k);
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "ascending distinct ids");
+            assert!(a.iter().all(|&id| id < n_pop));
+        });
+    }
+
+    #[test]
+    fn sampler_respects_the_down_set_and_eligibility() {
+        let mut down = BTreeSet::new();
+        down.insert(3u64);
+        down.insert(7u64);
+        for round in 1..=40 {
+            let c = sample_cohort(10, 8, 5, round, &down).unwrap();
+            assert!(!c.contains(&3) && !c.contains(&7), "downed ids sampled");
+        }
+        // k exceeding the eligible pool is a loud error.
+        assert!(sample_cohort(10, 9, 5, 1, &down).is_err());
+        // n == k with nobody down selects everyone.
+        let all = sample_cohort(8, 8, 123, 17, &BTreeSet::new()).unwrap();
+        assert_eq!(all, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn store_caps_residency_and_round_trips_through_the_spill() {
+        let mat = Materializer {
+            n: 16,
+            use_adam: false,
+            seed: 9,
+            reshuffle: true,
+            init: vec![0.5; 16],
+            residual_len: 16,
+        };
+        let shards: Vec<Vec<u32>> = (0..4).map(|s| (s..s + 32).collect()).collect();
+        let mut store = PopulationStore {
+            mat,
+            resident: HashMap::new(),
+            lru: VecDeque::new(),
+            reserve: 2,
+            spill: Spill::new(),
+            spares: Vec::new(),
+            scratch: Vec::new(),
+            counters: PopulationCounters::default(),
+        };
+        // Materialize five workers fresh, mutate them distinctly, park all.
+        for id in 0..5u64 {
+            let (mut st, seen) = store.take_or_materialize(id, &shards).unwrap();
+            assert!(!seen);
+            st.params[0] = id as f32 + 0.125;
+            st.rng.next_u64();
+            store.park(id, st);
+        }
+        store.enforce_cap().unwrap();
+        assert!(store.resident_len() <= 2, "reserve cap violated");
+        assert_eq!(store.counters.evictions, 3);
+        assert!(store.spilled(0) && store.spilled(1) && store.spilled(2));
+        // LRU keeps the most recently parked ids resident.
+        let (st3, seen3) = store.take_or_materialize(3, &shards).unwrap();
+        assert!(seen3);
+        assert_eq!(store.counters.store_hits, 1);
+        assert_eq!(st3.params[0].to_bits(), (3.0f32 + 0.125).to_bits());
+        // Spilled ids rematerialize bit-for-bit (params + consumed draws).
+        let (st0, seen0) = store.take_or_materialize(0, &shards).unwrap();
+        assert!(seen0);
+        assert_eq!(store.counters.spill_reads, 1);
+        assert_eq!(st0.params[0].to_bits(), 0.125f32.to_bits());
+        let mut expect = Rng::stream(9, "straggler/0");
+        expect.next_u64(); // the draw consumed before parking
+        assert_eq!(st0.rng.state().0, expect.state().0);
+        // Re-evicting a re-parked worker overwrites its directory entry.
+        store.park(0, st0);
+        store.park(3, st3);
+        store.enforce_cap().unwrap();
+        assert!(store.resident_len() <= 2);
+        assert_eq!(store.counters.fresh_materializations, 5);
+    }
+}

@@ -142,6 +142,19 @@ impl Rng {
             *v = (self.next_normal() as f32) * std;
         }
     }
+
+    /// The generator's complete internal state `(xoshiro words, cached
+    /// Box–Muller draw)` — everything a spill codec must persist so a
+    /// restored stream continues bit-for-bit (population store, E17).
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator from [`Rng::state`]; the restored stream
+    /// produces exactly the draws the saved one would have.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Self {
+        Self { s, spare_normal }
+    }
 }
 
 #[cfg(test)]

@@ -463,6 +463,77 @@ fn property_masked_reduce_scratch_reuse_is_bit_identical() {
     });
 }
 
+/// Sampled-cohort framing of the masked reduces (DESIGN.md §14): over an
+/// *arbitrary* cohort drawn with `Gen::subset`, the ring/tree/hier alive
+/// reduces are exactly mean-preserving over the cohort and leave every
+/// non-participant's buffer bit-untouched — and whenever the drawn cohort
+/// happens to be the full population, the masked entry point must be
+/// *bit-identical* to the dense reduce. That last equality is the seam the
+/// population axis rides: an N == k run takes the dense path every round,
+/// so its golden digests cannot move.
+#[test]
+fn property_sampled_cohort_reduces_are_exact_and_dense_on_full_cohort() {
+    property("sampled-cohort reduce == cohort mean / dense", 120, |g| {
+        let m = g.usize_in(2, 12);
+        let n = g.usize_in(1, 2 * m + 3); // n < m chunking shapes included
+        let all: Vec<usize> = (0..m).collect();
+        // A dense keep probability makes the cohort == population case a
+        // routine draw, not a corner.
+        let mut cohort = g.subset(&all, 0.8);
+        if cohort.is_empty() {
+            cohort.push(g.usize_in(0, m - 1));
+        }
+        let full = cohort.len() == m;
+        let mut alive = vec![false; m];
+        for &w in &cohort {
+            alive[w] = true;
+        }
+        let aset = AliveSet::with_alive(alive);
+        let topos = [
+            Topology::ring(m),
+            Topology::tree(m),
+            Topology::hier(m, g.usize_in(1, m)),
+        ];
+        for topo in topos {
+            let inputs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 5.0)).collect();
+            let mut masked = inputs.clone();
+            topo.allreduce_mean_alive_with(&mut masked, &aset, &mut ReduceScratch::default());
+            let refs: Vec<&[f32]> = cohort.iter().map(|&w| inputs[w].as_slice()).collect();
+            let want = vecmath::mean(&refs);
+            for &w in &cohort {
+                assert_close(&masked[w], &want, 1e-4, 1e-5);
+            }
+            if full {
+                let mut dense = inputs.clone();
+                topo.allreduce_mean_with(&mut dense, &mut ReduceScratch::default());
+                for (a, b) in masked.iter().zip(&dense) {
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "full cohort must take the dense path bit-for-bit ({:?}, m={m})",
+                            topo.kind
+                        );
+                    }
+                }
+            } else {
+                for w in 0..m {
+                    if !aset.is_member(w) {
+                        for (a, b) in masked[w].iter().zip(&inputs[w]) {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "non-participant buffer touched ({:?}, m={m})",
+                                topo.kind
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// The masked de-biased gossip mix conserves survivor mass (values and
 /// push-sum weights) per partition component, zeroes dead rows, and keeps
 /// the de-biased consensus fixed point exact.

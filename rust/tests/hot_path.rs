@@ -167,6 +167,54 @@ fn crash_and_rejoin_rounds_stay_spawn_and_alloc_free() {
     }
 }
 
+/// The population axis rides the same memory discipline (DESIGN.md §14):
+/// cohort binding is pure `mem::swap` against recycled state shells, the
+/// LRU store and its spill never touch the tracked buffer pool, and the
+/// pool threads are slot-bound machines that persist across re-binds — so
+/// a churning sampled run (N > k, every round re-binding slots, reserve 0
+/// forcing spill traffic) must stay at zero steady-state spawns and zero
+/// tracked allocs, digest-equal across backends. The N == k leg must
+/// additionally reproduce the dense run's counters exactly.
+#[test]
+fn sampled_rounds_stay_spawn_and_alloc_free() {
+    // N == k: bit-identical engine path, bit-identical counters.
+    let dense = paper16_cfg(Algo::OverlapM);
+    let (_, dense_thr) = run_pair(&dense);
+    let mut nk = paper16_cfg(Algo::OverlapM);
+    nk.set("population", "16").unwrap();
+    nk.set("sample_k", "16").unwrap();
+    let (sim, thr) = run_pair(&nk);
+    assert_eq!(sim.digest(), thr.digest(), "N == k drifted across backends");
+    assert_eq!(thr.hot, dense_thr.hot, "N == k must not change the memory discipline");
+    assert_eq!(thr.hot.steady_thread_spawns, 0);
+    assert_eq!(thr.hot.steady_buffer_allocs, 0);
+
+    // N > k with maximal churn pressure: reserve 0 spills every unbind.
+    for algo in [Algo::OverlapM, Algo::Cocod, Algo::OverlapGossip] {
+        let mut cfg = paper16_cfg(algo);
+        cfg.epochs = 6.0; // 12 global steps -> 6 rounds: 2 warm-up + 4 steady
+        cfg.set("population", "64").unwrap();
+        cfg.set("sample_k", "16").unwrap();
+        cfg.set("sample_reserve", "0").unwrap();
+        let (sim, thr) = run_pair(&cfg);
+        assert_eq!(sim.digest(), thr.digest(), "{algo:?}: sampled run drifted from sim");
+        assert_eq!(thr.hot.rounds, 6, "{algo:?}: shape drifted");
+        assert_eq!(
+            thr.hot.thread_spawns_total, 17,
+            "{algo:?}: re-binding a slot must never respawn its pool thread"
+        );
+        assert_eq!(thr.hot.steady_thread_spawns, 0, "{algo:?}");
+        assert_eq!(
+            thr.hot.steady_buffer_allocs, 0,
+            "{algo:?}: cohort binding must not touch the tracked buffer pool"
+        );
+        assert_eq!(thr.hot.steady_buffer_alloc_bytes, 0, "{algo:?}");
+        let c = thr.population.expect("sampled run must report population counters");
+        assert!(c.evictions > 0, "{algo:?}: reserve 0 under churn must spill");
+        assert_eq!(c.resident_workers_max, 16, "{algo:?}: only the k bound states");
+    }
+}
+
 /// Counters are pure reporting: two identical runs agree on them, and the
 /// digest ignores them entirely (sim and threads share a digest while
 /// reporting different spawn counts).

@@ -1,0 +1,391 @@
+//! Population-axis locks (DESIGN.md §14, EXPERIMENTS.md E17): the
+//! partial-participation sampler and the O(k) worker-state store.
+//!
+//! Three layers of guarantees:
+//!
+//! 1. **Strict generalization** — with `population == sample_k == workers`
+//!    the engaged axis must be *bit-identical* to the dense engine for
+//!    every algorithm, on both execution backends (the m = 16 paper-shape
+//!    golden digests cannot move).
+//! 2. **Sampler properties** — exactly k distinct ids per round, replay
+//!    from `(sample_seed, round)` alone, round-to-round variation, and
+//!    composition with the `--fault` crash/rejoin schedule (a crashed id
+//!    leaves the pool; the trace and eligible-count series are recorded).
+//! 3. **Store invariants** — resident state never exceeds the LRU cap,
+//!    and evict → rematerialize is bit-exact: a run forced to spill
+//!    *everything* every round (`sample_reserve = 0`) must produce the
+//!    same digest as one that never spills at all.
+
+use olsgd::config::{Algo, Execution, ExperimentConfig};
+use olsgd::coordinator::run_experiment;
+use olsgd::data::{self, GenConfig};
+use olsgd::metrics::TrainLog;
+use olsgd::population::sample_cohort;
+use olsgd::runtime::ModelRuntime;
+use olsgd::simnet::StragglerModel;
+use olsgd::util::proptest::property;
+use std::collections::BTreeSet;
+
+/// The m = 16 paper cluster shape shared with the E13/E14 suites: 4 rounds
+/// at τ = 2 with jitter stragglers so the per-worker RNG streams are live.
+fn paper16(algo: Algo) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
+    cfg.workers = 16;
+    cfg.train_n = 16 * 64; // 64/shard -> 2 steps/epoch
+    cfg.test_n = 100;
+    cfg.epochs = 4.0; // 8 global steps -> 4 rounds at tau = 2
+    cfg.eval_every = 2.0;
+    cfg.tau = 2;
+    cfg.algo = algo;
+    cfg.straggler = StragglerModel::UniformJitter { jitter: 0.2 };
+    cfg
+}
+
+/// A small sampled shape: k = 8 machines over a population of 48, six
+/// rounds so cohorts churn through the store.
+fn sampled48(algo: Algo) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "linear".into();
+    cfg.workers = 8;
+    cfg.train_n = 8 * 64;
+    cfg.test_n = 100;
+    cfg.epochs = 6.0; // 12 global steps -> 6 rounds at tau = 2
+    cfg.eval_every = 4.0;
+    cfg.tau = 2;
+    cfg.algo = algo;
+    cfg.straggler = StragglerModel::UniformJitter { jitter: 0.2 };
+    cfg.set("population", "48").unwrap();
+    cfg.set("sample_k", "8").unwrap();
+    cfg
+}
+
+fn native_run(cfg: &ExperimentConfig) -> TrainLog {
+    let rt = ModelRuntime::native(&cfg.model).unwrap();
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    run_experiment(&rt, cfg, &train, &test).unwrap()
+}
+
+fn run_both(cfg: &ExperimentConfig) -> (TrainLog, TrainLog) {
+    let rt = ModelRuntime::native(&cfg.model).unwrap();
+    let gen = GenConfig::default();
+    let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
+    let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.execution = Execution::Sim;
+    let sim = run_experiment(&rt, &sim_cfg, &train, &test).unwrap();
+    let mut thr_cfg = cfg.clone();
+    thr_cfg.execution = Execution::Threads;
+    let thr = run_experiment(&rt, &thr_cfg, &train, &test).unwrap();
+    (sim, thr)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Strict generalization: N == k must be the dense engine, bit for bit
+// ---------------------------------------------------------------------------
+
+/// The acceptance criterion: engaging the axis with `population == k == m`
+/// keeps every pre-existing m = 16 golden digest bit-identical — for every
+/// algorithm the engine dispatches (PowerSGD is a refused composition, see
+/// below). With N == k the sampler selects all of `0..k` each round, ids
+/// coincide with slots, and after the round-1 placement no slot ever
+/// re-binds.
+#[test]
+fn n_equals_k_is_bit_identical_to_dense_for_every_algorithm() {
+    for algo in [
+        Algo::Sync,
+        Algo::Local,
+        Algo::Overlap,
+        Algo::OverlapM,
+        Algo::OverlapAda,
+        Algo::OverlapGossip,
+        Algo::Easgd,
+        Algo::Eamsgd,
+        Algo::Cocod,
+    ] {
+        let dense = native_run(&paper16(algo));
+        let mut cfg = paper16(algo);
+        cfg.set("population", "16").unwrap();
+        cfg.set("sample_k", "16").unwrap();
+        let pop = native_run(&cfg);
+        assert_eq!(
+            dense.digest(),
+            pop.digest(),
+            "{algo:?}: N == k engaged run drifted from the dense engine"
+        );
+        let c = pop.population.expect("engaged run must report population counters");
+        assert_eq!(c.population, 16);
+        assert_eq!(c.sample_k, 16);
+        assert_eq!(c.fresh_materializations, 16, "{algo:?}: round 1 places k fresh workers");
+        assert_eq!(c.store_hits, 0, "{algo:?}: a stable cohort never touches the store");
+        assert_eq!(c.spill_reads, 0, "{algo:?}");
+        assert_eq!(c.evictions, 0, "{algo:?}");
+        assert_eq!(c.spilled_bytes, 0, "{algo:?}");
+        assert_eq!(c.resident_workers_max, 16, "{algo:?}: exactly the k bound states");
+        assert!(dense.population.is_none(), "dense run must not report population counters");
+    }
+}
+
+/// The same identity holds on the threads backend, and sim ↔ threads stay
+/// digest-equal with the axis engaged (N == k and N > k).
+#[test]
+fn engaged_runs_agree_across_execution_backends() {
+    let mut nk = paper16(Algo::OverlapM);
+    nk.set("population", "16").unwrap();
+    nk.set("sample_k", "16").unwrap();
+    let (sim, thr) = run_both(&nk);
+    assert_eq!(sim.digest(), thr.digest(), "N == k drifted across backends");
+    assert_eq!(sim.digest(), native_run(&paper16(Algo::OverlapM)).digest());
+
+    let churn = sampled48(Algo::OverlapM);
+    let (sim, thr) = run_both(&churn);
+    assert_eq!(sim.digest(), thr.digest(), "N > k drifted across backends");
+    assert_eq!(
+        sim.population.unwrap(),
+        thr.population.unwrap(),
+        "store traffic must replay identically across backends"
+    );
+}
+
+/// Compression composes with sampling (the error-feedback residual is part
+/// of the swapped worker state): topk and qsgd run over a churning cohort
+/// and stay backend-identical; N == k compressed runs match dense.
+#[test]
+fn compression_composes_with_sampling() {
+    for kind in ["topk", "qsgd"] {
+        let mut cfg = sampled48(Algo::OverlapM);
+        cfg.set("compress", kind).unwrap();
+        let (sim, thr) = run_both(&cfg);
+        assert_eq!(sim.digest(), thr.digest(), "compress={kind}: drift across backends");
+        assert!(sim.final_loss().is_finite(), "compress={kind}");
+
+        let mut nk = paper16(Algo::OverlapM);
+        nk.set("compress", kind).unwrap();
+        let dense = native_run(&nk);
+        nk.set("population", "16").unwrap();
+        nk.set("sample_k", "16").unwrap();
+        assert_eq!(
+            dense.digest(),
+            native_run(&nk).digest(),
+            "compress={kind}: N == k compressed run drifted from dense"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Sampler properties
+// ---------------------------------------------------------------------------
+
+/// Exactly k distinct in-range ids per round, ascending; the same
+/// `(seed, round)` replays the identical cohort; cohorts vary across
+/// rounds whenever more than one cohort exists.
+#[test]
+fn property_sampler_draws_k_distinct_replayable_round_varying_ids() {
+    property("population cohort sampler", 80, |g| {
+        let k = g.usize_in(1, 12);
+        let n_pop = g.usize_in(k + 1, 6 * k + 64) as u64;
+        let seed = g.rng().next_u64();
+        let none = BTreeSet::new();
+        let mut distinct_cohorts = BTreeSet::new();
+        for round in 1..=24 {
+            let a = sample_cohort(n_pop, k, seed, round, &none).unwrap();
+            let b = sample_cohort(n_pop, k, seed, round, &none).unwrap();
+            assert_eq!(a, b, "replay from (seed, round) must be exact");
+            assert_eq!(a.len(), k, "cohort must have exactly k members");
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "ids must be distinct and ascending");
+            assert!(a.iter().all(|&id| id < n_pop), "ids must be in range");
+            distinct_cohorts.insert(a);
+        }
+        // With n_pop > k there are C(n, k) >= n > 1 possible cohorts; 24
+        // independent draws landing on one single cohort would mean the
+        // per-round streams are not independent.
+        assert!(
+            distinct_cohorts.len() > 1,
+            "cohorts must vary across rounds (n = {n_pop}, k = {k})"
+        );
+    });
+}
+
+/// End-to-end determinism of the sampled axis: an identical config replays
+/// the digest and every store counter; changing only `sample_seed` changes
+/// the sampled trajectory.
+#[test]
+fn sampled_runs_replay_exactly_and_follow_the_sample_seed() {
+    let cfg = sampled48(Algo::OverlapM);
+    let a = native_run(&cfg);
+    let b = native_run(&cfg);
+    assert_eq!(a.digest(), b.digest(), "sampled run must replay bit-for-bit");
+    assert_eq!(a.population.unwrap(), b.population.unwrap());
+
+    let mut other = cfg.clone();
+    other.set("sample_seed", "99").unwrap();
+    let c = native_run(&other);
+    assert_ne!(
+        a.digest(),
+        c.digest(),
+        "a different sample_seed must select different cohorts"
+    );
+}
+
+/// `--fault` composes over the sampled pool: a crashed population id
+/// leaves the sampler's eligibility set until its rejoin, the events land
+/// in `fault_trace`, and the eligible-count series lands in `survivors` —
+/// all replayed identically across backends.
+#[test]
+fn faults_compose_with_sampling_over_population_ids() {
+    let mut cfg = sampled48(Algo::OverlapM);
+    cfg.set("fault", "crash@2:5;rejoin@5:5").unwrap();
+    let (sim, thr) = run_both(&cfg);
+    assert_eq!(sim.digest(), thr.digest(), "faulted sampled run drifted across backends");
+    assert_eq!(
+        sim.fault_trace,
+        vec![(2, "crash@2:5".to_string()), (5, "rejoin@5:5".to_string())]
+    );
+    assert_eq!(sim.survivors, vec![(2, 47), (5, 48)], "eligible-pool series");
+    assert!(sim.final_loss().is_finite());
+    // Replay purity with the fault schedule attached.
+    let again = native_run(&cfg);
+    assert_eq!(sim.digest(), again.digest());
+}
+
+/// The sampler itself never draws a downed id, and a rejoin restores it to
+/// circulation (unit-level composition over the same code path the engine
+/// uses).
+#[test]
+fn sampler_rejects_downed_ids() {
+    let mut down = BTreeSet::new();
+    down.insert(2u64);
+    down.insert(11u64);
+    for round in 1..=60 {
+        let c = sample_cohort(16, 10, 7, round, &down).unwrap();
+        assert_eq!(c.len(), 10);
+        assert!(!c.contains(&2) && !c.contains(&11), "round {round} sampled a downed id");
+    }
+    // Draining the pool below k is a loud error, not a short cohort.
+    assert!(sample_cohort(16, 15, 7, 1, &down).is_err());
+}
+
+/// Invalid compositions are refused before any state exists: sampling
+/// needs a population, the population must cover the cohort, and the
+/// axes that cannot preserve semantics over a per-round cohort (net
+/// backend, random fault process, PowerSGD's joint basis, partitions)
+/// are hard errors.
+#[test]
+fn invalid_population_compositions_are_refused_loudly() {
+    let base = sampled48(Algo::OverlapM);
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.set("sample_k", "4").unwrap();
+    assert!(cfg.resolved().is_err(), "sample_k without population must be refused");
+
+    let mut cfg = base.clone();
+    cfg.set("population", "4").unwrap(); // < sample_k = 8
+    assert!(cfg.resolved().is_err(), "population < k must be refused");
+
+    let mut cfg = base.clone();
+    cfg.set("fault_rate", "0.1").unwrap();
+    assert!(cfg.resolved().is_err(), "the per-slot random fault process must be refused");
+
+    let mut cfg = base.clone();
+    cfg.set("fault", "partition@2:0,1|2,3").unwrap();
+    assert!(cfg.resolved().is_err(), "partitions over a sampled cohort must be refused");
+
+    let mut cfg = base.clone();
+    cfg.set("fault", "crash@2:100").unwrap(); // id outside N = 48
+    assert!(cfg.resolved().is_err(), "fault ids outside the population must be refused");
+
+    let mut cfg = base.clone();
+    cfg.set("compress", "powersgd").unwrap();
+    assert!(cfg.resolved().is_err(), "powersgd's joint warm basis must be refused");
+
+    let mut cfg = base;
+    cfg.set("execution", "net").unwrap();
+    assert!(cfg.resolved().is_err(), "the net backend must be refused");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Store invariants
+// ---------------------------------------------------------------------------
+
+/// The O(k) lock: however the cohorts churn, peak materialized state is
+/// bounded by `sample_k + sample_reserve`, and a reserve of zero forces
+/// every unbound state through the spill codec — which must not move the
+/// digest relative to a reserve large enough that nothing ever spills.
+/// Digest equality here proves evict → rematerialize round-trips every
+/// field bit-for-bit (params, momenta, error-feedback residual, batcher
+/// cursor, consumed RNG draws) through a full training run.
+#[test]
+fn reserve_zero_and_unbounded_reserve_are_digest_identical() {
+    for algo in [Algo::OverlapM, Algo::Local, Algo::OverlapGossip] {
+        let mut spill_all = sampled48(algo);
+        spill_all.set("sample_reserve", "0").unwrap();
+        let a = native_run(&spill_all);
+
+        let mut never_spill = sampled48(algo);
+        never_spill.set("sample_reserve", "1000").unwrap();
+        let b = native_run(&never_spill);
+
+        assert_eq!(
+            a.digest(),
+            b.digest(),
+            "{algo:?}: the spill codec changed the trajectory"
+        );
+
+        let ca = a.population.unwrap();
+        assert_eq!(ca.reserve, 0);
+        assert_eq!(ca.resident_workers_max, 8, "{algo:?}: reserve 0 keeps only the k bound");
+        // Reserve 0 empties the store at every boundary, so the only
+        // possible store hits are same-boundary slot moves: an id staying
+        // in the cohort at a different sorted position parks in phase 1
+        // and is taken back in phase 2 without a spill round-trip.
+        assert!(
+            ca.evictions > 0 && ca.spill_reads > 0,
+            "{algo:?}: 6 churning rounds over N = 48 must exercise the spill \
+             (evictions = {}, reads = {})",
+            ca.evictions,
+            ca.spill_reads
+        );
+        assert!(ca.spilled_bytes > 0, "{algo:?}");
+
+        let cb = b.population.unwrap();
+        assert_eq!(cb.evictions, 0, "{algo:?}: a huge reserve must never spill");
+        assert_eq!(cb.spill_reads, 0, "{algo:?}");
+        assert_eq!(cb.spilled_bytes, 0, "{algo:?}");
+        assert!(
+            cb.resident_workers_max <= 8 + 1000,
+            "{algo:?}: cap invariant ({})",
+            cb.resident_workers_max
+        );
+        // Both runs bind the same cohorts, so total binds must agree:
+        // hits + reads + fresh is invariant to the reserve.
+        assert_eq!(
+            ca.store_hits + ca.spill_reads + ca.fresh_materializations,
+            cb.store_hits + cb.spill_reads + cb.fresh_materializations,
+            "{algo:?}: bind traffic must not depend on the reserve"
+        );
+    }
+}
+
+/// The cap invariant across a sweep of reserves: `resident_workers_max <=
+/// sample_k + sample_reserve` always, the digest never depends on the
+/// reserve, and intermediate reserves blend hits with spill reads.
+#[test]
+fn resident_peak_respects_every_reserve_and_never_moves_the_digest() {
+    let baseline = native_run(&sampled48(Algo::OverlapM));
+    let base_digest = baseline.digest();
+    for reserve in [0usize, 1, 4, 16, 64] {
+        let mut cfg = sampled48(Algo::OverlapM);
+        cfg.set("sample_reserve", &reserve.to_string()).unwrap();
+        let log = native_run(&cfg);
+        assert_eq!(log.digest(), base_digest, "reserve {reserve} moved the digest");
+        let c = log.population.unwrap();
+        assert!(
+            c.resident_workers_max <= 8 + reserve as u64,
+            "reserve {reserve}: peak {} exceeds k + reserve",
+            c.resident_workers_max
+        );
+        assert_eq!(c.rounds_sampled, 6, "reserve {reserve}");
+    }
+}

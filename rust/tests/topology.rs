@@ -20,6 +20,7 @@
 use olsgd::config::{Algo, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
+use olsgd::fault::AliveSet;
 use olsgd::metrics::TrainLog;
 use olsgd::model::vecmath;
 use olsgd::runtime::ModelRuntime;
@@ -156,6 +157,73 @@ fn property_pushsum_weights_keep_dropout_rounds_exact() {
         for (v, &w) in values.iter().zip(&weights) {
             let est: Vec<f32> = v.iter().map(|&x| x / w as f32).collect();
             assert_close(&est, &want, 1e-4, 1e-4);
+        }
+    });
+}
+
+/// Sampled-cohort framing of the de-biased gossip mix (DESIGN.md §14):
+/// over an arbitrary cohort drawn with `Gen::subset` the alive-aware
+/// push-sum round conserves cohort mass and push-sum weight exactly and
+/// delivers nothing to non-participants — and whenever the drawn cohort is
+/// the full population it must be *bit-identical* to the dense
+/// `gossip_mix` (the seam an N == k population run rides every round).
+#[test]
+fn property_sampled_cohort_gossip_mix_is_exact_and_dense_on_full_cohort() {
+    property("sampled-cohort gossip mix", 120, |g| {
+        let m = g.usize_in(2, 12);
+        let topo = Topology::gossip(m, g.usize_in(1, m - 1), g.rng().next_u64()).unwrap();
+        let n = g.usize_in(1, 24);
+        let all: Vec<usize> = (0..m).collect();
+        let mut cohort = g.subset(&all, 0.8);
+        if cohort.is_empty() {
+            cohort.push(g.usize_in(0, m - 1));
+        }
+        let full = cohort.len() == m;
+        let mut alive = vec![false; m];
+        for &w in &cohort {
+            alive[w] = true;
+        }
+        let aset = AliveSet::with_alive(alive);
+        let values: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 3.0)).collect();
+        let weights = vec![1.0f64; m];
+        let (out, w_out) = topo.gossip_mix_alive(&values, &weights, &aset);
+        if full {
+            let (dense, dense_w) = topo.gossip_mix(&values, &weights);
+            for (a, b) in out.iter().zip(&dense) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "full cohort must be the dense mix bit-for-bit (m={m})"
+                    );
+                }
+            }
+            for (a, b) in w_out.iter().zip(&dense_w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "full-cohort weights drifted (m={m})");
+            }
+        }
+        // Cohort mass (per dimension) and total push-sum weight conserved.
+        for d in 0..n {
+            let before: f64 = cohort.iter().map(|&j| values[j][d] as f64).sum();
+            let after: f64 = out.iter().map(|o| o[d] as f64).sum();
+            assert!(
+                (before - after).abs() <= 1e-3 * (1.0 + before.abs()),
+                "cohort mass leaked at dim {d} (m={m}, cohort={})",
+                cohort.len()
+            );
+        }
+        let kn = cohort.len() as f64;
+        let total_w: f64 = w_out.iter().sum();
+        assert!(
+            (total_w - kn).abs() < 1e-5 * kn.max(1.0),
+            "push-sum weight leaked: {total_w} vs {kn}"
+        );
+        // Non-participants receive exactly nothing.
+        for i in 0..m {
+            if !aset.is_alive(i) {
+                assert_eq!(w_out[i], 0.0, "non-participant {i} got weight");
+                assert!(out[i].iter().all(|&x| x == 0.0), "non-participant {i} got mass");
+            }
         }
     });
 }
