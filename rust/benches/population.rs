@@ -16,14 +16,22 @@
 //! and `resident_workers_max <= sample_k + reserve` for every row.
 //!
 //! The summary lands in `results/population/E17_population.json`.
+//!
+//! **E18 — population chaos** (EXPERIMENTS.md E18) follows: the PR-9
+//! lifted compositions under load. A `fault_rate = 0.01` random process at
+//! N ∈ {10³, 10⁵} (two runs must replay the identical fault trace and
+//! digest), an id-range partition schedule at N = 10³, and a net-backend
+//! cohort leg whose killed worker process must land on the digest of the
+//! equivalent per-id `crash@round` schedule. Every leg re-asserts the O(k)
+//! residency cap. Summary: `results/population/E18_population_chaos.json`.
 
 use std::time::Instant;
 
 use anyhow::Result;
 use olsgd::bench::experiments::BenchCtx;
-use olsgd::config::Algo;
+use olsgd::config::{Algo, Execution};
 use olsgd::metrics::PopulationCounters;
-use olsgd::util::json::{num, obj, Json};
+use olsgd::util::json::{num, obj, s, Json};
 
 const K: usize = 16;
 const POPULATIONS: [u64; 4] = [16, 1_000, 100_000, 1_000_000];
@@ -138,5 +146,162 @@ fn main() -> Result<()> {
     }
 
     ctx.write_summary("E17_population.json", rows)?;
+    e18_population_chaos(&mut ctx)?;
+    Ok(())
+}
+
+/// One E18 row: which chaos leg ran, its replay/digest verdict, and the
+/// residency evidence the CI gates consume.
+fn e18_row(leg: &str, n_pop: u64, matched: bool, c: &PopulationCounters, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("leg", s(leg)),
+        ("population", num(n_pop as f64)),
+        ("sample_k", num(c.sample_k as f64)),
+        ("reserve", num(c.reserve as f64)),
+        ("rounds", num(c.rounds_sampled as f64)),
+        ("resident_workers_max", num(c.resident_workers_max as f64)),
+        ("resident_cap_ok", Json::Bool(c.resident_workers_max <= c.sample_k + c.reserve)),
+        ("digest_match", Json::Bool(matched)),
+    ];
+    fields.extend(extra);
+    obj(fields)
+}
+
+/// E18 — population chaos: the lifted fault compositions at scale.
+fn e18_population_chaos(ctx: &mut BenchCtx) -> Result<()> {
+    println!("\n=== E18: population chaos at fixed k = 16 (overlap-m, ring) ===");
+    let mut rows = Vec::new();
+
+    // Leg 1: the per-id random fault process at N ∈ {10^3, 10^5}. Two
+    // identical runs must replay the identical fault trace (the lazy
+    // per-id streams are pure functions of (seed, id, round)) and digest.
+    for n_pop in [1_000u64, 100_000] {
+        let mutate = |c: &mut olsgd::config::ExperimentConfig| {
+            c.algo = Algo::OverlapM;
+            c.workers = K;
+            // Pinned: the chaos schedule needs its full 6 rounds even when
+            // OLSGD_EPOCHS shortens the E17 legs.
+            c.epochs = 6.0;
+            c.eval_every = 1.0;
+            c.set("population", &n_pop.to_string()).expect("static key");
+            c.set("sample_k", &K.to_string()).expect("static key");
+            c.set("fault_rate", "0.01").expect("static key");
+            c.set("rejoin_rate", "0.2").expect("static key");
+        };
+        let a = ctx.run_leg(&format!("chaos_frate_{n_pop}_a"), mutate)?;
+        let b = ctx.run_leg(&format!("chaos_frate_{n_pop}_b"), mutate)?;
+        let replay = a.fault_trace == b.fault_trace && a.digest() == b.digest();
+        let c = a.population.expect("engaged run must report population counters");
+        println!(
+            "  frate N={n_pop}: {} fault events, replay_match={replay}, resident={}",
+            a.fault_trace.len(),
+            c.resident_workers_max
+        );
+        rows.push(e18_row(
+            "fault_rate",
+            n_pop,
+            replay,
+            &c,
+            vec![
+                ("fault_rate", num(0.01)),
+                ("fault_events", num(a.fault_trace.len() as f64)),
+                ("fault_trace_replay_match", Json::Bool(replay)),
+            ],
+        ));
+        assert!(replay, "N = {n_pop}: the per-id fault process failed to replay");
+        assert!(
+            c.resident_workers_max <= c.sample_k + c.reserve,
+            "N = {n_pop}: chaos leg broke the O(k) residency cap"
+        );
+    }
+
+    // Leg 2: an id-range partition schedule over N = 10^3 — the cohort
+    // intersects the components, the minority parks, heal restores. Two
+    // runs lock the digest.
+    {
+        let n_pop = 1_000u64;
+        let mutate = |c: &mut olsgd::config::ExperimentConfig| {
+            c.algo = Algo::OverlapM;
+            c.workers = K;
+            c.epochs = 6.0;
+            c.eval_every = 1.0;
+            c.set("population", &n_pop.to_string()).expect("static key");
+            c.set("sample_k", &K.to_string()).expect("static key");
+            c.set("fault", "partition@2:0-499|500-999;heal@4").expect("static key");
+        };
+        let a = ctx.run_leg("chaos_partition_1000_a", mutate)?;
+        let b = ctx.run_leg("chaos_partition_1000_b", mutate)?;
+        let matched = a.digest() == b.digest() && a.fault_trace == b.fault_trace;
+        let c = a.population.expect("engaged run must report population counters");
+        println!("  partition N={n_pop}: digest_match={matched}, resident={}", c.resident_workers_max);
+        rows.push(e18_row(
+            "partition",
+            n_pop,
+            matched,
+            &c,
+            vec![("partition_digest_match", Json::Bool(matched))],
+        ));
+        assert!(matched, "the id-range partition failed to replay");
+    }
+
+    // Leg 3: net backend serving cohorts, with a killed worker process.
+    // Proc 1 (slots 4-7) dies after serving round 2; the engine translates
+    // each dead slot through its binding into a per-id crash. Scheduling
+    // those exact crashes on sim must reproduce the digest byte-for-byte.
+    {
+        let n_pop = 1_000u64;
+        let net = ctx.run_leg("chaos_netkill_1000", |c| {
+            c.algo = Algo::OverlapM;
+            c.workers = K;
+            c.epochs = 6.0;
+            c.eval_every = 1.0;
+            c.execution = Execution::Net;
+            c.set("population", &n_pop.to_string()).expect("static key");
+            c.set("sample_k", &K.to_string()).expect("static key");
+            c.set("net_worker_bin", env!("CARGO_BIN_EXE_olsgd")).expect("static key");
+            c.set("net_procs", "4").expect("static key");
+            c.set("net_timeout_s", "120").expect("static key");
+            c.set("net_kill", "1:2").expect("static key");
+        })?;
+        let crashes: Vec<String> = net
+            .fault_trace
+            .iter()
+            .filter(|(round, ev)| *round == 3 && ev.starts_with("crash@3:"))
+            .map(|(_, ev)| ev.clone())
+            .collect();
+        anyhow::ensure!(
+            !crashes.is_empty(),
+            "the killed worker process surfaced no round-3 crash events"
+        );
+        let schedule = crashes.join(";");
+        let sim = ctx.run_leg("chaos_netkill_1000_sim", |c| {
+            c.algo = Algo::OverlapM;
+            c.workers = K;
+            c.epochs = 6.0;
+            c.eval_every = 1.0;
+            c.set("population", &n_pop.to_string()).expect("static key");
+            c.set("sample_k", &K.to_string()).expect("static key");
+            c.set("fault", &schedule).expect("replaying the net crash schedule");
+        })?;
+        let matched = net.digest() == sim.digest() && net.fault_trace == sim.fault_trace;
+        let c = net.population.expect("engaged run must report population counters");
+        println!(
+            "  netkill N={n_pop}: {} crashed ids, digest_match={matched}",
+            crashes.len()
+        );
+        rows.push(e18_row(
+            "net_kill",
+            n_pop,
+            matched,
+            &c,
+            vec![
+                ("crashed_ids", num(crashes.len() as f64)),
+                ("net_kill_digest_match", Json::Bool(matched)),
+            ],
+        ));
+        assert!(matched, "net cohort kill diverged from the per-id crash schedule");
+    }
+
+    ctx.write_summary("E18_population_chaos.json", rows)?;
     Ok(())
 }

@@ -514,6 +514,35 @@ impl CompressState {
         std::mem::swap(&mut self.errors[w], residual);
         self.snap_valid[w] = false;
     }
+
+    /// Population slot re-bind for `--compress powersgd` (DESIGN.md §14):
+    /// swap slot `w`'s joint gradient-path residual and warm `Q` bases
+    /// with the incoming worker's persisted ones (`psgd_error` /
+    /// `psgd_qs` travel with the worker, exactly as the generic residual
+    /// does in [`CompressState::swap_residual`]). The caller gates on
+    /// [`CompressKind::PowerSgd`]; like the residual swap, this never
+    /// runs while the cohort is stable, so `N == k` digests are
+    /// untouched.
+    pub fn swap_powersgd_state(
+        &mut self,
+        w: usize,
+        error: &mut Vec<f32>,
+        qs: &mut Vec<Vec<f32>>,
+    ) {
+        let joint = self.joint.as_mut().expect("powersgd state present");
+        std::mem::swap(&mut joint.errors[w], error);
+        let lr = self.lowrank.as_mut().expect("powersgd state present");
+        std::mem::swap(&mut lr.qs[w], qs);
+        self.snap_valid[w] = false;
+    }
+
+    /// The shared seeded PowerSGD `Q` inits, one per factorized matrix —
+    /// the fresh-worker template population mode materializes never-seen
+    /// ids with (bit-identical to what [`CompressState::reset_worker`]
+    /// restores on a dense rejoin). `None` unless `--compress powersgd`.
+    pub fn powersgd_qs_init(&self) -> Option<Vec<Vec<f32>>> {
+        self.lowrank.as_ref().map(|lr| lr.q_init.clone())
+    }
 }
 
 #[cfg(test)]

@@ -230,7 +230,8 @@ pub struct ExperimentConfig {
     /// clears). Empty by default — and bit-inert when empty.
     pub fault: FaultPlan,
     /// random fault process: per-worker per-round crash probability
-    /// (0 disables; drawn from the seeded `"fault"` RNG stream)
+    /// (0 disables; drawn from seeded per-worker `"fault/{w}"` streams —
+    /// per-id `"fault/{id}"` streams when a population is registered)
     pub fault_rate: f64,
     /// random fault process: per-worker per-round rejoin probability for
     /// downed workers (0 = crashed workers stay down unless an explicit
@@ -567,15 +568,16 @@ impl ExperimentConfig {
     /// §14) and validate its compositions. With `population == 0` this is
     /// an identity clone. With `population > 0` the engine's slot count
     /// *is* the cohort size, so `workers` is normalized to `sample_k`
-    /// (which itself defaults to `workers`), and the combinations that
-    /// cannot keep the bit-determinism contract are refused loudly:
+    /// (which itself defaults to `workers`).
     ///
-    /// * the `net` backend (worker processes key their replay streams by
-    ///   slot, not by stable population id);
-    /// * the random fault process (O(N) per-round draws);
-    /// * PowerSGD (its per-worker warm bases are not part of the swapped
-    ///   worker state — use `topk`/`qsgd`, whose error-feedback residuals
-    ///   travel with the worker).
+    /// Every scenario axis now composes with population sampling — the
+    /// `net` backend (`PhaseReq` ships the slot → id binding and the
+    /// bound worker's streams), the `fault_rate`/`rejoin_rate` random
+    /// process (lazy per-id `"fault/{id}"` streams, O(k) per round),
+    /// partitions over id sets, and PowerSGD (warm bases + gradient
+    /// residual ride the spill codec). The checks left below are
+    /// *consistency* errors — a cohort the population cannot fill, or the
+    /// axis half-engaged — each stating the reason and the fix.
     ///
     /// `run_experiment` calls this; tests that assemble a `TrainContext`
     /// by hand must call it themselves before engaging the axis.
@@ -584,7 +586,8 @@ impl ExperimentConfig {
         if self.population == 0 {
             anyhow::ensure!(
                 self.sample_k == 0,
-                "sample_k = {} needs population > 0 (the axis engages together)",
+                "sample_k = {} engages cohort sampling, which needs a registered \
+                 population; set population=N (N >= sample_k) or drop sample_k",
                 self.sample_k
             );
             return Ok(out);
@@ -593,23 +596,9 @@ impl ExperimentConfig {
         anyhow::ensure!(k >= 1, "sample_k must be >= 1");
         anyhow::ensure!(
             self.population >= k as u64,
-            "population {} is smaller than the cohort size sample_k = {k}",
+            "population {} cannot fill a cohort of sample_k = {k}; register at \
+             least k workers (population >= sample_k) or shrink the cohort",
             self.population
-        );
-        anyhow::ensure!(
-            self.execution != Execution::Net,
-            "population sampling runs on sim|threads: the net backend's worker \
-             processes key their replay streams by slot, not by population id"
-        );
-        anyhow::ensure!(
-            self.fault_rate == 0.0 && self.rejoin_rate == 0.0,
-            "population mode composes with explicit crash/rejoin events only; the \
-             random fault process would draw O(N) per-worker decisions per round"
-        );
-        anyhow::ensure!(
-            self.compress != CompressKind::PowerSgd && self.algo != Algo::PowerSgd,
-            "powersgd's per-worker warm bases are not part of the swapped population \
-             state; use --compress topk or qsgd, whose residuals travel with the worker"
         );
         crate::fault::validate_population_plan(&self.fault, self.population)?;
         out.workers = k;
@@ -954,22 +943,25 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.set("population", "64").unwrap();
         assert_eq!(c.resolved().unwrap().sample_k, c.workers);
-        // Refused compositions fail loudly.
+        // The only remaining refusals are consistency errors: a cohort the
+        // population cannot fill.
         let mut c = ExperimentConfig::default();
         c.set("population", "4").unwrap(); // < default workers = 8
         assert!(c.resolved().is_err());
+        // The PR-8 composition refusals are lifted: net execution, the
+        // random fault process, powersgd, and partitions over ids all
+        // resolve under sampling now.
         c.set("population", "100").unwrap();
         c.set("execution", "net").unwrap();
-        assert!(c.resolved().is_err());
+        assert!(c.resolved().is_ok());
         c.set("execution", "sim").unwrap();
         c.set("fault_rate", "0.1").unwrap();
-        assert!(c.resolved().is_err());
-        c.set("fault_rate", "0").unwrap();
+        c.set("rejoin_rate", "0.2").unwrap();
+        assert!(c.resolved().is_ok());
         c.set("compress", "powersgd").unwrap();
-        assert!(c.resolved().is_err());
-        c.set("compress", "topk").unwrap();
-        c.set("fault", "partition@3:0,1|2,3").unwrap();
-        assert!(c.resolved().is_err());
+        assert!(c.resolved().is_ok());
+        c.set("fault", "partition@3:0-49|50-99;heal@6").unwrap();
+        assert!(c.resolved().is_ok());
         c.set("fault", "none").unwrap();
         c.set("fault", "crash@3:200").unwrap(); // id outside N = 100
         assert!(c.resolved().is_err());

@@ -31,13 +31,13 @@
 //!   so a straggler runs fewer local steps and every worker reaches the
 //!   round boundary at ≈ the same virtual time (E9).
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context as _, Result};
 
 use super::{Recorder, TrainContext, Workers};
 use crate::clock::Clocks;
-use crate::compress::CompressState;
+use crate::compress::{CompressKind, CompressState};
 use crate::executor::{ExecSnapshot, Executor};
-use crate::fault::{FaultPlan, FaultState};
+use crate::fault::{FaultEvent, FaultPlan, FaultState};
 use crate::metrics::{HotPathCounters, TrainLog};
 
 /// Virtual cost of one fused elementwise pass over the paper-size model
@@ -132,9 +132,13 @@ pub struct Engine {
     /// workers by the deterministic cohort sampler; unbound worker state
     /// lives in the O(k) LRU store. `None` (axis off) leaves every path
     /// above bit-identical to the dense engine. Fault events then replay
-    /// over population ids ([`crate::fault::PopulationFaults`]) — a
-    /// crashed id just leaves the sampling pool, the slot-level alive set
-    /// stays full — so [`Engine::fault`] is built with an empty plan.
+    /// over population ids ([`crate::fault::PopulationFaults`]): a
+    /// crashed id leaves the sampling pool, and each round
+    /// [`bind_population_round`] *projects* the id-level down/partition
+    /// state onto the cohort's slots — so [`Engine::fault`] is built with
+    /// an empty plan and zero rates (id-level sources own the events),
+    /// but its [`crate::fault::AliveSet`] still carries the per-round
+    /// slot view the strategies' masked collectives consume.
     pub population: Option<crate::population::PopulationState>,
 }
 
@@ -145,14 +149,25 @@ impl Engine {
     pub fn new(ctx: &TrainContext) -> Result<Self> {
         let workers = Workers::new(ctx);
         let m = workers.m;
-        let population = crate::population::PopulationState::build(ctx)?;
-        // In population mode the configured fault plan replays over
-        // population ids inside `PopulationState`; the slot-level fault
-        // machinery must stay disengaged (empty plan, full alive set).
-        let slot_plan = if population.is_some() {
-            FaultPlan { events: Vec::new() }
+        // Compression state is built before the population axis so fresh
+        // population workers can materialize with the compressor's shared
+        // PowerSGD basis template.
+        let compress =
+            CompressState::build(ctx.cfg, &ctx.rt.manifest, ctx.cluster.message_bytes);
+        let population = crate::population::PopulationState::build(
+            ctx,
+            compress.as_ref().and_then(|cs| cs.powersgd_qs_init()),
+        )?;
+        // In population mode every fault source — the explicit plan *and*
+        // the `fault_rate`/`rejoin_rate` random process — replays over
+        // population ids inside `PopulationState`; the slot-level machine
+        // is built inert (empty plan, zero rates) and its alive set is
+        // driven per round by the cohort projection in
+        // [`bind_population_round`].
+        let (slot_plan, slot_rate, slot_rejoin) = if population.is_some() {
+            (FaultPlan { events: Vec::new() }, 0.0, 0.0)
         } else {
-            ctx.cfg.fault.clone()
+            (ctx.cfg.fault.clone(), ctx.cfg.fault_rate, ctx.cfg.rejoin_rate)
         };
         Ok(Self {
             workers,
@@ -163,18 +178,8 @@ impl Engine {
             round: 0,
             steps_done: vec![0; m],
             exec: Executor::from_config(ctx.cfg)?,
-            fault: FaultState::new(
-                &slot_plan,
-                ctx.cfg.fault_rate,
-                ctx.cfg.rejoin_rate,
-                ctx.cfg.seed,
-                m,
-            ),
-            compress: CompressState::build(
-                ctx.cfg,
-                &ctx.rt.manifest,
-                ctx.cluster.message_bytes,
-            ),
+            fault: FaultState::new(&slot_plan, slot_rate, slot_rejoin, ctx.cfg.seed, m),
+            compress,
             population,
         })
     }
@@ -313,7 +318,33 @@ pub fn run(ctx: &TrainContext, strategy: &mut dyn MixingStrategy) -> Result<Trai
         // test's digest-equality assertion possible).
         let injected = eng.exec.poll_net_events(eng.round + 1, &eng.fault.alive)?;
         for ev in injected {
-            eng.fault.inject(ev)?;
+            if let Some(pop) = eng.population.as_mut() {
+                // Service-plane events arrive keyed by *slot* (the net
+                // backend knows processes, not population ids). A dead
+                // process kills the worker currently bound to that slot,
+                // so translate through the binding and replay the crash
+                // over its id — which is exactly what makes a killed
+                // process land on the digest of the equivalent per-id
+                // `crash@round:id` schedule. Reconnections are transport
+                // recovery only: they do not resurrect a downed id (ids
+                // come back through `rejoin` events or `rejoin_rate`).
+                match ev {
+                    FaultEvent::Crash { round, worker: slot } => {
+                        let id = pop.bound[slot].with_context(|| {
+                            format!("net worker process {slot} died before its first binding")
+                        })?;
+                        pop.faults
+                            .inject(FaultEvent::Crash { round, worker: id as usize })?;
+                    }
+                    FaultEvent::Rejoin { .. } => {}
+                    other => anyhow::bail!(
+                        "net backend injected unsupported event {:?} under population mode",
+                        other.describe()
+                    ),
+                }
+            } else {
+                eng.fault.inject(ev)?;
+            }
         }
         // Fault events fire at the round boundary, before anything of the
         // round runs (DESIGN.md §11): crashes park workers, rejoins
@@ -478,13 +509,16 @@ fn apply_round_faults(
 /// Bind the upcoming round's sampled cohort to the engine's slots (no-op
 /// unless the population axis is engaged). Order within the boundary:
 ///
-/// 1. replay id-level fault events (a crashed id leaves the sampling pool;
-///    the trace and eligible-count series land in the same recorder fields
-///    the slot-level machinery uses);
-/// 2. sample k distinct eligible ids, ascending (slot order);
+/// 1. replay id-level fault events — explicit schedule, net-injected
+///    crashes, then (after binding) the per-id `fault_rate` random process
+///    (a crashed id leaves the sampling pool; the trace and survivor
+///    series land in the same recorder fields the slot-level machinery
+///    uses);
+/// 2. sample k distinct eligible ids, ascending (slot order) — downed ids
+///    pad the tail only when the eligible pool is squeezed below k;
 /// 3. unbind every slot whose worker changed — its full state (including
-///    the compressor's error-feedback residual) swaps out into the LRU
-///    store;
+///    the compressor's error-feedback residual and, under PowerSGD, the
+///    per-worker warm basis) swaps out into the LRU store;
 /// 4. bind the incoming worker: resident hit, bit-exact spill
 ///    rematerialization, or fresh materialization from init. A *rebinding*
 ///    slot models the new participant syncing up: its virtual clock jumps
@@ -493,15 +527,24 @@ fn apply_round_faults(
 ///    materialized) and it pays one full-message model fetch on the wire,
 ///    exactly the rejoin protocol. Round-1 binds are initial placement and
 ///    charge nothing.
-/// 5. never-before-seen workers joining mid-run are warm-started through
-///    the strategy's `on_rejoin` (anchor-bearing strategies pull them to
-///    the anchor); rematerialized workers resume their own trajectory and
-///    are *not* warm-started;
-/// 6. evict the store down to its reserve cap (the O(k) guarantee).
+/// 5. project the id-level down/partition state onto the slots (the alive
+///    set the strategies' masked collectives consume), run the random
+///    process over the bound cohort, and hard-error if nothing is left on
+///    the quorum side;
+/// 6. warm-start through the strategy's `on_rejoin`: never-before-seen
+///    workers, ids that rejoined while unbound (deferred until they are
+///    next sampled), and — exactly the dense rejoin protocol, clock jump
+///    and anchor fetch included — slots that kept their binding but flip
+///    parked → stepping. Rematerialized workers with an unbroken history
+///    resume their own trajectory and are *not* warm-started;
+/// 7. note the survivor series (stepping slots while partitioned, the
+///    eligible count otherwise) and evict the store down to its reserve
+///    cap (the O(k) guarantee).
 ///
 /// When `N == k` the sampler returns `0..k` every round, so after round 1
-/// nothing ever changes binding — steps 3–5 never execute and every
-/// observable is bit-identical to the dense engine (golden-locked by
+/// nothing ever changes binding, the id→slot projection is the identity,
+/// and every observable — including the fault trace and survivor series —
+/// is bit-identical to the dense engine (golden-locked by
 /// rust/tests/population.rs).
 fn bind_population_round(
     eng: &mut Engine,
@@ -523,13 +566,13 @@ fn bind_cohort(
     pop: &mut crate::population::PopulationState,
 ) -> Result<()> {
     let round = eng.round + 1; // 1-based index of the round about to run
-    let applied = pop.faults.begin_round(round)?;
-    for ev in &applied {
-        eng.rec.note_fault(round, ev.describe());
-    }
-    if !applied.is_empty() {
-        eng.rec.note_survivors(round, pop.faults.eligible() as usize);
-    }
+    let m = eng.workers.m;
+    // Dense-mirror snapshot: which slots stepped before this boundary's
+    // events. Drives the joined detection and warm-start source selection
+    // below, exactly like `FaultState::begin_round`'s `prev_stepping`.
+    let prev_stepping: Vec<bool> = (0..m).map(|w| eng.fault.alive.steps(w)).collect();
+    let prev_bound = pop.bound.clone();
+    let mut applied = pop.faults.begin_round(round)?;
     let cohort = pop.sample(round)?;
     // Cluster time the incoming workers sync to — computed before any of
     // this round's clock jumps, like the rejoin path above.
@@ -551,6 +594,13 @@ fn bind_cohort(
                 let mut r = shell.residual.take().unwrap_or_default();
                 cs.swap_residual(slot, &mut r);
                 shell.residual = Some(r);
+                if cs.kind == CompressKind::PowerSgd {
+                    let mut e = shell.psgd_error.take().unwrap_or_default();
+                    let mut q = shell.psgd_qs.take().unwrap_or_default();
+                    cs.swap_powersgd_state(slot, &mut e, &mut q);
+                    shell.psgd_error = Some(e);
+                    shell.psgd_qs = Some(q);
+                }
             }
             pop.store.park(old, shell);
         }
@@ -564,6 +614,12 @@ fn bind_cohort(
             if let Some(r) = st.residual.as_mut() {
                 cs.swap_residual(slot, r);
             }
+            if cs.kind == CompressKind::PowerSgd {
+                if let (Some(e), Some(q)) = (st.psgd_error.as_mut(), st.psgd_qs.as_mut())
+                {
+                    cs.swap_powersgd_state(slot, e, q);
+                }
+            }
         }
         pop.store.recycle(st);
         pop.bound[slot] = Some(id);
@@ -575,17 +631,106 @@ fn bind_cohort(
             }
         }
     }
-    // Warm-start protocol for workers that have never trained: compressor
+    // Project the id-level fault state onto the slots: a slot is alive iff
+    // its bound id is up, and an active partition carries over through
+    // `component_of` (identity at N == k with full coverage, so the dense
+    // mirror holds bit-for-bit; a fault-free round leaves the alive set
+    // untouched and `is_full` keeps every downstream path on the dense
+    // fast path).
+    for (slot, &id) in cohort.iter().enumerate() {
+        eng.fault.alive.set_alive(slot, !pop.faults.down().contains(&id));
+    }
+    if let Some(ncomp) = pop.faults.partition_components() {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); ncomp];
+        for (slot, &id) in cohort.iter().enumerate() {
+            let c = pop.faults.component_of(id).expect("partition is active");
+            groups[c].push(slot);
+        }
+        eng.fault.alive.clear_partition();
+        eng.fault.alive.set_partition(&groups);
+    } else {
+        eng.fault.alive.clear_partition();
+    }
+    eng.fault.alive.refresh();
+    // The seeded per-id random process draws over the bound cohort (plus
+    // the downed set, so rejoin draws fire for ids outside every cohort).
+    applied.extend(pop.faults.random_round(round, &pop.bound, &mut eng.fault.alive));
+    for ev in &applied {
+        eng.rec.note_fault(round, ev.describe());
+    }
+    ensure!(
+        eng.fault.alive.member_count() > 0,
+        "fault schedule leaves no live worker in the primary partition at round {round}"
+    );
+    // Who needs a warm start this boundary, beyond the fresh slots: ids
+    // that rejoined while unbound warm-start the round they are next
+    // sampled (their parked state predates the crash — resuming it would
+    // fork the trajectory dense mode never takes), and an id that rejoined
+    // *and* rebound within this same boundary warm-starts now. A rejoined
+    // id whose binding is unchanged flows through the dense-mirror joined
+    // path below instead.
+    let mut warm_slots = fresh_slots;
+    for (slot, &id) in cohort.iter().enumerate() {
+        if !pop.faults.down().contains(&id)
+            && pop.pending_warm.remove(&id)
+            && !warm_slots.contains(&slot)
+        {
+            warm_slots.push(slot);
+        }
+    }
+    for ev in &applied {
+        if let FaultEvent::Rejoin { worker, .. } = ev {
+            let id = *worker as u64;
+            match (0..m).find(|&s| pop.bound[s] == Some(id)) {
+                Some(slot) if pop.bound[slot] == prev_bound[slot] => {} // joined path
+                Some(slot) => {
+                    if !warm_slots.contains(&slot) {
+                        warm_slots.push(slot);
+                    }
+                }
+                None => {
+                    pop.pending_warm.insert(id);
+                }
+            }
+        }
+    }
+    // Dense-mirror rejoin protocol: a slot that kept its binding and flips
+    // parked → stepping (its id rejoined, or a heal reunited its
+    // component) gets exactly the dense treatment — clock jump to the
+    // cluster's launch time, one anchor fetch on the wire, compressor
+    // reset, strategy warm start. Slots that changed binding already paid
+    // the rebind protocol above.
+    let joined: Vec<usize> = (0..m)
+        .filter(|&w| {
+            pop.bound[w] == prev_bound[w] && !prev_stepping[w] && eng.fault.alive.steps(w)
+        })
+        .collect();
+    if !joined.is_empty() {
+        let src = (0..m)
+            .find(|&w| prev_stepping[w] && eng.fault.alive.steps(w))
+            .or_else(|| (0..m).find(|&w| prev_stepping[w]))
+            .expect("a non-empty cluster always has a previous stepping worker");
+        let tj = eng.launch_clock();
+        for &w in &joined {
+            eng.clocks.wait_idle_until(w, tj);
+            eng.clocks.comm_blocked(w, fetch);
+            if let Some(cs) = eng.compress.as_mut() {
+                cs.reset_worker(w);
+            }
+            strategy.on_rejoin(eng, ctx, w, src)?;
+        }
+    }
+    // Warm-start protocol for workers without a usable history: compressor
     // reset first, then the strategy's rejoin hook. `src` prefers a slot
     // with real training history; if the whole cohort is fresh any other
     // slot works — anchor-bearing strategies ignore `src` and pull the
     // newcomer to the anchor, which is the semantics that matter.
-    if !fresh_slots.is_empty() {
-        let src = (0..eng.workers.m).find(|s| !fresh_slots.contains(s));
-        for &slot in &fresh_slots {
+    if !warm_slots.is_empty() {
+        let src = (0..m).find(|s| !warm_slots.contains(s));
+        for &slot in &warm_slots {
             let src = match src {
                 Some(s) => s,
-                None if eng.workers.m > 1 => (slot + 1) % eng.workers.m,
+                None if m > 1 => (slot + 1) % m,
                 None => continue, // a lone fresh slot has no one to start from
             };
             if let Some(cs) = eng.compress.as_mut() {
@@ -594,6 +739,22 @@ fn bind_cohort(
             strategy.on_rejoin(eng, ctx, slot, src)?;
         }
     }
+    // Survivor series: the cohort-level quorum while a partition is active
+    // (what the collectives actually reduce over), the id-level eligible
+    // count otherwise — noted only when the value moves, which at N == k
+    // reproduces the dense series exactly.
+    let survivors = if pop.faults.partitioned() {
+        eng.fault.alive.stepping_count()
+    } else {
+        pop.faults.eligible() as usize
+    };
+    if survivors != pop.last_survivors {
+        eng.rec.note_survivors(round, survivors);
+        pop.last_survivors = survivors;
+    }
+    // Publish the binding to the service plane (net backend only): the
+    // next PhaseReq ships each slot's bound id and stream state.
+    eng.exec.bind_population(&pop.bound);
     pop.store.enforce_cap()?;
     pop.note_round();
     Ok(())

@@ -214,6 +214,23 @@ impl StepView<'_> {
         (self.params, self.mom, self.mom2, self.adam_t)
     }
 
+    /// The slot's batch sampler and straggler stream — under the
+    /// population axis these are the *bound worker's* streams (swapped in
+    /// at the round boundary), and the `net` coordinator ships them with
+    /// the replica so the worker process steps with the right draws.
+    pub(crate) fn streams_ref(&self) -> (&Batcher, &Rng) {
+        (self.batcher, self.rng)
+    }
+
+    /// Install shipped stream state (the `net` worker's side of
+    /// [`StepView::streams_ref`]): under population a rebind changes which
+    /// worker a slot serves, so the slot-keyed streams this process built
+    /// at startup are replaced wholesale each phase.
+    pub(crate) fn install_streams(&mut self, batcher: Batcher, rng: Rng) {
+        *self.batcher = batcher;
+        *self.rng = rng;
+    }
+
     /// Consume exactly one local step's worth of stochastic draws — the
     /// batch draw and the straggler-model draw — without touching the
     /// replica, returning the step's virtual compute seconds.

@@ -283,12 +283,23 @@ impl Executor {
     /// Round-boundary service sweep of the `net` backend: detect worker
     /// processes that died since the last round (as `Crash` events) and
     /// admit reconnecting ones (as `Rejoin` events), for the engine to
-    /// feed into `FaultState::inject` before it applies round `round`'s
-    /// faults. A no-op returning no events on `sim`/`threads`.
+    /// feed into the fault machinery (slot-level `FaultState::inject`, or
+    /// the id-level replay under population) before it applies round
+    /// `round`'s faults. A no-op returning no events on `sim`/`threads`.
     pub fn poll_net_events(&self, round: usize, alive: &AliveSet) -> Result<Vec<FaultEvent>> {
         match &self.mode {
             Mode::Net(nc) => nc.borrow_mut().poll(round, alive),
             _ => Ok(Vec::new()),
+        }
+    }
+
+    /// Publish the round's slot → population-id binding to the `net`
+    /// backend, which ships it (plus each bound worker's stream state) in
+    /// the next `PhaseReq`. A no-op on `sim`/`threads`, where the binding
+    /// already lives in the canonical per-slot state.
+    pub fn bind_population(&self, bound: &[Option<u64>]) {
+        if let Mode::Net(nc) = &self.mode {
+            nc.borrow_mut().set_bound(bound);
         }
     }
 

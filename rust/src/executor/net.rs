@@ -73,6 +73,11 @@ pub(crate) struct NetCoordinator {
     planned: Vec<Vec<usize>>,
     /// the run config as ordered pairs, shipped verbatim in every `Welcome`
     cfg_kv: Vec<(String, String)>,
+    /// population axis on: `PhaseReq` carries per-slot id + stream extras
+    population: bool,
+    /// slot → bound population id, published by the engine each round
+    /// ([`crate::executor::Executor::bind_population`])
+    bound_ids: Vec<Option<u64>>,
     timeout: Duration,
     children: Vec<Child>,
     /// slots whose process died mid-phase, awaiting their `crash@round`
@@ -121,6 +126,8 @@ impl NetCoordinator {
                     .arg(slots.len().to_string())
                     .arg("--proc-index")
                     .arg(p.to_string())
+                    .arg("--timeout")
+                    .arg(cfg.net_timeout_s.to_string())
                     .stdout(Stdio::null());
                 if let Some((kp, kr)) = kill {
                     if kp == p {
@@ -139,6 +146,8 @@ impl NetCoordinator {
             consumed: vec![0; m],
             planned,
             cfg_kv: cfg.to_kv(),
+            population: cfg.population > 0,
+            bound_ids: vec![None; m],
             timeout,
             children,
             pending_dead: Vec::new(),
@@ -228,6 +237,14 @@ impl NetCoordinator {
         Ok(claimed)
     }
 
+    /// Install the round's slot → population-id binding (engine-published
+    /// via `Executor::bind_population`); the next `PhaseReq` ships it.
+    pub(crate) fn set_bound(&mut self, bound: &[Option<u64>]) {
+        debug_assert_eq!(bound.len(), self.bound_ids.len());
+        self.bound_ids.clear();
+        self.bound_ids.extend_from_slice(bound);
+    }
+
     /// Declare process `p` dead: free its slots (queueing their
     /// `crash@round` injection) and reroute any work it still owed this
     /// round to local execution.
@@ -277,6 +294,10 @@ impl NetCoordinator {
         // responses in the same order: each side fully reads before it
         // writes, and per-process sockets are drained every round, so the
         // exchange cannot deadlock.
+        // Cloned out of `self` so `fail_conn` (which needs `&mut self`)
+        // stays callable inside the send loop; m options per round is noise
+        // next to the replica payloads.
+        let pop_ids: Option<Vec<Option<u64>>> = self.population.then(|| self.bound_ids.clone());
         for p in 0..self.conns.len() {
             let sent = match self.conns[p].as_mut() {
                 Some(conn) if !conn.round_slots.is_empty() => {
@@ -287,6 +308,7 @@ impl NetCoordinator {
                         &conn.round_slots,
                         &plan.steps,
                         views,
+                        pop_ids.as_deref(),
                     );
                     wire::write_frame(&mut conn.stream, wire::KIND_PHASE_REQ, &conn.wbuf)
                 }

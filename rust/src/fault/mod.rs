@@ -27,10 +27,17 @@
 //! * [`FaultState`] — the per-run replay machine the engine drives once per
 //!   round: explicit events first, then (when `fault_rate`/`rejoin_rate`
 //!   are set) a seeded random process drawing one decision per worker per
-//!   round from its own derived RNG stream. Everything runs on the
-//!   coordinator thread, so a fixed schedule yields bit-identical
-//!   observables on the `sim` and `threads` backends (asserted by
-//!   rust/tests/failure_injection.rs).
+//!   round from that worker's own derived stream (`"fault/{w}"`).
+//!   Everything runs on the coordinator thread, so a fixed schedule yields
+//!   bit-identical observables on the `sim` and `threads` backends
+//!   (asserted by rust/tests/failure_injection.rs).
+//!
+//! Population mode (DESIGN.md §14) replays the same model over stable
+//! population ids via [`PopulationFaults`]: the random process keys its
+//! streams on the *id* (`"fault/{id}"`, lazily advanced only for sampled
+//! and downed ids — O(touched), never O(N)), partitions split the id
+//! space into ranged sets, and under `population == sample_k` every path
+//! collapses bit-for-bit onto the dense machine because id == slot.
 //!
 //! Per-worker *compressor* state (error-feedback residuals, PowerSGD
 //! bases — DESIGN.md §12) obeys the same park/freeze discipline as the
@@ -67,12 +74,15 @@ pub enum FaultEvent {
         worker: usize,
     },
     /// The network splits into the given disjoint components at the start
-    /// of `round` (the groups must cover every worker exactly once). A
-    /// later `Partition` replaces the split; `Heal` removes it.
+    /// of `round`. Sets accept single ids and inclusive `a-b` ranges. In
+    /// dense mode the groups must cover every worker exactly once; in
+    /// population mode they may name any subset of the id space — unlisted
+    /// ids share one implicit trailing component. A later `Partition`
+    /// replaces the split; `Heal` removes it.
     Partition {
         /// 1-based round the partition fires at
         round: usize,
-        /// disjoint worker groups covering `0..m`
+        /// disjoint worker groups
         groups: Vec<Vec<usize>>,
     },
     /// The partition heals at the start of `round`: full connectivity is
@@ -131,7 +141,20 @@ impl FaultEvent {
                 for set in sets.split('|') {
                     let mut group = Vec::new();
                     for id in set.split(',') {
-                        if !id.trim().is_empty() {
+                        let id = id.trim();
+                        if id.is_empty() {
+                            continue;
+                        }
+                        // Inclusive range syntax (`a-b`) — how a population
+                        // partition names 10^5 ids without 10^5 commas.
+                        if let Some((a, b)) = id.split_once('-') {
+                            let (a, b) = (parse_worker(a)?, parse_worker(b)?);
+                            ensure!(
+                                a <= b,
+                                "fault event '{spec}': bad id range {a}-{b} (want lo-hi)"
+                            );
+                            group.extend(a..=b);
+                        } else {
                             group.push(parse_worker(id)?);
                         }
                     }
@@ -157,12 +180,28 @@ impl FaultEvent {
             FaultEvent::Crash { round, worker } => format!("crash@{round}:{worker}"),
             FaultEvent::Rejoin { round, worker } => format!("rejoin@{round}:{worker}"),
             FaultEvent::Partition { round, groups } => {
-                let sets: Vec<String> = groups
-                    .iter()
-                    .map(|g| {
-                        g.iter().map(|w| w.to_string()).collect::<Vec<_>>().join(",")
-                    })
-                    .collect();
+                // Ascending runs of >= 3 compress to `a-b` (round-trips
+                // through `parse`; keeps population traces readable).
+                let format_ids = |g: &[usize]| -> String {
+                    let mut parts = Vec::new();
+                    let mut i = 0;
+                    while i < g.len() {
+                        let mut j = i;
+                        while j + 1 < g.len() && g[j + 1] == g[j] + 1 {
+                            j += 1;
+                        }
+                        if j - i >= 2 {
+                            parts.push(format!("{}-{}", g[i], g[j]));
+                        } else {
+                            for k in i..=j {
+                                parts.push(g[k].to_string());
+                            }
+                        }
+                        i = j + 1;
+                    }
+                    parts.join(",")
+                };
+                let sets: Vec<String> = groups.iter().map(|g| format_ids(g)).collect();
                 format!("partition@{round}:{}", sets.join("|"))
             }
             FaultEvent::Heal { round } => format!("heal@{round}"),
@@ -429,13 +468,18 @@ pub struct FaultState {
     injected: Vec<FaultEvent>,
     rate: f64,
     rejoin_rate: f64,
-    rng: Rng,
+    /// one private stream per worker (`"fault/{w}"`): the draw a worker
+    /// sees depends only on its identity, round, and the seed — the same
+    /// keying [`PopulationFaults`] uses per population id, which is what
+    /// makes the `N == k` random-process digests collapse onto this one
+    streams: Vec<Rng>,
     engaged: bool,
 }
 
 impl FaultState {
     /// Build the replay machine for one run of `m` workers. `seed` derives
-    /// the random process stream (`"fault"` — perturbs no other consumer).
+    /// the per-worker random process streams (`"fault/{w}"` — perturbs no
+    /// other consumer).
     pub fn new(plan: &FaultPlan, rate: f64, rejoin_rate: f64, seed: u64, m: usize) -> Self {
         let mut events = plan.events.clone();
         events.sort_by_key(FaultEvent::round); // stable: spec order within a round
@@ -447,7 +491,7 @@ impl FaultState {
             injected: Vec::new(),
             rate,
             rejoin_rate,
-            rng: Rng::stream(seed, "fault"),
+            streams: (0..m).map(|w| Rng::stream(seed, &format!("fault/{w}"))).collect(),
             engaged,
         }
     }
@@ -621,13 +665,13 @@ impl FaultState {
         self.injected = future;
         self.alive.refresh();
 
-        // Random process: exactly one draw per worker per round (state-
-        // independent stream consumption), crash with `rate` when alive,
-        // rejoin with `rejoin_rate` when down. A draw that would empty the
-        // quorum side is skipped, never fatal.
+        // Random process: exactly one draw per worker per round from the
+        // worker's own stream (state-independent consumption), crash with
+        // `rate` when alive, rejoin with `rejoin_rate` when down. A draw
+        // that would empty the quorum side is skipped, never fatal.
         if self.rate > 0.0 || self.rejoin_rate > 0.0 {
             for w in 0..m {
-                let u = self.rng.next_f64();
+                let u = self.streams[w].next_f64();
                 if self.alive.is_alive(w) {
                     if self.rate > 0.0 && u < self.rate {
                         self.alive.set_alive(w, false);
@@ -667,12 +711,14 @@ impl FaultState {
     }
 }
 
-/// Validate a fault plan against population mode (DESIGN.md §14): only
-/// `crash@R:W` / `rejoin@R:W` compose with a sampled cohort — a crashed id
-/// simply leaves the sampling pool — and every worker id must name a
-/// member of the registered population. Partitions (and `heal`) are
-/// slot-graph concepts with no meaning over a per-round cohort, so they
-/// are refused loudly rather than silently reinterpreted.
+/// Validate a fault plan against population mode (DESIGN.md §14): every
+/// worker id — `crash@R:W` / `rejoin@R:W` targets and partition set
+/// members alike — must name a member of the registered population, and a
+/// partition must not list an id twice. Unlike the dense
+/// [`FaultState::validate`], a population partition need *not* cover every
+/// id: unlisted ids share one implicit trailing component (the usual shape
+/// at N = 10^5 — you name the split-off ranges, the rest of the world
+/// stays connected).
 pub fn validate_population_plan(plan: &FaultPlan, population: u64) -> Result<()> {
     for ev in &plan.events {
         match ev {
@@ -685,11 +731,25 @@ pub fn validate_population_plan(plan: &FaultPlan, population: u64) -> Result<()>
                     population
                 );
             }
-            other => bail!(
-                "population mode supports crash/rejoin fault events only \
-                 (a partition over a per-round sampled cohort is ill-defined); got '{}'",
-                other.describe()
-            ),
+            FaultEvent::Partition { groups, .. } => {
+                let mut seen = std::collections::HashSet::new();
+                for g in groups {
+                    for &w in g {
+                        ensure!(
+                            (w as u64) < population,
+                            "fault event '{}' names worker {w} outside the population (N = {})",
+                            ev.describe(),
+                            population
+                        );
+                        ensure!(
+                            seen.insert(w),
+                            "fault event '{}' lists worker {w} twice",
+                            ev.describe()
+                        );
+                    }
+                }
+            }
+            FaultEvent::Heal { .. } => {}
         }
     }
     Ok(())
@@ -699,53 +759,270 @@ pub fn validate_population_plan(plan: &FaultPlan, population: u64) -> Result<()>
 /// round-boundary event semantics as [`FaultState`], applied to an
 /// *eligibility pool* over stable population ids instead of the dense
 /// per-slot [`AliveSet`]. A crashed id stays out of every cohort the
-/// sampler draws until its `rejoin@` event fires; state is O(downed), not
-/// O(N). Built only from plans that passed
-/// [`validate_population_plan`].
+/// sampler draws until it rejoins (explicit event, random draw, or net
+/// reconnect); a partition assigns listed id sets to components the
+/// engine projects onto the cohort's slots each round. State is
+/// O(downed + touched + partition spec), never O(N). Built only from
+/// plans that passed [`validate_population_plan`].
 #[derive(Debug)]
 pub struct PopulationFaults {
     /// events sorted stably by round (spec order breaks ties, matching
     /// [`FaultState`])
     events: Vec<FaultEvent>,
     cursor: usize,
+    /// events synthesized at run time (the net backend maps a dead worker
+    /// connection to a `Crash` on the *population id* bound to the slot)
+    injected: Vec<FaultEvent>,
     /// currently-downed population ids (sorted; deterministic iteration)
     down: std::collections::BTreeSet<u64>,
     n_pop: u64,
+    rate: f64,
+    rejoin_rate: f64,
+    seed: u64,
+    /// lazily-built per-id random-process streams: id -> (stream, rounds
+    /// drawn so far). Only sampled and downed ids ever appear here, so the
+    /// random process costs O(touched) per run, not O(N).
+    draws: std::collections::HashMap<u64, (Rng, usize)>,
+    /// active partition: per listed group (spec order), sorted disjoint
+    /// inclusive id intervals; unlisted ids share the implicit trailing
+    /// component `groups.len()`
+    partition: Option<Vec<Vec<(u64, u64)>>>,
+    engaged: bool,
 }
 
 impl PopulationFaults {
-    /// Replay machine for `plan` over a population of `n_pop` ids.
-    pub fn new(plan: &FaultPlan, n_pop: u64) -> Result<Self> {
+    /// Replay machine for `plan` plus the seeded random process
+    /// (`rate`/`rejoin_rate`, streams `"fault/{id}"`) over a population of
+    /// `n_pop` ids.
+    pub fn new(
+        plan: &FaultPlan,
+        n_pop: u64,
+        rate: f64,
+        rejoin_rate: f64,
+        seed: u64,
+    ) -> Result<Self> {
         validate_population_plan(plan, n_pop)?;
+        ensure!((0.0..1.0).contains(&rate), "fault_rate must be in [0, 1), got {rate}");
+        ensure!(
+            (0.0..1.0).contains(&rejoin_rate),
+            "rejoin_rate must be in [0, 1), got {rejoin_rate}"
+        );
         let mut events = plan.events.clone();
         events.sort_by_key(FaultEvent::round);
-        Ok(Self { events, cursor: 0, down: std::collections::BTreeSet::new(), n_pop })
+        let engaged = !events.is_empty() || rate > 0.0;
+        Ok(Self {
+            events,
+            cursor: 0,
+            injected: Vec::new(),
+            down: std::collections::BTreeSet::new(),
+            n_pop,
+            rate,
+            rejoin_rate,
+            seed,
+            draws: std::collections::HashMap::new(),
+            partition: None,
+            engaged,
+        })
     }
 
-    /// Apply every event due at the start of 1-based `round`, returning
-    /// them in applied order. Inconsistent schedules (crash a downed id,
-    /// rejoin an up id) are hard errors, mirroring [`FaultState`].
+    /// Queue a service-plane event for an upcoming round, keyed on the
+    /// population id — the net backend's dead-connection mapping under
+    /// sampling ([`FaultState::inject`] is the dense twin). Injection
+    /// engages the fault machinery if it wasn't already.
+    pub fn inject(&mut self, ev: FaultEvent) -> Result<()> {
+        match &ev {
+            FaultEvent::Crash { worker, .. } | FaultEvent::Rejoin { worker, .. } => {
+                ensure!(
+                    (*worker as u64) < self.n_pop,
+                    "injected fault event '{}' names worker {} outside the population (N = {})",
+                    ev.describe(),
+                    worker,
+                    self.n_pop
+                );
+            }
+            other => bail!(
+                "population mode injects crash/rejoin events only; got '{}'",
+                other.describe()
+            ),
+        }
+        self.injected.push(ev);
+        self.engaged = true;
+        Ok(())
+    }
+
+    /// Apply every event due at the start of 1-based `round` — the explicit
+    /// schedule first, then injected service-plane events — returning them
+    /// in applied order. Inconsistent schedules (crash a downed id, rejoin
+    /// an up id, heal a whole graph) are hard errors, mirroring
+    /// [`FaultState`].
     pub fn begin_round(&mut self, round: usize) -> Result<Vec<FaultEvent>> {
         let mut applied = Vec::new();
         while self.cursor < self.events.len() && self.events[self.cursor].round() <= round {
             let ev = self.events[self.cursor].clone();
             self.cursor += 1;
-            match &ev {
-                FaultEvent::Crash { worker, .. } => ensure!(
-                    self.down.insert(*worker as u64),
-                    "fault event '{}' crashes a worker that is already down",
-                    ev.describe()
-                ),
-                FaultEvent::Rejoin { worker, .. } => ensure!(
-                    self.down.remove(&(*worker as u64)),
-                    "fault event '{}' rejoins a worker that is not down",
-                    ev.describe()
-                ),
-                _ => unreachable!("validated at construction"),
-            }
+            self.apply_event(&ev)?;
             applied.push(ev);
         }
+        let mut future = Vec::new();
+        for ev in std::mem::take(&mut self.injected) {
+            ensure!(
+                ev.round() >= round,
+                "injected fault event '{}' is due at round {}, but round {round} already started",
+                ev.describe(),
+                ev.round()
+            );
+            if ev.round() == round {
+                self.apply_event(&ev)?;
+                applied.push(ev);
+            } else {
+                future.push(ev);
+            }
+        }
+        self.injected = future;
         Ok(applied)
+    }
+
+    fn apply_event(&mut self, ev: &FaultEvent) -> Result<()> {
+        match ev {
+            FaultEvent::Crash { worker, .. } => ensure!(
+                self.down.insert(*worker as u64),
+                "fault event '{}' crashes a worker that is already down",
+                ev.describe()
+            ),
+            FaultEvent::Rejoin { worker, .. } => ensure!(
+                self.down.remove(&(*worker as u64)),
+                "fault event '{}' rejoins a worker that is not down",
+                ev.describe()
+            ),
+            FaultEvent::Partition { groups, .. } => {
+                // Compress each listed group to sorted disjoint inclusive
+                // intervals — component lookups stay cheap even when a
+                // range names 10^5 ids.
+                let compressed: Vec<Vec<(u64, u64)>> = groups
+                    .iter()
+                    .map(|g| {
+                        let mut ids: Vec<u64> = g.iter().map(|&w| w as u64).collect();
+                        ids.sort_unstable();
+                        let mut ivs: Vec<(u64, u64)> = Vec::new();
+                        for id in ids {
+                            match ivs.last_mut() {
+                                Some(last) if id <= last.1 => {}
+                                Some(last) if id == last.1 + 1 => last.1 = id,
+                                _ => ivs.push((id, id)),
+                            }
+                        }
+                        ivs
+                    })
+                    .collect();
+                self.partition = Some(compressed);
+            }
+            FaultEvent::Heal { .. } => ensure!(
+                self.partition.take().is_some(),
+                "fault event '{}': the graph is not partitioned",
+                ev.describe()
+            ),
+        }
+        Ok(())
+    }
+
+    /// The seeded random fault process over the current cohort: one draw
+    /// per id in (bound ∪ down), ids ascending, from the id's own
+    /// `"fault/{id}"` stream — the exact per-id mirror of the dense
+    /// [`FaultState`] process, so `N == k` replays bit-identically.
+    /// `bound` maps engine slot → bound population id and `alive` is the
+    /// slot alive-set the engine is about to train with: a crash draw for
+    /// a bound id downs its slot (with the dense quorum-preserving undo),
+    /// while a rejoin draw for an *unbound* id only returns it to the
+    /// eligibility pool (the engine warm-starts it when next sampled).
+    /// Returns the synthesized events in application order.
+    pub fn random_round(
+        &mut self,
+        round: usize,
+        bound: &[Option<u64>],
+        alive: &mut AliveSet,
+    ) -> Vec<FaultEvent> {
+        let mut applied = Vec::new();
+        if self.rate <= 0.0 && self.rejoin_rate <= 0.0 {
+            return applied;
+        }
+        let mut slot_of = std::collections::HashMap::new();
+        let mut ids = std::collections::BTreeSet::new();
+        for (slot, id) in bound.iter().enumerate() {
+            if let Some(id) = *id {
+                ids.insert(id);
+                slot_of.insert(id, slot);
+            }
+        }
+        ids.extend(self.down.iter().copied());
+        for id in ids {
+            let u = self.draw(id, round);
+            if !self.down.contains(&id) {
+                if self.rate > 0.0 && u < self.rate {
+                    let slot = slot_of[&id];
+                    alive.set_alive(slot, false);
+                    alive.refresh();
+                    if alive.member_count() == 0 {
+                        alive.set_alive(slot, true); // would kill the quorum
+                        alive.refresh();
+                    } else {
+                        self.down.insert(id);
+                        applied.push(FaultEvent::Crash { round, worker: id as usize });
+                    }
+                }
+            } else if self.rejoin_rate > 0.0 && u < self.rejoin_rate {
+                self.down.remove(&id);
+                if let Some(&slot) = slot_of.get(&id) {
+                    alive.set_alive(slot, true);
+                    alive.refresh();
+                }
+                applied.push(FaultEvent::Rejoin { round, worker: id as usize });
+            }
+        }
+        applied
+    }
+
+    /// One `fault_rate`/`rejoin_rate` draw for `id` at 1-based `round`,
+    /// first catching the id's private stream up to one draw per elapsed
+    /// round — an id outside every cohort consumes nothing until touched.
+    fn draw(&mut self, id: u64, round: usize) -> f64 {
+        let seed = self.seed;
+        let (rng, drawn) = self
+            .draws
+            .entry(id)
+            .or_insert_with(|| (Rng::stream(seed, &format!("fault/{id}")), 0));
+        debug_assert!(*drawn < round, "double draw for id {id} at round {round}");
+        while *drawn + 1 < round {
+            rng.next_f64();
+            *drawn += 1;
+        }
+        *drawn = round;
+        rng.next_f64()
+    }
+
+    /// The partition component of `id` under the active split: listed
+    /// groups take components `0..g` in spec order (so primary-selection
+    /// ties break toward the first-listed set, exactly as in the dense
+    /// [`AliveSet`]); unlisted ids share the implicit trailing component
+    /// `g`. `None` when the graph is whole.
+    pub fn component_of(&self, id: u64) -> Option<usize> {
+        let groups = self.partition.as_ref()?;
+        for (gi, ivs) in groups.iter().enumerate() {
+            if ivs.iter().any(|&(a, b)| a <= id && id <= b) {
+                return Some(gi);
+            }
+        }
+        Some(groups.len())
+    }
+
+    /// Number of partition components (listed groups + the implicit rest
+    /// component), or `None` when the graph is whole.
+    pub fn partition_components(&self) -> Option<usize> {
+        self.partition.as_ref().map(|g| g.len() + 1)
+    }
+
+    /// Whether a partition is active.
+    pub fn partitioned(&self) -> bool {
+        self.partition.is_some()
     }
 
     /// The currently-downed ids (ascending) — the sampler's rejection set.
@@ -758,9 +1035,17 @@ impl PopulationFaults {
         self.n_pop - self.down.len() as u64
     }
 
-    /// Whether any event is scheduled (an empty plan is bit-inert).
+    /// Whether any fault source is configured (an empty plan with zero
+    /// rates is bit-inert). Mirrors [`FaultState::engaged`]: a bare
+    /// `rejoin_rate` with nothing down never fires, so it alone does not
+    /// engage.
     pub fn engaged(&self) -> bool {
-        !self.events.is_empty()
+        self.engaged
+    }
+
+    /// Whether the seeded random process is configured.
+    pub fn random_engaged(&self) -> bool {
+        self.rate > 0.0 || self.rejoin_rate > 0.0
     }
 }
 
@@ -956,6 +1241,124 @@ mod tests {
         assert!(fs.inject(FaultEvent::Crash { round: 1, worker: 9 }).is_err());
         fs.inject(FaultEvent::Crash { round: 1, worker: 2 }).unwrap();
         assert!(fs.begin_round(2).is_err(), "round-1 injection applied at round 2");
+    }
+
+    #[test]
+    fn partition_ranges_parse_and_compress() {
+        let ev = FaultEvent::parse("partition@2:0-3|4,5,6,9").unwrap();
+        match &ev {
+            FaultEvent::Partition { groups, .. } => {
+                assert_eq!(groups[0], vec![0, 1, 2, 3]);
+                assert_eq!(groups[1], vec![4, 5, 6, 9]);
+            }
+            other => panic!("parsed {other:?}, not a partition"),
+        }
+        // Ascending runs of >= 3 compress; pairs and singletons stay
+        // literal, so legacy trace strings are untouched.
+        assert_eq!(ev.describe(), "partition@2:0-3|4-6,9");
+        assert_eq!(FaultEvent::parse(&ev.describe()).unwrap(), ev);
+        let ev = FaultEvent::parse("partition@4:0,1|2,3").unwrap();
+        assert_eq!(ev.describe(), "partition@4:0,1|2,3");
+        for bad in ["partition@2:5-3|0", "partition@2:0-x|1"] {
+            assert!(FaultEvent::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn population_plan_accepts_ranged_partitions() {
+        let plan = FaultPlan::parse("partition@2:0-9|100-199;heal@4").unwrap();
+        validate_population_plan(&plan, 1_000).unwrap();
+        // Out-of-population / duplicate ids are loud errors.
+        assert!(validate_population_plan(&plan, 150).is_err());
+        let dup = FaultPlan::parse("partition@2:0-5|3-9").unwrap();
+        assert!(validate_population_plan(&dup, 100).is_err());
+    }
+
+    #[test]
+    fn population_partition_components_project_over_ids() {
+        let plan = FaultPlan::parse("partition@2:10-19|30,31;heal@5").unwrap();
+        let mut pf = PopulationFaults::new(&plan, 1_000, 0.0, 0.0, 7).unwrap();
+        assert!(pf.engaged());
+        assert!(pf.begin_round(1).unwrap().is_empty());
+        assert!(!pf.partitioned());
+        assert_eq!(pf.begin_round(2).unwrap().len(), 1);
+        assert!(pf.partitioned());
+        assert_eq!(pf.partition_components(), Some(3));
+        assert_eq!(pf.component_of(12), Some(0));
+        assert_eq!(pf.component_of(30), Some(1));
+        assert_eq!(pf.component_of(999), Some(2), "unlisted ids share the rest component");
+        pf.begin_round(3).unwrap();
+        pf.begin_round(4).unwrap();
+        assert_eq!(pf.begin_round(5).unwrap().len(), 1, "heal applies");
+        assert!(!pf.partitioned());
+        assert_eq!(pf.component_of(12), None);
+        // Healing a whole graph is a loud error.
+        let plan = FaultPlan::parse("heal@1").unwrap();
+        let mut pf = PopulationFaults::new(&plan, 10, 0.0, 0.0, 7).unwrap();
+        assert!(pf.begin_round(1).is_err());
+    }
+
+    #[test]
+    fn population_random_process_mirrors_the_dense_machine_at_n_equals_k() {
+        // Same seed, same rates: the per-id streams must reproduce the
+        // dense per-worker process event-for-event when every id is bound
+        // to its own slot (the N == k embedding).
+        let m = 5;
+        let mut dense = FaultState::new(&FaultPlan::default(), 0.4, 0.3, 11, m);
+        let mut pop =
+            PopulationFaults::new(&FaultPlan::default(), m as u64, 0.4, 0.3, 11).unwrap();
+        assert!(pop.engaged() && pop.random_engaged());
+        let bound: Vec<Option<u64>> = (0..m as u64).map(Some).collect();
+        let mut alive = AliveSet::full(m);
+        for round in 1..=40 {
+            let d = dense.begin_round(round).unwrap();
+            assert!(pop.begin_round(round).unwrap().is_empty());
+            let p = pop.random_round(round, &bound, &mut alive);
+            assert_eq!(
+                d.applied.iter().map(FaultEvent::describe).collect::<Vec<_>>(),
+                p.iter().map(FaultEvent::describe).collect::<Vec<_>>(),
+                "round {round} diverged"
+            );
+            assert_eq!(dense.alive.members(), alive.members(), "round {round} alive drift");
+        }
+        let dense_down: Vec<u64> =
+            (0..m).filter(|&w| !dense.alive.is_alive(w)).map(|w| w as u64).collect();
+        let pop_down: Vec<u64> = pop.down().iter().copied().collect();
+        assert_eq!(dense_down, pop_down, "down set must mirror the dense dead set");
+    }
+
+    #[test]
+    fn population_draws_are_lazy_and_position_aligned() {
+        // Stream position depends only on (id, round): an id untouched for
+        // nine rounds catches up to the same draw a round-by-round id sees.
+        let mk = || PopulationFaults::new(&FaultPlan::default(), 100, 0.2, 0.1, 9).unwrap();
+        let mut eager = mk();
+        let mut lazy = mk();
+        let seq: Vec<f64> = (1..=10).map(|r| eager.draw(5, r)).collect();
+        assert_eq!(lazy.draw(5, 10), seq[9], "lazy catch-up must land on the same draw");
+        // Different ids draw from genuinely different streams.
+        let mut other = mk();
+        assert_ne!(other.draw(6, 10), seq[9]);
+    }
+
+    #[test]
+    fn population_injection_validates_and_engages() {
+        let mut pf = PopulationFaults::new(&FaultPlan::default(), 50, 0.0, 0.0, 3).unwrap();
+        assert!(!pf.engaged());
+        assert!(pf.inject(FaultEvent::Crash { round: 2, worker: 99 }).is_err());
+        assert!(pf
+            .inject(FaultEvent::Partition { round: 2, groups: vec![vec![0], vec![1]] })
+            .is_err());
+        pf.inject(FaultEvent::Crash { round: 2, worker: 7 }).unwrap();
+        assert!(pf.engaged());
+        assert!(pf.begin_round(1).unwrap().is_empty());
+        let r2 = pf.begin_round(2).unwrap();
+        assert_eq!(r2.len(), 1);
+        assert!(pf.down().contains(&7));
+        // Stale injections are loud errors, as in the dense machine.
+        let mut pf = PopulationFaults::new(&FaultPlan::default(), 50, 0.0, 0.0, 3).unwrap();
+        pf.inject(FaultEvent::Crash { round: 1, worker: 7 }).unwrap();
+        assert!(pf.begin_round(2).is_err());
     }
 
     #[test]

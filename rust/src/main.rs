@@ -73,7 +73,7 @@ fn print_usage() {
          olsgd sweep  --algos sync,local,overlap-m --taus 1,2,8,24 [--set key=value]... [--out DIR]\n  \
          olsgd report --dir DIR\n  \
          olsgd coordinator [--listen HOST:PORT] [train flags]   (net plane, external workers)\n  \
-         olsgd worker --connect HOST:PORT [--lanes N] [--proc-index P] [--die-after R]\n\
+         olsgd worker --connect HOST:PORT [--lanes N] [--proc-index P] [--die-after R] [--timeout S]\n\
          \n\
          Algorithms: sync local overlap overlap-m overlap-ada overlap-gossip easgd eamsgd\n\
                      cocod powersgd\n\
@@ -367,6 +367,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
     let mut lanes = 1usize;
     let mut proc_index: Option<usize> = None;
     let mut die_after: Option<u64> = None;
+    let mut timeout_s = 10.0f64;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -382,12 +383,15 @@ fn cmd_worker(args: &[String]) -> Result<()> {
                 die_after =
                     Some(next(args, &mut i, "--die-after")?.parse().context("bad --die-after")?);
             }
+            "--timeout" => {
+                timeout_s = next(args, &mut i, "--timeout")?.parse().context("bad --timeout")?;
+            }
             other => bail!("unknown flag '{other}'"),
         }
         i += 1;
     }
     let addr = connect.context("worker requires --connect HOST:PORT")?;
-    olsgd::net::run_worker(&addr, lanes, proc_index, die_after)
+    olsgd::net::run_worker(&addr, lanes, proc_index, die_after, timeout_s)
 }
 
 fn cmd_report(args: &[String]) -> Result<()> {

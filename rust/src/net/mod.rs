@@ -9,7 +9,8 @@
 //! ```text
 //!   worker  → Hello   {lanes, proc}                      (JSON)
 //!   coord   → Welcome {slots, consumed, config}          (JSON)
-//!   coord   → PhaseReq  [phase start_step | per slot: w steps params mom mom2 adam_t]
+//!   coord   → PhaseReq  [phase start_step | per slot: w steps params mom mom2 adam_t
+//!                        (+ population id, batcher, straggler RNG when the axis is on)]
 //!   worker  → PhaseResp [per slot: w losses params mom mom2 adam_t grad?]
 //!   coord   → Ping / worker → Pong                       (liveness, each round)
 //!   coord   → Shutdown                                   (end of run)
@@ -42,11 +43,12 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::config::ExperimentConfig;
 use crate::coordinator::engine::LocalPhase;
 use crate::coordinator::{self, StepView, TrainContext, Workers};
-use crate::data::{self, GenConfig};
+use crate::data::{self, Batcher, GenConfig};
 use crate::executor::{drive_worker, WorkerRound};
 use crate::optim::LrSchedule;
 use crate::runtime;
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 
 /// A worker's `Hello`: how many slots it can serve, and (for fleet children
 /// spawned by the coordinator) its stable process index, which pins its
@@ -120,9 +122,76 @@ pub(crate) fn decode_welcome(payload: &[u8]) -> Result<(Vec<usize>, Vec<u64>, Ex
     Ok((slots, consumed, cfg))
 }
 
+/// Append one RNG's exact state (`Rng::state`): 4 little-endian `u64`
+/// words plus the spare-normal flag and bits. Wire twin of the population
+/// spill codec's record, so restore is bit-for-bit.
+fn put_rng(out: &mut Vec<u8>, rng: &Rng) {
+    let (s, spare) = rng.state();
+    for w in s {
+        wire::put_u64(out, w);
+    }
+    match spare {
+        Some(z) => {
+            wire::put_u8(out, 1);
+            wire::put_u64(out, z.to_bits());
+        }
+        None => wire::put_u8(out, 0),
+    }
+}
+
+fn get_rng(c: &mut wire::Cursor) -> Result<Rng> {
+    let s = [c.get_u64()?, c.get_u64()?, c.get_u64()?, c.get_u64()?];
+    let spare = match c.get_u8()? {
+        0 => None,
+        1 => Some(f64::from_bits(c.get_u64()?)),
+        other => bail!("bad spare-normal flag {other} in PhaseReq"),
+    };
+    Ok(Rng::from_state(s, spare))
+}
+
+/// Append a batch sampler's exact state (`Batcher::spill_parts` plus the
+/// public cursor fields).
+fn put_batcher(out: &mut Vec<u8>, b: &Batcher) {
+    let (shard, pos, brng) = b.spill_parts();
+    wire::put_u32(out, shard.len() as u32);
+    for &s in shard {
+        wire::put_u32(out, s);
+    }
+    wire::put_u64(out, pos as u64);
+    wire::put_u64(out, b.epochs_completed as u64);
+    wire::put_u8(out, b.reshuffle as u8);
+    put_rng(out, brng);
+}
+
+fn get_batcher(c: &mut wire::Cursor) -> Result<Batcher> {
+    let n = c.get_u32()? as usize;
+    let mut shard = Vec::with_capacity(n);
+    for _ in 0..n {
+        shard.push(c.get_u32()?);
+    }
+    let pos = c.get_u64()? as usize;
+    let epochs = c.get_u64()? as usize;
+    let reshuffle = match c.get_u8()? {
+        0 => false,
+        1 => true,
+        other => bail!("bad reshuffle flag {other} in PhaseReq"),
+    };
+    let rng = get_rng(c)?;
+    Ok(Batcher::from_spill_parts(shard, pos, rng, epochs, reshuffle))
+}
+
 /// Encode one batched `PhaseReq` payload for the slots of one worker
 /// process: frame-level phase/step header, then each slot's planned step
 /// count and full replica state. `views` is indexed by worker id.
+///
+/// `pop_ids` is the slot → population-id binding when the population axis
+/// is on (`None` otherwise, leaving the dense layout byte-identical).
+/// Under population the worker process cannot rebuild a slot's stochastic
+/// streams itself — its slot-keyed streams would belong to the wrong
+/// worker after a rebind — so each slot also carries its bound id and the
+/// bound worker's exact batcher + straggler-RNG state. The worker installs
+/// them, drives, and discards them; the coordinator's canonical streams
+/// advance by local replay exactly as in dense mode.
 pub(crate) fn encode_phase_req(
     out: &mut Vec<u8>,
     phase: LocalPhase,
@@ -130,6 +199,7 @@ pub(crate) fn encode_phase_req(
     slots: &[usize],
     steps: &[usize],
     views: &[StepView<'_>],
+    pop_ids: Option<&[Option<u64>]>,
 ) {
     out.clear();
     wire::put_u8(out, match phase {
@@ -146,6 +216,13 @@ pub(crate) fn encode_phase_req(
         wire::put_f32s(out, mom);
         wire::put_f32s(out, mom2);
         wire::put_f32(out, adam_t);
+        if let Some(ids) = pop_ids {
+            let id = ids[w].expect("population slot bound before the phase ships");
+            wire::put_u64(out, id);
+            let (batcher, rng) = views[w].streams_ref();
+            put_batcher(out, batcher);
+            put_rng(out, rng);
+        }
     }
 }
 
@@ -182,6 +259,21 @@ pub(crate) fn serve_phase_req(
             c.get_f32s_into(mom2)?;
             *adam_t = c.get_f32()?;
         }
+        // Population extras (both sides gate on the shipped config, so the
+        // layouts cannot disagree): install the bound worker's streams so
+        // this slot steps with the *id-keyed* batcher and straggler RNG,
+        // not the slot-keyed streams this process rebuilt at startup.
+        if ctx.cfg.population > 0 {
+            let id = c.get_u64()?;
+            ensure!(
+                id < ctx.cfg.population,
+                "PhaseReq binds slot {w} to id {id} outside the population (N = {})",
+                ctx.cfg.population
+            );
+            let batcher = get_batcher(&mut c)?;
+            let rng = get_rng(&mut c)?;
+            view.install_streams(batcher, rng);
+        }
         drive_worker(&mut view, ctx, steps, start_step, phase, scratch)?;
         wire::put_u32(resp, w as u32);
         wire::put_f64s(resp, &scratch.losses);
@@ -203,8 +295,14 @@ pub(crate) fn serve_phase_req(
 
 /// Connect with retry until `deadline` — the coordinator may still be
 /// binding (or a previous run may still own the port) when a worker starts.
+/// The retry delay is a deterministic capped exponential backoff (10 ms
+/// doubling to 640 ms): quick reconnects while the coordinator races to
+/// bind, without hammering the listener for the long tail of a large
+/// `net_timeout_s`.
 fn connect_retry(addr: &str, deadline: Duration) -> Result<TcpStream> {
     let t0 = Instant::now();
+    let mut delay = Duration::from_millis(10);
+    const DELAY_CAP: Duration = Duration::from_millis(640);
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -212,7 +310,8 @@ fn connect_retry(addr: &str, deadline: Duration) -> Result<TcpStream> {
                 if t0.elapsed() >= deadline {
                     return Err(e).with_context(|| format!("connecting to coordinator {addr}"));
                 }
-                std::thread::sleep(Duration::from_millis(50));
+                std::thread::sleep(delay.min(deadline.saturating_sub(t0.elapsed())));
+                delay = (delay * 2).min(DELAY_CAP);
             }
         }
     }
@@ -245,14 +344,20 @@ fn is_disconnect(e: &anyhow::Error) -> bool {
 /// a mid-run worker loss — which the coordinator must (and does, see
 /// rust/tests/net_backend.rs) replay bit-identically to the equivalent
 /// explicit `--fault crash@round:worker` schedule.
+///
+/// `timeout_s` bounds the connect retry (`--timeout`, default 10 s); a
+/// coordinator-spawned fleet child inherits the run's `net_timeout_s`, so
+/// the two sides of the rendezvous always agree on how long to wait.
 pub fn run_worker(
     addr: &str,
     lanes: usize,
     proc_index: Option<usize>,
     die_after: Option<u64>,
+    timeout_s: f64,
 ) -> Result<()> {
     ensure!(lanes >= 1, "a worker needs at least one lane");
-    let mut stream = connect_retry(addr, Duration::from_secs(10))?;
+    ensure!(timeout_s > 0.0, "--timeout must be positive, got {timeout_s}");
+    let mut stream = connect_retry(addr, Duration::from_secs_f64(timeout_s))?;
     stream.set_nodelay(true).context("setting TCP_NODELAY")?;
     wire::write_frame(
         &mut stream,
@@ -288,10 +393,16 @@ pub fn run_worker(
     let mut workers = Workers::new(&ctx);
     // A rejoiner claims slots that already consumed draws; replay them so
     // the slot's batcher/RNG streams resume exactly where they left off.
-    for (&w, &n) in slots.iter().zip(&consumed) {
-        let mut view = workers.view_at(w);
-        for _ in 0..n {
-            view.replay_draws(&ctx);
+    // Population mode skips this: every `PhaseReq` ships the bound id's
+    // exact stream state, so the slot-keyed streams built above are never
+    // consulted (and fast-forwarding them would be fast-forwarding the
+    // wrong worker's streams).
+    if cfg.population == 0 {
+        for (&w, &n) in slots.iter().zip(&consumed) {
+            let mut view = workers.view_at(w);
+            for _ in 0..n {
+                view.replay_draws(&ctx);
+            }
         }
     }
 

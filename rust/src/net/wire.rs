@@ -21,8 +21,10 @@ use anyhow::{ensure, Context, Result};
 /// Frame magic: `"OLSG"` as a big-endian u32 literal, written little-endian.
 pub const MAGIC: u32 = 0x4F4C_5347;
 /// Wire protocol version; bumped on any layout change. A mismatch is a hard
-/// handshake error, never a silent reinterpretation.
-pub const VERSION: u16 = 1;
+/// handshake error, never a silent reinterpretation. v2: `PhaseReq` grew
+/// per-slot population extras (bound id + batcher + straggler-RNG state)
+/// when the population axis is on, and workers take `--timeout`.
+pub const VERSION: u16 = 2;
 
 /// Worker → coordinator greeting (JSON payload: `lanes`, `proc`).
 pub const KIND_HELLO: u16 = 1;

@@ -21,8 +21,12 @@
 //!   evicted to a disk **spill file** through a bit-exact codec, so
 //!   resident memory is O(k + reserve), never O(N);
 //! * **fault composition** over ids, not slots: a crashed id leaves the
-//!   sampling pool until its rejoin (`fault::PopulationFaults`) — the
-//!   slot-level alive-set machinery stays disengaged.
+//!   sampling pool until its rejoin, the seeded random process draws from
+//!   per-id streams (`fault/{id}`, lazily — O(touched) cost), and a
+//!   partition assigns id sets to components that the engine projects
+//!   onto the cohort's slots each round (`fault::PopulationFaults`). The
+//!   slot-level alive-set machinery engages exactly when a cohort member
+//!   is down or partitioned off, mirroring the dense engine.
 //!
 //! The correctness spine is strict generalization: with `population == k
 //! == workers` the sampler selects every id each round, ids coincide with
@@ -65,6 +69,12 @@ pub struct WorkerState {
     pub rng: Rng,
     /// error-feedback residual (compression on only)
     pub residual: Option<Vec<f32>>,
+    /// PowerSGD gradient-path error-feedback residual (`--compress
+    /// powersgd` only)
+    pub psgd_error: Option<Vec<f32>>,
+    /// PowerSGD warm low-rank bases, one `Q` per factorized matrix
+    /// (`--compress powersgd` only)
+    pub psgd_qs: Option<Vec<Vec<f32>>>,
 }
 
 /// Everything needed to materialize a never-seen worker from scratch —
@@ -78,6 +88,12 @@ struct Materializer {
     init: Vec<f32>,
     /// residual length (model size when compression is on, else 0 → None)
     residual_len: usize,
+    /// PowerSGD fresh-worker template: the shared seeded `Q` inits, one
+    /// per factorized matrix (`--compress powersgd` only). A fresh id's
+    /// gradient residual is zeros(n) and its bases are these inits —
+    /// exactly what `CompressState::reset_worker` installs on a dense
+    /// rejoin, so fresh-vs-reset state is indistinguishable.
+    psgd_qs_init: Option<Vec<Vec<f32>>>,
 }
 
 impl Materializer {
@@ -100,6 +116,8 @@ impl Materializer {
             } else {
                 None
             },
+            psgd_error: self.psgd_qs_init.as_ref().map(|_| vec![0.0; self.n]),
+            psgd_qs: self.psgd_qs_init.clone(),
         }
     }
 }
@@ -108,10 +126,26 @@ impl Materializer {
 // Spill codec — hand-rolled little-endian record, bit-exact both ways
 // ---------------------------------------------------------------------------
 
-const SPILL_VERSION: u8 = 1;
+/// Bumped 1 → 2 when the PowerSGD warm-basis fields joined the record;
+/// version-1 records are rejected loudly (spill files never outlive a
+/// run, so there is no migration path to maintain).
+const SPILL_VERSION: u8 = 2;
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// FNV-1a over the record body — the integrity trailer [`encode_state`]
+/// appends and [`decode_state`] verifies, so a flipped bit anywhere in a
+/// spilled record fails loudly instead of silently resuming a worker from
+/// corrupt state.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
@@ -143,7 +177,10 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.pos + n <= self.buf.len(), "truncated spill record");
+        // `pos <= len` always holds, so `len - pos` cannot underflow — and
+        // phrasing the bound this way keeps a corrupt (huge) length prefix
+        // from overflowing `pos + n` into a silent wraparound.
+        ensure!(n <= self.buf.len() - self.pos, "truncated spill record");
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
@@ -159,7 +196,8 @@ impl<'a> Reader<'a> {
 
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 4)?;
+        let bytes = n.checked_mul(4).context("corrupt length prefix in spill record")?;
+        let raw = self.take(bytes)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
@@ -176,7 +214,8 @@ impl<'a> Reader<'a> {
 
 /// Serialize a worker's state into `out` (cleared first). Everything is
 /// exact bits: f32/f64 via `to_le_bytes`/`to_bits`, so
-/// [`decode_state`] ∘ [`encode_state`] is the identity.
+/// [`decode_state`] ∘ [`encode_state`] is the identity. The record ends
+/// with an FNV-1a trailer over the body, verified on decode.
 pub fn encode_state(st: &WorkerState, out: &mut Vec<u8>) {
     out.clear();
     out.push(SPILL_VERSION);
@@ -202,6 +241,22 @@ pub fn encode_state(st: &WorkerState, out: &mut Vec<u8>) {
         }
         None => out.push(0),
     }
+    // PowerSGD warm state: gradient residual + one Q basis per matrix.
+    // Either both are present (`--compress powersgd`) or neither is.
+    match (&st.psgd_error, &st.psgd_qs) {
+        (Some(err), Some(qs)) => {
+            out.push(1);
+            put_f32s(out, err);
+            put_u64(out, qs.len() as u64);
+            for q in qs {
+                put_f32s(out, q);
+            }
+        }
+        (None, None) => out.push(0),
+        _ => unreachable!("psgd error and bases travel together"),
+    }
+    let sum = fnv1a(out);
+    put_u64(out, sum);
 }
 
 /// Rebuild a worker's state from an [`encode_state`] record, bit-for-bit.
@@ -215,7 +270,8 @@ pub fn decode_state(buf: &[u8]) -> Result<WorkerState> {
     let mom2 = r.f32s()?;
     let adam_t = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
     let shard_len = r.u64()? as usize;
-    let raw = r.take(shard_len * 4)?;
+    let shard_bytes = shard_len.checked_mul(4).context("corrupt shard length in spill record")?;
+    let raw = r.take(shard_bytes)?;
     let shard: Vec<u32> =
         raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
     let pos = r.u64()? as usize;
@@ -232,6 +288,26 @@ pub fn decode_state(buf: &[u8]) -> Result<WorkerState> {
         1 => Some(r.f32s()?),
         other => bail!("bad residual flag {other} in spill record"),
     };
+    let (psgd_error, psgd_qs) = match r.u8()? {
+        0 => (None, None),
+        1 => {
+            let err = r.f32s()?;
+            let n_qs = r.u64()? as usize;
+            ensure!(n_qs <= 1 << 20, "implausible psgd basis count {n_qs} in spill record");
+            let mut qs = Vec::with_capacity(n_qs);
+            for _ in 0..n_qs {
+                qs.push(r.f32s()?);
+            }
+            (Some(err), Some(qs))
+        }
+        other => bail!("bad psgd flag {other} in spill record"),
+    };
+    let body = r.pos;
+    let sum = r.u64()?;
+    ensure!(
+        sum == fnv1a(&buf[..body]),
+        "spill record checksum mismatch (corrupted record)"
+    );
     ensure!(r.pos == buf.len(), "trailing bytes in spill record");
     Ok(WorkerState {
         id,
@@ -242,6 +318,8 @@ pub fn decode_state(buf: &[u8]) -> Result<WorkerState> {
         batcher: Batcher::from_spill_parts(shard, pos, brng, epochs, reshuffle),
         rng,
         residual,
+        psgd_error,
+        psgd_qs,
     })
 }
 
@@ -351,6 +429,8 @@ impl PopulationStore {
             batcher: Batcher::from_spill_parts(Vec::new(), 0, Rng::seed_from(0), 0, false),
             rng: Rng::seed_from(0),
             residual: None,
+            psgd_error: None,
+            psgd_qs: None,
         })
     }
 
@@ -482,15 +562,27 @@ pub struct PopulationState {
     pub store: PopulationStore,
     /// population id bound to each slot (`None` before round 1)
     pub bound: Vec<Option<u64>>,
+    /// ids that rejoined the pool while *unbound* (random draw or explicit
+    /// event): the engine warm-starts them from the anchor when they are
+    /// next sampled, completing the dense rejoin protocol over ids
+    pub pending_warm: BTreeSet<u64>,
+    /// last value pushed to the survivor series (starts at N): the engine
+    /// notes a new point only when the value moves, which at `N == k`
+    /// reproduces the dense `stepping_count`-changed rule exactly
+    pub last_survivors: usize,
     rounds_sampled: u64,
     resident_max: u64,
 }
 
 impl PopulationState {
     /// Build the axis state from a *resolved* config (`None` when
-    /// `population == 0`). Engaging with an unresolved config — where the
+    /// `population == 0`). `psgd_qs_init` is the compressor's shared
+    /// seeded PowerSGD basis template (`CompressState::powersgd_qs_init`)
+    /// — `Some` exactly when `--compress powersgd` is active, so fresh
+    /// population workers materialize with the same warm state a dense
+    /// worker starts with. Engaging with an unresolved config — where the
     /// slot count and cohort size disagree — is a hard error, not a guess.
-    pub fn build(ctx: &TrainContext) -> Result<Option<Self>> {
+    pub fn build(ctx: &TrainContext, psgd_qs_init: Option<Vec<Vec<f32>>>) -> Result<Option<Self>> {
         let cfg = ctx.cfg;
         if cfg.population == 0 {
             return Ok(None);
@@ -511,6 +603,7 @@ impl PopulationState {
             reshuffle: cfg.reshuffle,
             init: crate::model::init_params(&ctx.rt.manifest, cfg.seed),
             residual_len: if cfg.compress != CompressKind::None { ctx.rt.n } else { 0 },
+            psgd_qs_init,
         };
         let counters = PopulationCounters {
             population: cfg.population,
@@ -522,7 +615,13 @@ impl PopulationState {
             n_pop: cfg.population,
             k,
             sample_seed,
-            faults: PopulationFaults::new(&cfg.fault, cfg.population)?,
+            faults: PopulationFaults::new(
+                &cfg.fault,
+                cfg.population,
+                cfg.fault_rate,
+                cfg.rejoin_rate,
+                cfg.seed,
+            )?,
             store: PopulationStore {
                 mat,
                 resident: HashMap::new(),
@@ -534,14 +633,41 @@ impl PopulationState {
                 counters,
             },
             bound: vec![None; k],
+            pending_warm: BTreeSet::new(),
+            last_survivors: cfg.population as usize,
             rounds_sampled: 0,
             resident_max: 0,
         }))
     }
 
-    /// This round's cohort (ascending ids, one per slot).
+    /// This round's cohort (ascending ids, one per slot). When the downed
+    /// set squeezes the eligible pool below k — the N ≈ k regime; at
+    /// scale the sampler never gets near it — every eligible id
+    /// participates and the smallest downed ids pad the remaining slots
+    /// as *parked* workers (their slots are not alive and take no steps).
+    /// That padding is what keeps `bound[slot] == slot` under faults at
+    /// `N == k`, so a crash there replays the dense engine bit-for-bit.
     pub fn sample(&self, round: usize) -> Result<Vec<u64>> {
-        sample_cohort(self.n_pop, self.k, self.sample_seed, round, self.faults.down())
+        let down = self.faults.down();
+        if self.faults.eligible() < self.k as u64 {
+            let mut cohort: Vec<u64> =
+                (0..self.n_pop).filter(|id| !down.contains(id)).collect();
+            for &id in down {
+                if cohort.len() >= self.k {
+                    break;
+                }
+                cohort.push(id);
+            }
+            cohort.sort_unstable();
+            ensure!(
+                cohort.len() == self.k,
+                "population {} cannot fill a cohort of {}",
+                self.n_pop,
+                self.k
+            );
+            return Ok(cohort);
+        }
+        sample_cohort(self.n_pop, self.k, self.sample_seed, round, down)
     }
 
     /// Close one bound round: bump the round counter and fold the
@@ -593,6 +719,11 @@ mod tests {
             batcher,
             rng,
             residual: Some((0..n).map(|i| 1.0 / (1.0 + i as f32)).collect()),
+            psgd_error: Some((0..n).map(|i| (i as f32) * 0.5 - 2.0).collect()),
+            psgd_qs: Some(vec![
+                (0..6).map(|i| (i as f32).cos()).collect(),
+                (0..4).map(|i| 0.1 * i as f32 + 0.75).collect(),
+            ]),
         }
     }
 
@@ -620,6 +751,18 @@ mod tests {
         for (a, b) in x.iter().zip(&y) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+        let (ea, eb) = (st.psgd_error.unwrap(), back.psgd_error.unwrap());
+        for (a, b) in ea.iter().zip(&eb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (qa, qb) = (st.psgd_qs.unwrap(), back.psgd_qs.unwrap());
+        assert_eq!(qa.len(), qb.len());
+        for (x, y) in qa.iter().zip(&qb) {
+            assert_eq!(x.len(), y.len());
+            for (a, b) in x.iter().zip(y) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
         // The restored stream continues exactly where the original would.
         let mut orig = st.rng;
         let mut restored = back.rng;
@@ -640,6 +783,17 @@ mod tests {
         let mut bad = buf;
         bad[0] = 99;
         assert!(decode_state(&bad).is_err(), "unknown version");
+        // A state without psgd fields has the psgd flag byte right before
+        // the 8-byte checksum trailer — flip it.
+        let mut st = toy_state(2, 8, 0);
+        st.psgd_error = None;
+        st.psgd_qs = None;
+        let mut buf = Vec::new();
+        encode_state(&st, &mut buf);
+        assert!(decode_state(&buf).is_ok());
+        let flag = buf.len() - 9;
+        buf[flag] = 9;
+        assert!(decode_state(&buf).is_err(), "bad psgd flag");
     }
 
     #[test]
@@ -684,6 +838,7 @@ mod tests {
             reshuffle: true,
             init: vec![0.5; 16],
             residual_len: 16,
+            psgd_qs_init: Some(vec![vec![0.25; 8]]),
         };
         let shards: Vec<Vec<u32>> = (0..4).map(|s| (s..s + 32).collect()).collect();
         let mut store = PopulationStore {

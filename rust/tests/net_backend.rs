@@ -19,6 +19,7 @@
 use olsgd::config::{Algo, Execution, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
+use olsgd::metrics::TrainLog;
 use olsgd::runtime::ModelRuntime;
 use olsgd::simnet::StragglerModel;
 
@@ -43,12 +44,16 @@ fn base_cfg(m: usize) -> ExperimentConfig {
     cfg
 }
 
-fn digest(cfg: &ExperimentConfig) -> u64 {
+fn run(cfg: &ExperimentConfig) -> TrainLog {
     let rt = ModelRuntime::native(&cfg.model).unwrap();
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
-    run_experiment(&rt, cfg, &train, &test).unwrap().digest()
+    run_experiment(&rt, cfg, &train, &test).unwrap()
+}
+
+fn digest(cfg: &ExperimentConfig) -> u64 {
+    run(cfg).digest()
 }
 
 #[test]
@@ -115,4 +120,71 @@ fn killed_worker_process_replays_as_the_equivalent_crash_fault() {
         "a worker process dying after round 2 must be byte-identical to \
          an explicit --fault crash@3:1 schedule"
     );
+}
+
+#[test]
+fn net_backend_serves_sampled_cohorts() {
+    // PR-9 lifted composition: 8 machine slots over a 24-worker
+    // population, served by 4 two-lane processes. The slot → id binding
+    // (plus each bound worker's batcher and straggler stream) travels in
+    // `PhaseReq`, so cohort churn across rounds must not move a bit
+    // relative to the sim backend.
+    let mut cfg = base_cfg(8);
+    cfg.algo = Algo::OverlapM;
+    cfg.epochs = 3.0; // 6 global steps -> 3 rounds of cohort churn
+    cfg.set("population", "24").unwrap();
+    cfg.set("sample_k", "8").unwrap();
+    let sim = run(&cfg);
+    cfg.execution = Execution::Net;
+    let net = run(&cfg);
+    assert_eq!(sim.digest(), net.digest(), "sampled cohorts over net drifted from sim");
+    assert_eq!(
+        sim.population.unwrap(),
+        net.population.unwrap(),
+        "store traffic must replay identically on the net backend"
+    );
+}
+
+#[test]
+fn killed_worker_under_population_replays_as_the_per_id_crash() {
+    // 4 slots on 4 single-lane processes over a 12-worker population.
+    // `net_kill=1:2` kills proc 1 (slot 1) after round 2, so the boundary
+    // poll before round 3 reports a slot crash; the engine translates it
+    // through the round-2 binding into a per-id crash. Scheduling that
+    // exact `crash@3:id` on sim must reproduce the digest byte-for-byte.
+    let mut dead = base_cfg(4);
+    dead.algo = Algo::OverlapM;
+    dead.epochs = 4.0; // 8 global steps -> 4 rounds, death lands mid-run
+    dead.set("population", "12").unwrap();
+    dead.set("sample_k", "4").unwrap();
+    dead.set("net_kill", "1:2").unwrap();
+    dead.execution = Execution::Net;
+    let net = run(&dead);
+
+    let (round, ev) = net
+        .fault_trace
+        .first()
+        .expect("the killed process must surface as a fault event")
+        .clone();
+    assert_eq!(round, 3, "proc 1 dies after serving round 2");
+    assert!(
+        ev.starts_with("crash@3:"),
+        "the injected event must be a round-3 per-id crash, got '{ev}'"
+    );
+
+    let mut explicit = base_cfg(4);
+    explicit.algo = Algo::OverlapM;
+    explicit.epochs = 4.0;
+    explicit.set("population", "12").unwrap();
+    explicit.set("sample_k", "4").unwrap();
+    explicit.set("fault", &ev).unwrap();
+    let sim = run(&explicit);
+
+    assert_eq!(
+        net.digest(),
+        sim.digest(),
+        "a process death under sampling must be byte-identical to the \
+         equivalent per-id --fault {ev} schedule"
+    );
+    assert_eq!(net.fault_trace, sim.fault_trace);
 }

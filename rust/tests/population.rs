@@ -1,12 +1,15 @@
 //! Population-axis locks (DESIGN.md §14, EXPERIMENTS.md E17): the
 //! partial-participation sampler and the O(k) worker-state store.
 //!
-//! Three layers of guarantees:
+//! Four layers of guarantees:
 //!
 //! 1. **Strict generalization** — with `population == sample_k == workers`
 //!    the engaged axis must be *bit-identical* to the dense engine for
 //!    every algorithm, on both execution backends (the m = 16 paper-shape
-//!    golden digests cannot move).
+//!    golden digests cannot move). This now includes every composition
+//!    PR-8 refused: the `fault_rate`/`rejoin_rate` random process,
+//!    partitions over population ids, and PowerSGD's warm bases each
+//!    carry an N == k lock against their dense counterpart.
 //! 2. **Sampler properties** — exactly k distinct ids per round, replay
 //!    from `(sample_seed, round)` alone, round-to-round variation, and
 //!    composition with the `--fault` crash/rejoin schedule (a crashed id
@@ -15,15 +18,19 @@
 //!    and evict → rematerialize is bit-exact: a run forced to spill
 //!    *everything* every round (`sample_reserve = 0`) must produce the
 //!    same digest as one that never spills at all.
+//! 4. **Spill-record integrity** — truncated, bit-flipped, and
+//!    wrong-version records fail with a loud error (never a silently
+//!    corrupted worker), including the PowerSGD fields.
 
 use olsgd::config::{Algo, Execution, ExperimentConfig};
 use olsgd::coordinator::run_experiment;
-use olsgd::data::{self, GenConfig};
+use olsgd::data::{self, Batcher, GenConfig};
 use olsgd::metrics::TrainLog;
-use olsgd::population::sample_cohort;
+use olsgd::population::{decode_state, encode_state, sample_cohort, WorkerState};
 use olsgd::runtime::ModelRuntime;
 use olsgd::simnet::StragglerModel;
 use olsgd::util::proptest::property;
+use olsgd::util::rng::Rng;
 use std::collections::BTreeSet;
 
 /// The m = 16 paper cluster shape shared with the E13/E14 suites: 4 rounds
@@ -88,23 +95,13 @@ fn run_both(cfg: &ExperimentConfig) -> (TrainLog, TrainLog) {
 
 /// The acceptance criterion: engaging the axis with `population == k == m`
 /// keeps every pre-existing m = 16 golden digest bit-identical — for every
-/// algorithm the engine dispatches (PowerSGD is a refused composition, see
-/// below). With N == k the sampler selects all of `0..k` each round, ids
-/// coincide with slots, and after the round-1 placement no slot ever
-/// re-binds.
+/// algorithm the engine dispatches, PowerSGD included now that its warm
+/// bases travel with the worker state. With N == k the sampler selects all
+/// of `0..k` each round, ids coincide with slots, and after the round-1
+/// placement no slot ever re-binds.
 #[test]
 fn n_equals_k_is_bit_identical_to_dense_for_every_algorithm() {
-    for algo in [
-        Algo::Sync,
-        Algo::Local,
-        Algo::Overlap,
-        Algo::OverlapM,
-        Algo::OverlapAda,
-        Algo::OverlapGossip,
-        Algo::Easgd,
-        Algo::Eamsgd,
-        Algo::Cocod,
-    ] {
+    for &algo in Algo::all() {
         let dense = native_run(&paper16(algo));
         let mut cfg = paper16(algo);
         cfg.set("population", "16").unwrap();
@@ -149,12 +146,13 @@ fn engaged_runs_agree_across_execution_backends() {
     );
 }
 
-/// Compression composes with sampling (the error-feedback residual is part
-/// of the swapped worker state): topk and qsgd run over a churning cohort
-/// and stay backend-identical; N == k compressed runs match dense.
+/// Compression composes with sampling (the error-feedback residual — and
+/// for PowerSGD the warm `Q` bases plus gradient residual — is part of the
+/// swapped worker state): every codec runs over a churning cohort and
+/// stays backend-identical; N == k compressed runs match dense.
 #[test]
 fn compression_composes_with_sampling() {
-    for kind in ["topk", "qsgd"] {
+    for kind in ["topk", "qsgd", "powersgd"] {
         let mut cfg = sampled48(Algo::OverlapM);
         cfg.set("compress", kind).unwrap();
         let (sim, thr) = run_both(&cfg);
@@ -250,6 +248,71 @@ fn faults_compose_with_sampling_over_population_ids() {
     assert_eq!(sim.digest(), again.digest());
 }
 
+/// The `fault_rate`/`rejoin_rate` random process runs over population ids
+/// (lazy `"fault/{id}"` streams, O(k) per round). At N == k the per-id
+/// streams coincide with the dense per-worker streams, so the digest —
+/// including the fault trace — must be bit-identical to the dense engine.
+/// Over N > k the process replays exactly and agrees across backends.
+#[test]
+fn random_fault_process_composes_and_matches_dense_at_n_equals_k() {
+    let mut dense = paper16(Algo::OverlapM);
+    dense.set("fault_rate", "0.2").unwrap();
+    dense.set("rejoin_rate", "0.5").unwrap();
+    let d = native_run(&dense);
+    let mut pop = dense.clone();
+    pop.set("population", "16").unwrap();
+    pop.set("sample_k", "16").unwrap();
+    let p = native_run(&pop);
+    assert_eq!(
+        d.digest(),
+        p.digest(),
+        "per-id fault streams drifted from the dense per-worker streams at N == k"
+    );
+    assert_eq!(d.fault_trace, p.fault_trace);
+    assert!(
+        !d.fault_trace.is_empty(),
+        "rate 0.2 over 16 workers x 4 rounds must fire at least once"
+    );
+
+    let mut churn = sampled48(Algo::OverlapM);
+    churn.set("fault_rate", "0.1").unwrap();
+    churn.set("rejoin_rate", "0.5").unwrap();
+    let (sim, thr) = run_both(&churn);
+    assert_eq!(sim.digest(), thr.digest(), "random-faulted sampled run drifted across backends");
+    assert_eq!(sim.digest(), native_run(&churn).digest(), "replay must be exact");
+    assert!(sim.final_loss().is_finite());
+}
+
+/// Partitions are declared over population-id sets (ranges allowed); the
+/// cohort intersects the components, the minority parks, and `heal@`
+/// restores full connectivity. A full-coverage spec at N == k is the dense
+/// partition bit-for-bit; an id-range spec over N > k replays exactly and
+/// agrees across backends.
+#[test]
+fn partitions_over_ids_compose_and_match_dense_at_n_equals_k() {
+    let mut dense = paper16(Algo::OverlapM);
+    dense.set("fault", "partition@2:0-7|8-15;heal@4").unwrap();
+    let d = native_run(&dense);
+    let mut pop = dense.clone();
+    pop.set("population", "16").unwrap();
+    pop.set("sample_k", "16").unwrap();
+    let p = native_run(&pop);
+    assert_eq!(
+        d.digest(),
+        p.digest(),
+        "a full-coverage id partition at N == k drifted from the dense partition"
+    );
+    assert_eq!(d.fault_trace, p.fault_trace);
+    assert_eq!(d.survivors, p.survivors, "stepping-count series under the split");
+
+    let mut churn = sampled48(Algo::OverlapM);
+    churn.set("fault", "partition@2:0-23|24-47;heal@4").unwrap();
+    let (sim, thr) = run_both(&churn);
+    assert_eq!(sim.digest(), thr.digest(), "partitioned sampled run drifted across backends");
+    assert_eq!(sim.digest(), native_run(&churn).digest(), "replay must be exact");
+    assert!(sim.final_loss().is_finite());
+}
+
 /// The sampler itself never draws a downed id, and a rejoin restores it to
 /// circulation (unit-level composition over the same code path the engine
 /// uses).
@@ -267,11 +330,11 @@ fn sampler_rejects_downed_ids() {
     assert!(sample_cohort(16, 15, 7, 1, &down).is_err());
 }
 
-/// Invalid compositions are refused before any state exists: sampling
-/// needs a population, the population must cover the cohort, and the
-/// axes that cannot preserve semantics over a per-round cohort (net
-/// backend, random fault process, PowerSGD's joint basis, partitions)
-/// are hard errors.
+/// Only *consistency* errors are refused now: sampling needs a
+/// population, the population must cover the cohort, and fault ids must
+/// fall inside the registered range. Every composition PR-8 refused on
+/// semantic grounds — the net backend, the random fault process,
+/// PowerSGD's warm basis, partitions over ids — resolves.
 #[test]
 fn invalid_population_compositions_are_refused_loudly() {
     let base = sampled48(Algo::OverlapM);
@@ -285,24 +348,29 @@ fn invalid_population_compositions_are_refused_loudly() {
     assert!(cfg.resolved().is_err(), "population < k must be refused");
 
     let mut cfg = base.clone();
-    cfg.set("fault_rate", "0.1").unwrap();
-    assert!(cfg.resolved().is_err(), "the per-slot random fault process must be refused");
-
-    let mut cfg = base.clone();
-    cfg.set("fault", "partition@2:0,1|2,3").unwrap();
-    assert!(cfg.resolved().is_err(), "partitions over a sampled cohort must be refused");
-
-    let mut cfg = base.clone();
     cfg.set("fault", "crash@2:100").unwrap(); // id outside N = 48
     assert!(cfg.resolved().is_err(), "fault ids outside the population must be refused");
+    cfg.set("fault", "none").unwrap();
+    cfg.set("fault", "partition@2:0-7|8-99").unwrap(); // 99 outside N = 48
+    assert!(cfg.resolved().is_err(), "partition ids outside the population must be refused");
+
+    // The PR-9 lifted compositions all resolve.
+    let mut cfg = base.clone();
+    cfg.set("fault_rate", "0.1").unwrap();
+    cfg.set("rejoin_rate", "0.5").unwrap();
+    assert!(cfg.resolved().is_ok(), "the per-id random fault process composes now");
+
+    let mut cfg = base.clone();
+    cfg.set("fault", "partition@2:0-23|24-47;heal@4").unwrap();
+    assert!(cfg.resolved().is_ok(), "partitions over population ids compose now");
 
     let mut cfg = base.clone();
     cfg.set("compress", "powersgd").unwrap();
-    assert!(cfg.resolved().is_err(), "powersgd's joint warm basis must be refused");
+    assert!(cfg.resolved().is_ok(), "powersgd's per-worker warm bases compose now");
 
     let mut cfg = base;
     cfg.set("execution", "net").unwrap();
-    assert!(cfg.resolved().is_err(), "the net backend must be refused");
+    assert!(cfg.resolved().is_ok(), "the net backend serves cohorts now");
 }
 
 // ---------------------------------------------------------------------------
@@ -387,5 +455,98 @@ fn resident_peak_respects_every_reserve_and_never_moves_the_digest() {
             c.resident_workers_max
         );
         assert_eq!(c.rounds_sampled, 6, "reserve {reserve}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Spill-record integrity
+// ---------------------------------------------------------------------------
+
+/// A mid-trajectory worker state exercising every optional codec branch:
+/// consumed batcher and straggler draws, an error-feedback residual, and
+/// (optionally) the PowerSGD gradient residual plus warm `Q` bases.
+fn corrupt_probe_state(with_psgd: bool) -> WorkerState {
+    let mut rng = Rng::stream(11, "straggler/3");
+    for _ in 0..7 {
+        rng.next_normal();
+    }
+    // A batcher mid-epoch (nonzero cursor, one completed epoch) so the
+    // codec must carry stream positions, not just fresh construction.
+    let fresh = Batcher::new((0..32u32).collect(), 11, 3, true);
+    let (shard, _, brng) = fresh.spill_parts();
+    let (s, spare) = brng.state();
+    let batcher =
+        Batcher::from_spill_parts(shard.to_vec(), 20, Rng::from_state(s, spare), 1, true);
+    WorkerState {
+        id: 3,
+        params: (0..10).map(|i| (i as f32).sin()).collect(),
+        mom: (0..10).map(|i| 0.5 - i as f32).collect(),
+        mom2: Vec::new(),
+        adam_t: 2.0,
+        batcher,
+        rng,
+        residual: Some((0..10).map(|i| 1.0 / (2.0 + i as f32)).collect()),
+        psgd_error: with_psgd.then(|| (0..10).map(|i| (i as f32) * 0.25).collect()),
+        psgd_qs: with_psgd.then(|| {
+            vec![(0..6).map(|i| (i as f32).cos()).collect(), vec![0.5f32; 4]]
+        }),
+    }
+}
+
+/// A spilled record that comes back differently than it went out must
+/// never be resumed: truncation at *every* prefix length, a flip of *any*
+/// single byte (the FNV-1a trailer catches payload flips the structural
+/// checks cannot see), and an unknown version are all loud errors — with
+/// and without the PowerSGD fields in the record.
+#[test]
+fn spill_codec_rejects_truncation_bit_flips_and_wrong_versions() {
+    for with_psgd in [false, true] {
+        let st = corrupt_probe_state(with_psgd);
+        let mut buf = Vec::new();
+        encode_state(&st, &mut buf);
+
+        // The intact record round-trips to the identical byte string.
+        let back = decode_state(&buf)
+            .unwrap_or_else(|e| panic!("psgd={with_psgd}: intact record must decode: {e}"));
+        let mut again = Vec::new();
+        encode_state(&back, &mut again);
+        assert_eq!(buf, again, "psgd={with_psgd}: decode ∘ encode must be the identity");
+
+        // Every proper prefix is a loud truncation error.
+        for cut in 0..buf.len() {
+            assert!(
+                decode_state(&buf[..cut]).is_err(),
+                "psgd={with_psgd}: record truncated to {cut}/{} bytes must fail",
+                buf.len()
+            );
+        }
+
+        // Any single flipped byte fails — structurally or via the checksum.
+        for pos in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x20;
+            assert!(
+                decode_state(&bad).is_err(),
+                "psgd={with_psgd}: byte {pos}/{} flipped silently decoded",
+                buf.len()
+            );
+        }
+
+        // Unknown versions (a stale v1 record, a future version) are
+        // rejected by name before any field is read.
+        for v in [1u8, 3, 99] {
+            let mut bad = buf.clone();
+            bad[0] = v;
+            let err = decode_state(&bad).unwrap_err().to_string();
+            assert!(
+                err.contains("version"),
+                "psgd={with_psgd}: version {v} must be rejected by the version check, got: {err}"
+            );
+        }
+
+        // Trailing garbage after a valid record is refused too.
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(decode_state(&long).is_err(), "psgd={with_psgd}: trailing bytes");
     }
 }
