@@ -13,6 +13,13 @@
 //!   compute: amortization + hiding (the paper's schedule);
 //! * `overlap-gossip τ=T` — decentralized exchange, also hidden.
 //!
+//! E19 rides along on the same protocol: three extra overlap-m legs vary
+//! the model/kernel axis (`linear+simd`, `mlp+scalar`, `mlp+simd`), and
+//! every leg reports per-step wall time and aggregate GFLOP/s computed
+//! from `ModelRuntime::train_step_flops`. The bench hard-asserts the MLP
+//! step costs ≥ 5× the linear model's FLOPs, so the compute-bound legs
+//! are real and the SIMD tier has something to chew on.
+//!
 //! Each leg runs under BOTH backends; the bench hard-asserts the two
 //! `TrainLog` digests are identical (the tentpole guarantee) and records
 //! the threads-backend wall time. E13 instrumentation rides on every leg:
@@ -42,8 +49,9 @@ use olsgd::coordinator::run_experiment;
 use olsgd::data::{self, GenConfig};
 use olsgd::executor::Executor;
 use olsgd::metrics::{write_json, TrainLog};
+use olsgd::model::simd::KernelTier;
 use olsgd::model::vecmath;
-use olsgd::runtime::ModelRuntime;
+use olsgd::runtime::{ModelRuntime, DEFAULT_HIDDEN};
 use olsgd::util::json::{arr, num, obj, s, Json};
 use olsgd::util::memcount::{self, CountingAlloc};
 
@@ -54,12 +62,29 @@ struct Leg {
     label: &'static str,
     algo: Algo,
     tau: usize,
+    model: &'static str,
+    kernels: KernelTier,
+    /// model FLOPs for one worker's train step (E19 column)
+    flops_per_step: f64,
     wall_s: f64,
     /// allocator calls during the timed threads run (whole process)
     timed_allocs: u64,
     /// bytes requested during the timed threads run
     timed_alloc_bytes: u64,
     log: TrainLog,
+}
+
+impl Leg {
+    /// Wall time per global step (all m workers advance one step).
+    fn step_time_s(&self) -> f64 {
+        self.wall_s / (self.log.steps as f64).max(1.0)
+    }
+
+    /// Aggregate training throughput: every worker executes
+    /// `flops_per_step` per global step.
+    fn gflops(&self, workers: usize) -> f64 {
+        workers as f64 * self.flops_per_step * self.log.steps as f64 / self.wall_s / 1e9
+    }
 }
 
 fn run_both(cfg: &ExperimentConfig, rt: &ModelRuntime) -> Result<(f64, u64, u64, TrainLog)> {
@@ -135,46 +160,77 @@ fn main() -> Result<()> {
     base.eval_every = base.epochs; // eval only at the end: time the training
     let tau = 8;
 
-    let rt = ModelRuntime::native(&base.model)?;
     println!(
-        "=== E12/E13 wall-clock hiding (threads backend, {} cores, m={}, {} global steps) ===",
+        "=== E12/E13/E19 wall-clock hiding + kernel tiers (threads backend, {} cores, m={}, {} global steps) ===",
         cores,
         base.workers,
         (base.epochs * (base.train_n as f64 / base.workers as f64 / 32.0)).round()
     );
     println!(
-        "{:<22} {:>6} {:>12} {:>14} {:>10} {:>12} {:>12}",
-        "leg", "tau", "wall (s)", "vs sync", "spawns", "steady", "allocs/run"
+        "{:<22} {:>6} {:>7} {:>7} {:>12} {:>14} {:>12} {:>10} {:>10} {:>12}",
+        "leg", "tau", "model", "kern", "wall (s)", "step (ms)", "GFLOP/s", "spawns", "steady", "allocs/run"
     );
 
-    let specs: [(&'static str, Algo, usize); 4] = [
-        ("sync", Algo::Sync, 1),
-        ("local", Algo::Local, tau),
-        ("overlap-m", Algo::OverlapM, tau),
-        ("overlap-gossip", Algo::OverlapGossip, tau),
+    // E12 schedule sweep on the linear/scalar reference, then the E19
+    // kernel-tier sweep on the overlap-m schedule (the paper's).
+    let specs: [(&'static str, Algo, usize, &'static str, KernelTier); 7] = [
+        ("sync", Algo::Sync, 1, "linear", KernelTier::Scalar),
+        ("local", Algo::Local, tau, "linear", KernelTier::Scalar),
+        ("overlap-m", Algo::OverlapM, tau, "linear", KernelTier::Scalar),
+        ("overlap-gossip", Algo::OverlapGossip, tau, "linear", KernelTier::Scalar),
+        ("overlap-m+simd", Algo::OverlapM, tau, "linear", KernelTier::Simd),
+        ("overlap-mlp", Algo::OverlapM, tau, "mlp", KernelTier::Scalar),
+        ("overlap-mlp+simd", Algo::OverlapM, tau, "mlp", KernelTier::Simd),
     ];
     let mut legs: Vec<Leg> = Vec::new();
-    for (label, algo, tau) in specs {
+    for (label, algo, tau, model, kernels) in specs {
         let mut cfg = base.clone();
         cfg.algo = algo;
         cfg.tau = tau;
+        cfg.model = model.into();
+        cfg.kernels = kernels;
+        let rt = ModelRuntime::native_with(model, DEFAULT_HIDDEN, kernels)?;
         let (wall_s, timed_allocs, timed_alloc_bytes, log) = run_both(&cfg, &rt)?;
-        legs.push(Leg { label, algo, tau, wall_s, timed_allocs, timed_alloc_bytes, log });
+        legs.push(Leg {
+            label,
+            algo,
+            tau,
+            model,
+            kernels,
+            flops_per_step: rt.train_step_flops(),
+            wall_s,
+            timed_allocs,
+            timed_alloc_bytes,
+            log,
+        });
     }
 
     let sync_wall = legs[0].wall_s;
     for leg in &legs {
         println!(
-            "{:<22} {:>6} {:>12.4} {:>13.2}x {:>10} {:>12} {:>12}",
+            "{:<22} {:>6} {:>7} {:>7} {:>12.4} {:>14.4} {:>12.2} {:>10} {:>10} {:>12}",
             leg.label,
             leg.tau,
+            leg.model,
+            leg.kernels.name(),
             leg.wall_s,
-            sync_wall / leg.wall_s,
+            1e3 * leg.step_time_s(),
+            leg.gflops(base.workers),
             leg.log.hot.thread_spawns_total,
             leg.log.hot.steady_thread_spawns + leg.log.hot.steady_buffer_allocs,
             leg.timed_allocs,
         );
     }
+
+    // E19 gate: the MLP must be a real compute-bound model — at least 5x
+    // the linear model's per-step FLOPs — or the tier comparison is noise.
+    let linear_flops = legs[0].flops_per_step;
+    let mlp_flops = legs[6].flops_per_step;
+    anyhow::ensure!(
+        mlp_flops >= 5.0 * linear_flops,
+        "mlp step FLOPs {mlp_flops:.3e} < 5x linear {linear_flops:.3e}"
+    );
+    println!("E19: mlp step FLOPs = {:.1}x linear — PASS", mlp_flops / linear_flops);
     let overlap_speedup = sync_wall / legs[2].wall_s;
     let hiding_speedup = legs[1].wall_s / legs[2].wall_s;
     println!("\noverlap-m vs sync (equal steps): {overlap_speedup:.2}x");
@@ -213,11 +269,13 @@ fn main() -> Result<()> {
 
     let out = Path::new("results/wallclock");
     for leg in &legs {
-        write_json(out, &format!("{}_tau{}.json", leg.algo.name(), leg.tau), &leg.log.to_json())?;
+        let name = format!("{}_tau{}.json", leg.label.replace('+', "_"), leg.tau);
+        write_json(out, &name, &leg.log.to_json())?;
     }
     let summary = obj(vec![
         ("bench", s("wallclock")),
-        ("experiment", s("E12+E13")),
+        ("experiment", s("E12+E13+E19")),
+        ("mlp_flops_vs_linear", num(mlp_flops / linear_flops)),
         ("host_cores", num(cores as f64)),
         ("workers", num(base.workers as f64)),
         ("steps", num(legs[0].log.steps as f64)),
@@ -230,8 +288,13 @@ fn main() -> Result<()> {
                     ("label", s(l.label)),
                     ("algo", s(l.algo.name())),
                     ("tau", num(l.tau as f64)),
+                    ("model", s(l.model)),
+                    ("kernels", s(l.kernels.name())),
                     ("execution", s("threads")),
                     ("wall_s", num(l.wall_s)),
+                    ("step_time_s", num(l.step_time_s())),
+                    ("flops_per_step", num(l.flops_per_step)),
+                    ("gflops", num(l.gflops(base.workers))),
                     ("speedup_vs_sync", num(sync_wall / l.wall_s)),
                     ("virtual_sim_time_s", num(l.log.total_sim_time)),
                     ("digest", s(&format!("{:016x}", l.log.digest()))),

@@ -56,7 +56,7 @@ impl BenchCtx {
             cfg.train_n = n.parse().unwrap_or(cfg.train_n);
         }
 
-        let rt = runtime::load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
+        let rt = runtime::load_for(Path::new(&cfg.artifacts_dir), &cfg)?;
         let gen = GenConfig::default();
         let train_iid = data::generate(cfg.seed, cfg.train_n, "train", &gen);
         let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);

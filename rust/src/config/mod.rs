@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::compress::CompressKind;
 use crate::fault::FaultPlan;
+use crate::model::simd::KernelTier;
 use crate::simnet::{ClusterModel, ComputeModel, NetworkModel, StragglerModel};
 use crate::topology::{Topology, TopologyKind};
 
@@ -149,8 +150,15 @@ pub struct ExperimentConfig {
     pub name: String,
     /// which mixing schedule drives the run
     pub algo: Algo,
-    /// model name handed to `runtime::load_auto` ("cnn", "linear", ...)
+    /// model name handed to `runtime::load_for` ("cnn", "linear", "mlp");
+    /// "mlp" selects the native one-hidden-layer ReLU model
     pub model: String,
+    /// hidden width of the MLP model (`model = mlp`); ignored otherwise
+    pub hidden: usize,
+    /// kernel tier for the native hot kernels (`scalar` | `simd`,
+    /// DESIGN.md §15). The tiers are bit-identical, so this never moves a
+    /// digest — it only changes wall-clock speed
+    pub kernels: KernelTier,
     /// cluster size m (simulated workers)
     pub workers: usize,
     /// training length in epochs (fractional allowed)
@@ -294,6 +302,8 @@ impl Default for ExperimentConfig {
             name: "experiment".into(),
             algo: Algo::OverlapM,
             model: "cnn".into(),
+            hidden: crate::runtime::DEFAULT_HIDDEN,
+            kernels: KernelTier::Scalar,
             workers: 8,
             epochs: 20.0,
             seed: 1,
@@ -364,6 +374,12 @@ impl ExperimentConfig {
             "name" => self.name = v.to_string(),
             "algo" | "algorithm" => self.algo = Algo::parse(v)?,
             "model" => self.model = v.to_string(),
+            "hidden" => {
+                let h = parse_usize()?;
+                anyhow::ensure!(h >= 1, "hidden must be >= 1");
+                self.hidden = h;
+            }
+            "kernels" | "kernel_tier" => self.kernels = KernelTier::parse(v)?,
             "workers" | "m" => self.workers = parse_usize()?,
             "epochs" => self.epochs = parse_f64()?,
             "seed" => self.seed = v.parse().context("bad seed")?,
@@ -494,6 +510,8 @@ impl ExperimentConfig {
             kv("name", self.name.clone()),
             kv("algo", self.algo.name().to_string()),
             kv("model", self.model.clone()),
+            kv("hidden", self.hidden.to_string()),
+            kv("kernels", self.kernels.name().to_string()),
             kv("workers", self.workers.to_string()),
             kv("epochs", self.epochs.to_string()),
             kv("seed", self.seed.to_string()),
@@ -706,6 +724,25 @@ mod tests {
     }
 
     #[test]
+    fn model_and_kernel_keys_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.kernels, KernelTier::Scalar);
+        assert_eq!(d.hidden, crate::runtime::DEFAULT_HIDDEN);
+        let mut c = ExperimentConfig::default();
+        c.set("model", "mlp").unwrap();
+        c.set("hidden", "256").unwrap();
+        c.set("kernels", "simd").unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.hidden, 256);
+        assert_eq!(c.kernels, KernelTier::Simd);
+        c.set("kernel_tier", "scalar").unwrap(); // alias
+        assert_eq!(c.kernels, KernelTier::Scalar);
+        assert!(c.set("kernels", "avx512").is_err());
+        assert!(c.set("hidden", "0").is_err());
+        assert!(c.set("hidden", "wide").is_err());
+    }
+
+    #[test]
     fn unknown_key_is_error() {
         let mut c = ExperimentConfig::default();
         assert!(c.set("bogus", "1").is_err());
@@ -858,7 +895,9 @@ mod tests {
         let mut c = ExperimentConfig::default();
         for (k, v) in [
             ("algo", "easgd"),
-            ("model", "linear"),
+            ("model", "mlp"),
+            ("hidden", "64"),
+            ("kernels", "simd"),
             ("workers", "16"),
             ("epochs", "2.5"),
             ("seed", "99"),

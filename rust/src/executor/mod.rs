@@ -64,7 +64,7 @@ use crate::config::{Execution, ExperimentConfig};
 use crate::coordinator::engine::{LocalPhase, RoundPlan};
 use crate::coordinator::{StepView, TrainContext};
 use crate::fault::{AliveSet, FaultEvent};
-use crate::model::vecmath;
+use crate::model::simd::{self, KernelTier};
 use crate::util::pool::BufferPool;
 
 use net::NetCoordinator;
@@ -157,6 +157,9 @@ pub struct ExecSnapshot {
 /// strategies reach it as `eng.exec`.
 pub struct Executor {
     mode: Mode,
+    /// kernel tier for the executor-side collectives (the chunked mean);
+    /// bit-identical either way, from the config's `kernels` key
+    tier: KernelTier,
     buffers: BufferPool,
     scratch: RefCell<ReduceScratch>,
     rounds: RefCell<Vec<WorkerRound>>,
@@ -178,6 +181,7 @@ impl Executor {
         };
         Self {
             mode,
+            tier: KernelTier::default(),
             buffers: BufferPool::new(),
             scratch: RefCell::new(ReduceScratch::default()),
             rounds: RefCell::new(Vec::new()),
@@ -190,10 +194,13 @@ impl Executor {
     /// claimed before the first round.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
         if cfg.execution != Execution::Net {
-            return Ok(Self::new(cfg.execution, cfg.workers));
+            let mut ex = Self::new(cfg.execution, cfg.workers);
+            ex.tier = cfg.kernels;
+            return Ok(ex);
         }
         Ok(Self {
             mode: Mode::Net(RefCell::new(NetCoordinator::new(cfg)?)),
+            tier: cfg.kernels,
             buffers: BufferPool::new(),
             scratch: RefCell::new(ReduceScratch::default()),
             rounds: RefCell::new(Vec::new()),
@@ -340,14 +347,15 @@ impl Executor {
     }
 
     /// Elementwise mean into `out`, *bit*-identical to
-    /// [`vecmath::mean_into`] on either backend: serial on `sim`, chunked
-    /// over the parked pool threads on `threads` (the same deterministic
-    /// chunking as `vecmath::mean_into_parallel`, without its per-call
-    /// spawns).
+    /// [`vecmath::mean_into`] on every backend and kernel tier: serial on
+    /// `sim`, chunked over the parked pool threads on `threads` (the same
+    /// deterministic chunking as `vecmath::mean_into_parallel`, without
+    /// its per-call spawns), with the per-chunk kernel dispatched on the
+    /// run's `kernels` tier.
     pub fn mean_into(&self, vs: &[&[f32]], out: &mut [f32]) {
         match &self.mode {
-            Mode::Sim | Mode::Net(_) => vecmath::mean_into(vs, out),
-            Mode::Pool(p) => p.mean_into(vs, out),
+            Mode::Sim | Mode::Net(_) => simd::mean_into(self.tier, vs, out),
+            Mode::Pool(p) => p.mean_into(vs, out, self.tier),
         }
     }
 }
@@ -402,6 +410,7 @@ impl ReduceHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::vecmath;
     use crate::util::proptest::property;
 
     fn sum_job(inputs: Vec<Vec<f32>>) -> CommJob {
@@ -454,8 +463,16 @@ mod tests {
     fn property_pooled_mean_is_bit_identical_to_serial() {
         // The elastic strategy and the wallclock micro-bench route their
         // averages through the pool; chunking across parked threads must
-        // not change a single bit relative to the serial loop.
+        // not change a single bit relative to the serial loop — on either
+        // kernel tier.
         let thr = Executor::new(Execution::Threads, 5);
+        let thr_simd = {
+            let mut cfg = ExperimentConfig::default();
+            cfg.set("execution", "threads").unwrap();
+            cfg.set("workers", "5").unwrap();
+            cfg.set("kernels", "simd").unwrap();
+            Executor::from_config(&cfg).unwrap()
+        };
         property("pooled mean == serial mean (bits)", 80, |g| {
             let n = g.usize_in(1, 2000);
             let m = g.usize_in(1, 12);
@@ -463,14 +480,17 @@ mod tests {
             let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
             let mut serial = vec![0.0f32; n];
             vecmath::mean_into(&refs, &mut serial);
-            let mut pooled = vec![f32::NAN; n];
-            thr.mean_into(&refs, &mut pooled);
-            for i in 0..n {
-                assert_eq!(
-                    serial[i].to_bits(),
-                    pooled[i].to_bits(),
-                    "bit drift at {i} (n={n}, m={m})"
-                );
+            for ex in [&thr, &thr_simd] {
+                let mut pooled = vec![f32::NAN; n];
+                ex.mean_into(&refs, &mut pooled);
+                for i in 0..n {
+                    assert_eq!(
+                        serial[i].to_bits(),
+                        pooled[i].to_bits(),
+                        "bit drift at {i} (n={n}, m={m}, tier {:?})",
+                        ex.tier
+                    );
+                }
             }
         });
     }

@@ -59,7 +59,7 @@ use super::{drive_worker, CommJob, CommReplyRx, ReduceHandle, WorkerRound};
 use crate::collective::ReduceScratch;
 use crate::coordinator::engine::{LocalPhase, RoundPlan};
 use crate::coordinator::{StepView, TrainContext};
-use crate::model::vecmath;
+use crate::model::simd::{self, KernelTier};
 
 /// One worker's share of a round, with the borrows of its `StepView` (and
 /// of the shared `TrainContext`) erased to `'static` so the job can cross
@@ -107,7 +107,7 @@ struct MeanChunk {
     vs: &'static [&'static [f32]],
     out: &'static mut [f32],
     lo: usize,
-    inv: f32,
+    tier: KernelTier,
     ack: Sender<bool>,
 }
 
@@ -122,12 +122,12 @@ impl MeanChunk {
         vs: &[&[f32]],
         out: &mut [f32],
         lo: usize,
-        inv: f32,
+        tier: KernelTier,
         ack: Sender<bool>,
     ) -> Self {
         let vs = unsafe { std::mem::transmute::<&[&[f32]], &'static [&'static [f32]]>(vs) };
         let out = unsafe { std::mem::transmute::<&mut [f32], &'static mut [f32]>(out) };
-        MeanChunk { vs, out, lo, inv, ack }
+        MeanChunk { vs, out, lo, tier, ack }
     }
 }
 
@@ -174,21 +174,13 @@ fn worker_main(w: usize, rx: Receiver<WorkerMsg>, tx: Sender<(usize, Result<Work
                 let _ = tx.send((w, out));
             }
             WorkerMsg::Mean(chunk) => {
-                let MeanChunk { vs, out, lo, inv, ack } = chunk;
+                let MeanChunk { vs, out, lo, tier, ack } = chunk;
                 let ok = catch_unwind(AssertUnwindSafe(|| {
-                    // Identical per-element operation sequence to the
-                    // serial `vecmath::mean_into` (accumulate in input
-                    // order, then scale) — the bit-identity guarantee.
-                    let len = out.len();
-                    out.copy_from_slice(&vs[0][lo..lo + len]);
-                    for v in &vs[1..] {
-                        for (o, &x) in out.iter_mut().zip(&v[lo..lo + len]) {
-                            *o += x;
-                        }
-                    }
-                    for o in out.iter_mut() {
-                        *o *= inv;
-                    }
+                    // The shared chunk kernel keeps the per-element
+                    // operation sequence of the serial `vecmath::mean_into`
+                    // (accumulate in input order, then scale) on either
+                    // tier — the bit-identity guarantee.
+                    simd::mean_chunk_into(tier, vs, lo, out);
                 }))
                 .is_ok();
                 let _ = ack.send(ok);
@@ -339,11 +331,12 @@ impl WorkerPool {
     }
 
     /// Pooled thread-parallel mean, *bit*-identical to
-    /// [`vecmath::mean_into`]: the same contiguous chunking as
-    /// `vecmath::mean_into_parallel` with one chunk per pool worker, served
-    /// by the parked threads instead of fresh spawns. `out` is
+    /// `vecmath::mean_into` on either kernel tier: the same contiguous
+    /// chunking as `vecmath::mean_into_parallel` with one chunk per pool
+    /// worker, served by the parked threads instead of fresh spawns, each
+    /// chunk running the tier-dispatched `simd::mean_chunk_into`. `out` is
     /// unconditionally overwritten.
-    pub(crate) fn mean_into(&self, vs: &[&[f32]], out: &mut [f32]) {
+    pub(crate) fn mean_into(&self, vs: &[&[f32]], out: &mut [f32], tier: KernelTier) {
         let count = vs.len();
         assert!(count > 0, "mean of zero vectors");
         for v in vs {
@@ -352,10 +345,9 @@ impl WorkerPool {
         let n = out.len();
         let t = self.m.max(1).min(n.max(1));
         if t <= 1 {
-            return vecmath::mean_into(vs, out);
+            return simd::mean_into(tier, vs, out);
         }
         let chunk = n.div_ceil(t);
-        let inv = 1.0f32 / count as f32;
         let mut sent = 0usize;
         let mut dispatch_failed = false;
         for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
@@ -364,7 +356,7 @@ impl WorkerPool {
             // drain below blocks until every dispatched chunk is done (the
             // worker drops its erased borrows before acking), so no borrow
             // escapes this frame. A failed send drops the chunk un-run.
-            let job = unsafe { MeanChunk::erase(vs, out_chunk, lo, inv, self.ack_tx.clone()) };
+            let job = unsafe { MeanChunk::erase(vs, out_chunk, lo, tier, self.ack_tx.clone()) };
             if self.job_txs[ci].send(WorkerMsg::Mean(job)).is_err() {
                 dispatch_failed = true;
                 break;

@@ -99,7 +99,13 @@ fn print_usage() {
                      not O(N) — N up to 10^6, DESIGN.md §14; sample_seed reseeds the\n\
                      cohort streams, sample_reserve sizes the resident cache;\n\
                      --fault crash/rejoin compose at the population-id level)\n\
-         Config keys: algo model workers epochs seed eval_every execution lr tau tau_min\n\
+         Model:      --set model=linear|mlp (mlp = PX x hidden ReLU layer + readout,\n\
+                     --set hidden=H width, the compute-bound model; DESIGN.md §15)\n\
+         Kernels:    --set kernels=scalar|simd (simd = lane-unrolled loops + register-\n\
+                     blocked matmul, bit-identical to the scalar reference by\n\
+                     construction — the tier never moves a digest)\n\
+         Config keys: algo model hidden kernels workers epochs seed eval_every execution\n\
+                      lr tau tau_min\n\
                       tau_hetero ada_patience ada_threshold alpha beta mu wd rank\n\
                       compress compress_k compress_rank compress_bits\n\
                       population sample_k sample_seed sample_reserve\n\
@@ -214,17 +220,28 @@ fn cmd_info(args: &[String]) -> Result<()> {
         }
         return Ok(());
     }
-    let rt = runtime::load_auto(dir, &common.cfg.model)?;
+    let rt = runtime::load_for(dir, &common.cfg)?;
     println!("platform: native (pure-Rust reference backend; no PJRT artifacts)");
     println!(
-        "model {:<10} params={:<8} train_batch={} eval_batch={} image={:?}",
-        rt.name, rt.n, rt.train_batch, rt.eval_batch, rt.image_shape
+        "model {:<10} params={:<8} train_batch={} eval_batch={} image={:?} kernels={}",
+        rt.name,
+        rt.n,
+        rt.train_batch,
+        rt.eval_batch,
+        rt.image_shape,
+        rt.tier.name()
     );
     Ok(())
 }
 
-/// Cache of (model name, loaded ModelRuntime) across sweep legs.
+/// Cache of (runtime cache key, loaded ModelRuntime) across sweep legs.
 type RtCache = Option<(String, ModelRuntime)>;
+
+/// The fields a loaded runtime depends on — legs differing in any of them
+/// must not share a cached runtime.
+fn rt_cache_key(cfg: &ExperimentConfig) -> String {
+    format!("{}:{}:{}", cfg.model, cfg.hidden, cfg.kernels.name())
+}
 
 /// Load runtime + data and run one configured experiment.
 fn run_one(
@@ -232,13 +249,14 @@ fn run_one(
     rt_cache: &mut RtCache,
     quiet: bool,
 ) -> Result<olsgd::metrics::TrainLog> {
+    let key = rt_cache_key(cfg);
     let reload = match rt_cache {
-        Some((name, _)) => name != &cfg.model,
+        Some((cached, _)) => cached != &key,
         None => true,
     };
     if reload {
-        let model = runtime::load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
-        *rt_cache = Some((cfg.model.clone(), model));
+        let model = runtime::load_for(Path::new(&cfg.artifacts_dir), cfg)?;
+        *rt_cache = Some((key, model));
     }
     let (_, model_rt) = rt_cache.as_ref().unwrap();
 

@@ -1,0 +1,402 @@
+//! Register-blocked dense matmul for the MLP runtime — a Rust port of the
+//! Pallas blocking scheme in `python/compile/kernels/matmul.py`, under the
+//! same bit-identity discipline as [`crate::model::simd`] (DESIGN.md §15).
+//!
+//! The Pallas kernel tiles the output into `(bm, bn)` blocks, keeps one
+//! output block resident across the whole contraction (grid iterates k
+//! innermost), and fuses the bias + ReLU epilogue into the final k-step so
+//! the activation never takes an extra memory pass. The port keeps exactly
+//! that structure at register scale: a `[[f32; BN]; BM]` accumulator block
+//! lives in registers, the contraction loop runs **serially ascending in
+//! k** for every output element, and the epilogue is applied to the
+//! resident block right before the single store.
+//!
+//! Serial-k is the load-bearing choice: the scalar reference loops
+//! (ikj order, `compress::linalg` style) also accumulate every output
+//! element in ascending-k order from `+0.0`, so the blocked kernels
+//! reassociate **nothing** — they reorder only *which element* is advanced
+//! next, never the sum within an element — and are therefore bit-identical
+//! to the scalar tier (property-locked below, including shapes that don't
+//! tile). The speedup comes from `BM × BN` independent FMA chains per
+//! k-step (instruction-level parallelism the single-element scalar loop
+//! can't expose) and from each loaded `x`/`w` value being reused across a
+//! whole block row instead of once.
+//!
+//! Edge blocks (m ≢ 0 mod [`BM`], n ≢ 0 mod [`BN`]) fall back to
+//! per-element serial dots — the same accumulation order, so identity
+//! holds there too. The Pallas version zero-pads instead; explicit edges
+//! avoid the copy.
+
+/// Output-block rows held in registers (the Pallas `bm`, at register scale:
+/// 4 independent accumulator rows per k-step).
+pub const BM: usize = 4;
+
+/// Output-block columns held in registers (the Pallas `bn`: two 256-bit
+/// vectors' worth of f32 lanes per row).
+pub const BN: usize = 16;
+
+/// The fused epilogue both tiers share: add bias happened already; apply
+/// the optional ReLU. Written as a strict `> 0.0` select so the backward
+/// mask (`out > 0.0`) is exactly the set of pass-through units, `-0.0`
+/// normalizes to `+0.0`, and a NaN (diverged run) gates to `0.0` the same
+/// way on every tier.
+#[inline]
+fn epilogue(v: f32, relu: bool) -> f32 {
+    if relu {
+        if v > 0.0 { v } else { 0.0 }
+    } else {
+        v
+    }
+}
+
+/// `out (m×n) = act(X (m×k) @ W (k×n) + bias)`, row-major, scalar
+/// reference tier. `n = bias.len()`, `m` inferred from `x`; `out` is
+/// unconditionally overwritten. ikj loop order: every output element
+/// accumulates in ascending-k order from `+0.0`, then takes the bias +
+/// optional-ReLU epilogue — the order the blocked tier reproduces exactly.
+pub fn matmul_bias_act_into(x: &[f32], k: usize, w: &[f32], bias: &[f32], relu: bool, out: &mut [f32]) {
+    let n = bias.len();
+    assert!(k > 0 && n > 0, "degenerate matmul shape");
+    assert_eq!(x.len() % k, 0, "x not a whole number of rows");
+    let m = x.len() / k;
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * wrow[j];
+            }
+        }
+        for j in 0..n {
+            orow[j] = epilogue(orow[j] + bias[j], relu);
+        }
+    }
+}
+
+/// One edge-cell of [`matmul_bias_act_blocked_into`]: a serial ascending-k
+/// dot from `+0.0` plus the fused epilogue — the scalar reference's exact
+/// per-element sequence.
+#[inline]
+fn bias_act_cell(x: &[f32], k: usize, w: &[f32], bias: &[f32], relu: bool, i: usize, j: usize) -> f32 {
+    let n = bias.len();
+    let xrow = &x[i * k..(i + 1) * k];
+    let mut acc = 0.0f32;
+    for (kk, &xv) in xrow.iter().enumerate() {
+        acc += xv * w[kk * n + j];
+    }
+    epilogue(acc + bias[j], relu)
+}
+
+/// [`matmul_bias_act_into`] on the blocked tier — bit-identical output.
+///
+/// The Pallas scheme at register scale: for each `BM × BN` output block,
+/// the accumulator block stays resident while k runs serially ascending
+/// (`o_ref` across the k-innermost grid), every `w` row segment feeds all
+/// `BM` accumulator rows, and the bias/ReLU epilogue hits the resident
+/// block once, fused before the store. Remainder rows/columns take
+/// [`bias_act_cell`].
+pub fn matmul_bias_act_blocked_into(
+    x: &[f32],
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    let n = bias.len();
+    assert!(k > 0 && n > 0, "degenerate matmul shape");
+    assert_eq!(x.len() % k, 0, "x not a whole number of rows");
+    let m = x.len() / k;
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    let mb = m - m % BM;
+    let nb = n - n % BN;
+    for i0 in (0..mb).step_by(BM) {
+        for j0 in (0..nb).step_by(BN) {
+            let mut acc = [[0.0f32; BN]; BM];
+            for kk in 0..k {
+                let wrow: &[f32; BN] =
+                    (&w[kk * n + j0..kk * n + j0 + BN]).try_into().expect("exact block row");
+                for (ii, accrow) in acc.iter_mut().enumerate() {
+                    let xv = x[(i0 + ii) * k + kk];
+                    for jj in 0..BN {
+                        accrow[jj] += xv * wrow[jj];
+                    }
+                }
+            }
+            let brow = &bias[j0..j0 + BN];
+            for (ii, accrow) in acc.iter().enumerate() {
+                let at = (i0 + ii) * n + j0;
+                let orow = &mut out[at..at + BN];
+                for jj in 0..BN {
+                    orow[jj] = epilogue(accrow[jj] + brow[jj], relu);
+                }
+            }
+        }
+        for i in i0..i0 + BM {
+            for j in nb..n {
+                out[i * n + j] = bias_act_cell(x, k, w, bias, relu, i, j);
+            }
+        }
+    }
+    for i in mb..m {
+        for j in 0..n {
+            out[i * n + j] = bias_act_cell(x, k, w, bias, relu, i, j);
+        }
+    }
+}
+
+/// `C (k×n) = Aᵀ @ B` where `A` is `(m×k)`, `B` is `(m×n)`, row-major,
+/// scalar reference tier (`compress::linalg::matmul_tn_into` order: every
+/// output element accumulates over the shared `m` axis in ascending-i
+/// order from `+0.0`). `C` is unconditionally overwritten. This is the
+/// weight-gradient kernel (`dW = Xᵀ @ dY`).
+pub fn matmul_tn_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = arow[kk];
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// One edge-cell of [`matmul_tn_blocked_into`]: serial ascending-i dot
+/// from `+0.0` — the scalar reference's exact per-element sequence.
+#[inline]
+fn tn_cell(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, kk: usize, j: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..m {
+        acc += a[i * k + kk] * b[i * n + j];
+    }
+    acc
+}
+
+/// [`matmul_tn_into`] on the blocked tier — bit-identical output. Same
+/// Pallas structure with the contraction running over the shared `m` axis:
+/// a resident `BM × BN` block of `C` (BM columns of `A`ᵀ × BN columns of
+/// `B`) accumulates serially ascending in `i`.
+pub fn matmul_tn_blocked_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    let kb = k - k % BM;
+    let nb = n - n % BN;
+    for k0 in (0..kb).step_by(BM) {
+        for j0 in (0..nb).step_by(BN) {
+            let mut acc = [[0.0f32; BN]; BM];
+            for i in 0..m {
+                let brow: &[f32; BN] =
+                    (&b[i * n + j0..i * n + j0 + BN]).try_into().expect("exact block row");
+                let arow = &a[i * k + k0..i * k + k0 + BM];
+                for (ii, accrow) in acc.iter_mut().enumerate() {
+                    let av = arow[ii];
+                    for jj in 0..BN {
+                        accrow[jj] += av * brow[jj];
+                    }
+                }
+            }
+            for (ii, accrow) in acc.iter().enumerate() {
+                let at = (k0 + ii) * n + j0;
+                c[at..at + BN].copy_from_slice(accrow);
+            }
+        }
+        for kk in k0..k0 + BM {
+            for j in nb..n {
+                c[kk * n + j] = tn_cell(a, m, k, b, n, kk, j);
+            }
+        }
+    }
+    for kk in kb..k {
+        for j in 0..n {
+            c[kk * n + j] = tn_cell(a, m, k, b, n, kk, j);
+        }
+    }
+}
+
+/// `C (m×n) = A (m×k) @ Bᵀ` where `B` is `(n×k)`, row-major — the
+/// activation-gradient kernel (`dX = dY @ Wᵀ`). Both rows being contracted
+/// are contiguous, so this stays one serial ascending-k dot per output
+/// element on **both** tiers (identity is trivial); in the MLP it only
+/// ever runs at the small hidden×classes shape, ~`classes/px` of the
+/// layer-1 work, so a blocked variant would buy nothing measurable.
+pub fn matmul_nt_into(a: &[f32], k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    assert!(k > 0, "degenerate matmul shape");
+    assert_eq!(a.len() % k, 0, "a not a whole number of rows");
+    let m = a.len() / k;
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] = acc;
+        }
+    }
+}
+
+/// `out[j] = Σ_i d[i·n + j]` (column sums, ascending-i from `+0.0`) — the
+/// bias-gradient kernel, shared verbatim by both tiers. `n = out.len()`;
+/// `out` is unconditionally overwritten.
+pub fn colsum_into(d: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    assert!(n > 0, "degenerate colsum shape");
+    assert_eq!(d.len() % n, 0, "d not a whole number of rows");
+    out.fill(0.0);
+    for row in d.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, property};
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit drift at {i}");
+        }
+    }
+
+    #[test]
+    fn bias_act_matches_manual() {
+        // X = [[1,2],[3,4]], W = [[5,6],[7,8]], b = [0.5, -100].
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let w = vec![5.0f32, 6.0, 7.0, 8.0];
+        let bias = vec![0.5f32, -100.0];
+        let mut out = vec![f32::NAN; 4];
+        matmul_bias_act_into(&x, 2, &w, &bias, false, &mut out);
+        assert_close(&out, &[19.5, -78.0, 43.5, -50.0], 1e-6, 0.0);
+        // ReLU gates the negative column; -0.0 normalizes to +0.0.
+        matmul_bias_act_into(&x, 2, &w, &bias, true, &mut out);
+        assert_close(&out, &[19.5, 0.0, 43.5, 0.0], 1e-6, 0.0);
+        assert_eq!(epilogue(-0.0, true).to_bits(), 0.0f32.to_bits());
+        assert_eq!(epilogue(f32::NAN, true).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn property_blocked_bias_act_is_bit_identical() {
+        // Shapes straddle the block sizes on purpose: m in [1, 3·BM],
+        // n in [1, 3·BN], so full blocks, partial rows, partial columns,
+        // and sub-block shapes all occur.
+        property("blocked bias_act == scalar (bits)", 80, |g| {
+            let m = g.usize_in(1, 3 * BM);
+            let k = g.usize_in(1, 48);
+            let n = g.usize_in(1, 3 * BN);
+            let relu = g.bool();
+            let x = g.vec_f32(m * k, 2.0);
+            let w = g.vec_f32(k * n, 2.0);
+            let bias = g.vec_f32(n, 1.0);
+            let mut scalar = vec![f32::NAN; m * n];
+            let mut blocked = vec![f32::NAN; m * n];
+            matmul_bias_act_into(&x, k, &w, &bias, relu, &mut scalar);
+            matmul_bias_act_blocked_into(&x, k, &w, &bias, relu, &mut blocked);
+            assert_bits_eq(&scalar, &blocked, "bias_act");
+        });
+    }
+
+    #[test]
+    fn property_blocked_tn_is_bit_identical() {
+        property("blocked tn == scalar (bits)", 80, |g| {
+            let m = g.usize_in(1, 20);
+            let k = g.usize_in(1, 3 * BM);
+            let n = g.usize_in(1, 3 * BN);
+            let a = g.vec_f32(m * k, 2.0);
+            let b = g.vec_f32(m * n, 2.0);
+            let mut scalar = vec![f32::NAN; k * n];
+            let mut blocked = vec![f32::NAN; k * n];
+            matmul_tn_into(&a, m, k, &b, n, &mut scalar);
+            matmul_tn_blocked_into(&a, m, k, &b, n, &mut blocked);
+            assert_bits_eq(&scalar, &blocked, "tn");
+        });
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_at_the_mlp_layer_shapes() {
+        // The deployed shapes: layer 1 (batch 32 × px 3072 → hidden 128)
+        // and layer 2 (batch 32 × hidden 128 → classes 10, a sub-block
+        // column count). Run once at full size, both directions.
+        let mut rng = crate::util::rng::Rng::seed_from(1234);
+        let mut fill = |len: usize, std: f32| {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, std);
+            v
+        };
+        for (m, k, n) in [(32usize, 3072usize, 128usize), (32, 128, 10)] {
+            let x = fill(m * k, 1.0);
+            let w = fill(k * n, 0.05);
+            let bias = fill(n, 0.1);
+            let mut scalar = vec![f32::NAN; m * n];
+            let mut blocked = vec![f32::NAN; m * n];
+            matmul_bias_act_into(&x, k, &w, &bias, true, &mut scalar);
+            matmul_bias_act_blocked_into(&x, k, &w, &bias, true, &mut blocked);
+            assert_bits_eq(&scalar, &blocked, "fwd @ mlp shape");
+
+            let dy = fill(m * n, 0.05);
+            let mut gs = vec![f32::NAN; k * n];
+            let mut gb = vec![f32::NAN; k * n];
+            matmul_tn_into(&x, m, k, &dy, n, &mut gs);
+            matmul_tn_blocked_into(&x, m, k, &dy, n, &mut gb);
+            assert_bits_eq(&gs, &gb, "dW @ mlp shape");
+        }
+    }
+
+    #[test]
+    fn property_nt_matches_explicit_transpose() {
+        // nt's per-element dot runs ascending-k from +0.0 — the same
+        // sequence the nn reference produces — so transposing B and
+        // multiplying normally must agree bit for bit.
+        property("nt == nn(Bᵀ) (bits)", 60, |g| {
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 12);
+            let n = g.usize_in(1, 10);
+            let a = g.vec_f32(m * k, 2.0);
+            let b = g.vec_f32(n * k, 2.0);
+            let mut bt = vec![0.0f32; k * n];
+            for j in 0..n {
+                for kk in 0..k {
+                    bt[kk * n + j] = b[j * k + kk];
+                }
+            }
+            let zero_bias = vec![0.0f32; n];
+            let mut want = vec![f32::NAN; m * n];
+            matmul_bias_act_into(&a, k, &bt, &zero_bias, false, &mut want);
+            let mut got = vec![f32::NAN; m * n];
+            matmul_nt_into(&a, k, &b, n, &mut got);
+            assert_bits_eq(&want, &got, "nt");
+        });
+    }
+
+    #[test]
+    fn colsum_matches_manual() {
+        let d = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 rows × 2 cols
+        let mut out = vec![f32::NAN; 2];
+        colsum_into(&d, &mut out);
+        assert_close(&out, &[9.0, 12.0], 1e-6, 0.0);
+        // Zero rows: overwritten to exact zero, not left dirty.
+        let mut out = vec![f32::NAN; 3];
+        colsum_into(&[], &mut out);
+        assert_eq!(out, vec![0.0f32; 3]);
+    }
+}

@@ -6,7 +6,15 @@
 //! averaging (the content of the all-reduce), axpy-style mixing, norms —
 //! plus parameter initialization from the AOT manifest so Rust, not Python,
 //! owns the experiment seed.
+//!
+//! Two kernel tiers implement that math (DESIGN.md §15): the scalar
+//! reference loops ([`vecmath`], the golden-digest definition) and the
+//! opt-in unrolled tier ([`simd`] lanes + the register-blocked [`matmul`]),
+//! bit-identical by construction and selected per run via the `kernels`
+//! config key.
 
+pub mod matmul;
+pub mod simd;
 pub mod vecmath;
 
 use crate::runtime::manifest::ModelManifest;

@@ -1,0 +1,564 @@
+//! The opt-in SIMD kernel tier (DESIGN.md §15): hand-unrolled f32 lanes
+//! for the flat-vector hot kernels, **bit-identical** to their scalar
+//! references by construction.
+//!
+//! Every golden digest in this repo depends on deterministic f32
+//! arithmetic with a fixed accumulation order, so a faster kernel tier is
+//! only admissible if it reproduces the scalar tier bit for bit. These
+//! kernels do, by design rather than by luck:
+//!
+//! * **Elementwise kernels** (fused Nesterov/Adam step, pullback, anchor,
+//!   axpy, scale) compute one output element from the same-index inputs
+//!   only. Processing [`LANES`] elements per block never reassociates
+//!   anything — each lane evaluates the *identical* scalar expression.
+//! * **Reductions** ([`mean_into_simd`]) keep the per-element operation
+//!   sequence of the serial loop (accumulate `vs[0][i], vs[1][i], …`,
+//!   then scale): the lane blocks run across the output index, not across
+//!   the reduction axis.
+//!
+//! What the tier buys is *guaranteed* fixed-width vectorization: the
+//! lane blocks are fixed-size arrays (`[f32; LANES]`, obtained via
+//! infallible slice→array conversions), so the compiler sees a constant
+//! trip count with no aliasing or bounds checks in the inner loop —
+//! multi-slice update kernels like the fused optimizer steps otherwise
+//! vectorize at LLVM's discretion, not by contract.
+//!
+//! Selection is per run: [`KernelTier`] comes from the config
+//! (`kernels = scalar | simd`, default scalar), flows into the model
+//! runtime and the executor, and every kernel here carries a `to_bits`
+//! identity test against its scalar reference (including remainder-lane
+//! shapes, n ≢ 0 mod [`LANES`]). The register-blocked matmul tier lives
+//! in [`crate::model::matmul`] under the same discipline.
+
+use crate::model::vecmath;
+
+/// Lane width of the unrolled blocks. Eight f32s = one 256-bit vector
+/// register (AVX) or two 128-bit ones (SSE/NEON) — wide enough to saturate
+/// either, small enough that remainder loops stay trivial.
+pub const LANES: usize = 8;
+
+/// Which kernel implementation a run uses for the flat-vector hot path.
+///
+/// `Scalar` is the reference tier — the exact loops the golden digests
+/// were recorded with. `Simd` is the hand-unrolled tier in this module;
+/// it is bit-identical (property-locked), so digests do not move either
+/// way, but only `Scalar` is the *definition* of the numbers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Plain scalar loops (`vecmath`, `runtime::native`) — the bit-identity
+    /// reference and the default.
+    #[default]
+    Scalar,
+    /// Hand-unrolled fixed-width lanes (this module) plus the
+    /// register-blocked matmul ([`crate::model::matmul`]).
+    Simd,
+}
+
+impl KernelTier {
+    /// Parse a config/CLI value (`scalar` | `simd`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "scalar" => Ok(Self::Scalar),
+            "simd" => Ok(Self::Simd),
+            other => anyhow::bail!("unknown kernel tier '{other}' (expected scalar|simd)"),
+        }
+    }
+
+    /// Canonical config value, inverse of [`KernelTier::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Simd => "simd",
+        }
+    }
+}
+
+/// Exact-width view of a lane block. Infallible for `LANES`-length slices;
+/// the conversion is how the inner loops get a constant trip count with no
+/// bounds checks.
+#[inline]
+fn lanes(x: &[f32]) -> &[f32; LANES] {
+    x.try_into().expect("exact lane-width slice")
+}
+
+/// Mutable [`lanes`].
+#[inline]
+fn lanes_mut(x: &mut [f32]) -> &mut [f32; LANES] {
+    x.try_into().expect("exact lane-width slice")
+}
+
+/// `y += a * x`, unrolled — bit-identical to [`vecmath::axpy`].
+pub fn axpy_simd(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let yb = lanes_mut(&mut y[i..i + LANES]);
+        let xb = lanes(&x[i..i + LANES]);
+        for l in 0..LANES {
+            yb[l] += a * xb[l];
+        }
+        i += LANES;
+    }
+    for j in main..n {
+        y[j] += a * x[j];
+    }
+}
+
+/// `y += x`, unrolled (the accumulation step of the pooled mean).
+fn add_assign_simd(y: &mut [f32], x: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let yb = lanes_mut(&mut y[i..i + LANES]);
+        let xb = lanes(&x[i..i + LANES]);
+        for l in 0..LANES {
+            yb[l] += xb[l];
+        }
+        i += LANES;
+    }
+    for j in main..n {
+        y[j] += x[j];
+    }
+}
+
+/// `y *= a`, unrolled (the scale step of the pooled mean).
+fn scale_simd(y: &mut [f32], a: f32) {
+    let n = y.len();
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        for v in lanes_mut(&mut y[i..i + LANES]) {
+            *v *= a;
+        }
+        i += LANES;
+    }
+    for v in &mut y[main..] {
+        *v *= a;
+    }
+}
+
+/// One contiguous chunk (`lo..lo + out.len()` of the output index range) of
+/// the deterministic mean, on either tier — the shared kernel behind
+/// [`mean_into`], [`mean_into_simd`], and the worker pool's chunked
+/// reduction (`executor::pool`). Per output element the operation sequence
+/// is exactly the serial [`vecmath::mean_into`] (copy `vs[0]`, add
+/// `vs[1..]` in order, scale by `1/m`), so any chunking of the index range
+/// composes into a bit-identical whole.
+pub fn mean_chunk_into(tier: KernelTier, vs: &[&[f32]], lo: usize, out: &mut [f32]) {
+    let len = out.len();
+    let inv = 1.0f32 / vs.len() as f32;
+    out.copy_from_slice(&vs[0][lo..lo + len]);
+    match tier {
+        KernelTier::Scalar => {
+            for v in &vs[1..] {
+                for (o, &x) in out.iter_mut().zip(&v[lo..lo + len]) {
+                    *o += x;
+                }
+            }
+            for o in out.iter_mut() {
+                *o *= inv;
+            }
+        }
+        KernelTier::Simd => {
+            for v in &vs[1..] {
+                add_assign_simd(out, &v[lo..lo + len]);
+            }
+            scale_simd(out, inv);
+        }
+    }
+}
+
+/// Unrolled [`vecmath::mean_into`] — same contract, bit-identical output.
+pub fn mean_into_simd(vs: &[&[f32]], out: &mut [f32]) {
+    assert!(!vs.is_empty(), "mean of zero vectors");
+    for v in vs {
+        assert_eq!(v.len(), out.len(), "length mismatch in mean");
+    }
+    mean_chunk_into(KernelTier::Simd, vs, 0, out);
+}
+
+/// Tier-dispatched [`vecmath::mean_into`].
+pub fn mean_into(tier: KernelTier, vs: &[&[f32]], out: &mut [f32]) {
+    match tier {
+        KernelTier::Scalar => vecmath::mean_into(vs, out),
+        KernelTier::Simd => mean_into_simd(vs, out),
+    }
+}
+
+/// Unrolled Eq. (4) pullback `x -= alpha * (x - z)` — bit-identical to
+/// [`vecmath::pullback_inplace`].
+pub fn pullback_inplace_simd(x: &mut [f32], z: &[f32], alpha: f32) {
+    assert_eq!(x.len(), z.len());
+    let n = x.len();
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let xb = lanes_mut(&mut x[i..i + LANES]);
+        let zb = lanes(&z[i..i + LANES]);
+        for l in 0..LANES {
+            xb[l] -= alpha * (xb[l] - zb[l]);
+        }
+        i += LANES;
+    }
+    for j in main..n {
+        x[j] -= alpha * (x[j] - z[j]);
+    }
+}
+
+/// Tier-dispatched [`vecmath::pullback_inplace`].
+pub fn pullback_inplace(tier: KernelTier, x: &mut [f32], z: &[f32], alpha: f32) {
+    match tier {
+        KernelTier::Scalar => vecmath::pullback_inplace(x, z, alpha),
+        KernelTier::Simd => pullback_inplace_simd(x, z, alpha),
+    }
+}
+
+/// Unrolled Eqs. (10)–(11) anchor update `v = beta*v + (avg - z); z += v`
+/// — bit-identical to [`vecmath::anchor_update_inplace`].
+pub fn anchor_update_inplace_simd(z: &mut [f32], v: &mut [f32], avg: &[f32], beta: f32) {
+    assert_eq!(z.len(), v.len());
+    assert_eq!(z.len(), avg.len());
+    let n = z.len();
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let zb = lanes_mut(&mut z[i..i + LANES]);
+        let vb = lanes_mut(&mut v[i..i + LANES]);
+        let ab = lanes(&avg[i..i + LANES]);
+        for l in 0..LANES {
+            vb[l] = beta * vb[l] + (ab[l] - zb[l]);
+            zb[l] += vb[l];
+        }
+        i += LANES;
+    }
+    for j in main..n {
+        v[j] = beta * v[j] + (avg[j] - z[j]);
+        z[j] += v[j];
+    }
+}
+
+/// Tier-dispatched [`vecmath::anchor_update_inplace`].
+pub fn anchor_update_inplace(tier: KernelTier, z: &mut [f32], v: &mut [f32], avg: &[f32], beta: f32) {
+    match tier {
+        KernelTier::Scalar => vecmath::anchor_update_inplace(z, v, avg, beta),
+        KernelTier::Simd => anchor_update_inplace_simd(z, v, avg, beta),
+    }
+}
+
+/// Unrolled fused Nesterov step — bit-identical to the scalar
+/// `runtime::native::NativeModel::sgd_update_inplace` (identical
+/// per-element expression order: `g = grad + wd*x; v' = mu*v + g;
+/// x -= lr*(g + mu*v')`).
+pub fn sgd_update_inplace_simd(
+    params: &mut [f32],
+    mom: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    mu: f32,
+    wd: f32,
+) {
+    let n = params.len();
+    assert_eq!(mom.len(), n);
+    assert_eq!(grad.len(), n);
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let pb = lanes_mut(&mut params[i..i + LANES]);
+        let vb = lanes_mut(&mut mom[i..i + LANES]);
+        let gb = lanes(&grad[i..i + LANES]);
+        for l in 0..LANES {
+            let g = gb[l] + wd * pb[l];
+            let vn = mu * vb[l] + g;
+            pb[l] -= lr * (g + mu * vn);
+            vb[l] = vn;
+        }
+        i += LANES;
+    }
+    for j in main..n {
+        let g = grad[j] + wd * params[j];
+        let vn = mu * mom[j] + g;
+        params[j] -= lr * (g + mu * vn);
+        mom[j] = vn;
+    }
+}
+
+/// Unrolled fused Adam step — bit-identical to the scalar
+/// `runtime::native::NativeModel::adam_update_inplace` (same constants
+/// b1=0.9, b2=0.999, eps=1e-8, same per-element expression order).
+pub fn adam_update_inplace_simd(
+    params: &mut [f32],
+    m1: &mut [f32],
+    m2: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    t: f32,
+) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let n = params.len();
+    assert_eq!(m1.len(), n);
+    assert_eq!(m2.len(), n);
+    assert_eq!(grad.len(), n);
+    let bc1 = 1.0 - B1.powf(t);
+    let bc2 = 1.0 - B2.powf(t);
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        let pb = lanes_mut(&mut params[i..i + LANES]);
+        let mb = lanes_mut(&mut m1[i..i + LANES]);
+        let vb = lanes_mut(&mut m2[i..i + LANES]);
+        let gb = lanes(&grad[i..i + LANES]);
+        for l in 0..LANES {
+            let g = gb[l];
+            let mn = B1 * mb[l] + (1.0 - B1) * g;
+            let vn = B2 * vb[l] + (1.0 - B2) * g * g;
+            let mhat = mn / bc1;
+            let vhat = vn / bc2;
+            pb[l] -= lr * mhat / (vhat.sqrt() + EPS);
+            mb[l] = mn;
+            vb[l] = vn;
+        }
+        i += LANES;
+    }
+    for j in main..n {
+        let g = grad[j];
+        let mn = B1 * m1[j] + (1.0 - B1) * g;
+        let vn = B2 * m2[j] + (1.0 - B2) * g * g;
+        let mhat = mn / bc1;
+        let vhat = vn / bc2;
+        params[j] -= lr * mhat / (vhat.sqrt() + EPS);
+        m1[j] = mn;
+        m2[j] = vn;
+    }
+}
+
+/// Tier-dispatched fused Nesterov step. The `Scalar` arm is the canonical
+/// in-place loop (the golden-digest definition; the allocating
+/// `NativeModel::sgd_update` keeps an independent copy as the reference
+/// the identity tests compare against).
+pub fn sgd_update_inplace(
+    tier: KernelTier,
+    params: &mut [f32],
+    mom: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    mu: f32,
+    wd: f32,
+) {
+    match tier {
+        KernelTier::Scalar => {
+            for i in 0..params.len() {
+                let g = grad[i] + wd * params[i];
+                let vn = mu * mom[i] + g;
+                params[i] -= lr * (g + mu * vn);
+                mom[i] = vn;
+            }
+        }
+        KernelTier::Simd => sgd_update_inplace_simd(params, mom, grad, lr, mu, wd),
+    }
+}
+
+/// Tier-dispatched fused Adam step (constants b1=0.9, b2=0.999, eps=1e-8,
+/// matching `NativeModel::adam_update`).
+pub fn adam_update_inplace(
+    tier: KernelTier,
+    params: &mut [f32],
+    m1: &mut [f32],
+    m2: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    t: f32,
+) {
+    match tier {
+        KernelTier::Scalar => {
+            const B1: f32 = 0.9;
+            const B2: f32 = 0.999;
+            const EPS: f32 = 1e-8;
+            let bc1 = 1.0 - B1.powf(t);
+            let bc2 = 1.0 - B2.powf(t);
+            for i in 0..params.len() {
+                let g = grad[i];
+                let mn = B1 * m1[i] + (1.0 - B1) * g;
+                let vn = B2 * m2[i] + (1.0 - B2) * g * g;
+                let mhat = mn / bc1;
+                let vhat = vn / bc2;
+                params[i] -= lr * mhat / (vhat.sqrt() + EPS);
+                m1[i] = mn;
+                m2[i] = vn;
+            }
+        }
+        KernelTier::Simd => adam_update_inplace_simd(params, m1, m2, grad, lr, t),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeModel;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit drift at {i}");
+        }
+    }
+
+    #[test]
+    fn tier_parse_round_trips() {
+        for tier in [KernelTier::Scalar, KernelTier::Simd] {
+            assert_eq!(KernelTier::parse(tier.name()).unwrap(), tier);
+        }
+        assert_eq!(KernelTier::default(), KernelTier::Scalar);
+        assert!(KernelTier::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn property_axpy_simd_is_bit_identical() {
+        property("axpy simd == scalar (bits)", 120, |g| {
+            let n = g.usize_in(1, 600);
+            let a = g.f32_in(-3.0, 3.0);
+            let x = g.vec_f32(n, 5.0);
+            let mut ys = g.vec_f32(n, 5.0);
+            let mut yv = ys.clone();
+            vecmath::axpy(a, &x, &mut ys);
+            axpy_simd(a, &x, &mut yv);
+            assert_bits_eq(&ys, &yv, "axpy");
+        });
+    }
+
+    #[test]
+    fn property_mean_simd_is_bit_identical() {
+        property("mean simd == scalar (bits)", 100, |g| {
+            let n = g.usize_in(1, 2000);
+            let m = g.usize_in(1, 12);
+            let vs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 50.0)).collect();
+            let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+            let mut serial = vec![0.0f32; n];
+            vecmath::mean_into(&refs, &mut serial);
+            // Pre-poisoned: "unconditionally overwritten" must hold here too.
+            let mut unrolled = vec![f32::NAN; n];
+            mean_into_simd(&refs, &mut unrolled);
+            assert_bits_eq(&serial, &unrolled, "mean");
+        });
+    }
+
+    #[test]
+    fn property_mean_chunks_compose_bit_identically_on_both_tiers() {
+        // The pool splits the output range into arbitrary contiguous
+        // chunks; on either tier the reassembled whole must equal the
+        // serial mean bit for bit.
+        property("chunked mean == serial mean (bits)", 80, |g| {
+            let n = g.usize_in(1, 1500);
+            let m = g.usize_in(1, 8);
+            let chunk = g.usize_in(1, n.max(1));
+            let vs: Vec<Vec<f32>> = (0..m).map(|_| g.vec_f32(n, 20.0)).collect();
+            let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+            let mut serial = vec![0.0f32; n];
+            vecmath::mean_into(&refs, &mut serial);
+            for tier in [KernelTier::Scalar, KernelTier::Simd] {
+                let mut out = vec![f32::NAN; n];
+                for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                    mean_chunk_into(tier, &refs, ci * chunk, out_chunk);
+                }
+                assert_bits_eq(&serial, &out, tier.name());
+            }
+        });
+    }
+
+    #[test]
+    fn property_pullback_and_anchor_simd_are_bit_identical() {
+        property("pullback/anchor simd == scalar (bits)", 120, |g| {
+            let n = g.usize_in(1, 700);
+            let alpha = g.f32_in(0.0, 1.0);
+            let beta = g.f32_in(0.0, 1.0);
+            let z = g.vec_f32(n, 3.0);
+            let mut xs = g.vec_f32(n, 3.0);
+            let mut xv = xs.clone();
+            vecmath::pullback_inplace(&mut xs, &z, alpha);
+            pullback_inplace_simd(&mut xv, &z, alpha);
+            assert_bits_eq(&xs, &xv, "pullback");
+
+            let avg = g.vec_f32(n, 3.0);
+            let (mut zs, mut vs) = (g.vec_f32(n, 3.0), g.vec_f32(n, 1.0));
+            let (mut zv, mut vv) = (zs.clone(), vs.clone());
+            vecmath::anchor_update_inplace(&mut zs, &mut vs, &avg, beta);
+            anchor_update_inplace_simd(&mut zv, &mut vv, &avg, beta);
+            assert_bits_eq(&zs, &zv, "anchor z");
+            assert_bits_eq(&vs, &vv, "anchor v");
+        });
+    }
+
+    #[test]
+    fn property_fused_optimizer_simd_is_bit_identical() {
+        // Scalar reference: the *allocating* NativeModel kernels. Their
+        // loops live in `runtime::native`, independent of the dispatchers
+        // in this module — so both arms of the dispatch (the canonical
+        // scalar loop and the unrolled tier) are compared against the
+        // original golden-digest definition, not against each other.
+        let model = NativeModel::new(4, 3);
+        property("sgd/adam simd == scalar (bits)", 100, |g| {
+            let n = g.usize_in(1, 500);
+            let grad = g.vec_f32(n, 0.5);
+            let (lr, mu, wd) = (g.f32_in(0.0, 0.5), g.f32_in(0.0, 0.99), g.f32_in(0.0, 1e-2));
+
+            let (ps, vs) = (g.vec_f32(n, 1.0), g.vec_f32(n, 0.3));
+            let (p_ref, v_ref) = model.sgd_update(&ps, &vs, &grad, lr, mu, wd);
+            for tier in [KernelTier::Scalar, KernelTier::Simd] {
+                let (mut p, mut v) = (ps.clone(), vs.clone());
+                sgd_update_inplace(tier, &mut p, &mut v, &grad, lr, mu, wd);
+                assert_bits_eq(&p_ref, &p, "sgd params");
+                assert_bits_eq(&v_ref, &v, "sgd momentum");
+            }
+
+            let t = g.usize_in(1, 50) as f32;
+            let (ps, ms) = (g.vec_f32(n, 1.0), g.vec_f32(n, 0.3));
+            let m2s: Vec<f32> = g.vec_f32(n, 0.2).iter().map(|v| v.abs()).collect();
+            let (p_ref, m_ref, v_ref) = model.adam_update(&ps, &ms, &m2s, &grad, lr, t);
+            for tier in [KernelTier::Scalar, KernelTier::Simd] {
+                let (mut p, mut m, mut v) = (ps.clone(), ms.clone(), m2s.clone());
+                adam_update_inplace(tier, &mut p, &mut m, &mut v, &grad, lr, t);
+                assert_bits_eq(&p_ref, &p, "adam params");
+                assert_bits_eq(&m_ref, &m, "adam m1");
+                assert_bits_eq(&v_ref, &v, "adam m2");
+            }
+        });
+    }
+
+    #[test]
+    fn paper_and_mlp_shapes_cover_remainder_lanes() {
+        // The two deployed flat-vector lengths: the paper's linear model
+        // (3072·10 + 10) and the default MLP (3072·128 + 128 + 128·10 + 10).
+        // Both leave a remainder of 2 mod LANES, so this exercises the
+        // lane blocks *and* the scalar tails at full production size.
+        for n in [3072 * 10 + 10, 3072 * 128 + 128 + 128 * 10 + 10] {
+            assert_eq!(n % LANES, 2, "shape no longer covers the tail");
+            let model = NativeModel::new(4, 3);
+            let mut rng = Rng::seed_from(97);
+            let mut grad = vec![0.0f32; n];
+            rng.fill_normal(&mut grad, 0.1);
+            let mut ps = vec![0.0f32; n];
+            rng.fill_normal(&mut ps, 0.5);
+            let mut vs = vec![0.0f32; n];
+            rng.fill_normal(&mut vs, 0.2);
+            let (p_ref, v_ref) = model.sgd_update(&ps, &vs, &grad, 0.05, 0.9, 1e-4);
+            let (mut pv, mut vv) = (ps.clone(), vs.clone());
+            sgd_update_inplace_simd(&mut pv, &mut vv, &grad, 0.05, 0.9, 1e-4);
+            assert_bits_eq(&p_ref, &pv, "sgd params @ paper shape");
+            assert_bits_eq(&v_ref, &vv, "sgd momentum @ paper shape");
+
+            let refs = [ps.as_slice(), grad.as_slice(), vs.as_slice()];
+            let mut serial = vec![0.0f32; n];
+            vecmath::mean_into(&refs, &mut serial);
+            let mut unrolled = vec![f32::NAN; n];
+            mean_into_simd(&refs, &mut unrolled);
+            assert_bits_eq(&serial, &unrolled, "mean @ paper shape");
+        }
+    }
+}

@@ -373,7 +373,7 @@ pub fn run_worker(
     // on the coordinator: same model runtime, same generated data, same
     // shards, schedule, and cluster model — all derived from the shipped
     // config, so every per-worker stream matches the canonical ones.
-    let rt = runtime::load_auto(Path::new(&cfg.artifacts_dir), &cfg.model)?;
+    let rt = runtime::load_for(Path::new(&cfg.artifacts_dir), &cfg)?;
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);

@@ -1,0 +1,369 @@
+//! Native MLP backend: a one-hidden-layer ReLU perceptron over the same
+//! flat-vector kernel contract as [`crate::runtime::native::NativeModel`],
+//! built on the two-tier matmul kernels (`model::matmul`, DESIGN.md §15).
+//!
+//! Purpose: realistic compute intensity. The linear reference model costs
+//! ~`4·B·px·nc` FLOPs per training step — so little local compute that the
+//! wall-clock benches (E12–E14) mostly measure orchestration, and the
+//! compute/communication ratio the paper's overlap argument depends on
+//! sits at one unrealistically tiny point. The MLP's `4·B·px·hidden +
+//! 6·B·hidden·nc` per-step FLOPs (~13× the linear model at the default
+//! `hidden = 128`) puts a real local phase under every algorithm ×
+//! topology × compressor × fault × population axis, while the flat
+//! parameter vector keeps every collective, compressor, and spill codec
+//! working unchanged.
+//!
+//! Layout of the flat vector: `W1` (px × hidden, row-major), `b1`
+//! (hidden), `W2` (hidden × classes), `b2` (classes). Forward:
+//! `h1 = relu(X·W1 + b1)`, `logits = h1·W2 + b2`, stable softmax
+//! cross-entropy, last-max-wins argmax — per-sample semantics identical to
+//! the linear model. Backward: `Δ = (softmax - onehot)/B`, `dW2 = h1ᵀΔ`,
+//! `db2 = colsumΔ`, `dh1 = ΔW2ᵀ ⊙ [h1 > 0]`, `dW1 = Xᵀdh1`,
+//! `db1 = colsum dh1`.
+//!
+//! **Kernel tiers:** layer-scale matmuls dispatch on the run's
+//! [`KernelTier`] (scalar ikj reference vs the register-blocked Pallas
+//! port), which are bit-identical by construction — so the two tiers
+//! produce bit-identical losses, gradients, and predictions (locked by the
+//! tests below).
+//!
+//! **Hot-path memory:** the activations live in per-OS-thread scratch
+//! (`thread_local`, grow-once) — the per-step kernels allocate nothing
+//! once a thread is warm, keeping the zero-steady-alloc discipline of
+//! DESIGN.md §10 (each pool worker warms its own scratch during the
+//! engine's warm-up rounds).
+
+use std::cell::RefCell;
+
+use crate::model::matmul;
+use crate::model::simd::KernelTier;
+
+/// Per-thread activation scratch: layer-1 activations, logits, the softmax
+/// delta, and the hidden-layer gradient. Grow-once (`resize` never shrinks
+/// capacity), so steady-state steps allocate nothing.
+#[derive(Default)]
+struct Scratch {
+    h1: Vec<f32>,
+    logits: Vec<f32>,
+    delta: Vec<f32>,
+    dh1: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// One-hidden-layer ReLU MLP over flat `[px]` inputs (config
+/// `model = mlp`, `hidden = …`, `kernels = scalar|simd`).
+#[derive(Clone, Debug)]
+pub struct NativeMlp {
+    /// flat input pixel count
+    pub px: usize,
+    /// hidden-layer width
+    pub hidden: usize,
+    /// output class count
+    pub classes: usize,
+    tier: KernelTier,
+}
+
+impl NativeMlp {
+    /// Model over `px`-pixel inputs with `hidden` ReLU units and `classes`
+    /// outputs, running its layer kernels on `tier`.
+    pub fn new(px: usize, hidden: usize, classes: usize, tier: KernelTier) -> Self {
+        assert!(px > 0 && hidden > 0 && classes > 0, "degenerate mlp shape");
+        Self { px, hidden, classes, tier }
+    }
+
+    /// Flat parameter count (`W1 + b1 + W2 + b2`).
+    pub fn param_count(&self) -> usize {
+        self.px * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    /// The kernel tier this instance dispatches to.
+    pub fn tier(&self) -> KernelTier {
+        self.tier
+    }
+
+    /// `out = act(X·W + bias)` on the instance's tier (both tiers are
+    /// bit-identical; `model::matmul` locks it).
+    fn mm_bias_act(&self, x: &[f32], k: usize, w: &[f32], bias: &[f32], relu: bool, out: &mut [f32]) {
+        match self.tier {
+            KernelTier::Scalar => matmul::matmul_bias_act_into(x, k, w, bias, relu, out),
+            KernelTier::Simd => matmul::matmul_bias_act_blocked_into(x, k, w, bias, relu, out),
+        }
+    }
+
+    /// `c = aᵀ·b` on the instance's tier (the weight-gradient kernel).
+    fn mm_tn(&self, a: &[f32], m: usize, k: usize, b: &[f32], n: usize, c: &mut [f32]) {
+        match self.tier {
+            KernelTier::Scalar => matmul::matmul_tn_into(a, m, k, b, n, c),
+            KernelTier::Simd => matmul::matmul_tn_blocked_into(a, m, k, b, n, c),
+        }
+    }
+
+    /// Forward one batch; accumulate mean-loss pieces and (optionally) the
+    /// gradient of the mean cross-entropy loss — the same contract as
+    /// `NativeModel::forward`. Returns `(sum_loss, correct_count)`; `grad`,
+    /// when given, receives the *mean* gradient over the batch (every
+    /// region is fully overwritten, so prior contents are irrelevant).
+    fn forward(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+        mut grad: Option<&mut [f32]>,
+    ) -> (f64, usize) {
+        let (px, nh, nc) = (self.px, self.hidden, self.classes);
+        let w1 = &params[..px * nh];
+        let b1 = &params[px * nh..px * nh + nh];
+        let w2 = &params[px * nh + nh..px * nh + nh + nh * nc];
+        let b2 = &params[px * nh + nh + nh * nc..];
+        let inv_b = 1.0f32 / batch as f32;
+        let mut sum_loss = 0.0f64;
+        let mut correct = 0usize;
+        SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.h1.resize(batch * nh, 0.0);
+            s.logits.resize(batch * nc, 0.0);
+            self.mm_bias_act(&images[..batch * px], px, w1, b1, true, &mut s.h1);
+            self.mm_bias_act(&s.h1, nh, w2, b2, false, &mut s.logits);
+            if grad.is_some() {
+                s.delta.resize(batch * nc, 0.0);
+            }
+            for i in 0..batch {
+                let logits = &s.logits[i * nc..(i + 1) * nc];
+                // Stable softmax cross-entropy + last-max-wins argmax —
+                // verbatim the linear model's per-sample semantics.
+                let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum_exp = 0.0f32;
+                for &l in logits.iter() {
+                    sum_exp += (l - max).exp();
+                }
+                let y = labels[i] as usize;
+                debug_assert!(y < nc, "label out of range");
+                let log_z = max + sum_exp.ln();
+                sum_loss += (log_z - logits[y]) as f64;
+                let mut argmax = 0usize;
+                let mut best = logits[0];
+                for (c, &l) in logits.iter().enumerate().skip(1) {
+                    if l >= best {
+                        best = l;
+                        argmax = c;
+                    }
+                }
+                if argmax == y {
+                    correct += 1;
+                }
+                if grad.is_some() {
+                    let drow = &mut s.delta[i * nc..(i + 1) * nc];
+                    for (c, &l) in logits.iter().enumerate() {
+                        let p = (l - max).exp() / sum_exp;
+                        drow[c] = (p - if c == y { 1.0 } else { 0.0 }) * inv_b;
+                    }
+                }
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                s.dh1.resize(batch * nh, 0.0);
+                let (gw1, rest) = g.split_at_mut(px * nh);
+                let (gb1, rest) = rest.split_at_mut(nh);
+                let (gw2, gb2) = rest.split_at_mut(nh * nc);
+                // Layer 2: dW2 = h1ᵀ·Δ, db2 = colsum Δ.
+                self.mm_tn(&s.h1, batch, nh, &s.delta, nc, gw2);
+                matmul::colsum_into(&s.delta, gb2);
+                // dh1 = Δ·W2ᵀ, gated by the ReLU mask. The epilogue's
+                // strict `> 0.0` makes `h1 == 0.0` exactly the gated set.
+                matmul::matmul_nt_into(&s.delta, nc, w2, nh, &mut s.dh1);
+                for (d, &a) in s.dh1.iter_mut().zip(s.h1.iter()) {
+                    if a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                // Layer 1: dW1 = Xᵀ·dh1, db1 = colsum dh1.
+                self.mm_tn(&images[..batch * px], batch, px, &s.dh1, nh, gw1);
+                matmul::colsum_into(&s.dh1, gb1);
+            }
+        });
+        (sum_loss, correct)
+    }
+
+    /// Loss + mean gradient over one training batch.
+    pub fn grad_step(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> (f32, Vec<f32>) {
+        let mut grad = vec![0.0f32; self.param_count()];
+        let (sum_loss, _) = self.forward(params, images, labels, batch, Some(&mut grad));
+        ((sum_loss / batch as f64) as f32, grad)
+    }
+
+    /// [`NativeMlp::grad_step`] into a caller-provided scratch buffer
+    /// (fully overwritten — bit-identical to the allocating form).
+    pub fn grad_step_into(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        assert_eq!(grad.len(), self.param_count(), "gradient buffer length");
+        let (sum_loss, _) = self.forward(params, images, labels, batch, Some(grad));
+        (sum_loss / batch as f64) as f32
+    }
+
+    /// `(sum_loss, correct_count)` over one eval batch.
+    pub fn evaluate(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> (f32, f32) {
+        let (sum_loss, correct) = self.forward(params, images, labels, batch, None);
+        (sum_loss as f32, correct as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn toy(tier: KernelTier) -> NativeMlp {
+        NativeMlp::new(6, 5, 3, tier)
+    }
+
+    fn rand_params(m: &NativeMlp, seed: u64) -> Vec<f32> {
+        let mut p = vec![0.0f32; m.param_count()];
+        Rng::seed_from(seed).fill_normal(&mut p, 0.4);
+        p
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let m = NativeMlp::new(3072, 128, 10, KernelTier::Scalar);
+        assert_eq!(m.param_count(), 3072 * 128 + 128 + 128 * 10 + 10);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let m = toy(KernelTier::Scalar);
+        let params = rand_params(&m, 1);
+        let b = 4;
+        let mut images = vec![0.0f32; b * m.px];
+        Rng::seed_from(2).fill_normal(&mut images, 1.0);
+        let labels = vec![0i32, 2, 1, 1];
+        let (_, grad) = m.grad_step(&params, &images, &labels, b);
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, m.px * m.hidden, m.param_count() - 1] {
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let (lp, _) = m.grad_step(&pp, &images, &labels, b);
+            pp[idx] -= 2.0 * eps;
+            let (lm, _) = m.grad_step(&pp, &images, &labels, b);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "grad[{idx}]: fd {fd} vs analytic {}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn training_one_batch_reduces_loss() {
+        let m = NativeMlp::new(8, 6, 4, KernelTier::Scalar);
+        let lin = crate::runtime::native::NativeModel::new(1, 1); // kernel host
+        let mut params = rand_params(&m, 5);
+        let mut mom = vec![0.0f32; m.param_count()];
+        let b = 16;
+        let mut images = vec![0.0f32; b * m.px];
+        Rng::seed_from(6).fill_normal(&mut images, 1.0);
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 4).collect();
+        let (first, _) = m.grad_step(&params, &images, &labels, b);
+        let mut last = first;
+        for _ in 0..60 {
+            let mut grad = vec![0.0f32; m.param_count()];
+            last = m.grad_step_into(&params, &images, &labels, b, &mut grad);
+            lin.sgd_update_inplace(&mut params, &mut mom, &grad, 0.3, 0.9, 0.0);
+        }
+        assert!(last < first * 0.5, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn property_simd_tier_is_bit_identical_to_scalar() {
+        // The end-to-end forward/backward lock at MLP shapes: random
+        // (px, hidden, classes, batch) straddling the matmul block sizes,
+        // loss + gradient + eval counts compared bit for bit across tiers.
+        property("mlp simd tier == scalar tier (bits)", 40, |g| {
+            let px = g.usize_in(1, 24);
+            let nh = g.usize_in(1, 40);
+            let nc = g.usize_in(1, 8);
+            let batch = g.usize_in(1, 10);
+            let scalar = NativeMlp::new(px, nh, nc, KernelTier::Scalar);
+            let simd = NativeMlp::new(px, nh, nc, KernelTier::Simd);
+            let params = {
+                let mut p = vec![0.0f32; scalar.param_count()];
+                Rng::seed_from(g.seed).fill_normal(&mut p, 0.4);
+                p
+            };
+            let images = g.vec_f32(batch * px, 1.0);
+            let labels: Vec<i32> = (0..batch).map(|i| (i % nc) as i32).collect();
+
+            let (loss_s, grad_s) = scalar.grad_step(&params, &images, &labels, batch);
+            let (loss_v, grad_v) = simd.grad_step(&params, &images, &labels, batch);
+            assert_eq!(loss_s.to_bits(), loss_v.to_bits(), "loss drift");
+            for (i, (a, b)) in grad_s.iter().zip(&grad_v).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "grad bit drift at {i}");
+            }
+
+            let (el_s, ec_s) = scalar.evaluate(&params, &images, &labels, batch);
+            let (el_v, ec_v) = simd.evaluate(&params, &images, &labels, batch);
+            assert_eq!(el_s.to_bits(), el_v.to_bits());
+            assert_eq!(ec_s, ec_v);
+        });
+    }
+
+    #[test]
+    fn tiers_are_bit_identical_at_the_paper_shape() {
+        // Full production shape (px 3072, hidden 128, classes 10, batch
+        // 32), once: the deployed dimensions, covering full blocks plus
+        // the classes sub-block and remainder lanes.
+        let scalar = NativeMlp::new(3072, 128, 10, KernelTier::Scalar);
+        let simd = NativeMlp::new(3072, 128, 10, KernelTier::Simd);
+        let mut params = vec![0.0f32; scalar.param_count()];
+        Rng::seed_from(41).fill_normal(&mut params, 0.02);
+        let batch = 32;
+        let mut images = vec![0.0f32; batch * 3072];
+        Rng::seed_from(42).fill_normal(&mut images, 1.0);
+        let labels: Vec<i32> = (0..batch as i32).map(|i| i % 10).collect();
+        let (loss_s, grad_s) = scalar.grad_step(&params, &images, &labels, batch);
+        let (loss_v, grad_v) = simd.grad_step(&params, &images, &labels, batch);
+        assert_eq!(loss_s.to_bits(), loss_v.to_bits());
+        for (i, (a, b)) in grad_s.iter().zip(&grad_v).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "grad bit drift at {i}");
+        }
+    }
+
+    #[test]
+    fn grad_step_into_matches_allocating_form_bitwise() {
+        let m = toy(KernelTier::Simd);
+        let params = rand_params(&m, 11);
+        let b = 5;
+        let mut images = vec![0.0f32; b * m.px];
+        Rng::seed_from(12).fill_normal(&mut images, 1.0);
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 3).collect();
+        let (loss_a, grad_a) = m.grad_step(&params, &images, &labels, b);
+        let mut grad_b = vec![f32::NAN; m.param_count()]; // poisoned scratch
+        let loss_b = m.grad_step_into(&params, &images, &labels, b, &mut grad_b);
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+        for (a, bb) in grad_a.iter().zip(&grad_b) {
+            assert_eq!(a.to_bits(), bb.to_bits());
+        }
+    }
+}

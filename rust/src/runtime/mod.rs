@@ -4,17 +4,24 @@
 //! * **pjrt** (feature `pjrt`) — loads the AOT HLO-text artifacts produced by
 //!   `python/compile/` and executes them through PJRT; Python is never on
 //!   the training path. See `pjrt.rs`.
-//! * **native** (always available) — a pure-Rust reference model
-//!   (multinomial logistic regression) implementing the identical kernel
-//!   algebra (`python/compile/kernels/ref.py`), so every algorithm, test,
-//!   and bench runs end-to-end on a sealed machine with no XLA and no
-//!   artifacts. See `native.rs`.
+//! * **native** (always available) — pure-Rust reference models
+//!   implementing the identical kernel algebra
+//!   (`python/compile/kernels/ref.py`), so every algorithm, test, and
+//!   bench runs end-to-end on a sealed machine with no XLA and no
+//!   artifacts: the linear model (`native.rs`, config `model = linear`)
+//!   and a one-hidden-layer ReLU MLP (`mlp.rs`, `model = mlp`,
+//!   `hidden = …`) for realistic per-step compute.
+//!
+//! The native backends run their hot kernels on a per-run
+//! [`KernelTier`] (`kernels = scalar | simd`, DESIGN.md §15); the tiers
+//! are bit-identical, so the choice affects speed, never digests.
 //!
 //! The coordinator sees one type either way: [`ModelRuntime`], plain
 //! `&[f32]` in / `Vec<f32>` out, with all shape validation centralized here
 //! (the system must fail loudly on malformed inputs regardless of backend).
 
 pub mod manifest;
+pub mod mlp;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -25,15 +32,22 @@ use std::path::Path;
 use anyhow::Result;
 
 use manifest::{ModelManifest, TensorManifest};
+use mlp::NativeMlp;
 use native::NativeModel;
 #[cfg(feature = "pjrt")]
 pub use pjrt::Runtime;
 
+use crate::config::ExperimentConfig;
 use crate::data::{C, H, NUM_CLASSES, PX, W};
+use crate::model::simd::{self, KernelTier};
+
+/// Hidden width of the MLP model when the config does not say otherwise.
+pub const DEFAULT_HIDDEN: usize = 128;
 
 /// Which engine executes the kernels.
 enum Backend {
     Native(NativeModel),
+    Mlp(NativeMlp),
     #[cfg(feature = "pjrt")]
     Pjrt(Box<pjrt::PjrtModel>),
 }
@@ -53,6 +67,9 @@ pub struct ModelRuntime {
     pub image_shape: [usize; 3],
     /// tensor layout table (initialization, PowerSGD matricization)
     pub manifest: ModelManifest,
+    /// kernel tier the native backends dispatch to (bit-identical either
+    /// way; `Scalar` unless the config opts into `kernels = simd`)
+    pub tier: KernelTier,
     backend: Backend,
 }
 
@@ -90,22 +107,119 @@ fn native_manifest() -> ModelManifest {
     }
 }
 
+/// Manifest for the native MLP: two he-initialized weight matrices (both
+/// PowerSGD-matricizable) with their biases, tiling the flat vector as
+/// `W1 | b1 | W2 | b2`.
+fn mlp_manifest(hidden: usize) -> ModelManifest {
+    let w1 = PX * hidden;
+    let w2 = hidden * NUM_CLASSES;
+    ModelManifest {
+        param_count: w1 + hidden + w2 + NUM_CLASSES,
+        tensors: vec![
+            TensorManifest {
+                name: "w1".into(),
+                offset: 0,
+                size: w1,
+                shape: vec![PX, hidden],
+                init: "he_normal".into(),
+                std: (2.0f32 / PX as f32).sqrt(),
+                rows: PX,
+                cols: hidden,
+                compress: true,
+            },
+            TensorManifest {
+                name: "b1".into(),
+                offset: w1,
+                size: hidden,
+                shape: vec![hidden],
+                init: "zeros".into(),
+                std: 0.0,
+                rows: 1,
+                cols: hidden,
+                compress: false,
+            },
+            TensorManifest {
+                name: "w2".into(),
+                offset: w1 + hidden,
+                size: w2,
+                shape: vec![hidden, NUM_CLASSES],
+                init: "he_normal".into(),
+                std: (2.0f32 / hidden as f32).sqrt(),
+                rows: hidden,
+                cols: NUM_CLASSES,
+                compress: true,
+            },
+            TensorManifest {
+                name: "b2".into(),
+                offset: w1 + hidden + w2,
+                size: NUM_CLASSES,
+                shape: vec![NUM_CLASSES],
+                init: "zeros".into(),
+                std: 0.0,
+                rows: 1,
+                cols: NUM_CLASSES,
+                compress: false,
+            },
+        ],
+        modules: BTreeMap::new(),
+    }
+}
+
 impl ModelRuntime {
-    /// Build the native (pure-Rust) runtime. `name` is recorded for logs;
-    /// the architecture is always the reference linear model.
+    /// Build the native (pure-Rust) runtime on the scalar (reference)
+    /// kernel tier. `model = "mlp"` selects the MLP backend at
+    /// [`DEFAULT_HIDDEN`]; any other name is recorded for logs and runs
+    /// the reference linear model.
     pub fn native(name: &str) -> Result<Self> {
-        let manifest = native_manifest();
+        Self::native_with(name, DEFAULT_HIDDEN, KernelTier::Scalar)
+    }
+
+    /// Build the native runtime with an explicit architecture and kernel
+    /// tier — the constructor behind [`load_for`]. Tiers are
+    /// bit-identical, so `tier` changes speed, never results.
+    pub fn native_with(model: &str, hidden: usize, tier: KernelTier) -> Result<Self> {
+        let (manifest, backend) = if model == "mlp" {
+            anyhow::ensure!(hidden > 0, "mlp model needs hidden > 0");
+            (
+                mlp_manifest(hidden),
+                Backend::Mlp(NativeMlp::new(PX, hidden, NUM_CLASSES, tier)),
+            )
+        } else {
+            (
+                native_manifest(),
+                Backend::Native(NativeModel::with_tier(PX, NUM_CLASSES, tier)),
+            )
+        };
         manifest.check_layout()?;
-        let model = NativeModel::new(PX, NUM_CLASSES);
         Ok(Self {
-            name: name.to_string(),
+            name: model.to_string(),
             n: manifest.param_count,
             train_batch: 32,
             eval_batch: 100,
             image_shape: [H, W, C],
             manifest,
-            backend: Backend::Native(model),
+            tier,
+            backend,
         })
+    }
+
+    /// Per-training-step floating-point work (multiply-adds × 2) of the
+    /// backend's forward + backward pass — the FLOPs model behind the
+    /// GFLOP/s column in the wall-clock bench. Linear: `4·B·px·nc`
+    /// (forward + scatter, counting dense work). MLP: `4·B·px·h` for the
+    /// layer-1 matmuls (forward + dW1) plus `6·B·h·nc` for layer 2
+    /// (forward + dW2 + dh1).
+    pub fn train_step_flops(&self) -> f64 {
+        let b = self.train_batch as f64;
+        match &self.backend {
+            Backend::Native(m) => 4.0 * b * (m.px * m.classes) as f64,
+            Backend::Mlp(m) => {
+                b * (4.0 * (m.px * m.hidden) as f64 + 6.0 * (m.hidden * m.classes) as f64)
+            }
+            // No per-artifact FLOP table; approximate with the flat size.
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => 4.0 * b * self.n as f64,
+        }
     }
 
     fn check_batch(&self, images: &[f32], labels: &[i32], batch: usize) -> Result<()> {
@@ -143,6 +257,12 @@ impl ModelRuntime {
                 let (p, v) = m.sgd_update(params, mom, &g, lr, mu, wd);
                 Ok((p, v, loss))
             }
+            Backend::Mlp(m) => {
+                let (loss, g) = m.grad_step(params, images, labels, self.train_batch);
+                let (mut p, mut v) = (params.to_vec(), mom.to_vec());
+                simd::sgd_update_inplace(self.tier, &mut p, &mut v, &g, lr, mu, wd);
+                Ok((p, v, loss))
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.train_step(params, mom, images, labels, lr, mu, wd),
         }
@@ -176,6 +296,12 @@ impl ModelRuntime {
                 m.sgd_update_inplace(params, mom, grad, lr, mu, wd);
                 Ok(loss)
             }
+            Backend::Mlp(m) => {
+                grad.resize(self.n, 0.0);
+                let loss = m.grad_step_into(params, images, labels, self.train_batch, grad);
+                simd::sgd_update_inplace(self.tier, params, mom, grad, lr, mu, wd);
+                Ok(loss)
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => {
                 let (p, v, loss) = e.train_step(params, mom, images, labels, lr, mu, wd)?;
@@ -197,6 +323,7 @@ impl ModelRuntime {
         self.check_batch(images, labels, self.train_batch)?;
         match &self.backend {
             Backend::Native(m) => Ok(m.grad_step(params, images, labels, self.train_batch)),
+            Backend::Mlp(m) => Ok(m.grad_step(params, images, labels, self.train_batch)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.grad_step(params, images, labels),
         }
@@ -218,6 +345,10 @@ impl ModelRuntime {
                 grad.resize(self.n, 0.0);
                 Ok(m.grad_step_into(params, images, labels, self.train_batch, grad))
             }
+            Backend::Mlp(m) => {
+                grad.resize(self.n, 0.0);
+                Ok(m.grad_step_into(params, images, labels, self.train_batch, grad))
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => {
                 let (loss, g) = e.grad_step(params, images, labels)?;
@@ -234,6 +365,7 @@ impl ModelRuntime {
         self.check_batch(images, labels, self.eval_batch)?;
         match &self.backend {
             Backend::Native(m) => Ok(m.evaluate(params, images, labels, self.eval_batch)),
+            Backend::Mlp(m) => Ok(m.evaluate(params, images, labels, self.eval_batch)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.evaluate(params, images, labels),
         }
@@ -244,6 +376,11 @@ impl ModelRuntime {
         anyhow::ensure!(x.len() == self.n && z.len() == self.n, "length mismatch");
         match &self.backend {
             Backend::Native(m) => Ok(m.pullback(x, z, alpha)),
+            Backend::Mlp(_) => {
+                let mut out = x.to_vec();
+                simd::pullback_inplace(self.tier, &mut out, z, alpha);
+                Ok(out)
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.pullback(x, z, alpha),
         }
@@ -255,8 +392,8 @@ impl ModelRuntime {
     pub fn pullback_inplace(&self, x: &mut [f32], z: &[f32], alpha: f32) -> Result<()> {
         anyhow::ensure!(x.len() == self.n && z.len() == self.n, "length mismatch");
         match &self.backend {
-            Backend::Native(_) => {
-                crate::model::vecmath::pullback_inplace(x, z, alpha);
+            Backend::Native(_) | Backend::Mlp(_) => {
+                simd::pullback_inplace(self.tier, x, z, alpha);
                 Ok(())
             }
             #[cfg(feature = "pjrt")]
@@ -282,6 +419,11 @@ impl ModelRuntime {
         );
         match &self.backend {
             Backend::Native(m) => Ok(m.anchor_update(z, v, avg, beta)),
+            Backend::Mlp(_) => {
+                let (mut zn, mut vn) = (z.to_vec(), v.to_vec());
+                simd::anchor_update_inplace(self.tier, &mut zn, &mut vn, avg, beta);
+                Ok((zn, vn))
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.anchor_update(z, v, avg, beta),
         }
@@ -301,8 +443,8 @@ impl ModelRuntime {
             "length mismatch"
         );
         match &self.backend {
-            Backend::Native(_) => {
-                crate::model::vecmath::anchor_update_inplace(z, v, avg, beta);
+            Backend::Native(_) | Backend::Mlp(_) => {
+                simd::anchor_update_inplace(self.tier, z, v, avg, beta);
                 Ok(())
             }
             #[cfg(feature = "pjrt")]
@@ -332,6 +474,11 @@ impl ModelRuntime {
         );
         match &self.backend {
             Backend::Native(m) => Ok(m.sgd_update(params, mom, grad, lr, mu, wd)),
+            Backend::Mlp(_) => {
+                let (mut p, mut v) = (params.to_vec(), mom.to_vec());
+                simd::sgd_update_inplace(self.tier, &mut p, &mut v, grad, lr, mu, wd);
+                Ok((p, v))
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.sgd_update(params, mom, grad, lr, mu, wd),
         }
@@ -357,6 +504,11 @@ impl ModelRuntime {
         );
         match &self.backend {
             Backend::Native(m) => Ok(m.adam_update(params, m1, m2, grad, lr, t)),
+            Backend::Mlp(_) => {
+                let (mut p, mut ma, mut va) = (params.to_vec(), m1.to_vec(), m2.to_vec());
+                simd::adam_update_inplace(self.tier, &mut p, &mut ma, &mut va, grad, lr, t);
+                Ok((p, ma, va))
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(e) => e.adam_update(params, m1, m2, grad, lr, t),
         }
@@ -384,6 +536,10 @@ impl ModelRuntime {
         match &self.backend {
             Backend::Native(m) => {
                 m.adam_update_inplace(params, m1, m2, grad, lr, t);
+                Ok(())
+            }
+            Backend::Mlp(_) => {
+                simd::adam_update_inplace(self.tier, params, m1, m2, grad, lr, t);
                 Ok(())
             }
             #[cfg(feature = "pjrt")]
@@ -444,6 +600,20 @@ pub fn load_auto(dir: &Path, model: &str) -> Result<ModelRuntime> {
     }
     let _ = dir;
     ModelRuntime::native(model)
+}
+
+/// [`load_auto`] driven by the full experiment config: the PJRT artifacts
+/// when available, otherwise the native backend selected by `cfg.model`
+/// (`mlp` vs linear) with `cfg.hidden` and `cfg.kernels` applied. The CLI,
+/// the net worker, and the benches all load through here so a shipped
+/// config reproduces the same runtime everywhere.
+pub fn load_for(dir: &Path, cfg: &ExperimentConfig) -> Result<ModelRuntime> {
+    #[cfg(feature = "pjrt")]
+    if dir.join("manifest.json").exists() {
+        return load_auto(dir, &cfg.model);
+    }
+    let _ = dir;
+    ModelRuntime::native_with(&cfg.model, cfg.hidden, cfg.kernels)
 }
 
 #[cfg(test)]
@@ -519,6 +689,78 @@ mod tests {
         rt.anchor_update_inplace(&mut z_b, &mut v_b, &p_a, 0.7).unwrap();
         assert_eq!(z_a, z_b);
         assert_eq!(v_a, v_b);
+    }
+
+    #[test]
+    fn mlp_manifest_layout_is_consistent() {
+        let m = mlp_manifest(DEFAULT_HIDDEN);
+        assert!(m.check_layout().is_ok());
+        assert_eq!(
+            m.param_count,
+            PX * DEFAULT_HIDDEN + DEFAULT_HIDDEN + DEFAULT_HIDDEN * NUM_CLASSES + NUM_CLASSES
+        );
+        // Both weight matrices matricize for PowerSGD; biases stay raw.
+        let compressed: Vec<&str> = m
+            .tensors
+            .iter()
+            .filter(|t| t.compress)
+            .map(|t| t.name.as_str())
+            .collect();
+        assert_eq!(compressed, ["w1", "w2"]);
+    }
+
+    #[test]
+    fn mlp_runtime_composes_and_matches_inplace_bitwise() {
+        let rt = ModelRuntime::native_with("mlp", 16, crate::model::simd::KernelTier::Scalar)
+            .unwrap();
+        assert_eq!(rt.n, PX * 16 + 16 + 16 * NUM_CLASSES + NUM_CLASSES);
+        let params = crate::model::init_params(&rt.manifest, 3);
+        assert!(params[..PX * 16].iter().any(|&x| x != 0.0), "w1 must initialize");
+        let mom = vec![0.01f32; rt.n];
+        let gen = crate::data::GenConfig::default();
+        let ds = crate::data::generate(9, 64, "train", &gen);
+        let images = ds.images[..rt.train_batch * PX].to_vec();
+        let labels = ds.labels[..rt.train_batch].to_vec();
+
+        let (p_a, m_a, loss_a) =
+            rt.train_step(&params, &mom, &images, &labels, 0.05, 0.9, 1e-4).unwrap();
+        let mut p_b = params.clone();
+        let mut m_b = mom.clone();
+        let mut scratch = Vec::new();
+        let loss_b = rt
+            .train_step_inplace(&mut p_b, &mut m_b, &images, &labels, 0.05, 0.9, 1e-4, &mut scratch)
+            .unwrap();
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits());
+        assert_eq!(p_a, p_b);
+        assert_eq!(m_a, m_b);
+        assert!(loss_a.is_finite());
+    }
+
+    #[test]
+    fn mlp_step_flops_dominate_linear() {
+        let lin = ModelRuntime::native("linear").unwrap();
+        let mlp = ModelRuntime::native("mlp").unwrap();
+        assert!(lin.train_step_flops() > 0.0);
+        // Acceptance floor: the MLP must carry ≥5× the linear per-step
+        // compute so overlap has something real to hide.
+        assert!(
+            mlp.train_step_flops() >= 5.0 * lin.train_step_flops(),
+            "mlp {} vs linear {}",
+            mlp.train_step_flops(),
+            lin.train_step_flops()
+        );
+    }
+
+    #[test]
+    fn load_for_selects_model_and_tier_from_config() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("model", "mlp").unwrap();
+        cfg.set("hidden", "32").unwrap();
+        cfg.set("kernels", "simd").unwrap();
+        let rt = load_for(Path::new("/nonexistent/artifacts"), &cfg).unwrap();
+        assert_eq!(rt.name, "mlp");
+        assert_eq!(rt.tier, crate::model::simd::KernelTier::Simd);
+        assert_eq!(rt.n, PX * 32 + 32 + 32 * NUM_CLASSES + NUM_CLASSES);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! — all bit-identical to the allocating forms they hot-swap for, which
 //! remain for the reference loops and the PJRT calling convention.
 
+use crate::model::simd::{self, KernelTier};
 use crate::model::vecmath;
 
 /// Stack capacity for the per-sample logits / class-delta buffers. The
@@ -37,12 +38,25 @@ pub struct NativeModel {
     pub px: usize,
     /// output class count
     pub classes: usize,
+    tier: KernelTier,
 }
 
 impl NativeModel {
-    /// Model over `px`-pixel inputs and `classes` outputs.
+    /// Model over `px`-pixel inputs and `classes` outputs, on the scalar
+    /// (reference) kernel tier.
     pub fn new(px: usize, classes: usize) -> Self {
-        Self { px, classes }
+        Self::with_tier(px, classes, KernelTier::default())
+    }
+
+    /// [`NativeModel::new`] on an explicit kernel tier (DESIGN.md §15).
+    /// Both tiers are bit-identical, so this changes speed, never digests.
+    pub fn with_tier(px: usize, classes: usize, tier: KernelTier) -> Self {
+        Self { px, classes, tier }
+    }
+
+    /// The kernel tier this instance dispatches to.
+    pub fn tier(&self) -> KernelTier {
+        self.tier
     }
 
     /// Flat parameter count (weights + biases).
@@ -78,11 +92,25 @@ impl NativeModel {
         for i in 0..batch {
             let x = &images[i * px..(i + 1) * px];
             logits.copy_from_slice(b);
-            for (j, &xj) in x.iter().enumerate() {
-                if xj != 0.0 {
-                    let row = &w[j * nc..(j + 1) * nc];
-                    for (l, &wv) in logits.iter_mut().zip(row) {
-                        *l += xj * wv;
+            // Per-row accumulate, tier-dispatched: `axpy_simd` evaluates
+            // the identical `logits[c] += xj * w_row[c]` expression per
+            // element, so the tiers are bit-identical (locked below).
+            match self.tier {
+                KernelTier::Scalar => {
+                    for (j, &xj) in x.iter().enumerate() {
+                        if xj != 0.0 {
+                            let row = &w[j * nc..(j + 1) * nc];
+                            for (l, &wv) in logits.iter_mut().zip(row) {
+                                *l += xj * wv;
+                            }
+                        }
+                    }
+                }
+                KernelTier::Simd => {
+                    for (j, &xj) in x.iter().enumerate() {
+                        if xj != 0.0 {
+                            simd::axpy_simd(xj, &w[j * nc..(j + 1) * nc], logits);
+                        }
                     }
                 }
             }
@@ -128,11 +156,22 @@ impl NativeModel {
                 // starts at +0.0 and x + -0.0 == x); a NaN/inf delta — a
                 // diverged run — would have poisoned the zero-pixel rows
                 // in the dense form, which the skip no longer reproduces.
-                for (j, &xj) in x.iter().enumerate() {
-                    if xj != 0.0 {
-                        let row = &mut gw[j * nc..(j + 1) * nc];
-                        for (gv, &dc) in row.iter_mut().zip(delta.iter()) {
-                            *gv += xj * dc;
+                match self.tier {
+                    KernelTier::Scalar => {
+                        for (j, &xj) in x.iter().enumerate() {
+                            if xj != 0.0 {
+                                let row = &mut gw[j * nc..(j + 1) * nc];
+                                for (gv, &dc) in row.iter_mut().zip(delta.iter()) {
+                                    *gv += xj * dc;
+                                }
+                            }
+                        }
+                    }
+                    KernelTier::Simd => {
+                        for (j, &xj) in x.iter().enumerate() {
+                            if xj != 0.0 {
+                                simd::axpy_simd(xj, delta, &mut gw[j * nc..(j + 1) * nc]);
+                            }
                         }
                     }
                 }
@@ -210,7 +249,8 @@ impl NativeModel {
 
     /// [`NativeModel::sgd_update`] in place: element i reads only index i
     /// of each input before writing it, with the identical expression
-    /// order, so the results are bit-identical to the allocating form.
+    /// order, so the results are bit-identical to the allocating form on
+    /// either tier (the loops live in [`simd::sgd_update_inplace`]).
     pub fn sgd_update_inplace(
         &self,
         params: &mut [f32],
@@ -220,12 +260,7 @@ impl NativeModel {
         mu: f32,
         wd: f32,
     ) {
-        for i in 0..params.len() {
-            let g = grad[i] + wd * params[i];
-            let vn = mu * mom[i] + g;
-            params[i] -= lr * (g + mu * vn);
-            mom[i] = vn;
-        }
+        simd::sgd_update_inplace(self.tier, params, mom, grad, lr, mu, wd);
     }
 
     /// Fused Adam step (ref.py `adam_update`, b1=0.9, b2=0.999, eps=1e-8).
@@ -261,7 +296,8 @@ impl NativeModel {
     }
 
     /// [`NativeModel::adam_update`] in place (same constants, same
-    /// per-element expression order — bit-identical results).
+    /// per-element expression order — bit-identical results on either
+    /// tier; the loops live in [`simd::adam_update_inplace`]).
     pub fn adam_update_inplace(
         &self,
         params: &mut [f32],
@@ -271,21 +307,7 @@ impl NativeModel {
         lr: f32,
         t: f32,
     ) {
-        const B1: f32 = 0.9;
-        const B2: f32 = 0.999;
-        const EPS: f32 = 1e-8;
-        let bc1 = 1.0 - B1.powf(t);
-        let bc2 = 1.0 - B2.powf(t);
-        for i in 0..params.len() {
-            let g = grad[i];
-            let mn = B1 * m1[i] + (1.0 - B1) * g;
-            let vn = B2 * m2[i] + (1.0 - B2) * g * g;
-            let mhat = mn / bc1;
-            let vhat = vn / bc2;
-            params[i] -= lr * mhat / (vhat.sqrt() + EPS);
-            m1[i] = mn;
-            m2[i] = vn;
-        }
+        simd::adam_update_inplace(self.tier, params, m1, m2, grad, lr, t);
     }
 
     /// Eq. (4): `x - alpha * (x - z)`.
@@ -560,6 +582,52 @@ mod tests {
         assert_eq!(l1.to_bits(), l2.to_bits());
         assert_eq!(c1, c2);
         assert!((0.0..=b as f32).contains(&c1));
+    }
+
+    #[test]
+    fn simd_tier_is_bit_identical_on_forward_and_backward() {
+        // The linear model's tier dispatch covers the skip-zero pixel
+        // loops (accumulate + scatter): sparse images with exact zeros,
+        // loss + gradient + eval compared bit for bit across tiers.
+        let scalar = NativeModel::new(9, 5);
+        let simd = NativeModel::with_tier(9, 5, KernelTier::Simd);
+        assert_eq!(simd.tier(), KernelTier::Simd);
+        let params = rand_params(&scalar, 51);
+        let b = 7;
+        let mut images = vec![0.0f32; b * scalar.px];
+        Rng::seed_from(52).fill_normal(&mut images, 1.0);
+        for (i, v) in images.iter_mut().enumerate() {
+            if i % 4 == 0 {
+                *v = 0.0; // exercise the skip-zero branches on both tiers
+            }
+        }
+        let labels: Vec<i32> = (0..b as i32).map(|i| i % 5).collect();
+
+        let (loss_s, grad_s) = scalar.grad_step(&params, &images, &labels, b);
+        let (loss_v, grad_v) = simd.grad_step(&params, &images, &labels, b);
+        assert_eq!(loss_s.to_bits(), loss_v.to_bits());
+        for (i, (a, bb)) in grad_s.iter().zip(&grad_v).enumerate() {
+            assert_eq!(a.to_bits(), bb.to_bits(), "grad bit drift at {i}");
+        }
+
+        let (el_s, ec_s) = scalar.evaluate(&params, &images, &labels, b);
+        let (el_v, ec_v) = simd.evaluate(&params, &images, &labels, b);
+        assert_eq!(el_s.to_bits(), el_v.to_bits());
+        assert_eq!(ec_s, ec_v);
+
+        // The in-place optimizer dispatch matches the allocating scalar
+        // reference on both tiers.
+        let mom = vec![0.1f32; scalar.param_count()];
+        let (p_ref, v_ref) = scalar.sgd_update(&params, &mom, &grad_s, 0.05, 0.9, 1e-4);
+        for m in [&scalar, &simd] {
+            let mut p = params.clone();
+            let mut v = mom.clone();
+            m.sgd_update_inplace(&mut p, &mut v, &grad_s, 0.05, 0.9, 1e-4);
+            for i in 0..p.len() {
+                assert_eq!(p_ref[i].to_bits(), p[i].to_bits());
+                assert_eq!(v_ref[i].to_bits(), v[i].to_bits());
+            }
+        }
     }
 
     #[test]

@@ -46,6 +46,22 @@ fn rotl(x: u64, k: u32) -> u64 {
     (x << k) | (x >> (64 - k))
 }
 
+/// Map 64 random bits to a uniform f32 in [0, 1).
+///
+/// The obvious `(53-bit f64 draw) as f32` narrowing is *not* half-open:
+/// f64 draws within ~2⁻²⁵ of 1.0 round up to exactly `1.0f32`, violating
+/// the `[0, 1)` contract (the regression pinned by
+/// `next_f32_respects_half_open_contract_at_the_boundary`). Clamp those
+/// draws — and only those — to the largest f32 below 1.0, so every
+/// in-contract draw keeps its exact pre-fix bits (digest-safe).
+#[inline]
+fn unit_f32(bits: u64) -> f32 {
+    // Largest f32 strictly below 1.0: 1 - 2⁻²⁴.
+    const BELOW_ONE: f32 = f32::from_bits(0x3F7F_FFFF);
+    let x = ((bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) as f32;
+    if x < 1.0 { x } else { BELOW_ONE }
+}
+
 impl Rng {
     /// Seed via SplitMix64 (the reference-recommended initialization).
     pub fn seed_from(seed: u64) -> Self {
@@ -88,7 +104,7 @@ impl Rng {
 
     /// Uniform f32 in [0, 1).
     pub fn next_f32(&mut self) -> f32 {
-        self.next_f64() as f32
+        unit_f32(self.next_u64())
     }
 
     /// Uniform integer in [0, n). Lemire-style rejection to kill modulo bias.
@@ -191,6 +207,30 @@ mod tests {
         }
         let mean = sum / 10_000.0;
         assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn next_f32_respects_half_open_contract_at_the_boundary() {
+        // The boundary input: u64::MAX maps to the largest f64 draw,
+        // 1 - 2⁻⁵³, which the raw f32 narrowing rounds up to exactly 1.0.
+        let raw = ((u64::MAX >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) as f32;
+        assert_eq!(raw, 1.0, "the pre-fix narrowing really does escape [0, 1)");
+        // The fixed mapping clamps that draw to the largest f32 below 1.0.
+        let below_one = f32::from_bits(0x3F7F_FFFF);
+        assert_eq!(unit_f32(u64::MAX).to_bits(), below_one.to_bits());
+        assert!(unit_f32(u64::MAX) < 1.0);
+        // Every in-contract draw keeps its exact pre-fix bits, and the
+        // contract holds across a long stream.
+        let mut r = Rng::seed_from(23);
+        for _ in 0..10_000 {
+            let bits = r.next_u64();
+            let raw = ((bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)) as f32;
+            let fixed = unit_f32(bits);
+            assert!((0.0..1.0).contains(&fixed));
+            if raw < 1.0 {
+                assert_eq!(raw.to_bits(), fixed.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -6,6 +6,14 @@
 /// `Default` would zero the min/max accumulators, and a `Summary` whose
 /// data never contains 0.0 would then silently report `min() = 0.0` /
 /// `max() = 0.0` (the regression pinned by `default_is_new`).
+///
+/// **NaN policy:** a NaN observation poisons *every* statistic — count
+/// still advances, and mean/var/min/max all become (and stay) NaN. The
+/// pre-fix code was inconsistent: NaN propagated into mean/var through
+/// the arithmetic but was silently dropped by `f64::min`/`f64::max`
+/// (IEEE min/max discard NaN operands), so a summary could report a
+/// clean min/max over poisoned moments (the regression pinned by
+/// `nan_poisons_every_statistic_uniformly`).
 #[derive(Clone, Debug)]
 pub struct Summary {
     n: u64,
@@ -27,14 +35,23 @@ impl Summary {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
-    /// Fold one observation in.
+    /// Fold one observation in (see the struct-level NaN policy).
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (x - self.mean);
-        self.min = self.min.min(x);
-        self.max = self.max.max(x);
+        // IEEE min/max silently drop NaN operands, which would leave
+        // min/max clean while the moments are already poisoned — and a
+        // later real observation would launder a NaN min/max back to a
+        // real value. Propagate explicitly, and stickily, instead.
+        if x.is_nan() || self.min.is_nan() {
+            self.min = f64::NAN;
+            self.max = f64::NAN;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
     }
 
     /// Number of observations.
@@ -68,19 +85,28 @@ impl Summary {
     }
 }
 
-/// Percentile over a copy of the data (nearest-rank). Returns `None` on an
-/// empty slice — benches skip legs under `OLSGD_SMOKE=1`, so empty sample
-/// vectors are a real input, not a programming error. NaN samples are
-/// handled by the IEEE total order (`f64::total_cmp`): they sort after
-/// every real value instead of aborting the run.
+/// Percentile over a copy of the data, by the **nearest-rank** definition:
+/// the smallest sample with at least p% of the data at or below it, i.e.
+/// the 1-based rank `⌈(p/100)·n⌉` clamped to `[1, n]` (so p = 0 is the
+/// minimum and p = 100 the maximum). The pre-fix code claimed nearest-rank
+/// but computed a *rounded linear* rank over `n − 1`, which disagrees on
+/// every even-length median (the regression pinned by
+/// `percentile_nearest_rank_boundaries`).
+///
+/// Returns `None` on an empty slice — benches skip legs under
+/// `OLSGD_SMOKE=1`, so empty sample vectors are a real input, not a
+/// programming error. NaN samples are handled by the IEEE total order
+/// (`f64::total_cmp`): they sort after every real value instead of
+/// aborting the run.
 pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
     if xs.is_empty() {
         return None;
     }
     let mut v = xs.to_vec();
     v.sort_by(f64::total_cmp);
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    Some(v[rank.min(v.len() - 1)])
+    let n = v.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    Some(v[rank.clamp(1, n) - 1])
 }
 
 /// An ordinary-least-squares line `y = intercept + slope * x`, with the
@@ -172,6 +198,52 @@ mod tests {
         assert_eq!(empty.count(), 0);
         assert_eq!(empty.min(), f64::INFINITY);
         assert_eq!(empty.max(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn nan_poisons_every_statistic_uniformly() {
+        // Regression: IEEE f64::min/max silently drop NaN operands, so a
+        // NaN observation used to poison mean/var while min/max stayed
+        // clean — the summary looked half-healthy.
+        let mut s = Summary::new();
+        s.add(1.0);
+        s.add(f64::NAN);
+        assert_eq!(s.count(), 2, "count still advances on NaN");
+        assert!(s.mean().is_nan());
+        assert!(s.min().is_nan(), "min must be poisoned like the moments");
+        assert!(s.max().is_nan(), "max must be poisoned like the moments");
+        // ...and the poison is sticky: a later real observation must not
+        // launder min/max back to a real value (bare IEEE min would).
+        s.add(5.0);
+        assert!(s.var().is_nan());
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+    }
+
+    #[test]
+    fn percentile_nearest_rank_boundaries() {
+        // n = 1: every percentile is the single sample.
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(percentile(&[7.0], p), Some(7.0));
+        }
+        // n = 2: nearest-rank p50 is the *lower* sample (rank ⌈0.5·2⌉ = 1).
+        // The pre-fix rounded-linear rank returned the upper one.
+        assert_eq!(percentile(&[10.0, 20.0], 0.0), Some(10.0));
+        assert_eq!(percentile(&[10.0, 20.0], 50.0), Some(10.0));
+        assert_eq!(percentile(&[10.0, 20.0], 100.0), Some(20.0));
+        // Even length: p50 → rank ⌈0.5·4⌉ = 2.
+        let even = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&even, 0.0), Some(1.0));
+        assert_eq!(percentile(&even, 50.0), Some(2.0));
+        assert_eq!(percentile(&even, 100.0), Some(4.0));
+        // Odd length: p50 → rank ⌈0.5·5⌉ = 3, the true median.
+        let odd = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&odd, 0.0), Some(1.0));
+        assert_eq!(percentile(&odd, 50.0), Some(3.0));
+        assert_eq!(percentile(&odd, 100.0), Some(5.0));
+        // Out-of-range p clamps to the extremes rather than indexing out.
+        assert_eq!(percentile(&odd, -10.0), Some(1.0));
+        assert_eq!(percentile(&odd, 250.0), Some(5.0));
     }
 
     #[test]

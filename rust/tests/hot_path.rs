@@ -33,7 +33,7 @@ fn paper16_cfg(algo: Algo) -> ExperimentConfig {
 }
 
 fn run_pair(cfg: &ExperimentConfig) -> (TrainLog, TrainLog) {
-    let rt = ModelRuntime::native(&cfg.model).unwrap();
+    let rt = ModelRuntime::native_with(&cfg.model, cfg.hidden, cfg.kernels).unwrap();
     let gen = GenConfig::default();
     let train = data::generate(cfg.seed, cfg.train_n, "train", &gen);
     let test = data::generate(cfg.seed, cfg.test_n, "test", &gen);
@@ -212,6 +212,46 @@ fn sampled_rounds_stay_spawn_and_alloc_free() {
         let c = thr.population.expect("sampled run must report population counters");
         assert!(c.evictions > 0, "{algo:?}: reserve 0 under churn must spill");
         assert_eq!(c.resident_workers_max, 16, "{algo:?}: only the k bound states");
+    }
+}
+
+/// The SIMD tier and the MLP backend ride the same memory discipline
+/// (DESIGN.md §15): the SIMD kernels allocate nothing (fixed-lane loops
+/// over caller buffers), the MLP's scratch is thread-local and grow-once,
+/// and — because every SIMD kernel is bit-identical to scalar by
+/// construction — the tier must not move the digest at all: all four
+/// (model=mlp) runs here, scalar/simd × sim/threads, share one digest.
+#[test]
+fn mlp_simd_tier_keeps_the_steady_state_clean_and_the_digest_fixed() {
+    let mut scalar_cfg = paper16_cfg(Algo::OverlapM);
+    scalar_cfg.set("model", "mlp").unwrap();
+    scalar_cfg.set("hidden", "32").unwrap();
+    let mut simd_cfg = scalar_cfg.clone();
+    simd_cfg.set("kernels", "simd").unwrap();
+
+    let (scalar_sim, scalar_thr) = run_pair(&scalar_cfg);
+    let (simd_sim, simd_thr) = run_pair(&simd_cfg);
+    assert_eq!(scalar_sim.digest(), scalar_thr.digest(), "mlp scalar drifted across backends");
+    assert_eq!(simd_sim.digest(), simd_thr.digest(), "mlp simd drifted across backends");
+    assert_eq!(
+        scalar_sim.digest(),
+        simd_sim.digest(),
+        "the SIMD tier moved the digest — a kernel reassociated its accumulation"
+    );
+
+    for (label, thr) in [("scalar", &scalar_thr), ("simd", &simd_thr)] {
+        assert_eq!(thr.hot.thread_spawns_total, 17, "mlp/{label}");
+        assert_eq!(thr.hot.steady_thread_spawns, 0, "mlp/{label}: no spawns after warm-up");
+        assert_eq!(
+            thr.hot.buffer_allocs_total, 17,
+            "mlp/{label}: warm-up allocates exactly one snapshot set"
+        );
+        assert_eq!(
+            thr.hot.steady_buffer_allocs, 0,
+            "mlp/{label}: steady rounds must recycle — the MLP scratch is thread-local"
+        );
+        assert_eq!(thr.hot.steady_buffer_alloc_bytes, 0, "mlp/{label}");
+        assert!(thr.hot.buffer_hits_total > 0, "mlp/{label}");
     }
 }
 
